@@ -1,0 +1,41 @@
+//! Ward NN-chain scaling: merge throughput vs subset size n.
+//!
+//! Paper context: stage 1 runs one AHC per subset and β bounds n, so
+//! this bench maps β to per-subset clustering cost.  NN-chain is O(n²):
+//! doubling n should roughly 4x the time, visible in the series.
+
+use mahc::ahc::{l_method, ward_linkage};
+use mahc::distance::Condensed;
+use mahc::util::bench::Bench;
+use mahc::util::rng::Rng;
+
+fn blobby_condensed(n: usize, seed: u64) -> Condensed {
+    let mut rng = Rng::seed_from(seed);
+    // Clustered structure: 8 blobs on a line (realistic merge heights).
+    let pts: Vec<f32> = (0..n)
+        .map(|i| (i % 8) as f32 * 10.0 + rng.f32())
+        .collect();
+    let mut c = Condensed::zeros(n);
+    for i in 0..n {
+        for j in 0..i {
+            c.set(i, j, (pts[i] - pts[j]).abs());
+        }
+    }
+    c
+}
+
+fn main() {
+    println!("== bench_ahc: Ward NN-chain + L-method vs n ==");
+    for &n in &[100usize, 200, 400, 800, 1600] {
+        let cond = blobby_condensed(n, n as u64);
+        Bench::new(&format!("ward_nnchain/n={n}"))
+            .quick()
+            .throughput((n * n / 2) as u64)
+            .run(|| ward_linkage(&cond));
+    }
+    let cond = blobby_condensed(800, 9);
+    let dendro = ward_linkage(&cond);
+    let heights = dendro.merge_heights();
+    Bench::new("l_method/n=800").run(|| l_method(&heights, 800));
+    Bench::new("cut_k64/n=800").run(|| dendro.cut(64));
+}

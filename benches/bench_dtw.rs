@@ -1,0 +1,53 @@
+//! DTW backend throughput: native rolling-row DP vs the AOT Pallas
+//! kernel through PJRT, plus the banded-DTW ablation.
+//!
+//! Paper context: the pairwise DTW matrix is the dominant cost of every
+//! MAHC iteration (Fig. 6's wall-clock is mostly this).  Throughput is
+//! reported in pair-alignments per second.
+
+use mahc::config::DatasetSpec;
+use mahc::corpus::{generate, Segment};
+use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::runtime::{Runtime, XlaDtwBackend};
+use mahc::util::bench::Bench;
+use std::path::Path;
+
+fn main() {
+    let mut spec = DatasetSpec::tiny(64, 6, 11);
+    spec.feat_dim = 39;
+    spec.len_range = (6, 60);
+    let set = generate(&spec);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let (xs, ys) = (&refs[..32], &refs[32..64]);
+    let pairs = (xs.len() * ys.len()) as u64;
+
+    println!("== bench_dtw: 32x32 pair tile, T<=60, D=39 ==");
+    let native = NativeBackend::new();
+    Bench::new("native/tile32x32")
+        .throughput(pairs)
+        .run(|| native.pairwise(xs, ys).unwrap());
+
+    let banded = NativeBackend::banded(16);
+    Bench::new("native-band16/tile32x32")
+        .throughput(pairs)
+        .run(|| banded.pairwise(xs, ys).unwrap());
+
+    if Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::new(Path::new("artifacts")).unwrap();
+        let xla = XlaDtwBackend::new(&rt).unwrap();
+        Bench::new("xla-pallas/tile32x32")
+            .throughput(pairs)
+            .run(|| xla.pairwise(xs, ys).unwrap());
+
+        // Small-tile dispatch (the medoid-stage shape).
+        let (sx, sy) = (&refs[..8], &refs[8..16]);
+        Bench::new("xla-pallas/tile8x8")
+            .throughput(64)
+            .run(|| xla.pairwise(sx, sy).unwrap());
+        Bench::new("native/tile8x8")
+            .throughput(64)
+            .run(|| native.pairwise(sx, sy).unwrap());
+    } else {
+        eprintln!("(artifacts not built; skipping xla backend)");
+    }
+}

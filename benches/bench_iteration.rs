@@ -1,0 +1,46 @@
+//! End-to-end MAHC iteration cost — the paper's Fig. 6 quantity — and
+//! the MAHC-vs-MAHC+M wall-clock comparison, plus a full-AHC reference.
+//!
+//! One sample = one complete clustering run (fixed iterations), so the
+//! numbers are directly comparable across algorithms on the same data.
+
+use mahc::baselines::full_ahc;
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, NamedDataset};
+use mahc::corpus::generate;
+use mahc::distance::NativeBackend;
+use mahc::mahc::MahcDriver;
+use mahc::util::bench::Bench;
+
+fn main() {
+    let set = generate(&DatasetSpec::named(NamedDataset::SmallA, 0.02));
+    let n = set.len();
+    println!("== bench_iteration: small_a at N={n} ==");
+    let backend = NativeBackend::new();
+
+    let base = AlgoConfig {
+        p0: 4,
+        convergence: Convergence::FixedIters(3),
+        ..Default::default()
+    };
+
+    let cfg_plain = AlgoConfig {
+        beta: None,
+        ..base.clone()
+    };
+    Bench::new("mahc/3iters")
+        .quick()
+        .run(|| MahcDriver::new(&set, cfg_plain.clone(), &backend).unwrap().run().unwrap());
+
+    let beta = (n as f64 / 4.0 * 1.25).ceil() as usize;
+    let cfg_managed = AlgoConfig {
+        beta: Some(beta),
+        ..base
+    };
+    Bench::new("mahc+m/3iters")
+        .quick()
+        .run(|| MahcDriver::new(&set, cfg_managed.clone(), &backend).unwrap().run().unwrap());
+
+    Bench::new("full_ahc")
+        .quick()
+        .run(|| full_ahc(&set, &backend, 4, None, 0.25).unwrap());
+}

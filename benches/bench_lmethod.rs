@@ -1,0 +1,31 @@
+//! L-method cost vs evaluation-graph size, including the iterative
+//! refinement loop — runs once per subset per iteration, so it must be
+//! negligible next to the O(n²) distance build.
+
+use mahc::ahc::l_method;
+use mahc::util::bench::Bench;
+use mahc::util::rng::Rng;
+
+fn synthetic_heights(n: usize, knee_at: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    let mut h: Vec<f32> = Vec::with_capacity(n - 1);
+    for i in 0..n - 1 {
+        let base = if i < n - knee_at {
+            0.1 + 0.002 * i as f32
+        } else {
+            5.0 + (i - (n - knee_at)) as f32
+        };
+        h.push(base + rng.f32() * 0.01);
+    }
+    h
+}
+
+fn main() {
+    println!("== bench_lmethod: knee detection vs graph size ==");
+    for &n in &[50usize, 200, 1000, 5000] {
+        let heights = synthetic_heights(n, (n / 10).max(3), n as u64);
+        Bench::new(&format!("l_method/n={n}"))
+            .quick()
+            .run(|| l_method(&heights, n));
+    }
+}

@@ -1,0 +1,165 @@
+//! End-to-end driver: the full three-layer system on a real small
+//! workload, proving all layers compose.
+//!
+//! Pipeline (Python never runs — everything below uses the AOT
+//! artifacts through PJRT):
+//!
+//!   1. synthesise a triphone corpus as raw 16 kHz waveforms;
+//!   2. extract 39-dim MFCC+Δ+ΔΔ features through the **AOT MFCC
+//!      artifact** (Layer 2);
+//!   3. cluster with MAHC+M where every DTW distance is computed by the
+//!      **AOT Pallas wavefront kernel** (Layer 1) through the PJRT
+//!      engine (Layer 3 hot path);
+//!   4. report the paper's headline measurements: per-iteration Pᵢ /
+//!      max-occupancy (the β guarantee), F-measure vs ground truth, and
+//!      wall-clock vs the unmanaged MAHC baseline.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Results from a reference run are recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+use std::time::Instant;
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::{generator, Segment, SegmentSet};
+use mahc::distance::NativeBackend;
+use mahc::mahc::MahcDriver;
+use mahc::metrics;
+use mahc::runtime::{mfcc_exec::MfccFrontend, Runtime, XlaDtwBackend};
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    let artifacts = std::env::var("MAHC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    anyhow::ensure!(
+        Path::new(&artifacts).join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let rt = Runtime::new(Path::new(&artifacts))?;
+    println!("[1/4] PJRT engine up ({} artifacts)", rt.manifest().dtw.len() + rt.manifest().mfcc.len());
+
+    // ---- 1. audio corpus ------------------------------------------------
+    let mut spec = DatasetSpec::tiny(400, 16, 20260710);
+    spec.feat_dim = 39;
+    spec.len_range = (8, 60); // ≤ T=64 artifact bucket
+    let t0 = Instant::now();
+    let audio = generator::generate_audio(&spec, 0.01);
+    let total_secs: f64 =
+        audio.wavs.iter().map(|w| w.len() as f64).sum::<f64>() / 16_000.0;
+    println!(
+        "[2/4] synthesised {} waveform segments ({:.1} s of audio, {} classes) in {:.2}s",
+        audio.wavs.len(),
+        total_secs,
+        audio.num_classes,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. MFCC through the AOT artifact -------------------------------
+    let t0 = Instant::now();
+    let fe = MfccFrontend::new(&rt)?;
+    let wavs_f32: Vec<Vec<f32>> = audio
+        .wavs
+        .iter()
+        .map(|w| w.iter().map(|&v| v as f32).collect())
+        .collect();
+    let feats = fe.extract(&wavs_f32)?;
+    let segments: Vec<Segment> = feats
+        .into_iter()
+        .enumerate()
+        .map(|(id, (len, feats))| Segment {
+            id,
+            class_id: audio.labels[id],
+            len,
+            dim: 39,
+            feats,
+        })
+        .collect();
+    let set = SegmentSet {
+        name: audio.name.clone(),
+        dim: 39,
+        segments,
+        num_classes: audio.num_classes,
+    };
+    set.validate()?;
+    println!(
+        "[3/4] AOT MFCC front-end: {} segments, {} frames total, in {:.2}s",
+        set.len(),
+        set.total_vectors(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 3. MAHC+M with the AOT DTW kernel on the hot path --------------
+    let beta = 140;
+    let cfg = AlgoConfig {
+        p0: 4,
+        beta: Some(beta),
+        convergence: Convergence::FixedIters(4),
+        ..Default::default()
+    };
+    let xla = XlaDtwBackend::new(&rt)?;
+    let t0 = Instant::now();
+    let managed = MahcDriver::new(&set, cfg.clone(), &xla)?.run()?;
+    let managed_wall = t0.elapsed();
+
+    // Baseline: plain MAHC (no size management), same backend.
+    let mut cfg_plain = cfg.clone();
+    cfg_plain.beta = None;
+    let t0 = Instant::now();
+    let plain = MahcDriver::new(&set, cfg_plain, &xla)?.run()?;
+    let plain_wall = t0.elapsed();
+
+    // Sanity cross-check: the native backend must agree on quality.
+    let native = NativeBackend::new();
+    let nat = MahcDriver::new(&set, cfg, &native)?.run()?;
+
+    // ---- 4. report -------------------------------------------------------
+    println!("[4/4] results (all DTW on the AOT Pallas kernel via PJRT):\n");
+    println!("MAHC+M  (β={beta}):");
+    println!("  iter  P_i  maxOcc  splits  F");
+    for r in &managed.history.records {
+        println!(
+            "  {:>4} {:>4} {:>7} {:>7}  {:.4}",
+            r.iteration, r.subsets, r.max_occupancy, r.splits, r.f_measure
+        );
+        assert!(r.max_occupancy <= beta, "β guarantee violated");
+    }
+    let truth = set.labels();
+    println!(
+        "  final: K={} F={:.4} purity={:.4} NMI={:.4} wall={:.2}s",
+        managed.k,
+        managed.f_measure,
+        metrics::purity(&managed.labels, &truth),
+        metrics::nmi(&managed.labels, &truth),
+        managed_wall.as_secs_f64()
+    );
+    println!(
+        "\nplain MAHC: F={:.4} peak occupancy={} wall={:.2}s",
+        plain.f_measure,
+        plain
+            .history
+            .records
+            .iter()
+            .map(|r| r.max_occupancy)
+            .max()
+            .unwrap_or(0),
+        plain_wall.as_secs_f64()
+    );
+    println!("native-backend cross-check: F={:.4}", nat.f_measure);
+    println!(
+        "\nheadline: β={beta} held on every iteration; ΔF(managed − plain) = {:+.4}; \
+         total {:.1}s",
+        managed.f_measure - plain.f_measure,
+        t_start.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(
+        (managed.f_measure - plain.f_measure).abs() < 0.15,
+        "size management should not change F materially"
+    );
+    anyhow::ensure!(
+        (managed.f_measure - nat.f_measure).abs() < 0.15,
+        "backends should agree on quality"
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: cluster a small synthetic triphone corpus with MAHC+M
+//! and evaluate against ground truth.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the native DTW backend so it works without artifacts; see
+//! `examples/end_to_end.rs` for the full AOT/PJRT pipeline.
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::{generate, CompositionStats};
+use mahc::distance::NativeBackend;
+use mahc::mahc::MahcDriver;
+use mahc::metrics;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small corpus: 600 variable-length MFCC segments, 20 classes.
+    let spec = DatasetSpec::tiny(600, 20, 42);
+    let set = generate(&spec);
+    println!("corpus: {}", CompositionStats::of(&set).table_row());
+
+    // 2. Configure Algorithm 1: 4 initial subsets, β = 200 (the memory
+    //    bound: no subset — hence no distance matrix — may exceed it).
+    let cfg = AlgoConfig {
+        p0: 4,
+        beta: Some(200),
+        convergence: Convergence::FixedIters(5),
+        ..Default::default()
+    };
+
+    // 3. Run MAHC+M over the native DTW backend.
+    let backend = NativeBackend::new();
+    let result = MahcDriver::new(&set, cfg, &backend)?.run()?;
+
+    // 4. Inspect: per-iteration telemetry + final quality.
+    println!("\niter  P_i  maxOcc  splits  F");
+    for r in &result.history.records {
+        println!(
+            "{:>4} {:>4} {:>7} {:>7}  {:.4}",
+            r.iteration, r.subsets, r.max_occupancy, r.splits, r.f_measure
+        );
+    }
+    let truth = set.labels();
+    println!(
+        "\nfinal: K={}  F={:.4}  purity={:.4}  NMI={:.4}",
+        result.k,
+        result.f_measure,
+        metrics::purity(&result.labels, &truth),
+        metrics::nmi(&result.labels, &truth),
+    );
+    println!(
+        "peak distance-matrix memory: {:.2} MiB (β bound: {:.2} MiB)",
+        result.history.peak_bytes() as f64 / (1 << 20) as f64,
+        (200 * 199 / 2 * 4) as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python is never on the
+request path.  Each exported graph becomes one `artifacts/<name>.hlo.txt`
+plus an entry in `artifacts/manifest.json` describing its input/output
+shapes, which rust/src/runtime/ parses to plan tiling and marshalling.
+
+Interchange format is HLO *text*, NOT `lowered.compile()` /
+`.serialize()` protos: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+`xla` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`).  The text
+parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+All graphs are lowered with return_tuple=True; the Rust side unwraps
+with `to_tuple1()`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Tile configurations exported for the Rust distance builder.  Sizes:
+# the big tiles amortise dispatch overhead on large subsets; the small
+# tile bounds padding waste for subset remainders and the medoid stage.
+# Two T buckets: wavefront steps scale with 2T-1 and the local-distance
+# matmul with T², so requests whose longest segment fits T=32 run ~3x
+# cheaper through the T=32 variant (runtime picks per request).
+DTW_TILES = [
+    # (bx_total, by_total, block, T, D)
+    (32, 32, 32, 64, 39),
+    (32, 32, 32, 32, 39),
+    (8, 8, 8, 64, 39),
+]
+# Sakoe-Chiba banded variant for the ablation bench (band radius in frames).
+DTW_BAND_TILES = [
+    (32, 32, 16, 64, 39, 16),
+]
+# MFCC front-end batch: S = 5200 samples (325 ms) -> exactly T = 64 frames,
+# matching the DTW tile's time bucket.
+MFCC_BATCHES = [
+    (16, 5200),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is load-bearing: the default printer
+    elides big array literals as `{...}`, which the consuming parser
+    silently reads back as zeros — the MFCC graph's Hamming window and
+    mel/DCT matrices would vanish (caught by the rust
+    artifact_crosscheck integration test).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_dtw(bx, by, block, t, d, band=None):
+    def graph(x, y, lenx, leny):
+        from .kernels import dtw as dtw_kernel
+
+        return (
+            dtw_kernel.dtw_tile(
+                x, y, lenx, leny, block_x=min(block, bx), block_y=min(block, by), band=band
+            ),
+        )
+
+    specs = (
+        jax.ShapeDtypeStruct((bx, t, d), jnp.float32),
+        jax.ShapeDtypeStruct((by, t, d), jnp.float32),
+        jax.ShapeDtypeStruct((bx,), jnp.int32),
+        jax.ShapeDtypeStruct((by,), jnp.int32),
+    )
+    return jax.jit(graph).lower(*specs)
+
+
+def lower_mfcc(b, s):
+    wav_spec = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    len_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return jax.jit(model.mfcc_frontend).lower(wav_spec, len_spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": []}
+
+    for bx, by, block, t, d in DTW_TILES:
+        name = f"dtw_b{bx}x{by}_t{t}_d{d}"
+        text = to_hlo_text(lower_dtw(bx, by, block, t, d))
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "dtw",
+                "bx": bx,
+                "by": by,
+                "t": t,
+                "d": d,
+                "band": None,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for bx, by, block, t, d, band in DTW_BAND_TILES:
+        name = f"dtw_b{bx}x{by}_t{t}_d{d}_band{band}"
+        text = to_hlo_text(lower_dtw(bx, by, block, t, d, band=band))
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "dtw",
+                "bx": bx,
+                "by": by,
+                "t": t,
+                "d": d,
+                "band": band,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b, s in MFCC_BATCHES:
+        t_out = model.mfcc_num_frames(s)
+        name = f"mfcc_b{b}_s{s}"
+        text = to_hlo_text(lower_mfcc(b, s))
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "mfcc",
+                "b": b,
+                "s": s,
+                "t_out": t_out,
+                "feat": 39,
+                "frame_len": ref.FRAME_LEN,
+                "frame_hop": ref.FRAME_HOP,
+                "sample_rate": ref.SAMPLE_RATE,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

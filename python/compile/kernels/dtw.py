@@ -1,0 +1,184 @@
+"""Layer-1 Pallas kernel: batched pairwise DTW over MFCC segment tiles.
+
+The MAHC hot-spot is the pairwise DTW distance matrix: each subset of N
+segments needs N(N-1)/2 alignments between variable-length sequences of
+39-dimensional MFCC vectors.  This kernel computes one *tile* of that
+matrix — all (bx, by) pair distances between a block of X segments and a
+block of Y segments — in a single pallas_call.
+
+Hardware adaptation (paper ran scalar CPU DTW; see DESIGN.md
+§Hardware-Adaptation):
+
+  * Local frame distances use the matmul identity
+    ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y  so the dominant O(T^2 D)
+    term is a single (bx*T, D) x (D, by*T) contraction that targets the
+    MXU systolic array.
+  * The DP recurrence runs in anti-diagonal *wavefront* order: 2T-1
+    steps, each updating a (bx, by, T) diagonal buffer fully vectorised
+    on the VPU — the Pallas analogue of the threadblock-per-pair GPU
+    soft-DTW layout.
+  * BlockSpec tiles X/Y into VMEM; the (bx, by, T, T) local-cost tensor
+    plus two diagonal carry buffers stay resident per grid cell.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode pallas lowers to plain HLO, which the
+Rust `xla`-crate client then runs at XLA-CPU speed.
+
+Semantics (shared with kernels/ref.py, the pure-numpy oracle):
+
+  * monotone step set {(1,0), (0,1), (1,1)}, no slope weighting;
+  * local distance = Euclidean (sqrt of squared distance);
+  * cost accumulated from cell (0,0) to (lx-1, ly-1);
+  * returned distance = accumulated cost / (lx + ly)  (path-length
+    normalisation, standard for comparing variable-length segments);
+  * optional Sakoe-Chiba band: cells with |i - j| > band are forbidden.
+
+Padding beyond (lx, ly) never corrupts the result: a monotone path to
+(lx-1, ly-1) only visits cells with i < lx and j < ly, so padded frames
+are unreachable; masking only has to handle the *diagonal buffers* and
+the final gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# A large-but-finite stand-in for +inf inside the DP.  Using actual inf
+# risks inf - inf = nan under some fused rewrites; 1e30 survives every
+# min/add in f32 without overflow for any realistic T.
+BIG = 1.0e30
+
+
+def _dtw_kernel(x_ref, y_ref, lenx_ref, leny_ref, out_ref, *, t_max: int, band: int | None):
+    """Pallas kernel body: one (bx, by) tile of pairwise DTW distances.
+
+    x_ref:    (bx, T, D) f32  — X segment block (VMEM)
+    y_ref:    (by, T, D) f32  — Y segment block (VMEM)
+    lenx_ref: (bx,)      i32  — true frame counts of X segments
+    leny_ref: (by,)      i32  — true frame counts of Y segments
+    out_ref:  (bx, by)   f32  — normalised DTW distances
+    """
+    x = x_ref[...]  # (bx, T, D)
+    y = y_ref[...]  # (by, T, D)
+    lenx = lenx_ref[...]  # (bx,)
+    leny = leny_ref[...]  # (by,)
+
+    bx, t, _d = x.shape
+    by = y.shape[0]
+
+    # ---- local distances via the MXU-friendly matmul identity --------
+    # cross[p, i, q, j] = x[p, i] . y[q, j]; contraction over D.
+    xsq = jnp.sum(x * x, axis=-1)  # (bx, T)
+    ysq = jnp.sum(y * y, axis=-1)  # (by, T)
+    x2 = x.reshape(bx * t, -1)
+    y2 = y.reshape(by * t, -1)
+    cross = jnp.dot(x2, y2.T, preferred_element_type=jnp.float32)  # (bx*T, by*T)
+    cross = cross.reshape(bx, t, by, t)
+    sq = (
+        xsq[:, :, None, None] + ysq[None, None, :, :] - 2.0 * cross
+    )  # (bx, T, by, T)
+    # Clamp tiny negatives from cancellation before sqrt.
+    local = jnp.sqrt(jnp.maximum(sq, 0.0))  # (bx, T, by, T)
+    # Reorder to (bx, by, T_i, T_j) for the wavefront.
+    local = jnp.transpose(local, (0, 2, 1, 3))
+
+    if band is not None:
+        ii = jnp.arange(t)[:, None]
+        jj = jnp.arange(t)[None, :]
+        local = jnp.where(jnp.abs(ii - jj) > band, BIG, local)
+
+    # ---- anti-diagonal wavefront DP ----------------------------------
+    # Buffers indexed by row i; diagonal k holds cells (i, k-i).
+    idx = jnp.arange(t)  # candidate i values
+    # Per-pair end coordinates.
+    end_k = lenx[:, None] + leny[None, :] - 2  # (bx, by) diag of the end cell
+    end_i = jnp.broadcast_to(lenx[:, None] - 1, (bx, by))  # row of the end cell
+
+    def shift_down(buf):
+        # buf[..., i] -> buf[..., i-1] with BIG at i=0 (row -1 is invalid).
+        return jnp.concatenate(
+            [jnp.full(buf.shape[:-1] + (1,), BIG, buf.dtype), buf[..., :-1]], axis=-1
+        )
+
+    def step(k, carry):
+        prev, prev2, acc = carry  # prev = diag k-1, prev2 = diag k-2
+        j = k - idx  # (T,) column per candidate row
+        valid = (j >= 0) & (j < t)  # cells actually on diagonal k
+        jc = jnp.clip(j, 0, t - 1)
+        # Gather local[., ., i, k-i] for every row i: advanced indexing
+        # stays vectorised over the (bx, by) pair axes.
+        dk = local[:, :, idx, jc]  # (bx, by, T)
+        dk = jnp.where(valid[None, None, :], dk, BIG)
+
+        up = prev  # C[i, j-1]   (diag k-1, same row)
+        left = shift_down(prev)  # C[i-1, j]   (diag k-1, row above)
+        diag = shift_down(prev2)  # C[i-1, j-1] (diag k-2, row above)
+        pred = jnp.minimum(jnp.minimum(up, left), diag)
+        # Origin cell (0, 0) has no predecessor: cost is just d[0,0].
+        pred = jnp.where((k == 0) & (idx == 0)[None, None, :], 0.0, pred)
+        cur = jnp.where(valid[None, None, :], dk + pred, BIG)
+        cur = jnp.minimum(cur, BIG)  # keep padded lanes finite
+
+        # Harvest the end-cell value on the diagonal where it lives.
+        hit = end_k == k  # (bx, by)
+        val = jnp.take_along_axis(cur, end_i[..., None], axis=-1)[..., 0]
+        acc = jnp.where(hit, val, acc)
+        return cur, prev, acc
+
+    init = (
+        jnp.full((bx, by, t), BIG, jnp.float32),
+        jnp.full((bx, by, t), BIG, jnp.float32),
+        jnp.full((bx, by), BIG, jnp.float32),
+    )
+    _, _, acc = jax.lax.fori_loop(0, 2 * t - 1, step, init)
+
+    norm = (lenx[:, None] + leny[None, :]).astype(jnp.float32)
+    out_ref[...] = acc / norm
+
+
+def dtw_tile(
+    x: jax.Array,
+    y: jax.Array,
+    lenx: jax.Array,
+    leny: jax.Array,
+    *,
+    block_x: int | None = None,
+    block_y: int | None = None,
+    band: int | None = None,
+) -> jax.Array:
+    """Pairwise DTW distances between two padded segment batches.
+
+    x:    (Bx, T, D) f32 — padded MFCC segments
+    y:    (By, T, D) f32
+    lenx: (Bx,) i32 — true lengths (1 <= lenx <= T)
+    leny: (By,) i32
+    band: optional Sakoe-Chiba band radius (cells |i-j| > band forbidden)
+
+    Returns (Bx, By) f32 of path-length-normalised DTW distances.
+    """
+    bx_total, t, d = x.shape
+    by_total = y.shape[0]
+    bx = block_x or bx_total
+    by = block_y or by_total
+    if bx_total % bx or by_total % by:
+        raise ValueError(f"batch ({bx_total},{by_total}) not divisible by block ({bx},{by})")
+
+    grid = (bx_total // bx, by_total // by)
+    kernel = functools.partial(_dtw_kernel, t_max=t, band=band)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bx, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((by, t, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bx,), lambda i, j: (i,)),
+            pl.BlockSpec((by,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bx, by), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bx_total, by_total), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, lenx, leny)

@@ -1,0 +1,163 @@
+"""Pure-numpy correctness oracles for the Layer-1/Layer-2 graphs.
+
+Everything here is deliberately written as plain, slow, loop-based numpy
+so there is nothing clever to be wrong: the Pallas kernel (kernels/dtw.py)
+and the JAX MFCC front-end (compile/model.py) are both asserted against
+these in python/tests/.
+
+The same DTW semantics are implemented a third time in Rust
+(rust/src/dtw/) — integration tests check rust-vs-artifact agreement, so
+all three implementations are pinned to this definition:
+
+  * step set {(1,0), (0,1), (1,1)}, unweighted;
+  * local distance Euclidean;
+  * distance = cumulative cost at (lx-1, ly-1) / (lx + ly);
+  * optional Sakoe-Chiba band radius (|i-j| > band forbidden).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INF = float("inf")
+
+
+# --------------------------------------------------------------------------
+# DTW
+# --------------------------------------------------------------------------
+
+
+def dtw_single(x: np.ndarray, y: np.ndarray, band: int | None = None) -> float:
+    """Normalised DTW distance between two (len, D) float sequences."""
+    lx, ly = len(x), len(y)
+    assert lx >= 1 and ly >= 1
+    cost = np.full((lx, ly), INF, dtype=np.float64)
+    for i in range(lx):
+        for j in range(ly):
+            if band is not None and abs(i - j) > band:
+                continue
+            d = float(np.sqrt(np.sum((x[i].astype(np.float64) - y[j]) ** 2)))
+            if i == 0 and j == 0:
+                best = 0.0
+            else:
+                best = INF
+                if i > 0:
+                    best = min(best, cost[i - 1, j])
+                if j > 0:
+                    best = min(best, cost[i, j - 1])
+                if i > 0 and j > 0:
+                    best = min(best, cost[i - 1, j - 1])
+            cost[i, j] = d + best
+    return float(cost[lx - 1, ly - 1]) / (lx + ly)
+
+
+def dtw_pairwise(
+    x: np.ndarray,
+    y: np.ndarray,
+    lenx: np.ndarray,
+    leny: np.ndarray,
+    band: int | None = None,
+) -> np.ndarray:
+    """Oracle for dtw_tile: (Bx,T,D) x (By,T,D) -> (Bx,By)."""
+    out = np.zeros((x.shape[0], y.shape[0]), dtype=np.float64)
+    for p in range(x.shape[0]):
+        for q in range(y.shape[0]):
+            out[p, q] = dtw_single(x[p, : lenx[p]], y[q, : leny[q]], band=band)
+    return out
+
+
+# --------------------------------------------------------------------------
+# MFCC front-end (HTK-style, matching compile/model.py and rust/src/dsp/)
+# --------------------------------------------------------------------------
+
+SAMPLE_RATE = 16_000
+FRAME_LEN = 160  # 10 ms
+FRAME_HOP = 80  # 5 ms  (50% overlap, paper §6.1)
+NFFT = 256
+N_MELS = 26
+N_CEPS = 12
+PREEMPH = 0.97
+DELTA_WIN = 2
+FLOOR = 1.0e-10
+
+
+def hz_to_mel(f):
+    return 2595.0 * np.log10(1.0 + np.asarray(f, dtype=np.float64) / 700.0)
+
+
+def mel_to_hz(m):
+    return 700.0 * (10.0 ** (np.asarray(m, dtype=np.float64) / 2595.0) - 1.0)
+
+
+def mel_filterbank(
+    n_mels: int = N_MELS, nfft: int = NFFT, sr: int = SAMPLE_RATE
+) -> np.ndarray:
+    """(n_mels, nfft//2 + 1) triangular filters, HTK-style mel spacing."""
+    lo, hi = hz_to_mel(0.0), hz_to_mel(sr / 2.0)
+    mel_pts = np.linspace(lo, hi, n_mels + 2)
+    hz_pts = mel_to_hz(mel_pts)
+    bins_hz = np.arange(nfft // 2 + 1) * (sr / nfft)
+    fb = np.zeros((n_mels, nfft // 2 + 1), dtype=np.float64)
+    for m in range(n_mels):
+        left, center, right = hz_pts[m], hz_pts[m + 1], hz_pts[m + 2]
+        up = (bins_hz - left) / max(center - left, 1e-12)
+        down = (right - bins_hz) / max(right - center, 1e-12)
+        fb[m] = np.maximum(0.0, np.minimum(up, down))
+    return fb
+
+
+def dct_matrix(n_ceps: int = N_CEPS, n_mels: int = N_MELS) -> np.ndarray:
+    """(n_ceps, n_mels) DCT-II rows 1..n_ceps with HTK sqrt(2/N) scaling."""
+    m = np.arange(n_mels, dtype=np.float64)
+    rows = []
+    for k in range(1, n_ceps + 1):
+        rows.append(np.sqrt(2.0 / n_mels) * np.cos(np.pi * k * (m + 0.5) / n_mels))
+    return np.stack(rows)
+
+
+def frame_signal(wav: np.ndarray) -> np.ndarray:
+    """(S,) -> (T, FRAME_LEN), T = 1 + (S - FRAME_LEN) // FRAME_HOP."""
+    s = len(wav)
+    t = 1 + (s - FRAME_LEN) // FRAME_HOP
+    return np.stack([wav[i * FRAME_HOP : i * FRAME_HOP + FRAME_LEN] for i in range(t)])
+
+
+def hamming(n: int = FRAME_LEN) -> np.ndarray:
+    return 0.54 - 0.46 * np.cos(2.0 * np.pi * np.arange(n) / (n - 1))
+
+
+def delta(feat: np.ndarray, win: int = DELTA_WIN) -> np.ndarray:
+    """HTK regression deltas with edge replication padding."""
+    t = feat.shape[0]
+    denom = 2.0 * sum(th * th for th in range(1, win + 1))
+    out = np.zeros_like(feat)
+    for i in range(t):
+        acc = np.zeros(feat.shape[1], dtype=feat.dtype)
+        for th in range(1, win + 1):
+            fwd = feat[min(i + th, t - 1)]
+            bwd = feat[max(i - th, 0)]
+            acc += th * (fwd - bwd)
+        out[i] = acc / denom
+    return out
+
+
+def mfcc_single(wav: np.ndarray) -> np.ndarray:
+    """(S,) waveform -> (T, 39) MFCC + logE + deltas + delta-deltas."""
+    wav = np.asarray(wav, dtype=np.float64)
+    pre = np.concatenate([[wav[0] * (1.0 - PREEMPH)], wav[1:] - PREEMPH * wav[:-1]])
+    frames = frame_signal(pre) * hamming()
+    spec = np.fft.rfft(frames, n=NFFT, axis=-1)
+    power = np.abs(spec) ** 2
+    fb = mel_filterbank()
+    mel = np.log(np.maximum(power @ fb.T, FLOOR))
+    ceps = mel @ dct_matrix().T  # (T, 12)
+    log_e = np.log(np.maximum(np.sum(frames**2, axis=-1), FLOOR))  # (T,)
+    base = np.concatenate([ceps, log_e[:, None]], axis=-1)  # (T, 13)
+    d1 = delta(base)
+    d2 = delta(d1)
+    return np.concatenate([base, d1, d2], axis=-1)  # (T, 39)
+
+
+def mfcc_batch(wavs: np.ndarray) -> np.ndarray:
+    """(B, S) -> (B, T, 39)."""
+    return np.stack([mfcc_single(w) for w in wavs])

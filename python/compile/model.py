@@ -1,0 +1,119 @@
+"""Layer-2 JAX compute graphs (build-time only; never on the request path).
+
+Two graphs are AOT-lowered by aot.py and executed from the Rust
+coordinator through the PJRT CPU client:
+
+  * pairwise_dtw  — a (Bx, By) tile of the DTW distance matrix, calling
+    the Layer-1 Pallas kernel (kernels/dtw.py).  The Rust distance
+    builder tiles every subset's condensed matrix over this executable.
+  * mfcc_frontend — the HTK-style acoustic front-end of paper §6.1:
+    waveform (B, S) -> (B, T, 39) MFCC + logE + Δ + ΔΔ.  Pure jnp; XLA
+    fuses the whole chain into one executable.
+
+Both are pinned against the numpy oracles in kernels/ref.py by
+python/tests/.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dtw as dtw_kernel
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# pairwise DTW tile
+# ---------------------------------------------------------------------------
+
+
+def pairwise_dtw(x, y, lenx, leny, *, band: int | None = None):
+    """(Bx,T,D) x (By,T,D) -> (Bx,By) normalised DTW distances (1-tuple).
+
+    Returned as a 1-tuple because aot.py lowers with return_tuple=True
+    and the Rust side unwraps with to_tuple1().
+    """
+    return (dtw_kernel.dtw_tile(x, y, lenx, leny, band=band),)
+
+
+# ---------------------------------------------------------------------------
+# MFCC front-end (mirrors kernels/ref.py in f32)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _mel_fb_f32() -> np.ndarray:
+    return ref.mel_filterbank().astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _dct_f32() -> np.ndarray:
+    return ref.dct_matrix().astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _hamming_f32() -> np.ndarray:
+    return ref.hamming().astype(np.float32)
+
+
+def _frame(wav):
+    """(B, S) -> (B, T, FRAME_LEN) strided framing via gather."""
+    s = wav.shape[-1]
+    t = 1 + (s - ref.FRAME_LEN) // ref.FRAME_HOP
+    starts = jnp.arange(t) * ref.FRAME_HOP  # (T,)
+    idx = starts[:, None] + jnp.arange(ref.FRAME_LEN)[None, :]  # (T, L)
+    return wav[:, idx]  # (B, T, L)
+
+
+def _delta(feat, lens):
+    """HTK regression deltas over the time axis with edge replication at
+    the *true* segment end.
+
+    feat: (B, T, F); lens: (B,) i32 true frame counts.  Each lane's
+    forward lookups clamp to its own last real frame (lens-1), matching
+    ref.delta applied to the unpadded signal — without this, padded
+    silence frames bleed into the last delta_win*2 frames of every
+    segment (caught by the rust artifact_crosscheck test).
+    """
+    t = feat.shape[1]
+    denom = 2.0 * sum(th * th for th in range(1, ref.DELTA_WIN + 1))
+    ts = jnp.arange(t)[None, :]  # (1, T)
+    last = (lens - 1).astype(jnp.int32)[:, None]  # (B, 1)
+    acc = jnp.zeros_like(feat)
+    for th in range(1, ref.DELTA_WIN + 1):
+        idx_f = jnp.minimum(ts + th, last)  # (B, T) per-lane clamp
+        idx_b = jnp.maximum(ts - th, 0)
+        idx_b = jnp.minimum(idx_b, last)  # beyond-len frames irrelevant
+        fwd = jnp.take_along_axis(feat, idx_f[..., None], axis=1)
+        bwd = jnp.take_along_axis(feat, jnp.broadcast_to(idx_b, idx_f.shape)[..., None], axis=1)
+        acc = acc + th * (fwd - bwd)
+    return acc / denom
+
+
+def mfcc_frontend(wav, lens):
+    """(B, S) f32 waveform + (B,) i32 frame counts ->
+    ((B, T, 39) f32,) MFCC+logE+Δ+ΔΔ."""
+    # Pre-emphasis.
+    first = wav[:, :1] * (1.0 - ref.PREEMPH)
+    rest = wav[:, 1:] - ref.PREEMPH * wav[:, :-1]
+    pre = jnp.concatenate([first, rest], axis=-1)
+
+    frames = _frame(pre) * jnp.asarray(_hamming_f32())  # (B, T, L)
+    spec = jnp.fft.rfft(frames, n=ref.NFFT, axis=-1)
+    power = jnp.abs(spec) ** 2  # (B, T, NFFT//2+1)
+
+    mel = jnp.log(jnp.maximum(power @ jnp.asarray(_mel_fb_f32()).T, ref.FLOOR))
+    ceps = mel @ jnp.asarray(_dct_f32()).T  # (B, T, 12)
+    log_e = jnp.log(jnp.maximum(jnp.sum(frames * frames, axis=-1), ref.FLOOR))
+
+    base = jnp.concatenate([ceps, log_e[..., None]], axis=-1)  # (B, T, 13)
+    d1 = _delta(base, lens)
+    d2 = _delta(d1, lens)
+    return (jnp.concatenate([base, d1, d2], axis=-1),)  # (B, T, 39)
+
+
+def mfcc_num_frames(num_samples: int) -> int:
+    return 1 + (num_samples - ref.FRAME_LEN) // ref.FRAME_HOP

@@ -1,0 +1,169 @@
+"""Kernel-vs-oracle: the CORE correctness signal for Layer 1.
+
+The Pallas wavefront DTW (compile/kernels/dtw.py) is asserted against
+the plain-loop numpy oracle (compile/kernels/ref.py) over hypothesis-
+driven sweeps of shapes, lengths, dtypes and content.  Distinct shapes
+force re-trace + re-compile, so hypothesis draws from a bounded shape
+pool and spends its examples on data/length variation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dtw, ref
+
+# Shapes small enough for the O(T^2) loop oracle, varied enough to hit
+# even/odd T, D=1, non-square tiles and block-divided grids.
+SHAPE_POOL = [
+    # (bx, by, t, d, block_x, block_y)
+    (1, 1, 4, 1, None, None),
+    (2, 3, 8, 2, None, None),
+    (4, 4, 12, 3, 2, 2),
+    (3, 5, 7, 4, None, None),
+    (4, 2, 16, 39, 2, 2),
+    (6, 6, 10, 5, 3, 3),
+]
+
+
+def _case(rng, bx, by, t, d, lo=1):
+    x = rng.normal(size=(bx, t, d)).astype(np.float32)
+    y = rng.normal(size=(by, t, d)).astype(np.float32)
+    lx = rng.integers(lo, t + 1, size=bx).astype(np.int32)
+    ly = rng.integers(lo, t + 1, size=by).astype(np.int32)
+    return x, y, lx, ly
+
+
+def _run(x, y, lx, ly, **kw):
+    return np.asarray(
+        dtw.dtw_tile(jnp.asarray(x), jnp.asarray(y), jnp.asarray(lx), jnp.asarray(ly), **kw)
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=st.sampled_from(SHAPE_POOL), seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_oracle(shape, seed):
+    bx, by, t, d, blk_x, blk_y = shape
+    rng = np.random.default_rng(seed)
+    x, y, lx, ly = _case(rng, bx, by, t, d)
+    got = _run(x, y, lx, ly, block_x=blk_x, block_y=blk_y)
+    want = ref.dtw_pairwise(x, y, lx, ly)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), band=st.sampled_from([1, 3, 6]))
+def test_kernel_banded_matches_oracle(seed, band):
+    rng = np.random.default_rng(seed)
+    x, y, lx, ly = _case(rng, 4, 4, 12, 3)
+    got = _run(x, y, lx, ly, band=band)
+    want = ref.dtw_pairwise(x, y, lx, ly, band=band)
+    feasible = np.isfinite(want)
+    np.testing.assert_allclose(got[feasible], want[feasible], rtol=1e-4, atol=1e-5)
+    # Infeasible pairs (|lx-ly| > band) surface as huge sentinels, which
+    # the Rust side maps back to "no path".
+    assert np.all(got[~feasible] > 1e20 / 64)
+
+
+def test_identical_segments_zero_distance():
+    """Self-distance is ~0.  Not exactly 0: the kernel computes
+    ||x-y||^2 = ||x||^2 + ||y||^2 - 2x.y (the MXU-friendly identity),
+    which leaves O(eps*||x||^2) cancellation noise that sqrt amplifies
+    to ~1e-3 near zero — negligible against O(1) inter-class distances
+    (see DESIGN.md §Hardware-Adaptation)."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(3, 10, 4)).astype(np.float32)
+    lx = np.array([10, 6, 3], dtype=np.int32)
+    got = _run(x, x, lx, lx)
+    assert np.allclose(np.diag(got), 0.0, atol=5e-3)
+
+
+def test_symmetry():
+    rng = np.random.default_rng(8)
+    x, y, lx, ly = _case(rng, 4, 4, 9, 3)
+    a = _run(x, y, lx, ly)
+    b = _run(y, x, ly, lx)
+    np.testing.assert_allclose(a, b.T, rtol=1e-5, atol=1e-6)
+
+
+def test_nonnegative():
+    rng = np.random.default_rng(9)
+    x, y, lx, ly = _case(rng, 5, 5, 11, 2)
+    assert np.all(_run(x, y, lx, ly) >= 0.0)
+
+
+def test_length_one_segments():
+    """lx = ly = 1 reduces to the frame distance / 2."""
+    rng = np.random.default_rng(10)
+    x = rng.normal(size=(2, 6, 3)).astype(np.float32)
+    y = rng.normal(size=(2, 6, 3)).astype(np.float32)
+    ones = np.ones(2, dtype=np.int32)
+    got = _run(x, y, ones, ones)
+    want = np.zeros((2, 2))
+    for p in range(2):
+        for q in range(2):
+            want[p, q] = np.linalg.norm(x[p, 0] - y[q, 0]) / 2.0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_padding_is_ignored():
+    """Garbage in padded frames must not change the result."""
+    rng = np.random.default_rng(11)
+    x, y, lx, ly = _case(rng, 3, 3, 10, 3)
+    base = _run(x, y, lx, ly)
+    x2, y2 = x.copy(), y.copy()
+    for p in range(3):
+        x2[p, lx[p]:] = 1e6
+        y2[p, ly[p]:] = -1e6
+    np.testing.assert_allclose(_run(x2, y2, lx, ly), base, rtol=1e-5, atol=1e-6)
+
+
+def test_triangle_inequality_tendency():
+    """Normalised DTW is not a metric, but on well-separated point-like
+    segments (each frame ~ constant) it reduces to scaled Euclidean
+    distance, where the triangle inequality must hold."""
+    rng = np.random.default_rng(12)
+    centers = rng.normal(size=(3, 1, 4)).astype(np.float32) * 5
+    segs = np.repeat(centers, 8, axis=1)  # (3, 8, 4) constant sequences
+    lens = np.full(3, 8, dtype=np.int32)
+    d = _run(segs, segs, lens, lens)
+    for i in range(3):
+        for j in range(3):
+            for k in range(3):
+                assert d[i, j] <= d[i, k] + d[k, j] + 1e-5
+
+
+def test_monotone_under_scaling():
+    """Scaling all features by a > 1 scales distances by a (homogeneity)."""
+    rng = np.random.default_rng(13)
+    x, y, lx, ly = _case(rng, 3, 3, 9, 3)
+    base = _run(x, y, lx, ly)
+    scaled = _run(2.5 * x, 2.5 * y, lx, ly)
+    np.testing.assert_allclose(scaled, 2.5 * base, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("t", [4, 5, 16, 64])
+def test_full_length_various_t(t):
+    rng = np.random.default_rng(t)
+    x = rng.normal(size=(2, t, 3)).astype(np.float32)
+    y = rng.normal(size=(2, t, 3)).astype(np.float32)
+    full = np.full(2, t, dtype=np.int32)
+    got = _run(x, y, full, full)
+    want = ref.dtw_pairwise(x, y, full, full)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_block_grid_equals_single_block():
+    rng = np.random.default_rng(14)
+    x, y, lx, ly = _case(rng, 8, 8, 10, 3)
+    whole = _run(x, y, lx, ly)
+    tiled = _run(x, y, lx, ly, block_x=4, block_y=2)
+    np.testing.assert_allclose(whole, tiled, rtol=1e-6, atol=1e-7)
+
+
+def test_bad_block_raises():
+    rng = np.random.default_rng(15)
+    x, y, lx, ly = _case(rng, 4, 4, 6, 2)
+    with pytest.raises(ValueError):
+        _run(x, y, lx, ly, block_x=3)

@@ -1,0 +1,128 @@
+"""Layer-2 MFCC front-end vs the numpy oracle, plus signal-level sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _mfcc(wav):
+    b, samples = wav.shape
+    t = model.mfcc_num_frames(samples)
+    lens = jnp.full((b,), t, dtype=jnp.int32)
+    return np.asarray(model.mfcc_frontend(jnp.asarray(wav.astype(np.float32)), lens)[0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-3, 0.1, 1.0]))
+def test_matches_oracle_random_signals(seed, scale):
+    rng = np.random.default_rng(seed)
+    wav = (rng.normal(size=(2, 5200)) * scale).astype(np.float32)
+    got = _mfcc(wav)
+    want = ref.mfcc_batch(wav)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_output_shape():
+    wav = np.zeros((4, 5200), dtype=np.float32)
+    out = _mfcc(wav)
+    assert out.shape == (4, 64, 39)
+    assert model.mfcc_num_frames(5200) == 64
+
+
+def test_silence_hits_floor():
+    """All-zero input: log terms bottom out at log(FLOOR), deltas are 0."""
+    out = _mfcc(np.zeros((1, 5200), dtype=np.float32))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out[0, :, 12], np.log(ref.FLOOR), rtol=1e-5)
+    np.testing.assert_allclose(out[0, :, 13:], 0.0, atol=1e-5)
+
+
+def test_pure_tone_energy_in_right_mel_band():
+    """A 1 kHz tone concentrates filterbank energy near the 1 kHz filters."""
+    t = np.arange(5200) / ref.SAMPLE_RATE
+    wav = (0.5 * np.sin(2 * np.pi * 1000.0 * t)).astype(np.float32)[None, :]
+    frames = ref.frame_signal(
+        np.concatenate([[wav[0, 0] * (1 - ref.PREEMPH)], wav[0, 1:] - ref.PREEMPH * wav[0, :-1]])
+    ) * ref.hamming()
+    power = np.abs(np.fft.rfft(frames, n=ref.NFFT, axis=-1)) ** 2
+    mel = power @ ref.mel_filterbank().T
+    peak_filter = np.argmax(mel.mean(axis=0))
+    centers = ref.mel_to_hz(
+        np.linspace(ref.hz_to_mel(0), ref.hz_to_mel(ref.SAMPLE_RATE / 2), ref.N_MELS + 2)
+    )[1:-1]
+    assert abs(centers[peak_filter] - 1000.0) < 300.0
+
+
+def test_deterministic():
+    rng = np.random.default_rng(3)
+    wav = rng.normal(size=(1, 5200)).astype(np.float32)
+    np.testing.assert_array_equal(_mfcc(wav), _mfcc(wav))
+
+
+def test_amplitude_invariance_of_shape():
+    """Cepstra of a*x differ from cepstra of x only in c0/logE-like terms;
+    since we keep c1..c12, scaling shifts logE but leaves MFCC deltas of
+    spectral *shape* nearly unchanged."""
+    rng = np.random.default_rng(4)
+    wav = rng.normal(size=(1, 5200)).astype(np.float32)
+    a = _mfcc(wav)
+    b = _mfcc(4.0 * wav)
+    # c1..c12 identical up to float noise (log power shifts cancel in DCT rows >= 1)
+    np.testing.assert_allclose(a[0, :, :12], b[0, :, :12], rtol=1e-3, atol=1e-3)
+    # logE shifted by log(16)
+    np.testing.assert_allclose(b[0, :, 12] - a[0, :, 12], np.log(16.0), rtol=1e-3)
+
+
+def test_delta_of_constant_is_zero():
+    feat = np.tile(np.array([[1.0, -2.0, 3.0]]), (10, 1))
+    np.testing.assert_allclose(ref.delta(feat), 0.0, atol=1e-12)
+
+
+def test_delta_of_linear_ramp_is_slope():
+    t = np.arange(20, dtype=np.float64)
+    feat = (2.0 * t)[:, None]
+    d = ref.delta(feat)
+    # Interior frames: regression over a linear ramp returns the slope.
+    np.testing.assert_allclose(d[2:-2, 0], 2.0, rtol=1e-12)
+
+
+@pytest.mark.parametrize("n_samples,expect_t", [(160, 1), (240, 2), (5200, 64)])
+def test_frame_count(n_samples, expect_t):
+    assert model.mfcc_num_frames(n_samples) == expect_t
+
+
+def test_partial_length_lane_matches_truncated_ref():
+    """A lane whose waveform fills only part of the S bucket must produce
+    (for its true frames) exactly what the oracle computes on the
+    unpadded signal — i.e. deltas replicate the lane's own last real
+    frame, not padded silence."""
+    rng = np.random.default_rng(9)
+    true_samples = 1040  # -> 12 frames
+    t_true = model.mfcc_num_frames(true_samples)
+    wav = np.zeros((2, 5200), dtype=np.float32)
+    sig = (rng.normal(size=true_samples) * 0.3).astype(np.float32)
+    wav[0, :true_samples] = sig
+    lens = jnp.asarray([t_true, model.mfcc_num_frames(5200)], dtype=jnp.int32)
+    got = np.asarray(model.mfcc_frontend(jnp.asarray(wav), lens)[0])
+    want = ref.mfcc_single(sig)
+    np.testing.assert_allclose(got[0, :t_true], want, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), frames=st.integers(2, 64))
+def test_random_partial_lengths_match_truncated_oracle(seed, frames):
+    """Hypothesis sweep of the masked-delta path: any true frame count
+    must reproduce the oracle on the unpadded signal."""
+    rng = np.random.default_rng(seed)
+    samples = 160 + (frames - 1) * 80
+    wav = np.zeros((1, 5200), dtype=np.float32)
+    sig = (rng.normal(size=samples) * 0.2).astype(np.float32)
+    wav[0, :samples] = sig
+    lens = jnp.asarray([frames], dtype=jnp.int32)
+    got = np.asarray(model.mfcc_frontend(jnp.asarray(wav), lens)[0])
+    want = ref.mfcc_single(sig)
+    np.testing.assert_allclose(got[0, :frames], want, rtol=1e-2, atol=1e-2)

@@ -1,0 +1,179 @@
+//! Dendrogram: the binary merge tree AHC produces, with cut extraction.
+
+/// One agglomeration step: clusters containing objects `a` and `b`
+/// merged at `height` into a cluster of `size` objects.
+#[derive(Debug, Clone)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    pub height: f32,
+    pub size: usize,
+}
+
+/// The full merge sequence over `n` leaves, stored in non-decreasing
+/// height order (heights are the "evaluation graph" the L-method reads).
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    n: usize,
+    merges: Vec<Merge>,
+}
+
+/// Union-find with path halving.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu {
+            parent: (0..n).collect(),
+        }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) -> usize {
+        let (ra, rb) = (self.find(a), self.find(b));
+        // Keep the smaller root as representative (deterministic).
+        let (keep, drop) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.parent[drop] = keep;
+        keep
+    }
+}
+
+impl Dendrogram {
+    pub fn new(n: usize, merges: Vec<Merge>) -> Self {
+        Dendrogram { n, merges }
+    }
+
+    /// Build from raw NN-chain output: (surviving index, absorbed index,
+    /// height) triples in *chain emission order* (possibly height-
+    /// unsorted).  Sorting by height and re-resolving representatives
+    /// with union-find yields the canonical merge sequence (reducible
+    /// linkages guarantee this is consistent).
+    pub fn from_raw_merges(n: usize, mut raw: Vec<(usize, usize, f32)>) -> Self {
+        raw.sort_by(|x, y| x.2.partial_cmp(&y.2).unwrap());
+        let mut dsu = Dsu::new(n);
+        let mut sizes = vec![1usize; n];
+        let merges = raw
+            .into_iter()
+            .map(|(a, b, h)| {
+                let (ra, rb) = (dsu.find(a), dsu.find(b));
+                debug_assert_ne!(ra, rb, "merge joins an already-joined pair");
+                let size = sizes[ra] + sizes[rb];
+                let keep = dsu.union(ra, rb);
+                sizes[keep] = size;
+                Merge {
+                    a: ra,
+                    b: rb,
+                    height: h,
+                    size,
+                }
+            })
+            .collect();
+        Dendrogram { n, merges }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn merges(&self) -> &[Merge] {
+        &self.merges
+    }
+
+    /// Merge heights in stored (non-decreasing) order.
+    pub fn merge_heights(&self) -> Vec<f32> {
+        self.merges.iter().map(|m| m.height).collect()
+    }
+
+    /// Cut into `k` clusters: apply the first n−k merges, label the
+    /// resulting components 0..k densely (in order of first appearance).
+    pub fn cut(&self, k: usize) -> Vec<usize> {
+        let k = k.clamp(1, self.n.max(1));
+        let mut dsu = Dsu::new(self.n);
+        for m in self.merges.iter().take(self.n - k) {
+            dsu.union(m.a, m.b);
+        }
+        let mut label_of_root = std::collections::HashMap::new();
+        let mut labels = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let r = dsu.find(i);
+            let next = label_of_root.len();
+            let l = *label_of_root.entry(r).or_insert(next);
+            labels.push(l);
+        }
+        debug_assert_eq!(label_of_root.len(), k.min(self.n));
+        labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_dendro() -> Dendrogram {
+        // 4 leaves: (0,1)@1, (2,3)@2, ((01),(23))@5
+        Dendrogram::from_raw_merges(4, vec![(0, 1, 1.0), (2, 3, 2.0), (0, 2, 5.0)])
+    }
+
+    #[test]
+    fn heights_sorted_and_sizes_tracked() {
+        let d = chain_dendro();
+        assert_eq!(d.merge_heights(), vec![1.0, 2.0, 5.0]);
+        assert_eq!(d.merges()[2].size, 4);
+    }
+
+    #[test]
+    fn cuts_at_every_k() {
+        let d = chain_dendro();
+        assert_eq!(d.cut(1), vec![0, 0, 0, 0]);
+        let c2 = d.cut(2);
+        assert_eq!(c2[0], c2[1]);
+        assert_eq!(c2[2], c2[3]);
+        assert_ne!(c2[0], c2[2]);
+        let c4 = d.cut(4);
+        assert_eq!(c4, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn unsorted_raw_merges_are_canonicalised() {
+        // Same tree, emitted out of height order (as NN-chain may).
+        let d = Dendrogram::from_raw_merges(4, vec![(2, 3, 2.0), (0, 1, 1.0), (0, 2, 5.0)]);
+        assert_eq!(d.merge_heights(), vec![1.0, 2.0, 5.0]);
+        let c2 = d.cut(2);
+        assert_eq!(c2[0], c2[1]);
+        assert_eq!(c2[2], c2[3]);
+    }
+
+    #[test]
+    fn representative_indices_resolve_through_unions() {
+        // Merge (0,1) then raw says (1, 2): 1's root is 0 by then.
+        let d = Dendrogram::from_raw_merges(3, vec![(0, 1, 1.0), (1, 2, 2.0)]);
+        assert_eq!(d.merges()[1].size, 3);
+        assert_eq!(d.cut(1), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn cut_clamps_k() {
+        let d = chain_dendro();
+        assert_eq!(d.cut(0), vec![0, 0, 0, 0]); // clamped to 1
+        assert_eq!(d.cut(99), vec![0, 1, 2, 3]); // clamped to n
+    }
+
+    #[test]
+    fn labels_dense_and_stable() {
+        let d = chain_dendro();
+        let c3 = d.cut(3);
+        let max = *c3.iter().max().unwrap();
+        assert_eq!(max, 2);
+        // First appearance order: object 0 gets label 0.
+        assert_eq!(c3[0], 0);
+    }
+}

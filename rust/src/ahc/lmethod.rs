@@ -1,0 +1,195 @@
+//! The L method (Salvador & Chan 2004): automatic number-of-clusters
+//! selection from the dendrogram's evaluation graph.
+//!
+//! The evaluation graph plots merge distance (y) against number of
+//! clusters (x = n−1 … 1 read off the merge sequence).  The method fits
+//! two least-squares lines — left of a candidate knee c and right of it
+//! — and picks the c minimising the length-weighted total RMSE:
+//!
+//!   RMSE(c) = (c−1)/(b−1) · RMSE_left + (b−c)/(b−1) · RMSE_right
+//!
+//! The iterative-refinement variant repeatedly truncates the x-range to
+//! 2·knee (large flat tails otherwise drag the knee right), which is
+//! the form the MAHC papers use.
+
+/// Fit y = α + βx over the given points, returning RMSE.
+fn line_rmse(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    debug_assert!(xs.len() >= 2);
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    let (alpha, beta) = if denom.abs() < 1e-12 {
+        (sy / n, 0.0)
+    } else {
+        let beta = (n * sxy - sx * sy) / denom;
+        ((sy - beta * sx) / n, beta)
+    };
+    let sse: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (alpha + beta * x);
+            e * e
+        })
+        .sum();
+    (sse / n).sqrt()
+}
+
+/// One pass of the L method over points (xs[i], ys[i]); returns the knee
+/// x value.  Needs at least 4 points (2 per line).
+fn knee_once(xs: &[f64], ys: &[f64]) -> usize {
+    let b = xs.len();
+    debug_assert!(b >= 4);
+    let mut best_c = 2;
+    let mut best_err = f64::INFINITY;
+    // Knee index c partitions [0, c) | [c, b); both sides >= 2 points.
+    for c in 2..=b - 2 {
+        let left = line_rmse(&xs[..c], &ys[..c]);
+        let right = line_rmse(&xs[c..], &ys[c..]);
+        let err = (c as f64 / b as f64) * left + ((b - c) as f64 / b as f64) * right;
+        if err < best_err {
+            best_err = err;
+            best_c = c;
+        }
+    }
+    xs[best_c - 1].round() as usize
+}
+
+/// Determine the number of clusters from merge heights (ascending, as
+/// [`super::Dendrogram::merge_heights`] returns them).
+///
+/// `n` is the number of objects.  Returns a value in [2, n−1] for
+/// n ≥ 4; degenerate inputs fall back to small constants.
+pub fn l_method(heights_ascending: &[f32], n: usize) -> usize {
+    let m = heights_ascending.len();
+    if n < 2 || m == 0 {
+        return 1;
+    }
+    if n < 6 {
+        // Too few points for two regression lines; the merge sequence
+        // gives at best a coarse answer — pick the largest height gap.
+        return largest_gap_k(heights_ascending, n);
+    }
+
+    // Evaluation graph: x = number of clusters after undoing merge i,
+    // ordered by increasing x. Undoing the last merge leaves 2 clusters:
+    // x = 2..=n-? ; y = merge height at that point.
+    // heights_ascending[m-1] corresponds to x = 2, [m-2] to 3, etc.
+    let mut xs: Vec<f64> = Vec::with_capacity(m);
+    let mut ys: Vec<f64> = Vec::with_capacity(m);
+    for i in 0..m {
+        xs.push((i + 2) as f64); // clusters
+        ys.push(heights_ascending[m - 1 - i] as f64);
+    }
+
+    // Iterative refinement (Salvador & Chan §3.3): shrink the x-range
+    // to twice the current knee until it stops moving.
+    let mut cutoff = xs.len();
+    let mut knee = knee_once(&xs, &ys);
+    for _ in 0..32 {
+        let new_cutoff = (2 * knee).clamp(4, xs.len());
+        if new_cutoff >= cutoff {
+            break;
+        }
+        cutoff = new_cutoff;
+        let new_knee = knee_once(&xs[..cutoff], &ys[..cutoff]);
+        if new_knee == knee {
+            break;
+        }
+        knee = new_knee;
+    }
+    knee.clamp(2, n - 1)
+}
+
+/// Fallback for tiny inputs: k just after the largest height jump.
+fn largest_gap_k(heights_ascending: &[f32], n: usize) -> usize {
+    let m = heights_ascending.len();
+    if m < 2 {
+        return 1.max(n.min(2));
+    }
+    let mut best = (0usize, -1.0f32);
+    for i in 0..m - 1 {
+        let gap = heights_ascending[i + 1] - heights_ascending[i];
+        if gap > best.1 {
+            best = (i, gap);
+        }
+    }
+    // Undoing merges above the gap leaves (m - best.0) clusters... +1
+    // because m = n-1 merges produce 1 cluster when all applied.
+    (m - best.0).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ahc::ward_linkage;
+    use crate::distance::Condensed;
+
+    #[test]
+    fn finds_knee_on_synthetic_graph() {
+        // Construct heights whose evaluation graph has an obvious knee
+        // at 4 clusters: within-cluster merges cheap, between expensive.
+        // n = 40 objects, 39 merges: 36 small then 3 big (joining 4 blobs).
+        let mut heights: Vec<f32> = (0..36).map(|i| 0.1 + 0.002 * i as f32).collect();
+        heights.extend_from_slice(&[8.0, 9.0, 10.0]);
+        let k = l_method(&heights, 40);
+        assert!(
+            (3..=6).contains(&k),
+            "expected knee near 4 clusters, got {k}"
+        );
+    }
+
+    #[test]
+    fn blob_dendrogram_end_to_end() {
+        // 5 well-separated blobs of 6 points each on a line.
+        let mut pts = Vec::new();
+        for c in 0..5 {
+            for j in 0..6 {
+                pts.push(c as f32 * 50.0 + j as f32 * 0.2);
+            }
+        }
+        let n = pts.len();
+        let mut cond = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                cond.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        let dendro = ward_linkage(&cond);
+        let k = l_method(&dendro.merge_heights(), n);
+        assert_eq!(k, 5);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(l_method(&[], 1), 1);
+        assert_eq!(l_method(&[1.0], 2), 2); // largest-gap fallback
+        let k = l_method(&[0.1, 0.2, 5.0], 4);
+        assert!(k >= 1 && k <= 4);
+    }
+
+    #[test]
+    fn flat_heights_give_small_k() {
+        // No structure at all: knee lands at the left edge.
+        let heights = vec![1.0f32; 59];
+        let k = l_method(&heights, 60);
+        assert!(k <= 5, "flat graph should give small k, got {k}");
+    }
+
+    #[test]
+    fn line_rmse_exact_fit_is_zero() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x - 1.0).collect();
+        assert!(line_rmse(&xs, &ys) < 1e-12);
+    }
+
+    #[test]
+    fn result_clamped_to_valid_range() {
+        let heights: Vec<f32> = (0..99).map(|i| i as f32).collect();
+        let k = l_method(&heights, 100);
+        assert!((2..100).contains(&k));
+    }
+}

@@ -1,0 +1,88 @@
+//! Medoid extraction (Algorithm 1 step 5): the member of each cluster
+//! minimising its summed distance to the other members.  Exact — the
+//! within-subset distances are already resident in the condensed
+//! matrix from stage 1, so no extra DTW work is needed.
+
+use crate::distance::Condensed;
+
+/// Medoid of each cluster under `labels` (values in 0..k).  Returns one
+/// index per cluster; empty clusters (possible only if `labels` never
+/// uses some value < k) get `usize::MAX`.
+pub fn medoids(labels: &[usize], k: usize, cond: &Condensed) -> Vec<usize> {
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &l) in labels.iter().enumerate() {
+        members[l].push(i);
+    }
+    members
+        .iter()
+        .map(|m| medoid_of(m, cond))
+        .collect()
+}
+
+/// Medoid of an explicit member list.
+pub fn medoid_of(members: &[usize], cond: &Condensed) -> usize {
+    match members.len() {
+        0 => usize::MAX,
+        1 => members[0],
+        _ => {
+            let mut best = (members[0], f64::INFINITY);
+            for &i in members {
+                let total: f64 = members
+                    .iter()
+                    .filter(|&&j| j != i)
+                    .map(|&j| cond.get(i, j) as f64)
+                    .sum();
+                if total < best.1 {
+                    best = (i, total);
+                }
+            }
+            best.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_condensed(pts: &[f32]) -> Condensed {
+        let n = pts.len();
+        let mut c = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                c.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn picks_central_member() {
+        // Points 0, 1, 10: medoid is 1 (total 1+9=10 beats 0's 1+10).
+        let cond = line_condensed(&[0.0, 1.0, 10.0]);
+        assert_eq!(medoid_of(&[0, 1, 2], &cond), 1);
+    }
+
+    #[test]
+    fn per_cluster_medoids() {
+        let cond = line_condensed(&[0.0, 1.0, 2.0, 100.0, 101.0]);
+        let labels = vec![0, 0, 0, 1, 1];
+        let m = medoids(&labels, 2, &cond);
+        assert_eq!(m[0], 1); // centre of {0,1,2}
+        assert!(m[1] == 3 || m[1] == 4); // tie between the pair
+    }
+
+    #[test]
+    fn singleton_and_empty() {
+        let cond = line_condensed(&[0.0, 5.0]);
+        assert_eq!(medoid_of(&[1], &cond), 1);
+        assert_eq!(medoid_of(&[], &cond), usize::MAX);
+    }
+
+    #[test]
+    fn deterministic_on_ties() {
+        // Symmetric pair: first member wins (stable iteration order).
+        let cond = line_condensed(&[0.0, 2.0]);
+        assert_eq!(medoid_of(&[0, 1], &cond), 0);
+    }
+}

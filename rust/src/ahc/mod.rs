@@ -1,0 +1,146 @@
+//! Agglomerative hierarchical clustering substrate.
+//!
+//! Classic AHC over a condensed DTW distance matrix, as the paper's §3
+//! prescribes: Ward linkage (the Murtagh-Legendre "Ward2" Lance-
+//! Williams form, applicable to a non-Euclidean DTW matrix), computed
+//! exactly in O(n²) time with the nearest-neighbour-chain algorithm
+//! ([`nnchain`]).  [`dendrogram`] turns the merge list into labelled
+//! cuts; [`lmethod`] finds the number of clusters per subset (Salvador
+//! & Chan, as in the paper's Step 4); [`medoid`] picks each cluster's
+//! representative for the second stage.
+
+pub mod dendrogram;
+pub mod lmethod;
+pub mod medoid;
+pub mod nnchain;
+
+pub use dendrogram::Dendrogram;
+pub use lmethod::l_method;
+pub use medoid::medoids;
+pub use nnchain::ward_linkage;
+
+use crate::distance::Condensed;
+
+/// Result of clustering one subset: flat labels in `0..k`, the chosen
+/// k, and the medoid (index into the subset) of each cluster.
+#[derive(Debug, Clone)]
+pub struct SubsetClustering {
+    pub labels: Vec<usize>,
+    pub k: usize,
+    pub medoids: Vec<usize>,
+}
+
+/// Cluster one subset end-to-end: Ward AHC → L-method k → cut → medoids.
+///
+/// `max_k` caps the L-method's answer (the driver passes
+/// `max_clusters_frac * n`); `k_override` forces a specific cut (used
+/// by the final stage, Algorithm 1 step 13).
+pub fn cluster_subset(
+    cond: &Condensed,
+    max_k: usize,
+    k_override: Option<usize>,
+) -> SubsetClustering {
+    let n = cond.n();
+    if n == 0 {
+        return SubsetClustering {
+            labels: Vec::new(),
+            k: 0,
+            medoids: Vec::new(),
+        };
+    }
+    if n == 1 {
+        return SubsetClustering {
+            labels: vec![0],
+            k: 1,
+            medoids: vec![0],
+        };
+    }
+    let dendro = ward_linkage(cond);
+    let k = match k_override {
+        Some(k) => k.clamp(1, n),
+        None => {
+            let heights = dendro.merge_heights();
+            l_method(&heights, n).clamp(1, max_k.max(1)).min(n)
+        }
+    };
+    let labels = dendro.cut(k);
+    let medoids = medoids(&labels, k, cond);
+    SubsetClustering { labels, k, medoids }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs on a line, 4 points each.
+    fn blob_condensed() -> (Condensed, Vec<usize>) {
+        let centers = [0.0f32, 10.0, 20.0];
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for (c, &center) in centers.iter().enumerate() {
+            for k in 0..4 {
+                pts.push(center + k as f32 * 0.1);
+                truth.push(c);
+            }
+        }
+        let n = pts.len();
+        let mut cond = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                cond.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        (cond, truth)
+    }
+
+    #[test]
+    fn recovers_blobs_end_to_end() {
+        let (cond, truth) = blob_condensed();
+        let out = cluster_subset(&cond, 6, None);
+        assert_eq!(out.k, 3, "L-method should find 3 blobs");
+        // Same-truth pairs share labels; different-truth pairs don't.
+        for i in 0..truth.len() {
+            for j in 0..i {
+                assert_eq!(
+                    out.labels[i] == out.labels[j],
+                    truth[i] == truth[j],
+                    "pair ({i},{j})"
+                );
+            }
+        }
+        assert_eq!(out.medoids.len(), 3);
+        // Each medoid belongs to the cluster it represents.
+        for (c, &m) in out.medoids.iter().enumerate() {
+            assert_eq!(out.labels[m], c);
+        }
+    }
+
+    #[test]
+    fn k_override_respected() {
+        let (cond, _) = blob_condensed();
+        let out = cluster_subset(&cond, 12, Some(5));
+        assert_eq!(out.k, 5);
+        assert_eq!(
+            out.labels.iter().collect::<std::collections::HashSet<_>>().len(),
+            5
+        );
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let out = cluster_subset(&Condensed::zeros(1), 4, None);
+        assert_eq!(out.k, 1);
+        assert_eq!(out.labels, vec![0]);
+        let out = cluster_subset(&Condensed::zeros(0), 4, None);
+        assert_eq!(out.k, 0);
+    }
+
+    #[test]
+    fn two_objects() {
+        let mut cond = Condensed::zeros(2);
+        cond.set(1, 0, 1.0);
+        let out = cluster_subset(&cond, 2, None);
+        assert!(out.k == 1 || out.k == 2);
+        assert_eq!(out.labels.len(), 2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Exact Ward linkage via the nearest-neighbour-chain algorithm.
+//!
+//! NN-chain computes the same dendrogram as naive O(n³) agglomeration
+//! in O(n²) time and O(n) extra space, for any *reducible* linkage —
+//! Ward is reducible.  The inter-cluster distance is maintained with
+//! the Lance-Williams "Ward2" update (Murtagh & Legendre 2014), which
+//! operates on the distances themselves and is therefore applicable to
+//! the paper's DTW (non-Euclidean) similarity matrix:
+//!
+//!   d(i∪j, k) = √[((nᵢ+nₖ)d²ᵢₖ + (nⱼ+nₖ)d²ⱼₖ − nₖd²ᵢⱼ) / (nᵢ+nⱼ+nₖ)]
+//!
+//! The working matrix is a mutable copy of the condensed input; merged-
+//! away clusters are tombstoned.  Merges can come off the chain out of
+//! height order, so the final merge list is sorted by height and
+//! relabelled union-find style (as scipy's `linkage` does).
+
+use crate::distance::Condensed;
+
+use super::dendrogram::Dendrogram;
+
+/// Compute the Ward dendrogram of a condensed distance matrix.
+pub fn ward_linkage(cond: &Condensed) -> Dendrogram {
+    let n = cond.n();
+    if n < 2 {
+        return Dendrogram::new(n, Vec::new());
+    }
+
+    // Working copy of distances + cluster sizes; `alive[c]` marks
+    // clusters not yet merged away.  Indices 0..n are the original
+    // objects throughout; a merged cluster keeps the *smaller* index.
+    let mut d = cond.clone();
+    let mut size = vec![1usize; n];
+    let mut alive = vec![true; n];
+
+    let mut raw: Vec<(usize, usize, f32)> = Vec::with_capacity(n - 1);
+    let mut chain: Vec<usize> = Vec::with_capacity(n);
+
+    for _ in 0..n - 1 {
+        // (Re)start the chain from any living cluster.
+        if chain.is_empty() {
+            let start = alive.iter().position(|&a| a).expect("no clusters left");
+            chain.push(start);
+        }
+
+        // Grow the chain until two clusters are mutual nearest
+        // neighbours.
+        loop {
+            let c = *chain.last().unwrap();
+            // Nearest living neighbour of c, preferring the previous
+            // chain element on ties (guarantees termination).
+            let prev = if chain.len() >= 2 {
+                Some(chain[chain.len() - 2])
+            } else {
+                None
+            };
+            let mut best = usize::MAX;
+            let mut best_d = f32::INFINITY;
+            for k in 0..n {
+                if k == c || !alive[k] {
+                    continue;
+                }
+                let dist = d.get(c, k);
+                if dist < best_d || (dist == best_d && Some(k) == prev) {
+                    best_d = dist;
+                    best = k;
+                }
+            }
+            debug_assert!(best != usize::MAX);
+            if Some(best) == prev {
+                // Mutual pair found: merge c and best.
+                chain.pop();
+                chain.pop();
+                let (a, b) = (c.min(best), c.max(best));
+                merge_into(&mut d, &mut size, &alive, a, b, best_d);
+                alive[b] = false;
+                size[a] += size[b];
+                raw.push((a, b, best_d));
+                break;
+            }
+            chain.push(best);
+        }
+    }
+
+    Dendrogram::from_raw_merges(n, raw)
+}
+
+/// Lance-Williams Ward2 update: fold cluster `b` into `a`, updating
+/// row/column `a` of the working matrix for all living k ∉ {a, b}.
+fn merge_into(
+    d: &mut Condensed,
+    size: &mut [usize],
+    alive: &[bool],
+    a: usize,
+    b: usize,
+    dab: f32,
+) {
+    let (na, nb) = (size[a] as f64, size[b] as f64);
+    let dab2 = (dab as f64) * (dab as f64);
+    for k in 0..d.n() {
+        if k == a || k == b || !alive[k] {
+            continue;
+        }
+        let nk = size[k] as f64;
+        let dak = d.get(a, k) as f64;
+        let dbk = d.get(b, k) as f64;
+        let num = (na + nk) * dak * dak + (nb + nk) * dbk * dbk - nk * dab2;
+        let new = (num / (na + nb + nk)).max(0.0).sqrt();
+        d.set(a, k, new as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cond_from_points(pts: &[f32]) -> Condensed {
+        let n = pts.len();
+        let mut c = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                c.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        c
+    }
+
+    /// Naive O(n³) Ward agglomeration with the same LW update, as a
+    /// correctness oracle for the chain algorithm.
+    fn naive_ward(cond: &Condensed) -> Vec<f32> {
+        let n = cond.n();
+        let mut d = cond.clone();
+        let mut size = vec![1usize; n];
+        let mut alive = vec![true; n];
+        let mut heights = Vec::new();
+        for _ in 0..n - 1 {
+            let mut best = (0, 0, f32::INFINITY);
+            for i in 0..n {
+                if !alive[i] {
+                    continue;
+                }
+                for j in 0..i {
+                    if !alive[j] {
+                        continue;
+                    }
+                    let v = d.get(i, j);
+                    if v < best.2 {
+                        best = (j, i, v);
+                    }
+                }
+            }
+            let (a, b, h) = best;
+            heights.push(h);
+            super::merge_into(&mut d, &mut size, &alive, a, b, h);
+            alive[b] = false;
+            size[a] += size[b];
+        }
+        heights.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        heights
+    }
+
+    #[test]
+    fn chain_matches_naive_heights() {
+        // Heights (sorted) must agree between NN-chain and naive Ward;
+        // merge *order* may differ but the dendrogram is the same.
+        for seed in 0..5u64 {
+            let mut rng = crate::util::rng::Rng::seed_from(seed);
+            let pts: Vec<f32> = (0..24).map(|_| rng.normal() as f32 * 3.0).collect();
+            let cond = cond_from_points(&pts);
+            let dendro = ward_linkage(&cond);
+            let mut got = dendro.merge_heights();
+            got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            let want = naive_ward(&cond);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "seed {seed}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merges_count_and_monotonicity() {
+        let pts: Vec<f32> = vec![0.0, 0.1, 5.0, 5.1, 10.0, 10.1, 10.2];
+        let dendro = ward_linkage(&cond_from_points(&pts));
+        assert_eq!(dendro.merges().len(), pts.len() - 1);
+        // Ward heights are monotone non-decreasing after sorting —
+        // verify the stored order is already sorted (from_raw_merges).
+        let h = dendro.merge_heights();
+        for w in h.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn pair_merges_first() {
+        // The two closest points must be the first merge.
+        let pts = vec![0.0f32, 100.0, 100.05, 200.0];
+        let dendro = ward_linkage(&cond_from_points(&pts));
+        let first = &dendro.merges()[0];
+        let mut ab = [first.a, first.b];
+        ab.sort_unstable();
+        assert_eq!(ab, [1, 2]);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        assert_eq!(ward_linkage(&Condensed::zeros(0)).merges().len(), 0);
+        assert_eq!(ward_linkage(&Condensed::zeros(1)).merges().len(), 0);
+        let mut c = Condensed::zeros(2);
+        c.set(1, 0, 3.0);
+        let d = ward_linkage(&c);
+        assert_eq!(d.merges().len(), 1);
+        assert_eq!(d.merges()[0].height, 3.0);
+    }
+
+    #[test]
+    fn equal_distances_dont_hang() {
+        // Fully tied matrix: chain must still terminate with n-1 merges.
+        let n = 12;
+        let mut c = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                c.set(i, j, 1.0);
+            }
+        }
+        let d = ward_linkage(&c);
+        assert_eq!(d.merges().len(), n - 1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Comparison baselines for the evaluation figures.
+//!
+//! * [`full_ahc`] — classical single-matrix AHC over the whole dataset
+//!   (the flat reference lines in Figs. 4, 5, 7); O(N²) space, which is
+//!   exactly what MAHC exists to avoid.
+//! * Plain MAHC (no size management) is not a separate implementation:
+//!   it is the [`crate::mahc::MahcDriver`] with `beta = None`, so both
+//!   variants share every line of machinery except the split step —
+//!   the comparison isolates the contribution.
+
+use crate::ahc;
+use crate::corpus::{Segment, SegmentSet};
+use crate::distance::{build_condensed, DtwBackend};
+use crate::metrics;
+
+/// Result of the classical-AHC baseline.
+#[derive(Debug, Clone)]
+pub struct AhcBaseline {
+    pub labels: Vec<usize>,
+    pub k: usize,
+    pub f_measure: f64,
+    /// Bytes of the full condensed matrix — the O(N²) cost MAHC avoids.
+    pub matrix_bytes: usize,
+}
+
+/// Classical AHC over the full dataset.  `k` of `None` lets the
+/// L method choose (capped at `max_clusters_frac`·N like the subsets).
+pub fn full_ahc(
+    set: &SegmentSet,
+    backend: &dyn DtwBackend,
+    threads: usize,
+    k: Option<usize>,
+    max_clusters_frac: f64,
+) -> anyhow::Result<AhcBaseline> {
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, backend, threads)?;
+    let max_k = ((set.len() as f64 * max_clusters_frac).ceil() as usize).max(2);
+    let clustering = ahc::cluster_subset(&cond, max_k, k);
+    let truth = set.labels();
+    let f_measure = metrics::f_measure(&clustering.labels, &truth);
+    Ok(AhcBaseline {
+        labels: clustering.labels,
+        k: clustering.k,
+        f_measure,
+        matrix_bytes: cond.bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+
+    #[test]
+    fn recovers_structure_on_separable_data() {
+        let set = generate(&DatasetSpec::tiny(80, 5, 31));
+        let out = full_ahc(&set, &NativeBackend::new(), 4, None, 0.3).unwrap();
+        assert!(out.f_measure > 0.5, "F {:.3}", out.f_measure);
+        assert_eq!(out.labels.len(), 80);
+        assert_eq!(out.matrix_bytes, 80 * 79 / 2 * 4);
+    }
+
+    #[test]
+    fn fixed_k_override() {
+        let set = generate(&DatasetSpec::tiny(40, 4, 32));
+        let out = full_ahc(&set, &NativeBackend::new(), 2, Some(4), 0.5).unwrap();
+        assert_eq!(out.k, 4);
+    }
+}

@@ -1,0 +1,56 @@
+//! `figures` — regenerate every table and figure of the paper.
+//!
+//! ```text
+//! figures <table1|fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
+//!         [--scale F] [--seed N] [--threads N] [--iters N] [--out DIR]
+//! ```
+//!
+//! Series are printed to stdout and written as CSV under `--out`
+//! (default `results/`).  See DESIGN.md §3 for the experiment index and
+//! expected curve shapes.
+
+use mahc::figures::{self, ExpCtx};
+use mahc::util::cli::Args;
+
+const VALUE_KEYS: &[&str] = &["scale", "seed", "threads", "iters", "out"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(VALUE_KEYS)?;
+    let mut ctx = ExpCtx::default();
+    ctx.scale = args.get_parsed::<f64>("scale")?;
+    ctx.seed = args.get_or("seed", ctx.seed)?;
+    ctx.threads = args.get_or("threads", ctx.threads)?;
+    ctx.iters = args.get_or("iters", ctx.iters)?;
+    if let Some(out) = args.get("out") {
+        ctx.outdir = out.into();
+    }
+
+    match args.subcommand() {
+        Some("table1") => figures::table1(&ctx),
+        Some("fig1") => figures::fig1(&ctx),
+        Some("fig3") => figures::fig3(&ctx),
+        Some("fig4") => figures::fig4(&ctx),
+        Some("fig5") => figures::fig5(&ctx),
+        Some("fig6") => figures::fig6(&ctx),
+        Some("fig7") => figures::fig7(&ctx),
+        Some("fig8") => figures::fig8(&ctx),
+        Some("fig9") => figures::fig9(&ctx),
+        Some("fig10") => figures::fig10(&ctx),
+        Some("fig11") => figures::fig11(&ctx),
+        Some("ablation") => figures::ablation(&ctx),
+        Some("all") => figures::all(&ctx),
+        other => {
+            anyhow::bail!(
+                "usage: figures <table1|fig1|fig3..fig11|all> [--scale F] [--seed N] \
+                 [--threads N] [--iters N] [--out DIR] (got {other:?})"
+            )
+        }
+    }
+}

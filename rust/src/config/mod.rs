@@ -1,0 +1,351 @@
+//! Typed configuration for datasets and the clustering algorithm.
+//!
+//! Two layers: [`DatasetSpec`] describes a synthetic corpus to generate
+//! (mirroring the paper's Table 1 compositions, scaled), and
+//! [`AlgoConfig`] carries every knob of Algorithm 1 (P₀, β, K, linkage,
+//! convergence policy) plus execution choices (backend, threads).
+//! Config files use a minimal `key = value` TOML subset parsed by
+//! [`parse_kv`]; every key can also be overridden from the CLI.
+
+use crate::distance::BackendKind;
+
+/// Which of the paper's four TIMIT-derived compositions to mirror.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NamedDataset {
+    SmallA,
+    SmallB,
+    Medium,
+    Large,
+}
+
+impl NamedDataset {
+    pub fn all() -> [NamedDataset; 4] {
+        [
+            NamedDataset::SmallA,
+            NamedDataset::SmallB,
+            NamedDataset::Medium,
+            NamedDataset::Large,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NamedDataset::SmallA => "small_a",
+            NamedDataset::SmallB => "small_b",
+            NamedDataset::Medium => "medium",
+            NamedDataset::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "small_a" | "smalla" | "a" => Ok(NamedDataset::SmallA),
+            "small_b" | "smallb" | "b" => Ok(NamedDataset::SmallB),
+            "medium" | "m" => Ok(NamedDataset::Medium),
+            "large" | "l" => Ok(NamedDataset::Large),
+            other => anyhow::bail!("unknown dataset '{other}' (small_a|small_b|medium|large)"),
+        }
+    }
+}
+
+/// Synthetic corpus composition (paper Table 1, scaled by `scale`).
+///
+/// The defaults reproduce the paper's compositions at 1/10 scale; shape
+/// (skew, length distribution, class counts) is preserved — see
+/// DESIGN.md §5 for why the reproduction target is scale-free.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Total number of segments N.
+    pub segments: usize,
+    /// Number of ground-truth classes (unique triphones).
+    pub classes: usize,
+    /// Zipf exponent for class cardinalities (0 = uniform, Small B).
+    pub skew: f64,
+    /// Minimum members a class may have (paper: 50/26/20/1).
+    pub min_class_size: usize,
+    /// Frame-length range of segments [min, max], in 10ms frames.
+    pub len_range: (usize, usize),
+    /// Feature dimensionality (39 = 12 MFCC + logE + Δ + ΔΔ).
+    pub feat_dim: usize,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Paper Table 1 composition at `scale` (1.0 = paper size).
+    pub fn named(which: NamedDataset, scale: f64) -> DatasetSpec {
+        let s = |n: usize| ((n as f64 * scale).round() as usize).max(8);
+        let c = |n: usize| ((n as f64 * scale).round() as usize).max(4);
+        match which {
+            // 17 611 segments / 280 classes / freq 50-373 (skewed)
+            NamedDataset::SmallA => DatasetSpec {
+                name: "small_a".into(),
+                segments: s(17_611),
+                classes: c(280),
+                skew: 1.1,
+                min_class_size: 5,
+                len_range: (8, 64),
+                feat_dim: 39,
+                seed: 0xA,
+            },
+            // 17 640 / 636 / freq 26-49 (flat)
+            NamedDataset::SmallB => DatasetSpec {
+                name: "small_b".into(),
+                segments: s(17_640),
+                classes: c(636),
+                skew: 0.0,
+                min_class_size: 3,
+                len_range: (8, 64),
+                feat_dim: 39,
+                seed: 0xB,
+            },
+            // 54 787 / 1 387 / 20-373 (skewed like Small A)
+            NamedDataset::Medium => DatasetSpec {
+                name: "medium".into(),
+                segments: s(54_787),
+                classes: c(1_387),
+                skew: 1.1,
+                min_class_size: 2,
+                len_range: (8, 64),
+                feat_dim: 39,
+                seed: 0xC,
+            },
+            // 123 182 / 19 223 / 1-373 (long tail of singletons)
+            NamedDataset::Large => DatasetSpec {
+                name: "large".into(),
+                segments: s(123_182),
+                classes: c(19_223),
+                skew: 1.4,
+                min_class_size: 1,
+                len_range: (8, 64),
+                feat_dim: 39,
+                seed: 0xD,
+            },
+        }
+    }
+
+    /// A tiny spec for tests and the quickstart example.
+    pub fn tiny(segments: usize, classes: usize, seed: u64) -> DatasetSpec {
+        DatasetSpec {
+            name: format!("tiny_{segments}x{classes}"),
+            segments,
+            classes,
+            skew: 0.8,
+            min_class_size: 2,
+            len_range: (6, 24),
+            feat_dim: 13,
+            seed,
+        }
+    }
+}
+
+/// How the final number of clusters K is chosen (paper §5: K = ΣKⱼ from
+/// the first stage is empirically a good approximation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FinalK {
+    /// Use the first-stage total ΣKⱼ (paper default).
+    StageOneTotal,
+    /// Fixed K supplied by the user.
+    Fixed(usize),
+}
+
+/// Convergence policy for the MAHC loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Convergence {
+    /// Stop when i > 2 and Pᵢ == Pᵢ₋₁ (paper: "settling in the number
+    /// of subsets"), with a hard iteration cap as backstop.
+    SettledSubsets { max_iters: usize },
+    /// Fixed number of iterations (paper: "simply terminating ... after
+    /// a fixed number of iterations").
+    FixedIters(usize),
+}
+
+/// All knobs of Algorithm 1 plus execution choices.
+#[derive(Debug, Clone)]
+pub struct AlgoConfig {
+    /// Initial number of subsets P₀.
+    pub p0: usize,
+    /// Cluster size threshold β (None = no management, plain MAHC).
+    pub beta: Option<usize>,
+    /// Final-K policy.
+    pub final_k: FinalK,
+    /// Convergence policy.
+    pub convergence: Convergence,
+    /// Merge undersized subsets (paper §7 concludes this is unnecessary;
+    /// kept as an ablation switch, Fig. 11).
+    pub merge_min: Option<usize>,
+    /// Distance backend (native Rust DTW or the PJRT XLA artifact).
+    pub backend: BackendKind,
+    /// Worker threads for per-subset stage-1 jobs.
+    pub threads: usize,
+    /// Shuffle subset membership before splitting (ablation; default
+    /// false = contiguous, cluster-preserving pieces — see
+    /// `mahc::split::split_oversized`).
+    pub split_shuffle: bool,
+    /// Seed for the initial partition and split shuffles.
+    pub seed: u64,
+    /// L-method: cap on clusters per subset as a fraction of subset size.
+    pub max_clusters_frac: f64,
+}
+
+impl Default for AlgoConfig {
+    fn default() -> Self {
+        AlgoConfig {
+            p0: 4,
+            beta: None,
+            final_k: FinalK::StageOneTotal,
+            convergence: Convergence::FixedIters(5),
+            merge_min: None,
+            backend: BackendKind::Native,
+            threads: crate::util::pool::default_threads(),
+            split_shuffle: false,
+            seed: 1234,
+            max_clusters_frac: 0.25,
+        }
+    }
+}
+
+impl AlgoConfig {
+    pub fn with_beta(mut self, beta: usize) -> Self {
+        self.beta = Some(beta);
+        self
+    }
+
+    pub fn with_p0(mut self, p0: usize) -> Self {
+        self.p0 = p0;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.p0 == 0 {
+            anyhow::bail!("p0 must be >= 1");
+        }
+        if let Some(b) = self.beta {
+            if b < 4 {
+                anyhow::bail!("beta must be >= 4 (got {b}); AHC needs a few objects per subset");
+            }
+        }
+        if let FinalK::Fixed(k) = self.final_k {
+            if k == 0 {
+                anyhow::bail!("fixed K must be >= 1");
+            }
+        }
+        if !(0.0..=1.0).contains(&self.max_clusters_frac) {
+            anyhow::bail!("max_clusters_frac must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+/// Parse a minimal `key = value` config file (TOML subset: comments with
+/// `#`, bare scalars, no tables).  Returns key/value pairs for the
+/// caller to interpret; unknown keys are the caller's concern so that
+/// dataset and algo sections can share a file.
+pub fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        out.push((
+            k.trim().to_string(),
+            v.trim().trim_matches('"').to_string(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Apply `key=value` overrides onto an [`AlgoConfig`].
+pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow::Result<()> {
+    for (k, v) in kv {
+        match k.as_str() {
+            "p0" => cfg.p0 = v.parse()?,
+            "beta" => {
+                cfg.beta = if v == "none" {
+                    None
+                } else {
+                    Some(v.parse()?)
+                }
+            }
+            "k" => cfg.final_k = FinalK::Fixed(v.parse()?),
+            "iters" => cfg.convergence = Convergence::FixedIters(v.parse()?),
+            "max_iters" => {
+                cfg.convergence = Convergence::SettledSubsets {
+                    max_iters: v.parse()?,
+                }
+            }
+            "threads" => cfg.threads = v.parse()?,
+            "seed" => cfg.seed = v.parse()?,
+            "backend" => cfg.backend = BackendKind::parse(v)?,
+            "merge_min" => cfg.merge_min = Some(v.parse()?),
+            "split_shuffle" => cfg.split_shuffle = v.parse()?,
+            "max_clusters_frac" => cfg.max_clusters_frac = v.parse()?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_specs_mirror_table1_shape() {
+        let a = DatasetSpec::named(NamedDataset::SmallA, 0.1);
+        let b = DatasetSpec::named(NamedDataset::SmallB, 0.1);
+        assert!(a.skew > b.skew);
+        assert!((a.segments as f64 - 1761.0).abs() < 2.0);
+        assert!(b.classes > a.classes); // B has many more, smaller classes
+        let l = DatasetSpec::named(NamedDataset::Large, 0.1);
+        assert!(l.segments > 4 * a.segments);
+        assert_eq!(l.min_class_size, 1);
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = AlgoConfig::default();
+        c.p0 = 0;
+        assert!(c.validate().is_err());
+        let mut c = AlgoConfig::default();
+        c.beta = Some(1);
+        assert!(c.validate().is_err());
+        assert!(AlgoConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn kv_parsing_and_overrides() {
+        let text = "
+            # comment
+            p0 = 6
+            beta = 900     # inline comment
+            iters = 8
+            backend = \"native\"
+        ";
+        let kv = parse_kv(text).unwrap();
+        let mut cfg = AlgoConfig::default();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.p0, 6);
+        assert_eq!(cfg.beta, Some(900));
+        assert_eq!(cfg.convergence, Convergence::FixedIters(8));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = AlgoConfig::default();
+        let kv = vec![("bogus".to_string(), "1".to_string())];
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+
+    #[test]
+    fn dataset_parse_aliases() {
+        assert_eq!(NamedDataset::parse("a").unwrap(), NamedDataset::SmallA);
+        assert_eq!(NamedDataset::parse("medium").unwrap(), NamedDataset::Medium);
+        assert!(NamedDataset::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Core dataset types: variable-length feature segments with ground-
+//! truth class labels.
+
+/// One acoustic segment: a variable-length sequence of `dim`-dimensional
+/// feature vectors, stored flat row-major (`len * dim` floats).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Stable id within its [`SegmentSet`] (== index).
+    pub id: usize,
+    /// Ground-truth class (triphone) label.
+    pub class_id: usize,
+    /// Number of frames.
+    pub len: usize,
+    /// Feature dimensionality.
+    pub dim: usize,
+    /// Flat `(len, dim)` row-major feature buffer.
+    pub feats: Vec<f32>,
+}
+
+impl Segment {
+    pub fn frame(&self, i: usize) -> &[f32] {
+        &self.feats[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// A labelled collection of segments (the dataset 𝒳 of paper §3).
+#[derive(Debug, Clone)]
+pub struct SegmentSet {
+    pub name: String,
+    pub dim: usize,
+    pub segments: Vec<Segment>,
+    /// Number of distinct ground-truth classes.
+    pub num_classes: usize,
+}
+
+impl SegmentSet {
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Ground-truth labels, indexable by segment id.
+    pub fn labels(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.class_id).collect()
+    }
+
+    /// Total number of feature vectors (Table 1 "Vectors" column).
+    pub fn total_vectors(&self) -> usize {
+        self.segments.iter().map(|s| s.len).sum()
+    }
+
+    /// Number of pairwise similarities N(N−1)/2 full AHC would need
+    /// (Table 1 "Similarities" column).
+    pub fn total_similarities(&self) -> u64 {
+        let n = self.len() as u64;
+        n * (n - 1) / 2
+    }
+
+    /// Longest segment, in frames.
+    pub fn max_len(&self) -> usize {
+        self.segments.iter().map(|s| s.len).max().unwrap_or(0)
+    }
+
+    /// Validate internal consistency (used by tests and after generation).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, s) in self.segments.iter().enumerate() {
+            if s.id != i {
+                anyhow::bail!("segment {i} has id {}", s.id);
+            }
+            if s.dim != self.dim {
+                anyhow::bail!("segment {i} dim {} != set dim {}", s.dim, self.dim);
+            }
+            if s.len == 0 {
+                anyhow::bail!("segment {i} empty");
+            }
+            if s.feats.len() != s.len * s.dim {
+                anyhow::bail!(
+                    "segment {i} buffer {} != len*dim {}",
+                    s.feats.len(),
+                    s.len * s.dim
+                );
+            }
+            if s.class_id >= self.num_classes {
+                anyhow::bail!("segment {i} class {} >= {}", s.class_id, self.num_classes);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_set() -> SegmentSet {
+        SegmentSet {
+            name: "t".into(),
+            dim: 2,
+            segments: vec![
+                Segment {
+                    id: 0,
+                    class_id: 0,
+                    len: 3,
+                    dim: 2,
+                    feats: vec![0.0; 6],
+                },
+                Segment {
+                    id: 1,
+                    class_id: 1,
+                    len: 2,
+                    dim: 2,
+                    feats: vec![1.0; 4],
+                },
+            ],
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let s = tiny_set();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.total_vectors(), 5);
+        assert_eq!(s.total_similarities(), 1);
+        assert_eq!(s.max_len(), 3);
+        assert_eq!(s.labels(), vec![0, 1]);
+        assert_eq!(s.segments[1].frame(1), &[1.0, 1.0]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_buffer() {
+        let mut s = tiny_set();
+        s.segments[0].feats.pop();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_class() {
+        let mut s = tiny_set();
+        s.segments[1].class_id = 9;
+        assert!(s.validate().is_err());
+    }
+}

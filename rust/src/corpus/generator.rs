@@ -1,0 +1,370 @@
+//! Triphone class construction and segment instance sampling.
+//!
+//! A *class* is a triphone (left, centre, right): its prototype
+//! trajectory starts at a blend of left-context and centre targets,
+//! dwells at the centre phone's target, and exits towards the right
+//! context — a coarse coarticulation model that gives DTW real temporal
+//! structure to align.  *Instances* of a class are monotone time-warps
+//! of the prototype with duration jitter, additive noise, and a small
+//! per-instance offset (a speaker-like effect).
+//!
+//! Class cardinalities follow a Zipf(skew) draw floored at
+//! `min_class_size`, reproducing the Small-A/Small-B skew contrast of
+//! paper Fig. 3 (skew = 0 gives the flat Small-B shape).
+
+use super::dataset::{Segment, SegmentSet};
+use super::phones::{inventory, Phone};
+use crate::config::DatasetSpec;
+use crate::util::rng::{Rng, Zipf};
+
+/// How far apart phone targets sit (feature-space units).
+const TARGET_SPREAD: f64 = 2.0;
+/// Per-frame additive noise on instances.
+const NOISE_STD: f64 = 0.55;
+/// Per-instance constant offset ("speaker" shift).
+const SPEAKER_STD: f64 = 0.25;
+/// Smoothing of the prototype random walk.
+const WALK_STD: f64 = 0.18;
+
+/// A triphone class: prototype trajectory plus its cardinality.
+#[derive(Debug, Clone)]
+pub struct TriphoneClass {
+    pub name: String,
+    /// Prototype trajectory, (proto_len, dim) row-major f64.
+    pub proto: Vec<f64>,
+    pub proto_len: usize,
+    pub dim: usize,
+}
+
+/// Generate a full [`SegmentSet`] from a [`DatasetSpec`].
+pub fn generate(spec: &DatasetSpec) -> SegmentSet {
+    let mut rng = Rng::seed_from(spec.seed);
+    let phones = inventory(spec.feat_dim, spec.seed, TARGET_SPREAD);
+    let classes = build_classes(spec, &phones, &mut rng);
+    let counts = class_cardinalities(spec, &mut rng);
+
+    let mut segments = Vec::with_capacity(spec.segments);
+    for (class_id, (class, &count)) in classes.iter().zip(&counts).enumerate() {
+        for _ in 0..count {
+            let id = segments.len();
+            segments.push(sample_instance(id, class_id, class, spec, &mut rng));
+        }
+    }
+    // Interleave classes so contiguous id ranges are not single-class
+    // (initial MAHC partitions slice by position).
+    rng.shuffle(&mut segments);
+    for (i, s) in segments.iter_mut().enumerate() {
+        s.id = i;
+    }
+
+    let set = SegmentSet {
+        name: spec.name.clone(),
+        dim: spec.feat_dim,
+        segments,
+        num_classes: classes.len(),
+    };
+    debug_assert!(set.validate().is_ok());
+    set
+}
+
+/// Build `spec.classes` distinct triphone classes.
+fn build_classes(spec: &DatasetSpec, phones: &[Phone], rng: &mut Rng) -> Vec<TriphoneClass> {
+    let mut used = std::collections::HashSet::new();
+    let mut classes = Vec::with_capacity(spec.classes);
+    while classes.len() < spec.classes {
+        let l = rng.range(0, phones.len());
+        let c = rng.range(0, phones.len());
+        let r = rng.range(0, phones.len());
+        if !used.insert((l, c, r)) {
+            continue; // triphone already taken
+        }
+        classes.push(build_prototype(&phones[l], &phones[c], &phones[r], spec, rng));
+    }
+    classes
+}
+
+/// Prototype: left-blend → centre dwell → right-blend, plus a smooth
+/// random walk so no two classes sharing a centre phone are identical.
+fn build_prototype(
+    left: &Phone,
+    centre: &Phone,
+    right: &Phone,
+    spec: &DatasetSpec,
+    rng: &mut Rng,
+) -> TriphoneClass {
+    let dim = spec.feat_dim;
+    let (dlo, dhi) = centre.class.duration_frames();
+    // Prototype length: centre-phone tendency + transition frames,
+    // clamped to the spec's range.
+    let core = rng.range(dlo, dhi + 1);
+    let trans = 3 + rng.range(0, 3);
+    let proto_len = (trans + core + trans)
+        .clamp(spec.len_range.0, spec.len_range.1);
+
+    let mut proto = Vec::with_capacity(proto_len * dim);
+    let mut walk = vec![0.0f64; dim];
+    for t in 0..proto_len {
+        let u = t as f64 / (proto_len - 1).max(1) as f64;
+        // Piecewise blend: 0..0.3 left→centre, 0.3..0.7 centre,
+        // 0.7..1 centre→right.
+        let (a, b, w) = if u < 0.3 {
+            (&left.target, &centre.target, u / 0.3)
+        } else if u < 0.7 {
+            (&centre.target, &centre.target, 0.5)
+        } else {
+            (&centre.target, &right.target, (u - 0.7) / 0.3)
+        };
+        for d in 0..dim {
+            walk[d] += rng.normal() * WALK_STD;
+            // Contexts influence the edges at half strength.
+            let edge_damp = 0.5;
+            let base = a[d] * (1.0 - w * edge_damp) + b[d] * (w * edge_damp);
+            proto.push(base + walk[d]);
+        }
+    }
+    TriphoneClass {
+        name: format!("{}-{}+{}", left.label, centre.label, right.label),
+        proto,
+        proto_len,
+        dim,
+    }
+}
+
+/// Zipf-distributed class cardinalities summing exactly to N.
+fn class_cardinalities(spec: &DatasetSpec, rng: &mut Rng) -> Vec<usize> {
+    let c = spec.classes;
+    let mut counts = vec![spec.min_class_size.max(1); c];
+    let mut remaining = spec.segments.saturating_sub(counts.iter().sum());
+    if spec.skew <= 1e-9 {
+        // Uniform: spread the remainder evenly (Small Set B shape).
+        let per = remaining / c;
+        for cnt in counts.iter_mut() {
+            *cnt += per;
+        }
+        remaining -= per * c;
+        for i in 0..remaining {
+            counts[i % c] += 1;
+        }
+    } else {
+        // Skewed: drop the remainder Zipf-wise over class ranks.
+        let zipf = Zipf::new(c, spec.skew);
+        for _ in 0..remaining {
+            counts[zipf.sample(rng) - 1] += 1;
+        }
+    }
+    counts
+}
+
+/// Instance duration with ±30% jitter around the prototype length.
+fn instance_len(class: &TriphoneClass, spec: &DatasetSpec, rng: &mut Rng) -> usize {
+    let lo = ((class.proto_len as f64 * 0.7).round() as usize).max(spec.len_range.0);
+    let hi = ((class.proto_len as f64 * 1.3).round() as usize).min(spec.len_range.1);
+    if lo >= hi {
+        lo
+    } else {
+        rng.range(lo, hi + 1)
+    }
+}
+
+/// Monotone warp: sorted jittered positions over [0,1], endpoints pinned
+/// so on/offset structure is preserved.
+fn warp_positions(len: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut pos: Vec<f64> = (0..len)
+        .map(|t| {
+            let u = t as f64 / (len - 1).max(1) as f64;
+            let jitter = if t == 0 || t == len - 1 {
+                0.0
+            } else {
+                rng.normal() * 0.35 / len as f64
+            };
+            (u + jitter).clamp(0.0, 1.0)
+        })
+        .collect();
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos
+}
+
+/// Sample one instance: monotone time warp + noise + speaker offset.
+fn sample_instance(
+    id: usize,
+    class_id: usize,
+    class: &TriphoneClass,
+    spec: &DatasetSpec,
+    rng: &mut Rng,
+) -> Segment {
+    let dim = class.dim;
+    let len = instance_len(class, spec, rng);
+    let pos = warp_positions(len, rng);
+
+    let speaker: Vec<f64> = (0..dim).map(|_| rng.normal() * SPEAKER_STD).collect();
+    let mut feats = Vec::with_capacity(len * dim);
+    for &u in &pos {
+        // Linear interpolation into the prototype.
+        let x = u * (class.proto_len - 1) as f64;
+        let i0 = x.floor() as usize;
+        let i1 = (i0 + 1).min(class.proto_len - 1);
+        let frac = x - i0 as f64;
+        for d in 0..dim {
+            let a = class.proto[i0 * dim + d];
+            let b = class.proto[i1 * dim + d];
+            let v = a * (1.0 - frac) + b * frac + speaker[d] + rng.normal() * NOISE_STD;
+            feats.push(v as f32);
+        }
+    }
+    Segment {
+        id,
+        class_id,
+        len,
+        dim,
+        feats,
+    }
+}
+
+/// A corpus delivered as raw audio (the end-to-end ingestion path):
+/// waveforms must first pass through the MFCC front-end — native
+/// (`dsp::mfcc`) or the AOT artifact (`runtime::mfcc_exec`) — before
+/// clustering.
+#[derive(Debug, Clone)]
+pub struct AudioCorpus {
+    pub name: String,
+    /// Per-segment waveform at 16 kHz.
+    pub wavs: Vec<Vec<f64>>,
+    /// Ground-truth class per segment.
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+/// Generate a corpus as waveforms: same classes/cardinalities/warps as
+/// [`generate`], but each instance is rendered as formant-style audio
+/// following its warped prototype trajectory (`waveform::render`).
+///
+/// `audio_noise` is the additive sample-noise level (0.005 ≈ clean).
+pub fn generate_audio(spec: &DatasetSpec, audio_noise: f64) -> AudioCorpus {
+    let mut rng = Rng::seed_from(spec.seed ^ 0x4155_4449_4f);
+    let phones = inventory(spec.feat_dim.max(4), spec.seed, TARGET_SPREAD);
+    let classes = build_classes(spec, &phones, &mut rng);
+    let counts = class_cardinalities(spec, &mut rng);
+
+    let mut items: Vec<(usize, Vec<f64>)> = Vec::with_capacity(spec.segments);
+    for (class_id, (class, &count)) in classes.iter().zip(&counts).enumerate() {
+        for _ in 0..count {
+            let len = instance_len(class, spec, &mut rng);
+            let pos = warp_positions(len, &mut rng);
+            let wav = super::waveform::render(class, &pos, audio_noise, &mut rng);
+            items.push((class_id, wav));
+        }
+    }
+    rng.shuffle(&mut items);
+    let (labels, wavs) = items.into_iter().unzip();
+    AudioCorpus {
+        name: format!("{}_audio", spec.name),
+        wavs,
+        labels,
+        num_classes: classes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetSpec, NamedDataset};
+    use crate::dtw;
+
+    fn tiny() -> DatasetSpec {
+        DatasetSpec::tiny(120, 8, 42)
+    }
+
+    #[test]
+    fn generates_requested_composition() {
+        let spec = tiny();
+        let set = generate(&spec);
+        assert_eq!(set.len(), 120);
+        assert_eq!(set.num_classes, 8);
+        set.validate().unwrap();
+        // Every class non-empty, all lengths within range.
+        let mut seen = vec![0usize; 8];
+        for s in &set.segments {
+            seen[s.class_id] += 1;
+            assert!(s.len >= spec.len_range.0 && s.len <= spec.len_range.1);
+        }
+        assert!(seen.iter().all(|&c| c >= spec.min_class_size));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&tiny());
+        let b = generate(&tiny());
+        assert_eq!(a.segments[7].feats, b.segments[7].feats);
+        assert_eq!(a.segments[7].class_id, b.segments[7].class_id);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = generate(&tiny());
+        let mut spec = tiny();
+        spec.seed = 43;
+        let b = generate(&spec);
+        assert_ne!(a.segments[0].feats, b.segments[0].feats);
+    }
+
+    #[test]
+    fn within_class_closer_than_between() {
+        // The property clustering depends on: mean within-class DTW
+        // distance < mean between-class distance.
+        let set = generate(&DatasetSpec::tiny(60, 5, 9));
+        let mut within = (0.0f64, 0usize);
+        let mut between = (0.0f64, 0usize);
+        for i in 0..set.len() {
+            for j in i + 1..set.len() {
+                let (a, b) = (&set.segments[i], &set.segments[j]);
+                let d =
+                    dtw::dtw(&a.feats, &b.feats, set.dim, a.len, b.len) as f64;
+                if a.class_id == b.class_id {
+                    within.0 += d;
+                    within.1 += 1;
+                } else {
+                    between.0 += d;
+                    between.1 += 1;
+                }
+            }
+        }
+        let w = within.0 / within.1 as f64;
+        let b = between.0 / between.1 as f64;
+        assert!(
+            w * 1.3 < b,
+            "within {w:.3} not clearly below between {b:.3}"
+        );
+    }
+
+    #[test]
+    fn skewed_vs_flat_cardinalities() {
+        let a = DatasetSpec::named(NamedDataset::SmallA, 0.02);
+        let b = DatasetSpec::named(NamedDataset::SmallB, 0.02);
+        let seta = generate(&a);
+        let setb = generate(&b);
+        let spread = |set: &SegmentSet, c: usize| {
+            let mut counts = vec![0usize; c];
+            for s in &set.segments {
+                counts[s.class_id] += 1;
+            }
+            let max = *counts.iter().max().unwrap() as f64;
+            let min = *counts.iter().min().unwrap().max(&1) as f64;
+            max / min
+        };
+        let ra = spread(&seta, seta.num_classes);
+        let rb = spread(&setb, setb.num_classes);
+        assert!(ra > 2.0 * rb, "skew ratio A={ra:.1} vs B={rb:.1}");
+    }
+
+    #[test]
+    fn ids_are_dense_after_shuffle() {
+        let set = generate(&tiny());
+        for (i, s) in set.segments.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        // Shuffle actually interleaved classes: first 20 ids not all
+        // the same class.
+        let first: Vec<usize> = set.segments[..20].iter().map(|s| s.class_id).collect();
+        assert!(first.iter().any(|&c| c != first[0]));
+    }
+}

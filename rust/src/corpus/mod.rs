@@ -1,0 +1,27 @@
+//! Synthetic TIMIT-like acoustic segment corpus.
+//!
+//! TIMIT itself is licensed and unavailable in this environment, so the
+//! corpus is *simulated* (DESIGN.md §5): a 42-phone inventory
+//! ([`phones`]), triphone classes whose prototype trajectories move
+//! through feature space from the left-context phone towards the centre
+//! and on to the right context ([`generator`]), instance-level time
+//! warping / duration jitter / additive noise, and skew-controlled
+//! class cardinalities that reproduce the Small A vs Small B contrast
+//! of paper Fig. 3.  The properties MAHC's dynamics depend on —
+//! variable-length sequences, DTW-recoverable class structure, skewed
+//! class sizes — are all explicit, controlled parameters.
+//!
+//! [`waveform`] additionally synthesises formant-style audio per
+//! segment so the end-to-end example can exercise the AOT MFCC
+//! front-end; [`stats`] computes the Table-1/Fig-3 composition
+//! summaries.
+
+pub mod dataset;
+pub mod generator;
+pub mod phones;
+pub mod stats;
+pub mod waveform;
+
+pub use dataset::{Segment, SegmentSet};
+pub use generator::generate;
+pub use stats::CompositionStats;

@@ -1,0 +1,130 @@
+//! The 42-phone inventory underlying the synthetic triphone classes.
+//!
+//! The paper uses 42 base phones from TIMIT's reduced set (§6.1).  Each
+//! synthetic phone gets (a) a fixed *target* vector in feature space —
+//! the acoustic "colour" the trajectory passes through — and (b) a
+//! duration tendency.  Targets are drawn once from a seeded stream, so
+//! the inventory is a pure function of the seed: every dataset built on
+//! the same seed shares acoustics, like datasets cut from one corpus.
+
+use crate::util::rng::Rng;
+
+/// TIMIT-style reduced phone labels (42, pauses excluded as in §6.1).
+pub const PHONE_LABELS: [&str; 42] = [
+    "aa", "ae", "ah", "aw", "ay", "b", "ch", "d", "dh", "dx", "eh", "er", "ey", "f", "g", "hh",
+    "ih", "iy", "jh", "k", "l", "m", "n", "ng", "ow", "oy", "p", "r", "s", "sh", "t", "th", "uh",
+    "uw", "v", "w", "y", "z", "zh", "el", "en", "ax",
+];
+
+/// Broad phonetic class — controls duration tendency and trajectory
+/// dynamics (vowels are long and slow-moving; stops short and abrupt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhoneClass {
+    Vowel,
+    Stop,
+    Fricative,
+    Nasal,
+    Glide,
+}
+
+impl PhoneClass {
+    pub fn of(label: &str) -> PhoneClass {
+        match label {
+            "aa" | "ae" | "ah" | "aw" | "ay" | "eh" | "er" | "ey" | "ih" | "iy" | "ow" | "oy"
+            | "uh" | "uw" | "ax" => PhoneClass::Vowel,
+            "b" | "d" | "dx" | "g" | "k" | "p" | "t" | "ch" | "jh" => PhoneClass::Stop,
+            "dh" | "f" | "hh" | "s" | "sh" | "th" | "v" | "z" | "zh" => PhoneClass::Fricative,
+            "m" | "n" | "ng" | "en" => PhoneClass::Nasal,
+            _ => PhoneClass::Glide, // l, r, w, y, el
+        }
+    }
+
+    /// Typical duration range in 10ms frames (pre-warp).
+    pub fn duration_frames(&self) -> (usize, usize) {
+        match self {
+            PhoneClass::Vowel => (8, 16),
+            PhoneClass::Stop => (2, 6),
+            PhoneClass::Fricative => (5, 12),
+            PhoneClass::Nasal => (4, 10),
+            PhoneClass::Glide => (4, 10),
+        }
+    }
+}
+
+/// One phone: label, broad class, and its feature-space target.
+#[derive(Debug, Clone)]
+pub struct Phone {
+    pub label: &'static str,
+    pub class: PhoneClass,
+    /// Target point in `dim`-dimensional feature space.
+    pub target: Vec<f64>,
+}
+
+/// The full inventory, deterministic in (seed, dim).
+pub fn inventory(dim: usize, seed: u64, spread: f64) -> Vec<Phone> {
+    let mut rng = Rng::seed_from(seed ^ 0x5048_4f4e_4553); // "PHONES"
+    PHONE_LABELS
+        .iter()
+        .map(|&label| Phone {
+            label,
+            class: PhoneClass::of(label),
+            target: (0..dim).map(|_| rng.normal() * spread).collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forty_two_phones() {
+        assert_eq!(PHONE_LABELS.len(), 42);
+        let inv = inventory(13, 1, 2.0);
+        assert_eq!(inv.len(), 42);
+        assert!(inv.iter().all(|p| p.target.len() == 13));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = inventory(13, 7, 2.0);
+        let b = inventory(13, 7, 2.0);
+        assert_eq!(a[5].target, b[5].target);
+        let c = inventory(13, 8, 2.0);
+        assert_ne!(a[5].target, c[5].target);
+    }
+
+    #[test]
+    fn targets_are_spread_out() {
+        let inv = inventory(39, 3, 2.0);
+        // Mean pairwise target distance well above zero: classes will be
+        // separable in feature space.
+        let mut total = 0.0;
+        let mut count = 0;
+        for i in 0..inv.len() {
+            for j in i + 1..inv.len() {
+                let d: f64 = inv[i]
+                    .target
+                    .iter()
+                    .zip(&inv[j].target)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                total += d;
+                count += 1;
+            }
+        }
+        assert!(total / count as f64 > 5.0);
+    }
+
+    #[test]
+    fn class_assignment_sane() {
+        assert_eq!(PhoneClass::of("iy"), PhoneClass::Vowel);
+        assert_eq!(PhoneClass::of("t"), PhoneClass::Stop);
+        assert_eq!(PhoneClass::of("s"), PhoneClass::Fricative);
+        assert_eq!(PhoneClass::of("m"), PhoneClass::Nasal);
+        assert_eq!(PhoneClass::of("r"), PhoneClass::Glide);
+        let (lo, hi) = PhoneClass::Vowel.duration_frames();
+        assert!(lo >= 2 && hi > lo);
+    }
+}

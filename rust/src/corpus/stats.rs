@@ -1,0 +1,112 @@
+//! Composition statistics: the Table 1 row and Fig. 3 histogram for a
+//! generated dataset.
+
+use super::dataset::SegmentSet;
+
+/// Summary of a dataset's composition (one Table 1 row).
+#[derive(Debug, Clone)]
+pub struct CompositionStats {
+    pub name: String,
+    pub segments: usize,
+    pub classes: usize,
+    /// (min, max) class cardinality — Table 1 "Frequency".
+    pub freq_range: (usize, usize),
+    /// Total feature vectors.
+    pub vectors: usize,
+    /// N(N−1)/2 similarities full AHC would need.
+    pub similarities: u64,
+    /// Per-class cardinalities (Fig. 3 histogram source), descending.
+    pub class_sizes: Vec<usize>,
+}
+
+impl CompositionStats {
+    pub fn of(set: &SegmentSet) -> CompositionStats {
+        let mut counts = vec![0usize; set.num_classes];
+        for s in &set.segments {
+            counts[s.class_id] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let min = *counts.iter().min().unwrap_or(&0);
+        let max = *counts.iter().max().unwrap_or(&0);
+        CompositionStats {
+            name: set.name.clone(),
+            segments: set.len(),
+            classes: set.num_classes,
+            freq_range: (min, max),
+            vectors: set.total_vectors(),
+            similarities: set.total_similarities(),
+            class_sizes: sorted,
+        }
+    }
+
+    /// Table-1-style row: name, segments, classes, freq, vectors, sims.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<12} {:>9} {:>8} {:>6}-{:<6} {:>10} {:>14}",
+            self.name,
+            self.segments,
+            self.classes,
+            self.freq_range.0,
+            self.freq_range.1,
+            self.vectors,
+            self.similarities
+        )
+    }
+
+    /// Histogram of class sizes with `bins` buckets (Fig. 3 series):
+    /// returns (bucket upper edge, class count) pairs.
+    pub fn size_histogram(&self, bins: usize) -> Vec<(usize, usize)> {
+        if self.class_sizes.is_empty() {
+            return Vec::new();
+        }
+        let max = self.class_sizes[0].max(1);
+        let width = (max + bins - 1) / bins;
+        let mut hist = vec![0usize; bins];
+        for &s in &self.class_sizes {
+            let b = ((s.saturating_sub(1)) / width.max(1)).min(bins - 1);
+            hist[b] += 1;
+        }
+        hist.iter()
+            .enumerate()
+            .map(|(i, &c)| ((i + 1) * width.max(1), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+
+    #[test]
+    fn stats_consistent_with_set() {
+        let set = generate(&DatasetSpec::tiny(100, 6, 3));
+        let st = CompositionStats::of(&set);
+        assert_eq!(st.segments, 100);
+        assert_eq!(st.classes, 6);
+        assert_eq!(st.class_sizes.iter().sum::<usize>(), 100);
+        assert_eq!(st.similarities, 100 * 99 / 2);
+        assert!(st.freq_range.0 <= st.freq_range.1);
+        assert_eq!(st.vectors, set.total_vectors());
+    }
+
+    #[test]
+    fn histogram_partitions_classes() {
+        let set = generate(&DatasetSpec::tiny(200, 10, 4));
+        let st = CompositionStats::of(&set);
+        let hist = st.size_histogram(5);
+        assert_eq!(hist.len(), 5);
+        assert_eq!(hist.iter().map(|&(_, c)| c).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn class_sizes_sorted_descending() {
+        let set = generate(&DatasetSpec::tiny(150, 7, 5));
+        let st = CompositionStats::of(&set);
+        for w in st.class_sizes.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Formant-style waveform synthesis for the end-to-end audio path.
+//!
+//! The end-to-end example must exercise the full pipeline including the
+//! AOT MFCC front-end, which needs raw audio.  Segments are rendered as
+//! a sum of three "formant" sinusoids whose frequencies follow the
+//! class's prototype trajectory (mapping the first feature dimensions
+//! to formant positions), with continuous phase across frames so the
+//! signal is free of frame-boundary clicks.  This is not a speech
+//! synthesiser — it is the minimal signal family whose MFCCs vary
+//! smoothly with the underlying trajectory, which is exactly the
+//! property the clustering pipeline consumes.
+
+use super::generator::TriphoneClass;
+use crate::util::rng::Rng;
+
+pub const SAMPLE_RATE: usize = 16_000;
+pub const FRAME_HOP: usize = 80; // matches the MFCC front-end
+pub const FRAME_LEN: usize = 160;
+
+/// Map a feature value (roughly N(0, 2²)) into a formant band.
+fn to_freq(v: f64, lo: f64, hi: f64) -> f64 {
+    // Squash to (0, 1) then scale; tanh keeps outliers in-band.
+    let u = 0.5 * ((v / 4.0).tanh() + 1.0);
+    lo + u * (hi - lo)
+}
+
+/// Samples needed for `frames` analysis frames.
+pub fn num_samples(frames: usize) -> usize {
+    FRAME_LEN + frames.saturating_sub(1) * FRAME_HOP
+}
+
+/// Render `len` frames of audio following the prototype of `class`,
+/// time-warped the same way the feature instance was (positions in
+/// [0,1] per frame), with additive noise.
+pub fn render(
+    class: &TriphoneClass,
+    positions: &[f64],
+    noise: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let len = positions.len();
+    let n = num_samples(len);
+    let mut wav = vec![0.0f64; n];
+    // Three formant oscillators with continuous phase.
+    let bands = [(250.0, 900.0), (900.0, 2400.0), (2400.0, 3800.0)];
+    let amps = [1.0, 0.6, 0.35];
+    for (f_idx, (&(lo, hi), &amp)) in bands.iter().zip(&amps).enumerate() {
+        let mut phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        for t in 0..n {
+            // Which analysis frame does this sample belong to (centre)?
+            let frame = (t / FRAME_HOP).min(len - 1);
+            let u = positions[frame];
+            let x = u * (class.proto_len - 1) as f64;
+            let i0 = x.floor() as usize;
+            let i1 = (i0 + 1).min(class.proto_len - 1);
+            let frac = x - i0 as f64;
+            let dim = class.dim;
+            let d = f_idx.min(dim - 1);
+            let v = class.proto[i0 * dim + d] * (1.0 - frac) + class.proto[i1 * dim + d] * frac;
+            let freq = to_freq(v, lo, hi);
+            phase += 2.0 * std::f64::consts::PI * freq / SAMPLE_RATE as f64;
+            wav[t] += amp * phase.sin();
+        }
+    }
+    for v in wav.iter_mut() {
+        *v = *v * 0.2 + rng.normal() * noise;
+    }
+    wav
+}
+
+/// Uniform warp positions for a `len`-frame instance (linear map).
+pub fn linear_positions(len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|t| t as f64 / (len - 1).max(1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp;
+
+    fn test_class() -> TriphoneClass {
+        let dim = 4;
+        let proto_len = 12;
+        let mut proto = Vec::new();
+        for t in 0..proto_len {
+            for d in 0..dim {
+                proto.push((t as f64 / 11.0) * 2.0 - 1.0 + d as f64 * 0.1);
+            }
+        }
+        TriphoneClass {
+            name: "t-t+t".into(),
+            proto,
+            proto_len,
+            dim,
+        }
+    }
+
+    #[test]
+    fn sample_count_matches_frames() {
+        assert_eq!(num_samples(1), 160);
+        assert_eq!(num_samples(64), 5200);
+    }
+
+    #[test]
+    fn renders_finite_audio_of_right_length() {
+        let mut rng = Rng::seed_from(1);
+        let c = test_class();
+        let wav = render(&c, &linear_positions(20), 0.01, &mut rng);
+        assert_eq!(wav.len(), num_samples(20));
+        assert!(wav.iter().all(|v| v.is_finite()));
+        // Non-silent.
+        assert!(wav.iter().map(|v| v * v).sum::<f64>() > 1.0);
+    }
+
+    #[test]
+    fn mfcc_of_rendered_audio_tracks_trajectory() {
+        // Same class rendered twice -> MFCCs closer than a different
+        // trajectory (the property the end-to-end path needs).
+        let c = test_class();
+        let mut other = test_class();
+        for v in other.proto.iter_mut() {
+            *v = -*v + 3.0;
+        }
+        let mut rng = Rng::seed_from(2);
+        let pos = linear_positions(24);
+        let a = dsp::mfcc(&render(&c, &pos, 0.005, &mut rng));
+        let b = dsp::mfcc(&render(&c, &pos, 0.005, &mut rng));
+        let o = dsp::mfcc(&render(&other, &pos, 0.005, &mut rng));
+        let dist = |x: &Vec<Vec<f64>>, y: &Vec<Vec<f64>>| {
+            x.iter()
+                .zip(y)
+                .map(|(fx, fy)| {
+                    fx[..12]
+                        .iter()
+                        .zip(&fy[..12])
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .sum::<f64>()
+        };
+        let same = dist(&a, &b);
+        let diff = dist(&a, &o);
+        assert!(same < diff, "same {same:.2} !< diff {diff:.2}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Condensed (packed lower-triangular) symmetric distance matrix.
+//!
+//! Stores the n(n−1)/2 distinct pairwise distances of an n-object set —
+//! exactly the structure whose size the paper's β threshold bounds.
+//! Entry (i, j), i ≠ j, lives at `tri(max) + min` where
+//! `tri(i) = i(i−1)/2`; the diagonal is implicitly zero.
+
+/// Packed symmetric distance matrix with implicit zero diagonal.
+#[derive(Debug, Clone)]
+pub struct Condensed {
+    n: usize,
+    data: Vec<f32>,
+}
+
+#[inline]
+fn tri(i: usize) -> usize {
+    i * (i - 1) / 2
+}
+
+impl Condensed {
+    /// All-zero matrix for `n` objects.
+    pub fn zeros(n: usize) -> Self {
+        let m = if n < 2 { 0 } else { n * (n - 1) / 2 };
+        Condensed {
+            n,
+            data: vec![0.0; m],
+        }
+    }
+
+    /// Construct from a full row-major n×n matrix (must be symmetric;
+    /// only the lower triangle is read).
+    pub fn from_full(n: usize, full: &[f32]) -> Self {
+        assert_eq!(full.len(), n * n);
+        let mut c = Condensed::zeros(n);
+        for i in 1..n {
+            for j in 0..i {
+                c.set(i, j, full[i * n + j]);
+            }
+        }
+        c
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes of storage — the quantity β guards (telemetry).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i != j && i < self.n && j < self.n);
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        tri(hi) + lo
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        if i == j {
+            0.0
+        } else {
+            self.data[self.idx(i, j)]
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let k = self.idx(i, j);
+        self.data[k] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row `i` of the lower triangle as a slice: distances (i, 0..i).
+    /// Contiguous by construction — the AHC inner loops scan these.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[tri(i)..tri(i) + i]
+    }
+
+    /// Mean of all stored distances (telemetry / tests).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_symmetry() {
+        let mut c = Condensed::zeros(4);
+        assert_eq!(c.len(), 6);
+        c.set(1, 0, 0.5);
+        c.set(2, 1, 1.5);
+        c.set(0, 3, 3.0); // reversed order works too
+        assert_eq!(c.get(0, 1), 0.5);
+        assert_eq!(c.get(1, 2), 1.5);
+        assert_eq!(c.get(3, 0), 3.0);
+        assert_eq!(c.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn row_slices() {
+        let mut c = Condensed::zeros(4);
+        for i in 1..4 {
+            for j in 0..i {
+                c.set(i, j, (i * 10 + j) as f32);
+            }
+        }
+        assert_eq!(c.row(1), &[10.0]);
+        assert_eq!(c.row(2), &[20.0, 21.0]);
+        assert_eq!(c.row(3), &[30.0, 31.0, 32.0]);
+    }
+
+    #[test]
+    fn from_full_round_trip() {
+        let full = vec![
+            0.0, 1.0, 2.0, //
+            1.0, 0.0, 3.0, //
+            2.0, 3.0, 0.0,
+        ];
+        let c = Condensed::from_full(3, &full);
+        assert_eq!(c.get(0, 1), 1.0);
+        assert_eq!(c.get(0, 2), 2.0);
+        assert_eq!(c.get(1, 2), 3.0);
+    }
+
+    #[test]
+    fn small_ns() {
+        assert_eq!(Condensed::zeros(0).len(), 0);
+        assert_eq!(Condensed::zeros(1).len(), 0);
+        assert_eq!(Condensed::zeros(2).len(), 1);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = Condensed::zeros(100);
+        assert_eq!(c.bytes(), 100 * 99 / 2 * 4);
+    }
+}

@@ -1,0 +1,274 @@
+//! Distance-matrix construction: condensed storage + pluggable DTW
+//! backends + the parallel builder.
+//!
+//! The MAHC space constraint the paper is about lives here: a subset of
+//! n segments needs an n(n−1)/2-entry condensed matrix ([`Condensed`]),
+//! so β (the subset occupancy threshold) directly bounds peak memory.
+//! [`build_condensed`] fills one by tiling pair blocks over a
+//! [`DtwBackend`] — either the native Rust DP ([`NativeBackend`]) or
+//! the AOT XLA executable (`runtime::XlaDtwBackend`) — in parallel.
+
+pub mod condensed;
+
+pub use condensed::Condensed;
+
+use crate::corpus::Segment;
+use crate::util::pool::parallel_map;
+
+/// Which DTW implementation computes pair distances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust rolling-row DP (reference; fully deterministic).
+    Native,
+    /// AOT-compiled Pallas kernel through PJRT (`artifacts/dtw_*.hlo.txt`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => anyhow::bail!("unknown backend '{other}' (native|xla)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// A pairwise-DTW engine.  Implementations must be `Sync`: the builder
+/// calls them from worker threads.
+pub trait DtwBackend: Sync {
+    /// Distances between all (x, y) segment pairs: returns a
+    /// row-major `xs.len() × ys.len()` buffer.
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>>;
+
+    /// Human-readable name for telemetry.
+    fn name(&self) -> &'static str;
+
+    /// Preferred number of X rows per `pairwise` call.  The condensed
+    /// builder groups triangle rows into blocks of this size: batched
+    /// backends (the XLA tile executor) amortise dispatch and avoid
+    /// padding an entire tile for a single row, while the native DP
+    /// backend is block-size-indifferent (1 keeps work stealing fine-
+    /// grained).
+    fn preferred_rows(&self) -> usize {
+        1
+    }
+}
+
+/// Native rolling-row DP backend.
+pub struct NativeBackend {
+    /// Optional Sakoe-Chiba band radius.
+    pub band: Option<usize>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { band: None }
+    }
+
+    pub fn banded(band: usize) -> Self {
+        NativeBackend { band: Some(band) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DtwBackend for NativeBackend {
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(xs.len() * ys.len());
+        match self.band {
+            Some(b) => {
+                for x in xs {
+                    for y in ys {
+                        out.push(crate::dtw::dtw_banded(
+                            &x.feats, &y.feats, x.dim, x.len, y.len, b,
+                        ));
+                    }
+                }
+            }
+            None => {
+                // Row-vectorised path: transpose each Y once per call
+                // (amortised over the X block the builder hands us) and
+                // reuse one scratch across all pairs — zero allocation
+                // in the pair loop.
+                let yts: Vec<crate::dtw::classic::Transposed> = ys
+                    .iter()
+                    .map(|y| {
+                        crate::dtw::classic::Transposed::from_row_major(&y.feats, y.dim, y.len)
+                    })
+                    .collect();
+                let mut scratch = crate::dtw::classic::DtwScratch::new();
+                for x in xs {
+                    for yt in &yts {
+                        out.push(crate::dtw::classic::dtw_transposed(
+                            &x.feats,
+                            x.dim,
+                            x.len,
+                            yt,
+                            &mut scratch,
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn preferred_rows(&self) -> usize {
+        // Amortise per-call Y transposition across a block of X rows
+        // while keeping work-stealing granularity reasonable.
+        16
+    }
+}
+
+/// Build the condensed distance matrix for `segments` over `backend`,
+/// splitting the row range across `threads` workers.
+///
+/// Work is divided by *rows of the triangle*; since row i holds i
+/// entries, rows are dealt in strides so the load per worker is even.
+pub fn build_condensed(
+    segments: &[&Segment],
+    backend: &dyn DtwBackend,
+    threads: usize,
+) -> anyhow::Result<Condensed> {
+    let n = segments.len();
+    let mut cond = Condensed::zeros(n);
+    if n < 2 {
+        return Ok(cond);
+    }
+
+    // Triangle rows 1..n are grouped into blocks of the backend's
+    // preferred size; each task computes the rectangle
+    // (rows i0..i1) × (cols 0..i1) and the assembler keeps only the
+    // strictly-lower-triangular entries.  The rectangle over-computes
+    // at most block²/2 pairs per block — negligible against the i·block
+    // useful pairs — and lets batched backends fill whole tiles.
+    let block = backend.preferred_rows().max(1);
+    let nblocks = (n - 1).div_ceil(block);
+    let rows: Vec<anyhow::Result<(usize, usize, Vec<f32>)>> =
+        parallel_map(nblocks, threads, |b| {
+            let i0 = 1 + b * block;
+            let i1 = (i0 + block).min(n);
+            let xs: Vec<&Segment> = segments[i0..i1].to_vec();
+            let ys: Vec<&Segment> = segments[..i1].to_vec();
+            let d = backend.pairwise(&xs, &ys)?;
+            Ok((i0, i1, d))
+        });
+
+    for r in rows {
+        let (i0, i1, d) = r?;
+        let width = i1; // ys span 0..i1
+        for i in i0..i1 {
+            let row = &d[(i - i0) * width..(i - i0) * width + i];
+            for (j, &v) in row.iter().enumerate() {
+                cond.set(i, j, v);
+            }
+        }
+    }
+    Ok(cond)
+}
+
+/// Cross-set distance matrix (rows = xs, cols = ys), parallel over
+/// row blocks of the backend's preferred size.
+pub fn build_cross(
+    xs: &[&Segment],
+    ys: &[&Segment],
+    backend: &dyn DtwBackend,
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let block = backend.preferred_rows().max(1);
+    let nblocks = xs.len().div_ceil(block);
+    let rows: Vec<anyhow::Result<Vec<f32>>> = parallel_map(nblocks, threads, |b| {
+        let i0 = b * block;
+        let i1 = (i0 + block).min(xs.len());
+        backend.pairwise(&xs[i0..i1], ys)
+    });
+    let mut out = Vec::with_capacity(xs.len() * ys.len());
+    for r in rows {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+
+    #[test]
+    fn condensed_matches_direct_dtw() {
+        let set = generate(&DatasetSpec::tiny(20, 3, 1));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let cond = build_condensed(&refs, &NativeBackend::new(), 4).unwrap();
+        for i in 0..20 {
+            for j in 0..i {
+                let want = crate::dtw::dtw(
+                    &refs[i].feats,
+                    &refs[j].feats,
+                    set.dim,
+                    refs[i].len,
+                    refs[j].len,
+                );
+                assert_eq!(cond.get(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_equals_parallel() {
+        let set = generate(&DatasetSpec::tiny(16, 3, 2));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let a = build_condensed(&refs, &NativeBackend::new(), 1).unwrap();
+        let b = build_condensed(&refs, &NativeBackend::new(), 8).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let set = generate(&DatasetSpec::tiny(8, 2, 3));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let c0 = build_condensed(&refs[..1], &NativeBackend::new(), 2).unwrap();
+        assert_eq!(c0.n(), 1);
+        let c2 = build_condensed(&refs[..2], &NativeBackend::new(), 2).unwrap();
+        assert!(c2.get(1, 0) >= 0.0);
+    }
+
+    #[test]
+    fn cross_matrix_shape_and_values() {
+        let set = generate(&DatasetSpec::tiny(10, 2, 4));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let m = build_cross(&refs[..3], &refs[3..7], &NativeBackend::new(), 2).unwrap();
+        assert_eq!(m.len(), 3 * 4);
+        let want = crate::dtw::dtw(
+            &refs[1].feats,
+            &refs[5].feats,
+            set.dim,
+            refs[1].len,
+            refs[5].len,
+        );
+        assert_eq!(m[1 * 4 + 2], want);
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! DCT-II cepstral transform, rows 1..n_ceps (c0 is replaced by log
+//! energy in the 39-dim feature), HTK √(2/N) scaling — mirrors
+//! `kernels/ref.py::dct_matrix`.
+
+/// (n_ceps, n_mels) DCT-II matrix.
+pub fn dct_matrix(n_ceps: usize, n_mels: usize) -> Vec<Vec<f64>> {
+    (1..=n_ceps)
+        .map(|k| {
+            (0..n_mels)
+                .map(|m| {
+                    (2.0 / n_mels as f64).sqrt()
+                        * (std::f64::consts::PI * k as f64 * (m as f64 + 0.5) / n_mels as f64)
+                            .cos()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Apply the DCT matrix to a log-mel vector.
+pub fn apply(dct: &[Vec<f64>], log_mel: &[f64]) -> Vec<f64> {
+    dct.iter()
+        .map(|row| row.iter().zip(log_mel).map(|(a, b)| a * b).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let m = dct_matrix(12, 26);
+        assert_eq!(m.len(), 12);
+        assert_eq!(m[0].len(), 26);
+    }
+
+    #[test]
+    fn rows_orthogonal() {
+        let m = dct_matrix(12, 26);
+        for i in 0..12 {
+            for j in 0..12 {
+                let dot: f64 = m[i].iter().zip(&m[j]).map(|(a, b)| a * b).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-9, "rows {i},{j}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input_gives_zero_cepstra() {
+        // Rows k >= 1 integrate cos over full periods -> 0 for constants.
+        let m = dct_matrix(12, 26);
+        let ceps = apply(&m, &vec![3.7; 26]);
+        for &c in &ceps {
+            assert!(c.abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! HTK regression deltas with edge replication, mirroring
+//! `kernels/ref.py::delta`.
+
+/// Delta features over the time axis.  `feat` is (T, F) row-major.
+pub fn delta(feat: &[Vec<f64>], win: usize) -> Vec<Vec<f64>> {
+    let t = feat.len();
+    if t == 0 {
+        return Vec::new();
+    }
+    let f = feat[0].len();
+    let denom: f64 = 2.0 * (1..=win).map(|th| (th * th) as f64).sum::<f64>();
+    (0..t)
+        .map(|i| {
+            let mut acc = vec![0.0; f];
+            for th in 1..=win {
+                let fwd = &feat[(i + th).min(t - 1)];
+                let bwd = &feat[i.saturating_sub(th)];
+                for (a, (x, y)) in acc.iter_mut().zip(fwd.iter().zip(bwd)) {
+                    *a += th as f64 * (x - y);
+                }
+            }
+            acc.iter().map(|a| a / denom).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_gives_zero() {
+        let feat = vec![vec![1.0, -2.0]; 8];
+        for row in delta(&feat, 2) {
+            assert!(row.iter().all(|v| v.abs() < 1e-12));
+        }
+    }
+
+    #[test]
+    fn linear_ramp_gives_slope_interior() {
+        let feat: Vec<Vec<f64>> = (0..20).map(|t| vec![3.0 * t as f64]).collect();
+        let d = delta(&feat, 2);
+        for row in &d[2..18] {
+            assert!((row[0] - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_frame() {
+        assert!(delta(&[], 2).is_empty());
+        let d = delta(&[vec![5.0]], 2);
+        assert_eq!(d.len(), 1);
+        assert!(d[0][0].abs() < 1e-12); // fwd == bwd == the only frame
+    }
+}

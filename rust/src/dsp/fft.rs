@@ -1,0 +1,159 @@
+//! Iterative radix-2 Cooley-Tukey FFT (power-of-two sizes).
+//!
+//! Only the real-input forward transform is needed (power spectrum of
+//! 256-sample frames); it is implemented as a complex FFT over the
+//! zero-padded frame followed by magnitude extraction of the first
+//! N/2+1 bins.  f64 throughout — the front-end runs once per segment at
+//! corpus-build time, so numerical fidelity beats speed here.
+
+/// Complex number as (re, im); a full complex type is overkill here.
+pub type C = (f64, f64);
+
+#[inline]
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+#[inline]
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+#[inline]
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place iterative radix-2 FFT.  `data.len()` must be a power of two.
+pub fn fft_inplace(data: &mut [C]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FFT size {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+
+    // Butterfly passes.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        let wlen: C = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w: C = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = c_mul(data[i + k + len / 2], w);
+                data[i + k] = c_add(u, v);
+                data[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Power spectrum |rFFT(x, nfft)|² — first nfft/2+1 bins.
+///
+/// `x` is zero-padded (or truncated) to `nfft`.
+pub fn power_spectrum(x: &[f64], nfft: usize) -> Vec<f64> {
+    let mut buf: Vec<C> = (0..nfft)
+        .map(|i| (x.get(i).copied().unwrap_or(0.0), 0.0))
+        .collect();
+    fft_inplace(&mut buf);
+    buf[..nfft / 2 + 1]
+        .iter()
+        .map(|&(re, im)| re * re + im * im)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// O(n²) reference DFT.
+    fn dft(x: &[C]) -> Vec<C> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = (0.0, 0.0);
+                for (j, &v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                    acc = c_add(acc, c_mul(v, (ang.cos(), ang.sin())));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference_dft() {
+        for &n in &[2usize, 4, 8, 64, 256] {
+            let mut x: Vec<C> = (0..n)
+                .map(|i| ((i as f64 * 0.37).sin(), (i as f64 * 0.11).cos()))
+                .collect();
+            let want = dft(&x);
+            fft_inplace(&mut x);
+            for (got, want) in x.iter().zip(&want) {
+                assert!((got.0 - want.0).abs() < 1e-9, "n={n}");
+                assert!((got.1 - want.1).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![(0.0, 0.0); 16];
+        x[0] = (1.0, 0.0);
+        fft_inplace(&mut x);
+        for &(re, im) in &x {
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pure_tone_peaks_at_bin() {
+        let n = 256;
+        let k0 = 19;
+        let x: Vec<f64> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * k0 as f64 * i as f64 / n as f64).cos())
+            .collect();
+        let p = power_spectrum(&x, n);
+        let peak = p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, k0);
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 128;
+        let x: Vec<f64> = (0..n).map(|i| ((i * i) as f64 * 0.013).sin()).collect();
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let mut buf: Vec<C> = x.iter().map(|&v| (v, 0.0)).collect();
+        fft_inplace(&mut buf);
+        let freq_energy: f64 =
+            buf.iter().map(|&(re, im)| re * re + im * im).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-9 * time_energy.max(1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut x = vec![(0.0, 0.0); 12];
+        fft_inplace(&mut x);
+    }
+}

@@ -1,0 +1,97 @@
+//! Mel filterbank (HTK-style mel scale), mirroring `kernels/ref.py`.
+
+pub fn hz_to_mel(f: f64) -> f64 {
+    2595.0 * (1.0 + f / 700.0).log10()
+}
+
+pub fn mel_to_hz(m: f64) -> f64 {
+    700.0 * (10f64.powf(m / 2595.0) - 1.0)
+}
+
+/// Triangular filterbank: rows are filters over `nfft/2 + 1` power bins.
+pub fn mel_filterbank(n_mels: usize, nfft: usize, sample_rate: usize) -> Vec<Vec<f64>> {
+    let lo = hz_to_mel(0.0);
+    let hi = hz_to_mel(sample_rate as f64 / 2.0);
+    let pts: Vec<f64> = (0..n_mels + 2)
+        .map(|i| mel_to_hz(lo + (hi - lo) * i as f64 / (n_mels + 1) as f64))
+        .collect();
+    let nbins = nfft / 2 + 1;
+    let bin_hz: Vec<f64> = (0..nbins)
+        .map(|i| i as f64 * sample_rate as f64 / nfft as f64)
+        .collect();
+    (0..n_mels)
+        .map(|m| {
+            let (left, center, right) = (pts[m], pts[m + 1], pts[m + 2]);
+            bin_hz
+                .iter()
+                .map(|&f| {
+                    let up = (f - left) / (center - left).max(1e-12);
+                    let down = (right - f) / (right - center).max(1e-12);
+                    up.min(down).max(0.0)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Apply the filterbank to a power spectrum and take the floored log.
+pub fn log_mel(power: &[f64], fb: &[Vec<f64>], floor: f64) -> Vec<f64> {
+    fb.iter()
+        .map(|filt| {
+            let e: f64 = filt.iter().zip(power).map(|(w, p)| w * p).sum();
+            e.max(floor).ln()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mel_scale_round_trip() {
+        for f in [0.0, 100.0, 1000.0, 8000.0] {
+            assert!((mel_to_hz(hz_to_mel(f)) - f).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn filterbank_shape_and_support() {
+        let fb = mel_filterbank(26, 256, 16_000);
+        assert_eq!(fb.len(), 26);
+        assert_eq!(fb[0].len(), 129);
+        // Every filter is nonnegative with nonempty support.
+        for filt in &fb {
+            assert!(filt.iter().all(|&v| v >= 0.0));
+            assert!(filt.iter().any(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn filters_are_ordered_in_frequency() {
+        let fb = mel_filterbank(26, 256, 16_000);
+        let centers: Vec<usize> = fb
+            .iter()
+            .map(|f| {
+                f.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        for w in centers.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn log_mel_floors() {
+        let fb = mel_filterbank(4, 16, 16_000);
+        let power = vec![0.0; 9];
+        let lm = log_mel(&power, &fb, 1e-10);
+        for &v in &lm {
+            assert!((v - (1e-10f64).ln()).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Full MFCC pipeline: waveform → 39-dim feature sequence.
+//!
+//! Composition of the sibling modules, parameter-for-parameter identical
+//! to `python/compile/model.py::mfcc_frontend` (asserted in the
+//! `artifact_crosscheck` integration test).
+
+use super::{dct, delta, fft, mel, window};
+
+/// Feature dimensionality: 12 MFCC + logE, with Δ and ΔΔ appended.
+pub const FEAT_DIM: usize = 39;
+
+/// Front-end parameters (paper §6.1 defaults).
+#[derive(Debug, Clone)]
+pub struct MfccConfig {
+    pub sample_rate: usize,
+    pub frame_len: usize,
+    pub frame_hop: usize,
+    pub nfft: usize,
+    pub n_mels: usize,
+    pub n_ceps: usize,
+    pub preemph: f64,
+    pub delta_win: usize,
+    pub floor: f64,
+}
+
+impl Default for MfccConfig {
+    fn default() -> Self {
+        MfccConfig {
+            sample_rate: 16_000,
+            frame_len: 160, // 10 ms
+            frame_hop: 80,  // 5 ms (50% overlap)
+            nfft: 256,
+            n_mels: 26,
+            n_ceps: 12,
+            preemph: 0.97,
+            delta_win: 2,
+            floor: 1.0e-10,
+        }
+    }
+}
+
+/// Precomputed tables for repeated extraction.
+pub struct MfccExtractor {
+    cfg: MfccConfig,
+    window: Vec<f64>,
+    fb: Vec<Vec<f64>>,
+    dct: Vec<Vec<f64>>,
+}
+
+impl MfccExtractor {
+    pub fn new(cfg: MfccConfig) -> Self {
+        let window = window::hamming(cfg.frame_len);
+        let fb = mel::mel_filterbank(cfg.n_mels, cfg.nfft, cfg.sample_rate);
+        let dct = dct::dct_matrix(cfg.n_ceps, cfg.n_mels);
+        MfccExtractor {
+            cfg,
+            window,
+            fb,
+            dct,
+        }
+    }
+
+    /// Extract (T, 39) features from a waveform.  Returns an empty Vec
+    /// if the signal is shorter than one frame.
+    pub fn extract(&self, wav: &[f64]) -> Vec<Vec<f64>> {
+        let cfg = &self.cfg;
+        let pre = window::preemphasis(wav, cfg.preemph);
+        let frames = window::frames(&pre, cfg.frame_len, cfg.frame_hop, &self.window);
+        if frames.is_empty() {
+            return Vec::new();
+        }
+        let mut base: Vec<Vec<f64>> = frames
+            .iter()
+            .map(|frame| {
+                let power = fft::power_spectrum(frame, cfg.nfft);
+                let lm = mel::log_mel(&power, &self.fb, cfg.floor);
+                let mut row = dct::apply(&self.dct, &lm);
+                let energy: f64 = frame.iter().map(|v| v * v).sum();
+                row.push(energy.max(cfg.floor).ln());
+                row
+            })
+            .collect();
+        let d1 = delta::delta(&base, cfg.delta_win);
+        let d2 = delta::delta(&d1, cfg.delta_win);
+        for (i, row) in base.iter_mut().enumerate() {
+            row.extend_from_slice(&d1[i]);
+            row.extend_from_slice(&d2[i]);
+        }
+        base
+    }
+}
+
+/// One-shot extraction with default parameters.
+pub fn mfcc(wav: &[f64]) -> Vec<Vec<f64>> {
+    MfccExtractor::new(MfccConfig::default()).extract(wav)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_for_standard_input() {
+        let wav = vec![0.1; 5200];
+        let f = mfcc(&wav);
+        assert_eq!(f.len(), 64);
+        assert_eq!(f[0].len(), FEAT_DIM);
+    }
+
+    #[test]
+    fn too_short_signal_is_empty() {
+        assert!(mfcc(&vec![0.0; 100]).is_empty());
+    }
+
+    #[test]
+    fn silence_hits_floor_and_zero_deltas() {
+        let f = mfcc(&vec![0.0; 1000]);
+        for row in &f {
+            assert!((row[12] - (1e-10f64).ln()).abs() < 1e-9); // logE at floor
+            for &v in &row[13..] {
+                assert!(v.abs() < 1e-9); // deltas of constant are zero
+            }
+        }
+    }
+
+    #[test]
+    fn tone_produces_stable_cepstra() {
+        // Tone + deterministic broadband floor: a bare sinusoid leaves
+        // most mel filters at the log floor, where leakage makes the
+        // cepstra flutter; the broadband term pins them, so interior
+        // frames of a steady signal must agree closely.
+        let mut lcg = 123456789u64;
+        let wav: Vec<f64> = (0..5200)
+            .map(|i| {
+                lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let noise = ((lcg >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+                0.5 * (2.0 * std::f64::consts::PI * 440.0 * i as f64 / 16_000.0).sin()
+                    + 0.02 * noise
+            })
+            .collect();
+        let f = mfcc(&wav);
+        let mid = &f[20][..12];
+        for row in &f[21..40] {
+            let mean_abs: f64 = row[..12]
+                .iter()
+                .zip(mid)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f64>()
+                / 12.0;
+            assert!(mean_abs < 1.0, "mean |Δcepstra| {mean_abs:.3}");
+        }
+    }
+
+    #[test]
+    fn amplitude_shifts_only_log_energy() {
+        let wav: Vec<f64> = (0..2000)
+            .map(|i| (i as f64 * 0.1).sin() * 0.2 + (i as f64 * 0.037).cos() * 0.1)
+            .collect();
+        let a = mfcc(&wav);
+        let b = mfcc(&wav.iter().map(|v| 4.0 * v).collect::<Vec<_>>());
+        for (ra, rb) in a.iter().zip(&b) {
+            for k in 0..12 {
+                assert!((ra[k] - rb[k]).abs() < 1e-6);
+            }
+            assert!((rb[12] - ra[12] - (16.0f64).ln()).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Acoustic front-end substrate: HTK-style MFCC extraction.
+//!
+//! Native Rust mirror of the Layer-2 JAX graph (`python/compile/model.py
+//! :: mfcc_frontend`) and of the numpy oracle (`kernels/ref.py`).  Used
+//! (a) as the feature extractor when running without artifacts, (b) as
+//! the cross-check for the AOT MFCC executable in integration tests,
+//! and (c) by the corpus generator's waveform path.
+//!
+//! Parameters are pinned to paper §6.1: 12 MFCCs + log energy + Δ + ΔΔ
+//! (39 dims), 10 ms frames, 5 ms hop (50% overlap), 16 kHz.
+
+pub mod dct;
+pub mod delta;
+pub mod fft;
+pub mod mel;
+pub mod mfcc;
+pub mod window;
+
+pub use mfcc::{mfcc, MfccConfig, FEAT_DIM};

@@ -1,0 +1,93 @@
+//! Analysis windows and framing.
+
+/// Hamming window of length `n` (matches `kernels/ref.py::hamming`).
+pub fn hamming(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| 0.54 - 0.46 * (2.0 * std::f64::consts::PI * i as f64 / (n - 1) as f64).cos())
+        .collect()
+}
+
+/// Number of frames produced by framing `num_samples` with the given
+/// frame length and hop (no padding; matches `model.mfcc_num_frames`).
+pub fn num_frames(num_samples: usize, frame_len: usize, hop: usize) -> usize {
+    if num_samples < frame_len {
+        0
+    } else {
+        1 + (num_samples - frame_len) / hop
+    }
+}
+
+/// Pre-emphasis filter y[t] = x[t] − a·x[t−1], y[0] = x[0]·(1−a).
+pub fn preemphasis(x: &[f64], a: f64) -> Vec<f64> {
+    if x.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(x.len());
+    out.push(x[0] * (1.0 - a));
+    for t in 1..x.len() {
+        out.push(x[t] - a * x[t - 1]);
+    }
+    out
+}
+
+/// Extract windowed frames: (num_frames, frame_len), row-major flat.
+pub fn frames(x: &[f64], frame_len: usize, hop: usize, window: &[f64]) -> Vec<Vec<f64>> {
+    assert_eq!(window.len(), frame_len);
+    let t = num_frames(x.len(), frame_len, hop);
+    (0..t)
+        .map(|i| {
+            x[i * hop..i * hop + frame_len]
+                .iter()
+                .zip(window)
+                .map(|(s, w)| s * w)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hamming_endpoints_and_symmetry() {
+        let w = hamming(160);
+        assert!((w[0] - 0.08).abs() < 1e-12);
+        assert!((w[159] - 0.08).abs() < 1e-12);
+        for i in 0..80 {
+            assert!((w[i] - w[159 - i]).abs() < 1e-12);
+        }
+        // Peak at the middle region.
+        assert!(w[80] > 0.99);
+    }
+
+    #[test]
+    fn frame_count_matches_python() {
+        assert_eq!(num_frames(5200, 160, 80), 64);
+        assert_eq!(num_frames(160, 160, 80), 1);
+        assert_eq!(num_frames(240, 160, 80), 2);
+        assert_eq!(num_frames(100, 160, 80), 0);
+    }
+
+    #[test]
+    fn preemphasis_dc_removal() {
+        let x = vec![1.0; 100];
+        let y = preemphasis(&x, 0.97);
+        assert!((y[0] - 0.03).abs() < 1e-12);
+        for &v in &y[1..] {
+            assert!((v - 0.03).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frames_overlap() {
+        let x: Vec<f64> = (0..400).map(|i| i as f64).collect();
+        let w = vec![1.0; 160];
+        let f = frames(&x, 160, 80, &w);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f[0][0], 0.0);
+        assert_eq!(f[1][0], 80.0);
+        assert_eq!(f[3][159], 399.0);
+    }
+}

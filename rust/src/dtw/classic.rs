@@ -1,0 +1,315 @@
+//! Classic O(lx·ly) dynamic-programming DTW with rolling rows.
+//!
+//! Works on flat row-major `(len, dim)` f32 feature buffers — the layout
+//! [`crate::corpus::Segment`] stores — and keeps only two DP rows, so a
+//! single alignment is O(min-row) space.  f32 arithmetic matches the
+//! Pallas kernel; accumulated error over realistic path lengths is
+//! ~1e-5 relative (asserted in tests against an f64 shadow).
+
+/// Distance reported for banded alignments with no feasible path
+/// (|lx − ly| > band).  Mirrors the kernel's BIG sentinel after
+/// normalisation; callers treat anything above `INFEASIBLE / 2` as
+/// "no path".
+pub const INFEASIBLE: f32 = 1.0e28;
+
+#[inline]
+fn frame_dist(x: &[f32], y: &[f32]) -> f32 {
+    sq_dist(x, y).sqrt()
+}
+
+/// Squared Euclidean distance.  The zip-fold autovectorises well under
+/// LLVM (measured faster than a manual 4-accumulator unroll on this
+/// target — see EXPERIMENTS.md §Perf).
+#[inline]
+fn sq_dist(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = a - b;
+            d * d
+        })
+        .sum()
+}
+
+/// Normalised DTW distance between two flat `(len, dim)` sequences.
+///
+/// `x` has `lx` frames of `dim` floats; `y` has `ly`.  Returns
+/// cost(lx−1, ly−1) / (lx + ly).
+pub fn dtw(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize) -> f32 {
+    dtw_impl(x, y, dim, lx, ly, None)
+}
+
+/// Sakoe-Chiba banded variant; returns [`INFEASIBLE`] when no monotone
+/// path stays within the band.
+pub fn dtw_banded(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band: usize) -> f32 {
+    dtw_impl(x, y, dim, lx, ly, Some(band))
+}
+
+fn dtw_impl(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band: Option<usize>) -> f32 {
+    assert!(lx >= 1 && ly >= 1, "empty sequence");
+    assert!(x.len() >= lx * dim && y.len() >= ly * dim, "buffer too short");
+    match band {
+        None => dtw_unbanded(x, y, dim, lx, ly),
+        Some(b) => dtw_banded_impl(x, y, dim, lx, ly, b),
+    }
+}
+
+/// Unbanded fast path: every cell is reachable, so the BIG sentinel
+/// logic disappears; the left neighbour rides in a register and the
+/// first row/column are peeled out of the hot loop.
+fn dtw_unbanded(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize) -> f32 {
+    let yt = Transposed::from_row_major(y, dim, ly);
+    let mut scratch = DtwScratch::new();
+    dtw_transposed(x, dim, lx, &yt, &mut scratch)
+}
+
+/// Y features in (dim, len) layout: `data[d * len + j]` — lets the
+/// local-distance row accumulate with vector FMAs *across j* instead of
+/// a serial 39-element reduction per cell (the main §Perf win on the
+/// native backend; the same transposition the Pallas kernel gets for
+/// free from its matmul formulation).
+#[derive(Debug, Clone)]
+pub struct Transposed {
+    pub dim: usize,
+    pub len: usize,
+    data: Vec<f32>,
+}
+
+impl Transposed {
+    pub fn from_row_major(y: &[f32], dim: usize, len: usize) -> Transposed {
+        let mut data = vec![0.0f32; dim * len];
+        for j in 0..len {
+            for d in 0..dim {
+                data[d * len + j] = y[j * dim + d];
+            }
+        }
+        Transposed { dim, len, data }
+    }
+
+    #[inline]
+    fn dim_row(&self, d: usize) -> &[f32] {
+        &self.data[d * self.len..(d + 1) * self.len]
+    }
+}
+
+/// Reusable buffers so the per-pair loop allocates nothing.
+#[derive(Debug, Default)]
+pub struct DtwScratch {
+    dist: Vec<f32>,
+    prev: Vec<f32>,
+    cur: Vec<f32>,
+}
+
+impl DtwScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn resize(&mut self, ly: usize) {
+        self.dist.resize(ly, 0.0);
+        self.prev.resize(ly, 0.0);
+        self.cur.resize(ly, 0.0);
+    }
+}
+
+/// Row-vectorised DTW against a transposed Y.  Semantics identical to
+/// [`dtw`] (asserted by tests); layout is the only difference.
+pub fn dtw_transposed(
+    x: &[f32],
+    dim: usize,
+    lx: usize,
+    yt: &Transposed,
+    scratch: &mut DtwScratch,
+) -> f32 {
+    let ly = yt.len;
+    debug_assert_eq!(dim, yt.dim);
+    assert!(lx >= 1 && ly >= 1, "empty sequence");
+    scratch.resize(ly);
+    let DtwScratch { dist, prev, cur } = scratch;
+
+    // Fill the local-distance row for x frame i: dist[j] = ||x_i - y_j||.
+    let fill_row = |dist: &mut [f32], xi: &[f32]| {
+        dist.fill(0.0);
+        for d in 0..dim {
+            let xv = xi[d];
+            let yrow = yt.dim_row(d);
+            for (acc, &yv) in dist.iter_mut().zip(yrow) {
+                let t = xv - yv;
+                *acc += t * t; // vector FMA across j
+            }
+        }
+        for v in dist.iter_mut() {
+            *v = v.sqrt(); // vector sqrt across j
+        }
+    };
+
+    // Row 0: cumulative along j.
+    fill_row(dist, &x[0..dim]);
+    let mut run = 0.0f32;
+    for j in 0..ly {
+        run += dist[j];
+        prev[j] = run;
+    }
+
+    for i in 1..lx {
+        fill_row(dist, &x[i * dim..(i + 1) * dim]);
+        let mut left = prev[0] + dist[0];
+        cur[0] = left;
+        let mut diag = prev[0];
+        for j in 1..ly {
+            let up = prev[j];
+            let best = diag.min(up).min(left);
+            left = dist[j] + best;
+            cur[j] = left;
+            diag = up;
+        }
+        std::mem::swap(prev, cur);
+    }
+    prev[ly - 1] / (lx + ly) as f32
+}
+
+fn dtw_banded_impl(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band: usize) -> f32 {
+    const BIG: f32 = 1.0e30;
+    let mut prev = vec![BIG; ly];
+    let mut cur = vec![BIG; ly];
+
+    for i in 0..lx {
+        let xi = &x[i * dim..(i + 1) * dim];
+        let j_lo = i.saturating_sub(band);
+        let j_hi = (i + band + 1).min(ly);
+        for v in cur.iter_mut() {
+            *v = BIG;
+        }
+        for j in j_lo..j_hi {
+            let d = frame_dist(xi, &y[j * dim..(j + 1) * dim]);
+            let best = if i == 0 && j == 0 {
+                0.0
+            } else {
+                let mut m = BIG;
+                if i > 0 {
+                    m = m.min(prev[j]); // (i-1, j)
+                    if j > 0 {
+                        m = m.min(prev[j - 1]); // (i-1, j-1)
+                    }
+                }
+                if j > 0 {
+                    m = m.min(cur[j - 1]); // (i, j-1)
+                }
+                m
+            };
+            cur[j] = if best >= BIG { BIG } else { d + best };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    let total = prev[ly - 1];
+    if total >= BIG {
+        INFEASIBLE
+    } else {
+        total / (lx + ly) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(vals: &[f32]) -> Vec<f32> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn identical_sequences_zero() {
+        let x = seq(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(dtw(&x, &x, 1, 4, 4), 0.0);
+    }
+
+    #[test]
+    fn single_frames() {
+        // d = |3 - 7| = 4, normalised by (1+1).
+        let x = seq(&[3.0]);
+        let y = seq(&[7.0]);
+        assert!((dtw(&x, &y, 1, 1, 1) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // x = [0, 1], y = [0, 1, 1]: warping absorbs the repeat, cost 0.
+        let x = seq(&[0.0, 1.0]);
+        let y = seq(&[0.0, 1.0, 1.0]);
+        assert!(dtw(&x, &y, 1, 2, 3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn hand_computed_case() {
+        // x = [0, 3], y = [1, 2]:
+        //   d = [[1,2],[2,1]]; C(0,0)=1; C(0,1)=3; C(1,0)=3; C(1,1)=2.
+        //   result = 2 / 4 = 0.5
+        let x = seq(&[0.0, 3.0]);
+        let y = seq(&[1.0, 2.0]);
+        assert!((dtw(&x, &y, 1, 2, 2) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetry() {
+        let x = seq(&[0.0, 1.5, 2.0, -1.0, 0.5]);
+        let y = seq(&[1.0, 1.0, -2.0]);
+        let a = dtw(&x, &y, 1, 5, 3);
+        let b = dtw(&y, &x, 1, 3, 5);
+        assert!((a - b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multidim_frames() {
+        let x = seq(&[0.0, 0.0, 3.0, 4.0]); // 2 frames of dim 2
+        let y = seq(&[0.0, 0.0]); // 1 frame
+        // d(x0,y0)=0, d(x1,y0)=5; path (0,0)->(1,0): cost 5, norm 3.
+        assert!((dtw(&x, &y, 2, 2, 1) - 5.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn band_feasible_matches_unbanded_when_wide() {
+        let x = seq(&[0.0, 1.0, 2.0, 3.0, 4.0]);
+        let y = seq(&[0.0, 2.0, 4.0, 4.0, 5.0]);
+        let full = dtw(&x, &y, 1, 5, 5);
+        let banded = dtw_banded(&x, &y, 1, 5, 5, 10);
+        assert!((full - banded).abs() < 1e-6);
+    }
+
+    #[test]
+    fn band_infeasible_when_lengths_diverge() {
+        let x = seq(&[0.0; 10]);
+        let y = seq(&[0.0; 2]);
+        assert!(dtw_banded(&x, &y, 1, 10, 2, 3) >= INFEASIBLE / 2.0);
+    }
+
+    #[test]
+    fn band_restricts_path_cost() {
+        // With band 0 the path is forced onto the diagonal.
+        let x = seq(&[0.0, 10.0, 0.0]);
+        let y = seq(&[0.0, 0.0, 0.0]);
+        let tight = dtw_banded(&x, &y, 1, 3, 3, 0);
+        let loose = dtw(&x, &y, 1, 3, 3);
+        assert!(tight >= loose);
+        assert!((tight - 10.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn triangle_like_on_constant_segments() {
+        // Constant sequences reduce DTW to scaled point distance.
+        let a = vec![1.0f32; 6];
+        let b = vec![4.0f32; 6];
+        let c = vec![9.0f32; 6];
+        let dab = dtw(&a, &b, 1, 6, 6);
+        let dbc = dtw(&b, &c, 1, 6, 6);
+        let dac = dtw(&a, &c, 1, 6, 6);
+        assert!(dac <= dab + dbc + 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sequence_panics() {
+        dtw(&[], &[1.0], 1, 0, 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Native DTW substrate — the reference backend and test oracle for the
+//! AOT XLA path.
+//!
+//! Semantics are pinned to `python/compile/kernels/ref.py` (and thereby
+//! to the Pallas kernel): unweighted step set {(1,0),(0,1),(1,1)},
+//! Euclidean local distance, cost normalised by (lx + ly), optional
+//! Sakoe-Chiba band.  The `rust-vs-artifact` integration test holds all
+//! three implementations together.
+
+pub mod classic;
+
+pub use classic::{dtw, dtw_banded, INFEASIBLE};

@@ -1,0 +1,511 @@
+//! Figure/table regeneration harness — one function per paper artefact.
+//!
+//! Each `figN` function runs the experiment behind the corresponding
+//! figure of the paper (see DESIGN.md §3 for the index), prints the
+//! series the paper plots, and writes a CSV under `results/`.  Scales
+//! default to fractions of the paper's dataset sizes that run in
+//! minutes on a workstation (the *shape* of each curve is the
+//! reproduction target — see DESIGN.md §5); `--scale` overrides.
+//!
+//! The functions are library code (not buried in the binary) so the
+//! test suite can exercise them at tiny scale.
+
+use std::path::PathBuf;
+
+use crate::baselines::full_ahc;
+use crate::config::{AlgoConfig, Convergence, DatasetSpec, NamedDataset};
+use crate::corpus::{generate, CompositionStats, SegmentSet};
+use crate::distance::{DtwBackend, NativeBackend};
+use crate::mahc::MahcDriver;
+use crate::util::csv::CsvWriter;
+
+/// Shared experiment context.
+pub struct ExpCtx {
+    /// Scale override (None = per-figure default).
+    pub scale: Option<f64>,
+    pub seed: u64,
+    pub threads: usize,
+    pub outdir: PathBuf,
+    /// Iterations for fixed-iteration runs.
+    pub iters: usize,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            scale: None,
+            seed: 1234,
+            threads: crate::util::pool::default_threads(),
+            outdir: PathBuf::from("results"),
+            iters: 8,
+        }
+    }
+}
+
+impl ExpCtx {
+    fn scale_or(&self, default: f64) -> f64 {
+        self.scale.unwrap_or(default)
+    }
+
+    fn gen(&self, which: NamedDataset, default_scale: f64) -> SegmentSet {
+        let spec = DatasetSpec::named(which, self.scale_or(default_scale));
+        generate(&spec)
+    }
+
+    fn algo(&self, p0: usize, beta: Option<usize>, iters: usize) -> AlgoConfig {
+        AlgoConfig {
+            p0,
+            beta,
+            convergence: Convergence::FixedIters(iters),
+            threads: self.threads,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    fn write(&self, name: &str, csv: &CsvWriter) -> anyhow::Result<()> {
+        let path = self.outdir.join(format!("{name}.csv"));
+        csv.write_to(&path)?;
+        eprintln!("wrote {} ({} rows)", path.display(), csv.num_rows());
+        Ok(())
+    }
+}
+
+/// β used throughout the figures: 1.25 × the even-partition size, the
+/// "slightly above N/P" placement visible in the paper's Fig. 7.
+pub fn default_beta(n: usize, p0: usize) -> usize {
+    ((n as f64 / p0 as f64) * 1.25).ceil() as usize
+}
+
+fn run(
+    set: &SegmentSet,
+    cfg: AlgoConfig,
+    backend: &dyn DtwBackend,
+) -> anyhow::Result<crate::mahc::MahcResult> {
+    MahcDriver::new(set, cfg, backend)?.run()
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — dataset composition
+// ---------------------------------------------------------------------
+
+pub fn table1(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Table 1: composition of experimental data (scaled)");
+    println!(
+        "{:<12} {:>9} {:>8} {:>13} {:>10} {:>14}",
+        "Dataset", "Segments", "Classes", "Frequency", "Vectors", "Similarities"
+    );
+    let mut csv = CsvWriter::new(&[
+        "dataset", "segments", "classes", "freq_min", "freq_max", "vectors", "similarities",
+    ]);
+    for which in NamedDataset::all() {
+        let set = ctx.gen(which, 0.1);
+        let st = CompositionStats::of(&set);
+        println!("{}", st.table_row());
+        csv.rowf(&[
+            &st.name,
+            &st.segments,
+            &st.classes,
+            &st.freq_range.0,
+            &st.freq_range.1,
+            &st.vectors,
+            &st.similarities,
+        ]);
+    }
+    ctx.write("table1", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 1 — largest-subset growth under plain MAHC
+// ---------------------------------------------------------------------
+
+pub fn fig1(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Fig. 1: max subset occupancy per iteration, plain MAHC (β=∞)");
+    let cases = [
+        (NamedDataset::SmallA, 4usize, 0.1),
+        (NamedDataset::SmallB, 4, 0.1),
+        (NamedDataset::Medium, 6, 0.05),
+        (NamedDataset::Large, 8, 0.03),
+    ];
+    let backend = NativeBackend::new();
+    let mut csv = CsvWriter::new(&["dataset", "p0", "iteration", "max_occupancy", "even_share"]);
+    for (which, p0, scale) in cases {
+        let set = ctx.gen(which, scale);
+        let res = run(&set, ctx.algo(p0, None, 6.min(ctx.iters)), &backend)?;
+        let even = set.len() / p0;
+        let series = res.history.max_occupancy_series();
+        println!(
+            "  {:<8} P={p0} N={} even={} -> {:?}",
+            set.name,
+            set.len(),
+            even,
+            series
+        );
+        for r in &res.history.records {
+            csv.rowf(&[&set.name, &p0, &r.iteration, &r.max_occupancy, &even]);
+        }
+    }
+    ctx.write("fig1", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 — class cardinality distributions, Small A vs Small B
+// ---------------------------------------------------------------------
+
+pub fn fig3(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Fig. 3: segments-per-class distribution, Small A vs Small B");
+    let mut csv = CsvWriter::new(&["dataset", "class_rank", "class_size"]);
+    for which in [NamedDataset::SmallA, NamedDataset::SmallB] {
+        let set = ctx.gen(which, 0.1);
+        let st = CompositionStats::of(&set);
+        println!(
+            "  {:<8}: classes={} sizes(max..min)={}..{}",
+            st.name,
+            st.classes,
+            st.class_sizes.first().unwrap_or(&0),
+            st.class_sizes.last().unwrap_or(&0),
+        );
+        for (rank, &size) in st.class_sizes.iter().enumerate() {
+            csv.rowf(&[&st.name, &rank, &size]);
+        }
+    }
+    ctx.write("fig3", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Figs. 4 & 5 — Pᵢ and F per iteration: AHC vs MAHC vs MAHC+M
+// ---------------------------------------------------------------------
+
+fn fig_small(ctx: &ExpCtx, which: NamedDataset, figname: &str) -> anyhow::Result<()> {
+    let set = ctx.gen(which, 0.1);
+    let backend = NativeBackend::new();
+    println!(
+        "{figname}: {} (N={}), AHC vs MAHC vs MAHC+M, P0 ∈ {{2, 6}}",
+        set.name,
+        set.len()
+    );
+
+    let ahc = full_ahc(&set, &backend, ctx.threads, None, 0.25)?;
+    println!("  AHC baseline: K={} F={:.4}", ahc.k, ahc.f_measure);
+
+    let mut csv = CsvWriter::new(&["algo", "p0", "iteration", "subsets", "f_measure"]);
+    csv.rowf(&[&"ahc", &0, &0, &1, &ahc.f_measure]);
+    for p0 in [2usize, 6] {
+        for (algo, beta) in [
+            ("mahc", None),
+            ("mahc+m", Some(default_beta(set.len(), p0))),
+        ] {
+            let res = run(&set, ctx.algo(p0, beta, ctx.iters), &backend)?;
+            println!(
+                "  {algo:<7} P0={p0}: P_i={:?} F={:?}",
+                res.history.subsets_series(),
+                res.history
+                    .f_series()
+                    .iter()
+                    .map(|f| (f * 1000.0).round() / 1000.0)
+                    .collect::<Vec<_>>()
+            );
+            for r in &res.history.records {
+                csv.rowf(&[&algo, &p0, &r.iteration, &r.subsets, &r.f_measure]);
+            }
+        }
+    }
+    ctx.write(figname, &csv)
+}
+
+pub fn fig4(ctx: &ExpCtx) -> anyhow::Result<()> {
+    fig_small(ctx, NamedDataset::SmallA, "fig4")
+}
+
+pub fn fig5(ctx: &ExpCtx) -> anyhow::Result<()> {
+    fig_small(ctx, NamedDataset::SmallB, "fig5")
+}
+
+// ---------------------------------------------------------------------
+// Fig. 6 — per-iteration wall-clock, MAHC vs MAHC+M, P0 = 6
+// ---------------------------------------------------------------------
+
+pub fn fig6(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Fig. 6: per-iteration execution time, MAHC vs MAHC+M (P0=6)");
+    let backend = NativeBackend::new();
+    let mut csv = CsvWriter::new(&["dataset", "algo", "iteration", "wall_secs"]);
+    for which in [NamedDataset::SmallA, NamedDataset::SmallB] {
+        let set = ctx.gen(which, 0.1);
+        for (algo, beta) in [
+            ("mahc", None),
+            ("mahc+m", Some(default_beta(set.len(), 6))),
+        ] {
+            let res = run(&set, ctx.algo(6, beta, ctx.iters.min(6)), &backend)?;
+            let walls = res.history.wall_series();
+            println!("  {:<8} {algo:<7}: {:?}", set.name, walls);
+            for r in &res.history.records {
+                csv.rowf(&[&set.name, &algo, &r.iteration, &r.wall.as_secs_f64()]);
+            }
+        }
+    }
+    ctx.write("fig6", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7 — Medium set: Pᵢ, occupancy (split/refine visible), F
+// ---------------------------------------------------------------------
+
+pub fn fig7(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Fig. 7: Medium set, P0 ∈ {{6, 10}} — P_i, max occupancy vs β, F");
+    let set = ctx.gen(NamedDataset::Medium, 0.05);
+    let backend = NativeBackend::new();
+    let ahc = full_ahc(&set, &backend, ctx.threads, None, 0.25)?;
+    println!("  AHC baseline: K={} F={:.4}", ahc.k, ahc.f_measure);
+    let mut csv = CsvWriter::new(&[
+        "algo",
+        "p0",
+        "beta",
+        "iteration",
+        "subsets",
+        "max_occ_pre_split",
+        "max_occupancy",
+        "splits",
+        "f_measure",
+    ]);
+    csv.rowf(&[&"ahc", &0, &0, &0, &1, &0, &0, &0, &ahc.f_measure]);
+    for p0 in [6usize, 10] {
+        let beta = default_beta(set.len(), p0);
+        for (algo, b) in [("mahc", None), ("mahc+m", Some(beta))] {
+            let res = run(&set, ctx.algo(p0, b, ctx.iters), &backend)?;
+            println!(
+                "  {algo:<7} P0={p0} β={beta}: pre-split={:?} post={:?} F_last={:.4}",
+                res.history
+                    .records
+                    .iter()
+                    .map(|r| r.max_occupancy_pre_split)
+                    .collect::<Vec<_>>(),
+                res.history.max_occupancy_series(),
+                res.history.f_series().last().unwrap_or(&0.0)
+            );
+            for r in &res.history.records {
+                csv.rowf(&[
+                    &algo,
+                    &p0,
+                    &beta,
+                    &r.iteration,
+                    &r.subsets,
+                    &r.max_occupancy_pre_split,
+                    &r.max_occupancy,
+                    &r.splits,
+                    &r.f_measure,
+                ]);
+            }
+        }
+    }
+    ctx.write("fig7", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Figs. 8-10 — Large set: Pᵢ and F for several P₀
+// ---------------------------------------------------------------------
+
+fn fig_large(ctx: &ExpCtx, p0s: &[usize], figname: &str) -> anyhow::Result<()> {
+    println!("{figname}: Large set, P0 ∈ {p0s:?} — P_i and F per iteration");
+    let set = ctx.gen(NamedDataset::Large, 0.03);
+    let backend = NativeBackend::new();
+    let mut csv = CsvWriter::new(&[
+        "algo", "p0", "iteration", "subsets", "max_occupancy", "f_measure",
+    ]);
+    for &p0 in p0s {
+        let beta = default_beta(set.len(), p0);
+        for (algo, b) in [("mahc", None), ("mahc+m", Some(beta))] {
+            let res = run(&set, ctx.algo(p0, b, ctx.iters), &backend)?;
+            println!(
+                "  {algo:<7} P0={p0}: P_i={:?} F_last={:.4}",
+                res.history.subsets_series(),
+                res.history.f_series().last().unwrap_or(&0.0)
+            );
+            for r in &res.history.records {
+                csv.rowf(&[
+                    &algo,
+                    &p0,
+                    &r.iteration,
+                    &r.subsets,
+                    &r.max_occupancy,
+                    &r.f_measure,
+                ]);
+            }
+        }
+    }
+    ctx.write(figname, &csv)
+}
+
+pub fn fig8(ctx: &ExpCtx) -> anyhow::Result<()> {
+    fig_large(ctx, &[8, 10], "fig8")
+}
+
+pub fn fig9(ctx: &ExpCtx) -> anyhow::Result<()> {
+    fig_large(ctx, &[15], "fig9")
+}
+
+pub fn fig10(ctx: &ExpCtx) -> anyhow::Result<()> {
+    // Pᵢ trajectories overlaid for several P₀ (MAHC+M only).
+    println!("fig10: Large set, P_i trajectories for P0 ∈ {{8, 10, 15}} (MAHC+M)");
+    let set = ctx.gen(NamedDataset::Large, 0.03);
+    let backend = NativeBackend::new();
+    let mut csv = CsvWriter::new(&["p0", "iteration", "subsets"]);
+    for p0 in [8usize, 10, 15] {
+        let beta = default_beta(set.len(), p0);
+        let res = run(&set, ctx.algo(p0, Some(beta), ctx.iters), &backend)?;
+        println!("  P0={p0}: {:?}", res.history.subsets_series());
+        for r in &res.history.records {
+            csv.rowf(&[&p0, &r.iteration, &r.subsets]);
+        }
+    }
+    ctx.write("fig10", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 11 — minimum occupancy per iteration (merge ablation)
+// ---------------------------------------------------------------------
+
+pub fn fig11(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("Fig. 11: min subset occupancy per iteration (is a merge step needed?)");
+    let backend = NativeBackend::new();
+    let mut csv = CsvWriter::new(&["dataset", "p0", "iteration", "min_occupancy"]);
+    for (which, p0, scale) in [
+        (NamedDataset::Medium, 6usize, 0.05),
+        (NamedDataset::Large, 8, 0.03),
+    ] {
+        let set = ctx.gen(which, scale);
+        let beta = default_beta(set.len(), p0);
+        let res = run(&set, ctx.algo(p0, Some(beta), ctx.iters), &backend)?;
+        let series = res.history.min_occupancy_series();
+        println!("  {:<8} P0={p0}: {:?}", set.name, series);
+        assert!(
+            series.iter().all(|&m| m > 0),
+            "paper claim: minimum occupancy never vanishes"
+        );
+        for r in &res.history.records {
+            csv.rowf(&[&set.name, &p0, &r.iteration, &r.min_occupancy]);
+        }
+    }
+    ctx.write("fig11", &csv)
+}
+
+// ---------------------------------------------------------------------
+// Ablations — design choices DESIGN.md calls out
+// ---------------------------------------------------------------------
+
+/// Ablation study over the design choices around the split step:
+///
+/// * split granularity — contiguous (cluster-preserving) vs shuffled
+///   pieces;
+/// * the merge step the paper rejects (re-absorb subsets < β/10);
+/// * plain MAHC and full AHC as anchors.
+pub fn ablation(ctx: &ExpCtx) -> anyhow::Result<()> {
+    println!("ablation: split granularity / merge step, Small A");
+    let set = ctx.gen(NamedDataset::SmallA, 0.1);
+    let backend = NativeBackend::new();
+    let p0 = 6;
+    let beta = default_beta(set.len(), p0);
+    let mut csv = CsvWriter::new(&["variant", "final_f", "final_k", "peak_occ", "peak_bytes"]);
+
+    let mut run_variant = |name: &str,
+                           beta: Option<usize>,
+                           shuffle: bool,
+                           merge: Option<usize>|
+     -> anyhow::Result<()> {
+        let mut cfg = ctx.algo(p0, beta, ctx.iters.min(6));
+        cfg.split_shuffle = shuffle;
+        cfg.merge_min = merge;
+        let res = run(&set, cfg, &backend)?;
+        let peak_occ = res
+            .history
+            .records
+            .iter()
+            .map(|r| r.max_occupancy)
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  {name:<22} F={:.4} K={} peak_occ={} peak_mem={:.2} MiB",
+            res.f_measure,
+            res.k,
+            peak_occ,
+            res.history.peak_bytes() as f64 / (1 << 20) as f64
+        );
+        csv.rowf(&[
+            &name,
+            &res.f_measure,
+            &res.k,
+            &peak_occ,
+            &res.history.peak_bytes(),
+        ]);
+        Ok(())
+    };
+
+    run_variant("mahc (no management)", None, false, None)?;
+    run_variant("mahc+m contiguous", Some(beta), false, None)?;
+    run_variant("mahc+m shuffled", Some(beta), true, None)?;
+    run_variant("mahc+m + merge", Some(beta), false, Some(beta / 10))?;
+    let ahc = full_ahc(&set, &backend, ctx.threads, None, 0.25)?;
+    println!("  {:<22} F={:.4} K={}", "full ahc", ahc.f_measure, ahc.k);
+    csv.rowf(&[
+        &"full ahc",
+        &ahc.f_measure,
+        &ahc.k,
+        &set.len(),
+        &ahc.matrix_bytes,
+    ]);
+    ctx.write("ablation", &csv)
+}
+
+/// Run every table/figure in sequence.
+pub fn all(ctx: &ExpCtx) -> anyhow::Result<()> {
+    table1(ctx)?;
+    fig1(ctx)?;
+    fig3(ctx)?;
+    fig4(ctx)?;
+    fig5(ctx)?;
+    fig6(ctx)?;
+    fig7(ctx)?;
+    fig8(ctx)?;
+    fig9(ctx)?;
+    fig10(ctx)?;
+    fig11(ctx)?;
+    ablation(ctx)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx(dir: &str) -> ExpCtx {
+        ExpCtx {
+            scale: Some(0.004),
+            seed: 1,
+            threads: 4,
+            outdir: std::env::temp_dir().join(dir),
+            iters: 2,
+        }
+    }
+
+    #[test]
+    fn table1_and_fig3_run_at_tiny_scale() {
+        let ctx = tiny_ctx("mahc_fig_t1");
+        table1(&ctx).unwrap();
+        fig3(&ctx).unwrap();
+        assert!(ctx.outdir.join("table1.csv").exists());
+        assert!(ctx.outdir.join("fig3.csv").exists());
+    }
+
+    #[test]
+    fn fig1_runs_at_tiny_scale() {
+        let ctx = tiny_ctx("mahc_fig_f1");
+        fig1(&ctx).unwrap();
+        let text = std::fs::read_to_string(ctx.outdir.join("fig1.csv")).unwrap();
+        assert!(text.lines().count() > 4);
+    }
+
+    #[test]
+    fn default_beta_above_even_share() {
+        assert!(default_beta(1000, 4) > 250);
+        assert_eq!(default_beta(1000, 4), 313);
+    }
+}

@@ -1,0 +1,54 @@
+//! # mahc — Multi-stage Agglomerative Hierarchical Clustering with Cluster Size Management
+//!
+//! Production-oriented reproduction of *"Cluster Size Management in
+//! Multi-Stage Agglomerative Hierarchical Clustering of Acoustic Speech
+//! Segments"* (Lerato & Niesler, 2018).
+//!
+//! The crate is the Layer-3 **Rust coordinator** of a three-layer stack:
+//!
+//! * **Layer 1** — a Pallas wavefront DTW kernel (`python/compile/kernels/`),
+//!   AOT-lowered at build time;
+//! * **Layer 2** — JAX compute graphs (pairwise-DTW tile, MFCC front-end)
+//!   exported as HLO-text artifacts (`python/compile/model.py`);
+//! * **Layer 3** — this crate: loads the artifacts through PJRT
+//!   ([`runtime`]), builds DTW distance matrices ([`distance`]), runs
+//!   per-subset AHC ([`ahc`]) and the paper's iterative MAHC+M
+//!   coordinator ([`mahc`]).
+//!
+//! Python never runs on the request path; once `make artifacts` has been
+//! executed the binaries are self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | from-scratch substrates: PRNG, JSON, CSV, thread pool, CLI |
+//! | [`config`] | typed experiment/algorithm configuration |
+//! | [`dsp`] | HTK-style MFCC front-end (FFT, mel filterbank, DCT, deltas) |
+//! | [`corpus`] | synthetic TIMIT-like triphone segment corpus (see DESIGN.md §5) |
+//! | [`dtw`] | native DTW reference backend (classic + Sakoe-Chiba band) |
+//! | [`runtime`] | PJRT client wrapper: artifact registry + executable cache |
+//! | [`distance`] | condensed distance-matrix builder over pluggable backends |
+//! | [`ahc`] | Ward NN-chain AHC, dendrogram, L-method, medoids |
+//! | [`mahc`] | the paper's contribution: MAHC+M iterative coordinator |
+//! | [`metrics`] | F-measure, purity, NMI |
+//! | [`telemetry`] | per-iteration history records + CSV/JSON emitters |
+//! | [`baselines`] | full AHC and MAHC-without-management baselines |
+//! | [`figures`] | regeneration harness for every paper table/figure |
+
+pub mod ahc;
+pub mod baselines;
+pub mod config;
+pub mod figures;
+pub mod corpus;
+pub mod distance;
+pub mod dsp;
+pub mod dtw;
+pub mod mahc;
+pub mod metrics;
+pub mod runtime;
+pub mod telemetry;
+pub mod util;
+
+pub use config::{AlgoConfig, DatasetSpec};
+pub use mahc::{MahcDriver, MahcResult};

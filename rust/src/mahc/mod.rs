@@ -1,0 +1,23 @@
+//! Multi-stage AHC with cluster size management — the paper's system.
+//!
+//! Algorithm 1 in module form:
+//!
+//! * [`partition`] — step 2: the initial division of 𝒳 into P₀ subsets
+//!   (and the even subdivision primitive the split step reuses);
+//! * [`stage`] — steps 3-5: per-subset AHC + L-method + medoids, run on
+//!   the worker pool;
+//! * [`split`] — step 9, the contribution: β enforcement by even
+//!   subdivision of oversized subsets (plus the merge ablation the
+//!   paper's Fig. 11 argues is unnecessary);
+//! * [`driver`] — the iteration loop: stage 1 → medoid clustering
+//!   (step 7) → refine (step 8) → split (step 9) → convergence test →
+//!   final clustering (steps 13-15), with telemetry per iteration.
+
+pub mod driver;
+pub mod partition;
+pub mod split;
+pub mod stage;
+
+pub use driver::{MahcDriver, MahcResult};
+pub use partition::{even_partition, initial_partition};
+pub use split::{merge_small, split_oversized};

@@ -1,0 +1,82 @@
+//! Initial partitioning (Algorithm 1, step 2) and the even-subdivision
+//! primitive shared with the split step.
+
+use crate::util::rng::Rng;
+
+/// Divide ids `0..n` into `p` subsets of near-equal size, randomised by
+/// `rng` (the paper divides "in accordance with available memory and
+//  processors"; contents are arbitrary, so a seeded shuffle keeps runs
+/// reproducible while avoiding any accidental ordering structure).
+pub fn initial_partition(n: usize, p: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut ids: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut ids);
+    even_partition(&ids, p)
+}
+
+/// Split an id list into `p` contiguous chunks whose sizes differ by at
+/// most one.  `p` is clamped to `ids.len()` so no chunk is empty.
+pub fn even_partition(ids: &[usize], p: usize) -> Vec<Vec<usize>> {
+    let n = ids.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let p = p.clamp(1, n);
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut at = 0;
+    for i in 0..p {
+        let take = base + usize::from(i < extra);
+        out.push(ids[at..at + take].to_vec());
+        at += take;
+    }
+    debug_assert_eq!(at, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_ids_exactly_once() {
+        let mut rng = Rng::seed_from(1);
+        let parts = initial_partition(103, 4, &mut rng);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        let mut rng = Rng::seed_from(2);
+        for (n, p) in [(100, 7), (5, 5), (13, 3), (8, 1)] {
+            let parts = initial_partition(n, p, &mut rng);
+            let sizes: Vec<usize> = parts.iter().map(|s| s.len()).collect();
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().min().unwrap();
+            assert!(max - min <= 1, "n={n} p={p}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn p_clamped_to_n() {
+        let mut rng = Rng::seed_from(3);
+        let parts = initial_partition(3, 10, &mut rng);
+        assert_eq!(parts.len(), 3);
+        assert!(parts.iter().all(|s| s.len() == 1));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = initial_partition(50, 5, &mut Rng::seed_from(7));
+        let b = initial_partition(50, 5, &mut Rng::seed_from(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(even_partition(&[], 4).is_empty());
+    }
+}

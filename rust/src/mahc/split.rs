@@ -1,0 +1,203 @@
+//! Cluster size management (Algorithm 1 step 9) — the paper's
+//! contribution — plus the merge ablation.
+//!
+//! *Split*: any subset whose occupancy exceeds β is subdivided "evenly
+//! to ensure that the limit β is not exceeded": ⌈n/β⌉ chunks whose
+//! sizes differ by at most one, over a seeded shuffle so the pieces are
+//! class-mixed rather than order-biased.  This guarantees every subset
+//! delivered to the next iteration satisfies the memory bound the
+//! paper's β encodes.
+//!
+//! *Merge*: the complementary step the paper considers and rejects
+//! (§7, Fig. 11: minimum occupancy never vanishes).  Kept behind
+//! `AlgoConfig::merge_min` as an ablation switch.
+
+use super::partition::even_partition;
+use crate::util::rng::Rng;
+
+/// Outcome counters for telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SplitOutcome {
+    /// Subsets that exceeded β and were subdivided.
+    pub subsets_split: usize,
+    /// Net increase in subset count.
+    pub subsets_added: usize,
+}
+
+/// Enforce β over `subsets` in place.  Deterministic given `rng` state.
+///
+/// Pieces are *contiguous* chunks of the member list.  The refine step
+/// appends members cluster-by-cluster, so contiguous chunks keep whole
+/// stage-1 clusters together and only the few clusters straddling chunk
+/// boundaries are divided — the next refine re-unites them.  Set
+/// `shuffle` (the ablation knob `AlgoConfig::split_shuffle`) to
+/// randomise membership first instead; this scatters every class in the
+/// oversized subset across all pieces — clearly worse at small scales
+/// where single classes dominate subsets, within noise at larger ones
+/// (see EXPERIMENTS.md §Runs ablation).
+pub fn split_oversized(
+    subsets: &mut Vec<Vec<usize>>,
+    beta: usize,
+    rng: &mut Rng,
+    shuffle: bool,
+) -> SplitOutcome {
+    assert!(beta >= 1);
+    let mut out = SplitOutcome::default();
+    let mut result: Vec<Vec<usize>> = Vec::with_capacity(subsets.len());
+    for mut subset in subsets.drain(..) {
+        if subset.len() <= beta {
+            result.push(subset);
+            continue;
+        }
+        let parts = subset.len().div_ceil(beta);
+        if shuffle {
+            rng.shuffle(&mut subset);
+        }
+        let pieces = even_partition(&subset, parts);
+        out.subsets_split += 1;
+        out.subsets_added += pieces.len() - 1;
+        result.extend(pieces);
+    }
+    *subsets = result;
+    debug_assert!(subsets.iter().all(|s| s.len() <= beta));
+    out
+}
+
+/// Merge ablation: absorb subsets smaller than `min_size` into the
+/// smallest other subset (keeping the β bound if one is given).
+/// Returns the number of merges performed.
+pub fn merge_small(
+    subsets: &mut Vec<Vec<usize>>,
+    min_size: usize,
+    beta: Option<usize>,
+) -> usize {
+    let mut merges = 0;
+    loop {
+        if subsets.len() < 2 {
+            return merges;
+        }
+        // Find the smallest subset below the threshold.
+        let (idx, len) = match subsets
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.len()))
+            .min_by_key(|&(_, l)| l)
+        {
+            Some(x) => x,
+            None => return merges,
+        };
+        if len >= min_size {
+            return merges;
+        }
+        let small = subsets.swap_remove(idx);
+        // Merge into the now-smallest subset that stays within β.
+        let target = subsets
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| match beta {
+                Some(b) => s.len() + small.len() <= b,
+                None => true,
+            })
+            .min_by_key(|(_, s)| s.len())
+            .map(|(i, _)| i);
+        match target {
+            Some(t) => {
+                subsets[t].extend(small);
+                merges += 1;
+            }
+            None => {
+                // No target fits within β: put it back and stop.
+                subsets.push(small);
+                return merges;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn subset(range: std::ops::Range<usize>) -> Vec<usize> {
+        range.collect()
+    }
+
+    #[test]
+    fn respects_beta_exactly() {
+        let mut subsets = vec![subset(0..250), subset(250..300), subset(300..1000)];
+        let mut rng = Rng::seed_from(1);
+        let out = split_oversized(&mut subsets, 100, &mut rng, true);
+        assert!(subsets.iter().all(|s| s.len() <= 100));
+        assert_eq!(out.subsets_split, 2); // 250 and 700 both split
+        // 250 -> 3 pieces, 700 -> 7 pieces: added (3-1)+(7-1)=8.
+        assert_eq!(out.subsets_added, 8);
+        assert_eq!(subsets.len(), 3 + 8);
+    }
+
+    #[test]
+    fn preserves_membership() {
+        let mut subsets = vec![subset(0..777)];
+        let mut rng = Rng::seed_from(2);
+        split_oversized(&mut subsets, 50, &mut rng, true);
+        let mut all: Vec<usize> = subsets.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..777).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn noop_when_under_threshold() {
+        let mut subsets = vec![subset(0..10), subset(10..30)];
+        let before = subsets.clone();
+        let out = split_oversized(&mut subsets, 100, &mut Rng::seed_from(3), true);
+        assert_eq!(out, SplitOutcome::default());
+        assert_eq!(subsets, before);
+    }
+
+    #[test]
+    fn pieces_are_balanced() {
+        let mut subsets = vec![subset(0..101)];
+        split_oversized(&mut subsets, 25, &mut Rng::seed_from(4), false);
+        // 101 / 25 -> 5 pieces of 20/21.
+        assert_eq!(subsets.len(), 5);
+        for s in &subsets {
+            assert!(s.len() == 20 || s.len() == 21);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = vec![subset(0..300)];
+        let mut b = vec![subset(0..300)];
+        split_oversized(&mut a, 70, &mut Rng::seed_from(9), true);
+        split_oversized(&mut b, 70, &mut Rng::seed_from(9), true);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_absorbs_small_subsets() {
+        let mut subsets = vec![subset(0..2), subset(2..50), subset(50..90)];
+        let merges = merge_small(&mut subsets, 5, None);
+        assert_eq!(merges, 1);
+        assert_eq!(subsets.len(), 2);
+        let mut all: Vec<usize> = subsets.concat();
+        all.sort_unstable();
+        assert_eq!(all.len(), 90);
+    }
+
+    #[test]
+    fn merge_respects_beta() {
+        // Small subset can't merge anywhere without breaching β=40.
+        let mut subsets = vec![subset(0..3), subset(3..43), subset(43..83)];
+        let merges = merge_small(&mut subsets, 5, Some(40));
+        assert_eq!(merges, 0);
+        assert_eq!(subsets.len(), 3);
+    }
+
+    #[test]
+    fn merge_chains_until_threshold_met() {
+        let mut subsets = vec![subset(0..1), subset(1..2), subset(2..3), subset(3..100)];
+        let merges = merge_small(&mut subsets, 4, None);
+        assert!(merges >= 2);
+        assert!(subsets.iter().all(|s| s.len() >= 3) || subsets.len() == 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Stage 1 of each MAHC iteration (Algorithm 1 steps 3-5): independent
+//! AHC over every subset, L-method model selection, medoid extraction —
+//! dispatched to the worker pool.
+
+use crate::ahc;
+use crate::corpus::{Segment, SegmentSet};
+use crate::distance::{build_condensed, DtwBackend};
+use crate::util::pool::parallel_map;
+
+/// Result of clustering one subset.
+#[derive(Debug, Clone)]
+pub struct SubsetOutcome {
+    /// Global segment ids of this subset's members.
+    pub ids: Vec<usize>,
+    /// Per-member cluster label (0..k), parallel to `ids`.
+    pub labels: Vec<usize>,
+    /// Number of clusters the L method chose (K_p).
+    pub k: usize,
+    /// Global segment id of each cluster's medoid.
+    pub medoid_ids: Vec<usize>,
+    /// Condensed-matrix size for this subset (memory telemetry).
+    pub matrix_bytes: usize,
+}
+
+impl SubsetOutcome {
+    /// Member ids of each cluster, as global segment ids.
+    pub fn cluster_members(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.k];
+        for (pos, &label) in self.labels.iter().enumerate() {
+            out[label].push(self.ids[pos]);
+        }
+        out
+    }
+}
+
+/// Run stage 1 over all subsets on up to `threads` workers.
+///
+/// `k_override` forces every subset to a fixed cut (only used by unit
+/// tests; the driver passes `None` so the L method decides).
+pub fn run_stage1(
+    set: &SegmentSet,
+    subsets: &[Vec<usize>],
+    backend: &dyn DtwBackend,
+    threads: usize,
+    max_clusters_frac: f64,
+) -> anyhow::Result<Vec<SubsetOutcome>> {
+    let results: Vec<anyhow::Result<SubsetOutcome>> =
+        parallel_map(subsets.len(), threads, |s| {
+            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac)
+        });
+    results.into_iter().collect()
+}
+
+fn cluster_one_subset(
+    set: &SegmentSet,
+    ids: &[usize],
+    backend: &dyn DtwBackend,
+    max_clusters_frac: f64,
+) -> anyhow::Result<SubsetOutcome> {
+    let refs: Vec<&Segment> = ids.iter().map(|&i| &set.segments[i]).collect();
+    // Distance build is itself single-threaded here: parallelism is
+    // across subsets (matching the paper's "in parallel" stage 1).
+    let cond = build_condensed(&refs, backend, 1)?;
+    let max_k = ((ids.len() as f64 * max_clusters_frac).ceil() as usize).max(2);
+    let clustering = ahc::cluster_subset(&cond, max_k, None);
+    let medoid_ids = clustering
+        .medoids
+        .iter()
+        .map(|&m| {
+            debug_assert!(m != usize::MAX, "empty cluster has no medoid");
+            ids[m]
+        })
+        .collect();
+    Ok(SubsetOutcome {
+        ids: ids.to_vec(),
+        labels: clustering.labels,
+        k: clustering.k,
+        medoid_ids,
+        matrix_bytes: cond.bytes(),
+    })
+}
+
+/// Assemble the global clustering implied by stage-1 outcomes: every
+/// (subset, cluster) pair becomes one global cluster.  Returns labels
+/// indexed by segment id plus the number of global clusters.
+pub fn global_labels(n: usize, outcomes: &[SubsetOutcome]) -> (Vec<usize>, usize) {
+    let mut labels = vec![usize::MAX; n];
+    let mut next = 0;
+    for o in outcomes {
+        for (pos, &id) in o.ids.iter().enumerate() {
+            labels[id] = next + o.labels[pos];
+        }
+        next += o.k;
+    }
+    debug_assert!(labels.iter().all(|&l| l != usize::MAX));
+    (labels, next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+
+    #[test]
+    fn outcomes_cover_subsets() {
+        let set = generate(&DatasetSpec::tiny(60, 4, 11));
+        let subsets = vec![(0..30).collect::<Vec<_>>(), (30..60).collect::<Vec<_>>()];
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 2, 0.4).unwrap();
+        assert_eq!(out.len(), 2);
+        for (o, s) in out.iter().zip(&subsets) {
+            assert_eq!(&o.ids, s);
+            assert_eq!(o.labels.len(), s.len());
+            assert!(o.k >= 1);
+            assert_eq!(o.medoid_ids.len(), o.k);
+            // Medoids are members of the subset.
+            for m in &o.medoid_ids {
+                assert!(s.contains(m));
+            }
+            assert_eq!(o.matrix_bytes, s.len() * (s.len() - 1) / 2 * 4);
+        }
+    }
+
+    #[test]
+    fn cluster_members_partition_ids() {
+        let set = generate(&DatasetSpec::tiny(40, 3, 12));
+        let subsets = vec![(0..40).collect::<Vec<_>>()];
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4).unwrap();
+        let members = out[0].cluster_members();
+        let mut all: Vec<usize> = members.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<_>>());
+        assert!(members.iter().all(|m| !m.is_empty()));
+    }
+
+    #[test]
+    fn global_labels_dense_and_disjoint() {
+        let set = generate(&DatasetSpec::tiny(50, 4, 13));
+        let subsets = vec![
+            (0..20).collect::<Vec<_>>(),
+            (20..35).collect::<Vec<_>>(),
+            (35..50).collect::<Vec<_>>(),
+        ];
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 3, 0.4).unwrap();
+        let (labels, k) = global_labels(50, &out);
+        assert_eq!(labels.len(), 50);
+        assert_eq!(k, out.iter().map(|o| o.k).sum::<usize>());
+        assert!(labels.iter().all(|&l| l < k));
+        // Labels from different subsets never collide.
+        let used: std::collections::HashSet<usize> = labels.iter().copied().collect();
+        assert_eq!(used.len(), k, "every global cluster non-empty");
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let set = generate(&DatasetSpec::tiny(48, 4, 14));
+        let subsets = vec![
+            (0..16).collect::<Vec<_>>(),
+            (16..32).collect::<Vec<_>>(),
+            (32..48).collect::<Vec<_>>(),
+        ];
+        let a = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4).unwrap();
+        let b = run_stage1(&set, &subsets, &NativeBackend::new(), 4, 0.4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+            assert_eq!(x.medoid_ids, y.medoid_ids);
+        }
+    }
+}

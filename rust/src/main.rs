@@ -1,0 +1,222 @@
+//! `mahc` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `cluster` — run MAHC+M (or plain MAHC / full AHC) on one of the
+//!   paper's dataset compositions, print per-iteration telemetry and
+//!   the final F-measure, optionally dump run JSON.
+//! * `datagen` — generate a dataset and print its Table-1 composition.
+//! * `inspect` — validate the artifact manifest and report entries.
+//!
+//! Examples:
+//!
+//! ```text
+//! mahc cluster --dataset small_a --scale 0.05 --p0 6 --beta 200 --iters 5
+//! mahc cluster --dataset small_b --scale 0.05 --algo ahc
+//! mahc datagen --dataset medium --scale 0.1
+//! mahc inspect --artifacts artifacts
+//! ```
+
+use mahc::baselines;
+use mahc::config::{
+    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset,
+};
+use mahc::corpus::{generate, CompositionStats};
+use mahc::distance::{BackendKind, DtwBackend, NativeBackend};
+use mahc::mahc::MahcDriver;
+use mahc::runtime::{Runtime, XlaDtwBackend};
+use mahc::util::cli::Args;
+
+const VALUE_KEYS: &[&str] = &[
+    "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
+    "algo", "artifacts", "out", "config", "merge-min",
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(VALUE_KEYS)?;
+    match args.subcommand() {
+        Some("cluster") => cluster(&args),
+        Some("datagen") => datagen(&args),
+        Some("inspect") => inspect(&args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}' (cluster|datagen|inspect)"),
+        None => {
+            eprintln!("usage: mahc <cluster|datagen|inspect> [options]");
+            eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
+            eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
+            eprintln!("          [--backend native|xla] [--threads N] [--seed N] [--out FILE]");
+            eprintln!("  datagen --dataset <name> [--scale F]");
+            eprintln!("  inspect [--artifacts DIR]");
+            Ok(())
+        }
+    }
+}
+
+fn dataset_from(args: &Args) -> anyhow::Result<DatasetSpec> {
+    let name = args.get("dataset").unwrap_or("small_a");
+    let scale: f64 = args.get_or("scale", 0.05)?;
+    Ok(DatasetSpec::named(NamedDataset::parse(name)?, scale))
+}
+
+fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
+    let mut cfg = AlgoConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let kv = mahc::config::parse_kv(&text)?;
+        apply_overrides(&mut cfg, &kv)?;
+    }
+    cfg.p0 = args.get_or("p0", cfg.p0)?;
+    if let Some(beta) = args.get_parsed::<usize>("beta")? {
+        cfg.beta = Some(beta);
+    }
+    if let Some(iters) = args.get_parsed::<usize>("iters")? {
+        cfg.convergence = Convergence::FixedIters(iters);
+    }
+    if let Some(max) = args.get_parsed::<usize>("max-iters")? {
+        cfg.convergence = Convergence::SettledSubsets { max_iters: max };
+    }
+    if let Some(k) = args.get_parsed::<usize>("k")? {
+        cfg.final_k = FinalK::Fixed(k);
+    }
+    if let Some(m) = args.get_parsed::<usize>("merge-min")? {
+        cfg.merge_min = Some(m);
+    }
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.threads = args.get_or("threads", cfg.threads)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    Ok(cfg)
+}
+
+fn cluster(args: &Args) -> anyhow::Result<()> {
+    let spec = dataset_from(args)?;
+    let cfg = algo_config_from(args)?;
+    let algo = args
+        .get("algo")
+        .unwrap_or(if cfg.beta.is_some() { "mahc+m" } else { "mahc" })
+        .to_string();
+
+    eprintln!(
+        "generating {} (N={}, classes={}) ...",
+        spec.name, spec.segments, spec.classes
+    );
+    let set = generate(&spec);
+    let stats = CompositionStats::of(&set);
+    eprintln!("  composition: {}", stats.table_row());
+
+    match cfg.backend {
+        BackendKind::Native => {
+            let backend = NativeBackend::new();
+            cluster_with(&set, cfg, &algo, &backend, args)
+        }
+        BackendKind::Xla => {
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let rt = Runtime::new(std::path::Path::new(dir))?;
+            let backend = XlaDtwBackend::new(&rt)?;
+            cluster_with(&set, cfg, &algo, &backend, args)
+        }
+    }
+}
+
+fn cluster_with(
+    set: &mahc::corpus::SegmentSet,
+    cfg: AlgoConfig,
+    algo: &str,
+    backend: &dyn DtwBackend,
+    args: &Args,
+) -> anyhow::Result<()> {
+    match algo {
+        "ahc" => {
+            let t0 = std::time::Instant::now();
+            let out = baselines::full_ahc(set, backend, cfg.threads, None, cfg.max_clusters_frac)?;
+            println!(
+                "AHC: K={} F={:.4} matrix={:.1} MiB wall={:.2}s",
+                out.k,
+                out.f_measure,
+                out.matrix_bytes as f64 / (1 << 20) as f64,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        "mahc" | "mahc+m" => {
+            let mut cfg = cfg;
+            if algo == "mahc" {
+                cfg.beta = None;
+            } else if cfg.beta.is_none() {
+                // Default β: twice the even-partition size — the shape
+                // the paper's memory-budget argument suggests.
+                cfg.beta = Some((2 * set.len() / cfg.p0.max(1)).max(8));
+            }
+            let driver = MahcDriver::new(set, cfg, backend)?;
+            let res = driver.run()?;
+            println!("iter  P_i   maxOcc minOcc splits   K_tot   F       wall_s");
+            for r in &res.history.records {
+                println!(
+                    "{:>4} {:>4} {:>8} {:>6} {:>6} {:>7} {:.4} {:>8.2}",
+                    r.iteration,
+                    r.subsets,
+                    r.max_occupancy,
+                    r.min_occupancy,
+                    r.splits,
+                    r.total_clusters,
+                    r.f_measure,
+                    r.wall.as_secs_f64()
+                );
+            }
+            println!(
+                "final: K={} F={:.4} peak_matrix={:.1} MiB",
+                res.k,
+                res.f_measure,
+                res.history.peak_bytes() as f64 / (1 << 20) as f64
+            );
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, res.history.to_json().to_string())?;
+                eprintln!("wrote {path}");
+            }
+        }
+        other => anyhow::bail!("unknown algo '{other}' (ahc|mahc|mahc+m)"),
+    }
+    Ok(())
+}
+
+fn datagen(args: &Args) -> anyhow::Result<()> {
+    let spec = dataset_from(args)?;
+    let set = generate(&spec);
+    let stats = CompositionStats::of(&set);
+    println!(
+        "{:<12} {:>9} {:>8} {:>13} {:>10} {:>14}",
+        "Dataset", "Segments", "Classes", "Frequency", "Vectors", "Similarities"
+    );
+    println!("{}", stats.table_row());
+    Ok(())
+}
+
+fn inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let rt = Runtime::new(std::path::Path::new(dir))?;
+    let m = rt.manifest();
+    println!(
+        "artifacts in {dir}: {} dtw, {} mfcc",
+        m.dtw.len(),
+        m.mfcc.len()
+    );
+    for e in &m.dtw {
+        println!(
+            "  dtw  {:<28} tile {}x{} T={} D={} band={:?}",
+            e.name, e.bx, e.by, e.t, e.d, e.band
+        );
+    }
+    for e in &m.mfcc {
+        println!(
+            "  mfcc {:<28} batch {} S={} -> T={} F={}",
+            e.name, e.b, e.s, e.t_out, e.feat
+        );
+    }
+    Ok(())
+}

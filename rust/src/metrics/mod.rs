@@ -1,0 +1,200 @@
+//! Clustering quality metrics: F-measure (the paper's §6.2 criterion),
+//! plus purity and NMI as secondary checks.
+
+/// Contingency counts between predicted clusters and true classes.
+struct Contingency {
+    /// n_kl: [cluster][class] co-occurrence counts.
+    table: Vec<Vec<usize>>,
+    cluster_sizes: Vec<usize>,
+    class_sizes: Vec<usize>,
+    n: usize,
+}
+
+fn contingency(pred: &[usize], truth: &[usize]) -> Contingency {
+    assert_eq!(pred.len(), truth.len());
+    let k = pred.iter().copied().max().map_or(0, |m| m + 1);
+    let l = truth.iter().copied().max().map_or(0, |m| m + 1);
+    let mut table = vec![vec![0usize; l]; k];
+    let mut cluster_sizes = vec![0usize; k];
+    let mut class_sizes = vec![0usize; l];
+    for (&p, &t) in pred.iter().zip(truth) {
+        table[p][t] += 1;
+        cluster_sizes[p] += 1;
+        class_sizes[t] += 1;
+    }
+    Contingency {
+        table,
+        cluster_sizes,
+        class_sizes,
+        n: pred.len(),
+    }
+}
+
+/// Paper Eq. 2-4 with the Larsen-Aone aggregation: for each class l,
+/// take the best F(k, l) over clusters, weight by class prevalence.
+///
+/// F = Σ_l (n_l / N) · max_k F(k, l);  F = 1 iff every class occupies
+/// exactly one cluster exclusively.
+pub fn f_measure(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let mut total = 0.0;
+    for l in 0..c.class_sizes.len() {
+        let nl = c.class_sizes[l];
+        if nl == 0 {
+            continue;
+        }
+        let mut best = 0.0f64;
+        for k in 0..c.cluster_sizes.len() {
+            let nkl = c.table[k][l];
+            if nkl == 0 {
+                continue;
+            }
+            let pr = nkl as f64 / c.cluster_sizes[k] as f64; // Eq. 2
+            let re = nkl as f64 / nl as f64; // Eq. 3
+            let f = 2.0 * re * pr / (re + pr); // Eq. 4
+            if f > best {
+                best = f;
+            }
+        }
+        total += (nl as f64 / c.n as f64) * best;
+    }
+    total
+}
+
+/// Purity: fraction of objects in their cluster's majority class.
+pub fn purity(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let correct: usize = c
+        .table
+        .iter()
+        .map(|row| row.iter().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / c.n as f64
+}
+
+/// Normalised mutual information, NMI = 2·I(P;T) / (H(P) + H(T)).
+/// Returns 1.0 for identical partitions, →0 for independent ones.
+pub fn nmi(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let n = c.n as f64;
+    let h = |sizes: &[usize]| -> f64 {
+        sizes
+            .iter()
+            .filter(|&&s| s > 0)
+            .map(|&s| {
+                let p = s as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let hp = h(&c.cluster_sizes);
+    let ht = h(&c.class_sizes);
+    if hp == 0.0 && ht == 0.0 {
+        return 1.0; // both single-block partitions: identical
+    }
+    let mut mi = 0.0;
+    for k in 0..c.cluster_sizes.len() {
+        for l in 0..c.class_sizes.len() {
+            let nkl = c.table[k][l];
+            if nkl == 0 {
+                continue;
+            }
+            let pkl = nkl as f64 / n;
+            let pk = c.cluster_sizes[k] as f64 / n;
+            let pl = c.class_sizes[l] as f64 / n;
+            mi += pkl * (pkl / (pk * pl)).ln();
+        }
+    }
+    (2.0 * mi / (hp + ht)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let pred = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert!((f_measure(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((nmi(&pred, &truth) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_cluster_scores() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 0, 0, 0];
+        // Per class: pr = 1/2, re = 1 -> F = 2/3; weighted -> 2/3.
+        assert!((f_measure(&pred, &truth) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 0.5).abs() < 1e-12);
+        assert!(nmi(&pred, &truth) < 1e-9);
+    }
+
+    #[test]
+    fn all_singletons() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 1, 2, 3];
+        // Per class: best F with a singleton = 2·(1/2·1)/(3/2) = 2/3.
+        assert!((f_measure(&pred, &truth) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hand_computed_mixed_case() {
+        // clusters: {a,a,b}, {b,b,a}
+        let truth = vec![0, 0, 1, 1, 1, 0];
+        let pred = vec![0, 0, 0, 1, 1, 1];
+        // class 0 (n=3): cluster0 pr=2/3 re=2/3 F=2/3; cluster1 pr=1/3 re=1/3 F=1/3 -> best 2/3
+        // class 1 (n=3): symmetric -> 2/3.  Weighted: 2/3.
+        assert!((f_measure(&pred, &truth) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 2.0 / 3.0).abs() < 1e-12);
+        let v = nmi(&pred, &truth);
+        assert!(v > 0.0 && v < 1.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(f_measure(&[], &[]), 0.0);
+        assert_eq!(purity(&[], &[]), 0.0);
+        assert_eq!(nmi(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn better_clustering_scores_higher() {
+        let truth: Vec<usize> = (0..30).map(|i| i / 10).collect();
+        let good: Vec<usize> = truth.clone();
+        let mut ok = truth.clone();
+        ok[0] = 1;
+        ok[10] = 2;
+        ok[20] = 0; // 3 mistakes
+        let bad: Vec<usize> = (0..30).map(|i| i % 3).collect(); // shredded
+        let (fg, fo, fb) = (
+            f_measure(&good, &truth),
+            f_measure(&ok, &truth),
+            f_measure(&bad, &truth),
+        );
+        assert!(fg > fo && fo > fb, "{fg} {fo} {fb}");
+        assert!(nmi(&good, &truth) > nmi(&ok, &truth));
+        assert!(nmi(&ok, &truth) > nmi(&bad, &truth));
+    }
+
+    #[test]
+    fn metrics_invariant_to_label_permutation() {
+        let truth = vec![0, 1, 2, 0, 1, 2, 0, 1];
+        let pred = vec![1, 0, 2, 1, 0, 2, 1, 2];
+        let renamed: Vec<usize> = pred.iter().map(|&p| (p + 1) % 3).collect();
+        assert!((f_measure(&pred, &truth) - f_measure(&renamed, &truth)).abs() < 1e-12);
+        assert!((nmi(&pred, &truth) - nmi(&renamed, &truth)).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - purity(&renamed, &truth)).abs() < 1e-12);
+    }
+}

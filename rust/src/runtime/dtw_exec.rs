@@ -1,0 +1,182 @@
+//! XLA-backed DTW backend: tiles pair blocks over the AOT Pallas
+//! kernel executable.
+//!
+//! The planner pads each block of segments to the artifact's (T, D)
+//! bucket, dispatches `(bx, by)` pair tiles to the engine, and writes
+//! the returned distances into the caller's buffer.  Remainder blocks
+//! are padded with length-1 dummies whose outputs are discarded, so a
+//! single tile shape serves every subset size; the small exported tile
+//! is used when the whole request fits it (less padding waste on the
+//! medoid stage's small matrices).
+
+use super::engine::{HostTensor, Runtime};
+use super::manifest::DtwEntry;
+use crate::corpus::Segment;
+use crate::distance::DtwBackend;
+
+/// [`DtwBackend`] over the AOT DTW tile artifacts.
+pub struct XlaDtwBackend<'rt> {
+    rt: &'rt Runtime,
+    tiles: Vec<DtwEntry>,
+}
+
+impl<'rt> XlaDtwBackend<'rt> {
+    /// Select the unbanded tiles from the runtime's manifest.
+    pub fn new(rt: &'rt Runtime) -> anyhow::Result<Self> {
+        let tiles: Vec<DtwEntry> = rt.manifest().dtw_tiles().into_iter().cloned().collect();
+        anyhow::ensure!(!tiles.is_empty(), "no DTW artifacts in manifest");
+        Ok(XlaDtwBackend { rt, tiles })
+    }
+
+    /// Pick the cheapest exported tile for a request.  Cost model per
+    /// tile: number of dispatches × per-dispatch work, where work ∝
+    /// bx·by·T² (the local-distance matmul dominates and the wavefront
+    /// scales with T).  Only tiles whose T bucket covers the longest
+    /// segment are eligible.
+    fn pick_tile(&self, nx: usize, ny: usize, max_len: usize) -> anyhow::Result<&DtwEntry> {
+        self.tiles
+            .iter()
+            .filter(|t| t.t >= max_len)
+            .min_by_key(|t| {
+                let dispatches = nx.div_ceil(t.bx) * ny.div_ceil(t.by);
+                dispatches * t.bx * t.by * t.t * t.t
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no DTW artifact covers segment length {max_len} \
+                     (largest bucket T={})",
+                    self.tiles.iter().map(|t| t.t).max().unwrap_or(0)
+                )
+            })
+    }
+
+    /// Pack `segs` (a block of at most `b` segments) into the padded
+    /// (b, t, d) buffer + length vector the artifact expects.
+    fn pack(
+        segs: &[&Segment],
+        b: usize,
+        t: usize,
+        d: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<i32>)> {
+        let mut buf = vec![0.0f32; b * t * d];
+        // Dummy lanes must still satisfy len >= 1 for the kernel's DP.
+        let mut lens = vec![1i32; b];
+        for (k, s) in segs.iter().enumerate() {
+            anyhow::ensure!(
+                s.len <= t,
+                "segment {} has {} frames > artifact bucket T={}",
+                s.id,
+                s.len,
+                t
+            );
+            anyhow::ensure!(
+                s.dim == d,
+                "segment {} dim {} != artifact D={}",
+                s.id,
+                s.dim,
+                d
+            );
+            buf[k * t * d..k * t * d + s.feats.len()].copy_from_slice(&s.feats);
+            lens[k] = s.len as i32;
+        }
+        Ok((buf, lens))
+    }
+}
+
+impl<'rt> DtwBackend for XlaDtwBackend<'rt> {
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        let (nx, ny) = (xs.len(), ys.len());
+        let mut out = vec![0.0f32; nx * ny];
+        if nx == 0 || ny == 0 {
+            return Ok(out);
+        }
+        let max_len = xs
+            .iter()
+            .chain(ys.iter())
+            .map(|s| s.len)
+            .max()
+            .unwrap_or(1);
+        let tile = self.pick_tile(nx, ny, max_len)?;
+        let (bx, by, t, d) = (tile.bx, tile.by, tile.t, tile.d);
+
+        for x0 in (0..nx).step_by(bx) {
+            let xb = &xs[x0..(x0 + bx).min(nx)];
+            let (xbuf, xlens) = Self::pack(xb, bx, t, d)?;
+            for y0 in (0..ny).step_by(by) {
+                let yb = &ys[y0..(y0 + by).min(ny)];
+                let (ybuf, ylens) = Self::pack(yb, by, t, d)?;
+                let res = self.rt.execute(
+                    &tile.name,
+                    vec![
+                        HostTensor::F32(xbuf.clone(), vec![bx as i64, t as i64, d as i64]),
+                        HostTensor::F32(ybuf, vec![by as i64, t as i64, d as i64]),
+                        HostTensor::I32(xlens.clone(), vec![bx as i64]),
+                        HostTensor::I32(ylens, vec![by as i64]),
+                    ],
+                )?;
+                anyhow::ensure!(
+                    res.len() == bx * by,
+                    "tile returned {} values, expected {}",
+                    res.len(),
+                    bx * by
+                );
+                for (i, x) in (x0..(x0 + bx).min(nx)).enumerate() {
+                    for (j, y) in (y0..(y0 + by).min(ny)).enumerate() {
+                        out[x * ny + y] = res[i * by + j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn preferred_rows(&self) -> usize {
+        // Fill the largest exported tile's X dimension so the condensed
+        // builder never pads a whole tile for a single row.
+        self.tiles.first().map(|t| t.bx).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Segment;
+
+    fn seg(id: usize, len: usize, dim: usize, val: f32) -> Segment {
+        Segment {
+            id,
+            class_id: 0,
+            len,
+            dim,
+            feats: vec![val; len * dim],
+        }
+    }
+
+    #[test]
+    fn pack_layout_and_lengths() {
+        let a = seg(0, 2, 3, 1.0);
+        let b = seg(1, 1, 3, 2.0);
+        let (buf, lens) = XlaDtwBackend::pack(&[&a, &b], 4, 5, 3).unwrap();
+        assert_eq!(buf.len(), 4 * 5 * 3);
+        assert_eq!(lens, vec![2, 1, 1, 1]); // dummies get len 1
+        assert_eq!(&buf[0..6], &[1.0; 6]); // a's 2 frames
+        assert_eq!(buf[6], 0.0); // a's padding
+        assert_eq!(&buf[15..18], &[2.0; 3]); // b starts at 5*3
+    }
+
+    #[test]
+    fn pack_rejects_oversized_segment() {
+        let a = seg(0, 10, 3, 1.0);
+        assert!(XlaDtwBackend::pack(&[&a], 1, 5, 3).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_dim_mismatch() {
+        let a = seg(0, 2, 4, 1.0);
+        assert!(XlaDtwBackend::pack(&[&a], 1, 5, 3).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! The PJRT engine thread: owns the client and executable cache,
+//! serves execute requests over a channel.
+//!
+//! Design constraints (see module docs in `runtime/mod.rs`): the `xla`
+//! crate's wrappers are thread-bound, so exactly one OS thread touches
+//! them.  Requests carry plain `Vec<f32>` / `Vec<i32>` host tensors and
+//! replies carry `Vec<f32>` outputs; compile results are cached by
+//! artifact name, so each executable is compiled once per process.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use super::manifest::ArtifactManifest;
+
+/// A host-side tensor crossing the channel boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            HostTensor::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+struct Request {
+    /// Artifact name (manifest key); resolved to a file + executable.
+    name: String,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+}
+
+/// Handle to the engine thread.  Cheap to share behind `&`; `Sync` via
+/// the mutex-guarded sender.
+pub struct Runtime {
+    manifest: ArtifactManifest,
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Runtime {
+    /// Start the engine over the artifacts in `dir` (validates the
+    /// manifest up front; compiles lazily on first use of each entry).
+    pub fn new(dir: &std::path::Path) -> anyhow::Result<Runtime> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let files: HashMap<String, PathBuf> = manifest
+            .dtw
+            .iter()
+            .map(|e| (e.name.clone(), manifest.path_of(&e.file)))
+            .chain(
+                manifest
+                    .mfcc
+                    .iter()
+                    .map(|e| (e.name.clone(), manifest.path_of(&e.file))),
+            )
+            .collect();
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(files, rx, ready_tx))?;
+        // Surface client construction errors at startup, not first call.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Runtime {
+            manifest,
+            tx: Mutex::new(Some(tx)),
+            join: Mutex::new(Some(join)),
+        })
+    }
+
+    /// Default artifacts location (`$MAHC_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_dir() -> anyhow::Result<Runtime> {
+        let dir = std::env::var("MAHC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::new(std::path::Path::new(&dir))
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the flat f32
+    /// output (graphs are lowered with return_tuple=True and exactly
+    /// one result tensor).
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> anyhow::Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("runtime already shut down"))?;
+            tx.send(Request {
+                name: name.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        // Close the queue, then join the engine thread.
+        *self.tx.lock().unwrap() = None;
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Engine thread body: compile-on-demand + execute loop.
+fn engine_main(
+    files: HashMap<String, PathBuf>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = serve_one(&client, &files, &mut cache, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn serve_one(
+    client: &xla::PjRtClient,
+    files: &HashMap<String, PathBuf>,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &Request,
+) -> anyhow::Result<Vec<f32>> {
+    if !cache.contains_key(&req.name) {
+        let path = files
+            .get(&req.name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{}'", req.name))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", req.name))?;
+        cache.insert(req.name.clone(), exe);
+    }
+    let exe = cache.get(&req.name).unwrap();
+
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<anyhow::Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("execute {}: {e}", req.name))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+    // Graphs are lowered with return_tuple=True: unwrap the 1-tuple.
+    let out = lit
+        .to_tuple1()
+        .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+    out.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+}

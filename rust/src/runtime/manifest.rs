@@ -1,0 +1,190 @@
+//! Artifact manifest: what `aot.py` exported and with which shapes.
+
+use crate::util::json;
+use std::path::{Path, PathBuf};
+
+/// One exported DTW tile executable.
+#[derive(Debug, Clone)]
+pub struct DtwEntry {
+    pub name: String,
+    pub file: String,
+    pub bx: usize,
+    pub by: usize,
+    pub t: usize,
+    pub d: usize,
+    /// Sakoe-Chiba band radius baked into this variant (None = full).
+    pub band: Option<usize>,
+}
+
+/// One exported MFCC front-end executable.
+#[derive(Debug, Clone)]
+pub struct MfccEntry {
+    pub name: String,
+    pub file: String,
+    pub b: usize,
+    pub s: usize,
+    pub t_out: usize,
+    pub feat: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub dtw: Vec<DtwEntry>,
+    pub mfcc: Vec<MfccEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate the manifest in `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let doc = json::parse(&text)?;
+        let format = doc
+            .get("format")
+            .and_then(|f| f.as_str())
+            .unwrap_or_default();
+        anyhow::ensure!(
+            format == "hlo-text",
+            "unsupported artifact format '{format}' (expected hlo-text)"
+        );
+        let entries = doc
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?;
+
+        let mut dtw = Vec::new();
+        let mut mfcc = Vec::new();
+        for e in entries {
+            let kind = e
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow::anyhow!("entry missing 'kind'"))?;
+            let name = req_str(e, "name")?;
+            let file = req_str(e, "file")?;
+            anyhow::ensure!(
+                dir.join(&file).exists(),
+                "artifact file {} missing; re-run `make artifacts`",
+                file
+            );
+            match kind {
+                "dtw" => dtw.push(DtwEntry {
+                    name,
+                    file,
+                    bx: req_usize(e, "bx")?,
+                    by: req_usize(e, "by")?,
+                    t: req_usize(e, "t")?,
+                    d: req_usize(e, "d")?,
+                    band: e.get("band").and_then(|b| b.as_usize()),
+                }),
+                "mfcc" => mfcc.push(MfccEntry {
+                    name,
+                    file,
+                    b: req_usize(e, "b")?,
+                    s: req_usize(e, "s")?,
+                    t_out: req_usize(e, "t_out")?,
+                    feat: req_usize(e, "feat")?,
+                }),
+                other => anyhow::bail!("unknown artifact kind '{other}'"),
+            }
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            dtw,
+            mfcc,
+        })
+    }
+
+    /// Unbanded DTW tiles, largest first (the planner's preference).
+    pub fn dtw_tiles(&self) -> Vec<&DtwEntry> {
+        let mut tiles: Vec<&DtwEntry> = self.dtw.iter().filter(|e| e.band.is_none()).collect();
+        tiles.sort_by(|a, b| (b.bx * b.by).cmp(&(a.bx * a.by)));
+        tiles
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn req_str(e: &json::Json, key: &str) -> anyhow::Result<String> {
+    e.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("entry missing '{key}'"))
+}
+
+fn req_usize(e: &json::Json, key: &str) -> anyhow::Result<usize> {
+    e.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("entry missing '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "ENTRY stub").unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("mahc_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","entries":[
+                {"name":"dtw_a","file":"a.hlo.txt","kind":"dtw","bx":32,"by":32,"t":64,"d":39,"band":null},
+                {"name":"dtw_b","file":"b.hlo.txt","kind":"dtw","bx":8,"by":8,"t":64,"d":39,"band":16},
+                {"name":"m","file":"m.hlo.txt","kind":"mfcc","b":16,"s":5200,"t_out":64,"feat":39}
+            ]}"#,
+            &["a.hlo.txt", "b.hlo.txt", "m.hlo.txt"],
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.dtw.len(), 2);
+        assert_eq!(m.mfcc.len(), 1);
+        let tiles = m.dtw_tiles();
+        assert_eq!(tiles.len(), 1); // banded variant excluded
+        assert_eq!(tiles[0].bx, 32);
+        assert_eq!(m.mfcc[0].t_out, 64);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("mahc_manifest_missing");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","entries":[
+                {"name":"x","file":"nope.hlo.txt","kind":"dtw","bx":8,"by":8,"t":64,"d":39,"band":null}
+            ]}"#,
+            &[],
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let dir = std::env::temp_dir().join("mahc_manifest_fmt");
+        write_manifest(&dir, r#"{"format":"proto","entries":[]}"#, &[]);
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("hlo-text"));
+    }
+
+    #[test]
+    fn absent_dir_hints_make_artifacts() {
+        let err = ArtifactManifest::load(Path::new("/definitely/not/here"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

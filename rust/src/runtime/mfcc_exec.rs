@@ -1,0 +1,97 @@
+//! MFCC front-end executor: waveforms → 39-dim feature segments through
+//! the AOT Layer-2 graph.
+//!
+//! The artifact processes fixed (B, S) waveform batches producing
+//! (B, T, 39) features.  Shorter signals are zero-padded to S and the
+//! feature rows beyond the signal's true frame count are dropped on the
+//! way out, so callers see exactly `num_frames(len)` frames — matching
+//! the native `dsp::mfcc` path frame-for-frame.
+
+use super::engine::{HostTensor, Runtime};
+use super::manifest::MfccEntry;
+use crate::dsp::window::num_frames;
+
+/// Frame geometry must match the artifact (pinned in `kernels/ref.py`).
+const FRAME_LEN: usize = 160;
+const FRAME_HOP: usize = 80;
+
+/// Executor over the exported MFCC batch graph.
+pub struct MfccFrontend<'rt> {
+    rt: &'rt Runtime,
+    entry: MfccEntry,
+}
+
+impl<'rt> MfccFrontend<'rt> {
+    pub fn new(rt: &'rt Runtime) -> anyhow::Result<Self> {
+        let entry = rt
+            .manifest()
+            .mfcc
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no MFCC artifact in manifest"))?;
+        Ok(MfccFrontend { rt, entry })
+    }
+
+    /// Max waveform samples one lane accepts.
+    pub fn max_samples(&self) -> usize {
+        self.entry.s
+    }
+
+    /// Extract features for a batch of waveforms of arbitrary (≤ S)
+    /// lengths.  Returns per-waveform `(frames, 39)` flat f32 buffers.
+    pub fn extract(&self, wavs: &[Vec<f32>]) -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        let (b, s, t_out, feat) = (self.entry.b, self.entry.s, self.entry.t_out, self.entry.feat);
+        let mut out = Vec::with_capacity(wavs.len());
+        for chunk in wavs.chunks(b) {
+            let mut buf = vec![0.0f32; b * s];
+            // Per-lane true frame counts: the graph's deltas replicate
+            // each lane's own last real frame (len >= 1 for dummies).
+            let mut lens = vec![1i32; b];
+            for (lane, w) in chunk.iter().enumerate() {
+                anyhow::ensure!(
+                    w.len() <= s,
+                    "waveform of {} samples exceeds artifact bucket S={s}",
+                    w.len()
+                );
+                anyhow::ensure!(
+                    w.len() >= FRAME_LEN,
+                    "waveform of {} samples shorter than one frame",
+                    w.len()
+                );
+                buf[lane * s..lane * s + w.len()].copy_from_slice(w);
+                lens[lane] = num_frames(w.len(), FRAME_LEN, FRAME_HOP).min(t_out) as i32;
+            }
+            let res = self.rt.execute(
+                &self.entry.name,
+                vec![
+                    HostTensor::F32(buf, vec![b as i64, s as i64]),
+                    HostTensor::I32(lens, vec![b as i64]),
+                ],
+            )?;
+            anyhow::ensure!(
+                res.len() == b * t_out * feat,
+                "mfcc artifact returned {} values, expected {}",
+                res.len(),
+                b * t_out * feat
+            );
+            for (lane, w) in chunk.iter().enumerate() {
+                let frames = num_frames(w.len(), FRAME_LEN, FRAME_HOP).min(t_out);
+                let start = lane * t_out * feat;
+                out.push((frames, res[start..start + frames * feat].to_vec()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_geometry_matches_dsp() {
+        // The truncation rule must agree with the native front-end.
+        assert_eq!(num_frames(5200, FRAME_LEN, FRAME_HOP), 64);
+        assert_eq!(num_frames(1000, FRAME_LEN, FRAME_HOP), 11);
+    }
+}

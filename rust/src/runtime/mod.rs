@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client from the Rust hot path.
+//!
+//! The `xla` crate's handles (client, executables, literals) wrap raw
+//! C++ pointers and are neither `Send` nor `Sync`, so the runtime runs
+//! a dedicated **engine thread** that owns the client and the compiled-
+//! executable cache ([`engine`]).  Callers — including worker threads
+//! inside the distance builder — talk to it over a channel using plain
+//! host buffers; literals never cross threads.  This also matches the
+//! coordinator architecture: one process-wide PJRT engine, many
+//! requesting workers.
+//!
+//! [`manifest`] parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`); [`dtw_exec`] implements the
+//! [`crate::distance::DtwBackend`] trait over DTW tile executables;
+//! [`mfcc_exec`] wraps the MFCC front-end executable for the audio
+//! ingestion path.
+
+pub mod dtw_exec;
+pub mod engine;
+pub mod manifest;
+pub mod mfcc_exec;
+
+pub use dtw_exec::XlaDtwBackend;
+pub use engine::{HostTensor, Runtime};
+pub use manifest::{ArtifactManifest, DtwEntry, MfccEntry};

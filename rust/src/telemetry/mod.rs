@@ -1,0 +1,167 @@
+//! Per-iteration telemetry: the observable series every paper figure is
+//! drawn from.
+//!
+//! The MAHC driver appends one [`IterationRecord`] per iteration; the
+//! figure harness reads the resulting [`RunHistory`] to regenerate
+//! Figs. 1 and 4-11, and the JSON emitter makes runs machine-readable
+//! for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::{self, Json};
+use std::time::Duration;
+
+/// Everything observable about one MAHC iteration.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub iteration: usize,
+    /// Number of subsets Pᵢ entering stage 1.
+    pub subsets: usize,
+    /// Largest subset occupancy (Fig. 1 / Fig. 7 series).
+    pub max_occupancy: usize,
+    /// Smallest subset occupancy (Fig. 11 series).
+    pub min_occupancy: usize,
+    /// Occupancy of the largest subset *after* refine, *before* split —
+    /// shows the β-violation that split then repairs (Fig. 7 marks).
+    pub max_occupancy_pre_split: usize,
+    /// Subsets split this iteration (0 when size management is off).
+    pub splits: usize,
+    /// ΣKⱼ — total stage-1 clusters (the paper's K estimate).
+    pub total_clusters: usize,
+    /// F-measure of the *current* global clustering against truth.
+    pub f_measure: f64,
+    /// Wall-clock spent in this iteration (Fig. 6 series).
+    pub wall: Duration,
+    /// Peak condensed-matrix bytes across concurrent subset jobs.
+    pub peak_matrix_bytes: usize,
+}
+
+impl IterationRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("iteration", json::num(self.iteration as f64)),
+            ("subsets", json::num(self.subsets as f64)),
+            ("max_occupancy", json::num(self.max_occupancy as f64)),
+            ("min_occupancy", json::num(self.min_occupancy as f64)),
+            (
+                "max_occupancy_pre_split",
+                json::num(self.max_occupancy_pre_split as f64),
+            ),
+            ("splits", json::num(self.splits as f64)),
+            ("total_clusters", json::num(self.total_clusters as f64)),
+            ("f_measure", json::num(self.f_measure)),
+            ("wall_secs", json::num(self.wall.as_secs_f64())),
+            (
+                "peak_matrix_bytes",
+                json::num(self.peak_matrix_bytes as f64),
+            ),
+        ])
+    }
+}
+
+/// Full history of one clustering run.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub dataset: String,
+    pub algo: String,
+    pub records: Vec<IterationRecord>,
+}
+
+impl RunHistory {
+    pub fn new(dataset: &str, algo: &str) -> Self {
+        RunHistory {
+            dataset: dataset.to_string(),
+            algo: algo.to_string(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: IterationRecord) {
+        self.records.push(r);
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("dataset", json::s(&self.dataset)),
+            ("algo", json::s(&self.algo)),
+            (
+                "iterations",
+                json::arr(self.records.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Series accessors for the figure harness.
+    pub fn subsets_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.subsets).collect()
+    }
+
+    pub fn f_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.f_measure).collect()
+    }
+
+    pub fn max_occupancy_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.max_occupancy).collect()
+    }
+
+    pub fn min_occupancy_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.min_occupancy).collect()
+    }
+
+    pub fn wall_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.wall.as_secs_f64()).collect()
+    }
+
+    /// Peak matrix bytes over the whole run — the memory-guarantee
+    /// number the β threshold must bound.
+    pub fn peak_bytes(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.peak_matrix_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: usize, subsets: usize, maxo: usize) -> IterationRecord {
+        IterationRecord {
+            iteration: i,
+            subsets,
+            max_occupancy: maxo,
+            min_occupancy: 1,
+            max_occupancy_pre_split: maxo + 5,
+            splits: 1,
+            total_clusters: 10,
+            f_measure: 0.5,
+            wall: Duration::from_millis(100),
+            peak_matrix_bytes: maxo * maxo * 2,
+        }
+    }
+
+    #[test]
+    fn series_extraction() {
+        let mut h = RunHistory::new("small_a", "mahc+m");
+        h.push(rec(0, 4, 100));
+        h.push(rec(1, 6, 80));
+        assert_eq!(h.subsets_series(), vec![4, 6]);
+        assert_eq!(h.max_occupancy_series(), vec![100, 80]);
+        assert_eq!(h.peak_bytes(), 100 * 100 * 2);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut h = RunHistory::new("d", "a");
+        h.push(rec(0, 2, 10));
+        let text = h.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("dataset").unwrap().as_str().unwrap(), "d");
+        let iters = parsed.get("iterations").unwrap().as_arr().unwrap();
+        assert_eq!(iters.len(), 1);
+        assert_eq!(
+            iters[0].get("max_occupancy").unwrap().as_usize().unwrap(),
+            10
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Measurement harness used by `benches/` (no criterion in the vendor
+//! set).
+//!
+//! Deliberately criterion-shaped: warmup phase, fixed-duration sampling,
+//! and a report with mean / median / p95 plus optional throughput.  Wall
+//! clock via `Instant`; each sample is one closure invocation (callers
+//! batch internally when an iteration is very short).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional items-per-second throughput (set via [`Bench::throughput`]).
+    pub throughput: Option<f64>,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let tput = match self.throughput {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>10.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:>10.2} elem/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>10} {:>10} {:>10}  n={}{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p95),
+            self.samples,
+            tput
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Builder-style bench runner.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    elements: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_samples: 200,
+            elements: None,
+        }
+    }
+
+    /// Shorter warmup/measure for expensive end-to-end cases.
+    pub fn quick(mut self) -> Self {
+        self.warmup = Duration::from_millis(50);
+        self.measure = Duration::from_millis(700);
+        self.max_samples = 30;
+        self
+    }
+
+    /// Declare items processed per invocation for throughput reporting.
+    pub fn throughput(mut self, elements: u64) -> Self {
+        self.elements = Some(elements);
+        self
+    }
+
+    pub fn warmup_time(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Run the bench.  `f` should return something observable to keep
+    /// the optimiser honest; its result is black-boxed here.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchReport {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            // Guarantee at least one sample even for very slow cases.
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let report = BenchReport {
+            name: self.name,
+            samples: n,
+            mean,
+            median: samples[n / 2],
+            p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+            throughput: self
+                .elements
+                .map(|e| e as f64 / mean.as_secs_f64()),
+        };
+        report.print();
+        report
+    }
+}
+
+/// Optimisation barrier (stable-rust equivalent of `std::hint::black_box`,
+/// which we use directly since it is stable now).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let r = Bench::new("noop")
+            .warmup_time(Duration::from_millis(5))
+            .measure_time(Duration::from_millis(50))
+            .run(|| 1 + 1);
+        assert!(r.samples >= 1);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let r = Bench::new("tp")
+            .warmup_time(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(20))
+            .throughput(1000)
+            .run(|| std::thread::sleep(Duration::from_micros(100)));
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+}

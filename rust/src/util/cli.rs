@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (no clap in the vendor set).
+//!
+//! Supports the shapes the binaries need: a positional subcommand,
+//! `--flag`, `--key value` and `--key=value`.  Unknown flags are
+//! reported as errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]).  `value_keys` lists options
+    /// that take a value; anything else starting with `--` is a flag.
+    pub fn parse(raw: &[String], value_keys: &[&str]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    if !value_keys.contains(&k) {
+                        anyhow::bail!("unknown option --{k}");
+                    }
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&rest) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{rest} requires a value"))?;
+                    out.options.insert(rest.to_string(), v.clone());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(value_keys: &[&str]) -> anyhow::Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, value_keys)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Parsed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &raw(&["fig4", "--scale", "0.5", "--seed=7", "--verbose"]),
+            &["scale", "seed"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand(), Some("fig4"));
+        assert_eq!(a.get_or("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&raw(&["--scale"]), &["scale"]).is_err());
+    }
+
+    #[test]
+    fn unknown_kv_option_errors() {
+        assert!(Args::parse(&raw(&["--bogus=1"]), &["scale"]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = Args::parse(&raw(&["--seed", "abc"]), &["seed"]).unwrap();
+        let err = a.get_or("seed", 0u64).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&raw(&[]), &["scale"]).unwrap();
+        assert_eq!(a.get_or("scale", 1.0).unwrap(), 1.0);
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CSV emitter for the figure harness (`results/*.csv`).
+//!
+//! The figure harness emits one CSV per paper table/figure so series can
+//! be re-plotted; fields never contain commas in practice but quoting is
+//! handled anyway for robustness.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV writer with a fixed header.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity does not match the header (a
+    /// programming error in a harness, not a runtime condition).
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "CSV row arity {} != header arity {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: format heterogeneous displayables into a row.
+    pub fn rowf(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+fn join(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| quote(f))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn quote(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_emit() {
+        let mut w = CsvWriter::new(&["iter", "p", "f"]);
+        w.rowf(&[&0, &4, &0.41]);
+        w.rowf(&[&1, &6, &0.52]);
+        assert_eq!(w.to_string(), "iter,p,f\n0,4,0.41\n1,6,0.52\n");
+        assert_eq!(w.num_rows(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["x,y".to_string()]);
+        w.row(&["he said \"hi\"".to_string()]);
+        assert_eq!(w.to_string(), "a\n\"x,y\"\n\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".to_string()]);
+    }
+}

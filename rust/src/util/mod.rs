@@ -1,0 +1,17 @@
+//! From-scratch utility substrates.
+//!
+//! The build environment vendors only `xla`, `anyhow`, `thiserror` and
+//! `log`, so the crate carries its own implementations of the plumbing a
+//! project of this shape usually pulls from crates.io: a seedable PRNG
+//! with the distributions the corpus generator needs ([`rng`]), a JSON
+//! reader/writer for the artifact manifest and telemetry ([`json`]), a
+//! CSV emitter for the figure harness ([`csv`]), a scoped worker pool
+//! for per-subset parallelism ([`pool`]), a tiny CLI argument parser
+//! ([`cli`]), and a measurement harness used by `benches/` ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod rng;

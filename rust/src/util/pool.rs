@@ -1,0 +1,206 @@
+//! Scoped worker pool for data-parallel subset jobs (no rayon in the
+//! vendor set).
+//!
+//! Two primitives cover every parallel site in the crate:
+//!
+//! * [`parallel_map`] — run a closure over an indexed range on a bounded
+//!   number of OS threads and collect results in order.  Used for
+//!   per-subset stage-1 AHC jobs (the paper runs the P subsets "either
+//!   sequentially or in parallel") and for tile rows in the distance
+//!   builder.
+//! * [`WorkerPool`] — a long-lived pool with a job queue, used by the
+//!   MAHC driver so thread spawn cost is not paid per iteration.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Number of worker threads to use by default: physical parallelism,
+/// clamped to at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n` on up to `threads` OS threads,
+/// returning results in index order.  `f` must be `Sync` (it is shared,
+/// not cloned).  Panics in `f` propagate.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                // Work-stealing by atomic counter: cheap dynamic load
+                // balance for heterogeneous subset sizes.
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                let mut guard = slots.lock().unwrap();
+                for (i, v) in local {
+                    guard[i] = Some(v);
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|v| v.expect("worker missed slot")).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived worker pool with a shared job queue.
+///
+/// The MAHC driver owns one of these for the whole clustering run;
+/// per-iteration stage-1 jobs are submitted as closures and awaited via
+/// the returned receivers.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mahc-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // queue closed
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job returning `T`; await it on the returned receiver.
+    pub fn submit<T, F>(&self, f: F) -> mpsc::Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            // The receiver may have been dropped; ignore send failure.
+            let _ = tx.send(f());
+        });
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("worker queue closed");
+        rx
+    }
+
+    /// Map a closure over `0..n` through the pool, in index order.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + Clone + 'static,
+    {
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let f = f.clone();
+                self.submit(move || f(i))
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().expect("worker dropped result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_fallback() {
+        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_executes_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map(50, |i| i * 2);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_submit_individual() {
+        let pool = WorkerPool::new(2);
+        let rx = pool.submit(|| 7);
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = WorkerPool::new(3);
+        for round in 0..10 {
+            let out = pool.map(10, move |i| i + round);
+            assert_eq!(out[9], 9 + round);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-layer integration: the AOT XLA artifacts must agree with the
+//! native Rust implementations on real corpus data.
+//!
+//! These tests hold the three DTW implementations (numpy oracle ↔
+//! Pallas kernel — pinned by pytest — and Pallas kernel ↔ native Rust,
+//! pinned here) and the two MFCC front-ends together.  They need
+//! `artifacts/` built (`make artifacts`); without it they skip with a
+//! note so plain `cargo test` still passes.
+
+use mahc::config::DatasetSpec;
+use mahc::corpus::{generate, waveform, Segment};
+use mahc::distance::{build_condensed, DtwBackend, NativeBackend};
+use mahc::dsp;
+use mahc::runtime::{mfcc_exec::MfccFrontend, Runtime, XlaDtwBackend};
+use std::path::Path;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(Path::new("artifacts")).expect("runtime"))
+}
+
+#[test]
+fn xla_dtw_matches_native_backend() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let xla = XlaDtwBackend::new(&rt).unwrap();
+    let native = NativeBackend::new();
+
+    let mut spec = DatasetSpec::tiny(40, 4, 77);
+    spec.feat_dim = 39; // artifact bucket D
+    spec.len_range = (6, 60); // within artifact bucket T=64
+    let set = generate(&spec);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+
+    let a = build_condensed(&refs, &native, 4).unwrap();
+    let b = build_condensed(&refs, &xla, 4).unwrap();
+    assert_eq!(a.len(), b.len());
+    let mut max_err = 0.0f32;
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        max_err = max_err.max((x - y).abs() / y.abs().max(1.0));
+    }
+    assert!(
+        max_err < 5e-3,
+        "native vs xla relative deviation {max_err}"
+    );
+}
+
+#[test]
+fn xla_dtw_cross_block_sizes_consistent() {
+    // Requests larger than one tile must tile seamlessly: compare a
+    // 40x40 request (tiled over 32+8) against per-pair native values.
+    let Some(rt) = runtime_or_skip() else { return };
+    let xla = XlaDtwBackend::new(&rt).unwrap();
+
+    let mut spec = DatasetSpec::tiny(40, 3, 78);
+    spec.feat_dim = 39;
+    spec.len_range = (6, 50);
+    let set = generate(&spec);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let flat = xla.pairwise(&refs, &refs).unwrap();
+    assert_eq!(flat.len(), 40 * 40);
+    for i in 0..40 {
+        // Diagonal ~0 (float noise from the matmul identity only).
+        assert!(flat[i * 40 + i].abs() < 5e-3, "diag {i}: {}", flat[i * 40 + i]);
+        for j in 0..40 {
+            // Symmetry across independently computed tiles.
+            let (a, b) = (flat[i * 40 + j], flat[j * 40 + i]);
+            assert!((a - b).abs() < 5e-3, "({i},{j}): {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn xla_mfcc_matches_native_frontend() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let fe = MfccFrontend::new(&rt).unwrap();
+
+    // Render a couple of synthetic-formant waveforms of different
+    // lengths and compare against the native dsp pipeline.
+    let mut rng = mahc::util::rng::Rng::seed_from(5);
+    let class = {
+        let spec = DatasetSpec::tiny(4, 2, 9);
+        // Build a prototype by hand via the public corpus API: reuse a
+        // generated segment's class trajectory indirectly by rendering
+        // from a synthetic class.
+        let dim = 4;
+        let proto_len = 16;
+        let mut proto = Vec::new();
+        for t in 0..proto_len {
+            for d in 0..dim {
+                proto.push(((t * (d + 1)) as f64 * 0.2).sin() * 2.0);
+            }
+        }
+        let _ = spec;
+        mahc::corpus::generator::TriphoneClass {
+            name: "x-y+z".into(),
+            proto,
+            proto_len,
+            dim,
+        }
+    };
+
+    for frames in [12usize, 40, 64] {
+        let wav = waveform::render(
+            &class,
+            &waveform::linear_positions(frames),
+            0.005,
+            &mut rng,
+        );
+        let wav_f32: Vec<f32> = wav.iter().map(|&v| v as f32).collect();
+        let out = fe.extract(&[wav_f32]).unwrap();
+        let (t, feats) = &out[0];
+        assert_eq!(*t, frames);
+
+        let native = dsp::mfcc(&wav);
+        assert_eq!(native.len(), frames);
+        for (i, row) in native.iter().enumerate() {
+            for (d, &want) in row.iter().enumerate() {
+                let got = feats[i * 39 + d] as f64;
+                assert!(
+                    (got - want).abs() < 2e-2 * want.abs().max(1.0),
+                    "frame {i} dim {d}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_segment_rejected_cleanly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let xla = XlaDtwBackend::new(&rt).unwrap();
+    let too_long = Segment {
+        id: 0,
+        class_id: 0,
+        len: 100, // > T=64 bucket
+        dim: 39,
+        feats: vec![0.0; 100 * 39],
+    };
+    let err = xla.pairwise(&[&too_long], &[&too_long]).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("frames") || msg.contains("covers segment length"),
+        "{msg}"
+    );
+}

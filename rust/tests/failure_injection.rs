@@ -1,0 +1,143 @@
+//! Failure injection: errors from the distance backend must propagate
+//! cleanly through the builder, stage-1 workers and the driver — no
+//! panics, no poisoned pools, no partial results presented as success.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::{generate, Segment};
+use mahc::distance::{build_condensed, build_cross, DtwBackend, NativeBackend};
+use mahc::mahc::MahcDriver;
+
+/// Backend that fails after a configurable number of calls.
+struct FlakyBackend {
+    inner: NativeBackend,
+    calls: AtomicUsize,
+    fail_after: usize,
+}
+
+impl FlakyBackend {
+    fn new(fail_after: usize) -> Self {
+        FlakyBackend {
+            inner: NativeBackend::new(),
+            calls: AtomicUsize::new(0),
+            fail_after,
+        }
+    }
+}
+
+impl DtwBackend for FlakyBackend {
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n >= self.fail_after {
+            anyhow::bail!("injected backend failure (call {n})");
+        }
+        self.inner.pairwise(xs, ys)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+/// Backend that returns the wrong number of distances.
+struct WrongShapeBackend;
+
+impl DtwBackend for WrongShapeBackend {
+    fn pairwise(&self, _xs: &[&Segment], _ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0; 1]) // always wrong for multi-pair requests
+    }
+
+    fn name(&self) -> &'static str {
+        "wrong-shape"
+    }
+}
+
+fn tiny_set() -> mahc::corpus::SegmentSet {
+    generate(&DatasetSpec::tiny(40, 3, 9))
+}
+
+#[test]
+fn builder_propagates_backend_error() {
+    let set = tiny_set();
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = FlakyBackend::new(0);
+    let err = build_condensed(&refs, &backend, 4).unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+}
+
+#[test]
+fn builder_fails_even_when_error_is_late() {
+    let set = tiny_set();
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    // Fail on the 20th call: earlier rows already succeeded.
+    let backend = FlakyBackend::new(20);
+    assert!(build_condensed(&refs, &backend, 2).is_err());
+}
+
+#[test]
+fn cross_builder_propagates_error() {
+    let set = tiny_set();
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = FlakyBackend::new(0);
+    assert!(build_cross(&refs[..5], &refs[5..], &backend, 2).is_err());
+}
+
+#[test]
+fn driver_surfaces_stage1_failure() {
+    let set = tiny_set();
+    let backend = FlakyBackend::new(1); // first subset OK, then die
+    let cfg = AlgoConfig {
+        p0: 4,
+        convergence: Convergence::FixedIters(3),
+        ..Default::default()
+    };
+    let err = MahcDriver::new(&set, cfg, &backend)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+}
+
+#[test]
+fn driver_survives_and_reports_after_success_then_failure() {
+    // Enough successful calls for iteration 0 (stage1 + medoids), then
+    // failure mid-run: the error must surface, not a bogus result.
+    let set = tiny_set();
+    let backend = FlakyBackend::new(6);
+    let cfg = AlgoConfig {
+        p0: 2,
+        convergence: Convergence::FixedIters(4),
+        ..Default::default()
+    };
+    let res = MahcDriver::new(&set, cfg, &backend).unwrap().run();
+    assert!(res.is_err());
+}
+
+#[test]
+fn mismatched_backend_output_is_not_silently_accepted() {
+    // The condensed builder indexes into the returned buffer; a short
+    // buffer must panic (slice bounds) or error, never silently corrupt.
+    let set = tiny_set();
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let result = std::panic::catch_unwind(|| {
+        build_condensed(&refs, &WrongShapeBackend, 1)
+    });
+    match result {
+        Ok(Ok(_)) => panic!("wrong-shaped output accepted"),
+        Ok(Err(_)) | Err(_) => {} // error or panic both acceptable rejections
+    }
+}
+
+#[test]
+fn empty_and_single_segment_inputs() {
+    let backend = NativeBackend::new();
+    let empty: Vec<&Segment> = Vec::new();
+    let cond = build_condensed(&empty, &backend, 2).unwrap();
+    assert_eq!(cond.n(), 0);
+    let set = tiny_set();
+    let one = vec![&set.segments[0]];
+    let cond = build_condensed(&one, &backend, 2).unwrap();
+    assert_eq!(cond.n(), 1);
+    assert_eq!(cond.len(), 0);
+}

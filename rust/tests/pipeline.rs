@@ -1,0 +1,135 @@
+//! End-to-end pipeline integration: corpus → distance backend → MAHC(±M)
+//! → metrics, on both backends, checking the paper's headline claims at
+//! test scale.
+
+use mahc::baselines::full_ahc;
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::generate;
+use mahc::distance::NativeBackend;
+use mahc::mahc::MahcDriver;
+use mahc::metrics;
+use mahc::runtime::{Runtime, XlaDtwBackend};
+use std::path::Path;
+
+fn cfg(p0: usize, beta: Option<usize>, iters: usize) -> AlgoConfig {
+    AlgoConfig {
+        p0,
+        beta,
+        convergence: Convergence::FixedIters(iters),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mahc_m_matches_mahc_f_measure_at_test_scale() {
+    // Paper claim 2: size management costs no F-measure.
+    let set = generate(&DatasetSpec::tiny(180, 9, 101));
+    let backend = NativeBackend::new();
+    let plain = MahcDriver::new(&set, cfg(4, None, 4), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let managed = MahcDriver::new(&set, cfg(4, Some(60), 4), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        managed.f_measure > plain.f_measure - 0.1,
+        "managed {:.3} vs plain {:.3}",
+        managed.f_measure,
+        plain.f_measure
+    );
+    // Claim 1: β bound held everywhere.
+    for r in &managed.history.records {
+        assert!(r.max_occupancy <= 60);
+    }
+}
+
+#[test]
+fn mahc_comparable_to_full_ahc() {
+    // Paper §4: MAHC matches or surpasses conventional AHC within a few
+    // iterations. At this scale allow a modest deficit.
+    let set = generate(&DatasetSpec::tiny(150, 8, 102));
+    let backend = NativeBackend::new();
+    let ahc = full_ahc(&set, &backend, 4, None, 0.25).unwrap();
+    let mahc = MahcDriver::new(&set, cfg(3, Some(75), 5), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        mahc.f_measure > ahc.f_measure - 0.15,
+        "mahc {:.3} vs ahc {:.3}",
+        mahc.f_measure,
+        ahc.f_measure
+    );
+}
+
+#[test]
+fn final_k_approximates_stage_one_total() {
+    // Paper claim 4: K = ΣKⱼ from the first stage is the final K.
+    let set = generate(&DatasetSpec::tiny(120, 6, 103));
+    let backend = NativeBackend::new();
+    let res = MahcDriver::new(&set, cfg(3, Some(50), 4), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let stage1_total = res.history.records[0].total_clusters;
+    // Final K is capped by the last medoid count; it must be in the
+    // right ballpark of the stage-1 estimate.
+    assert!(res.k > 0 && res.k <= stage1_total.max(1) + 1);
+}
+
+#[test]
+fn metrics_sane_on_final_labels() {
+    let set = generate(&DatasetSpec::tiny(100, 5, 104));
+    let backend = NativeBackend::new();
+    let res = MahcDriver::new(&set, cfg(2, Some(40), 4), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let truth = set.labels();
+    let f = metrics::f_measure(&res.labels, &truth);
+    let p = metrics::purity(&res.labels, &truth);
+    let n = metrics::nmi(&res.labels, &truth);
+    assert!((0.0..=1.0).contains(&f));
+    assert!((0.0..=1.0).contains(&p));
+    assert!((0.0..=1.0).contains(&n));
+    assert!((f - res.f_measure).abs() < 1e-12);
+}
+
+#[test]
+fn full_pipeline_on_xla_backend() {
+    // The request path the architecture is about: MAHC+M with every DTW
+    // going through the AOT Pallas kernel via PJRT.
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let rt = Runtime::new(Path::new("artifacts")).unwrap();
+    let xla = XlaDtwBackend::new(&rt).unwrap();
+    let mut spec = DatasetSpec::tiny(72, 5, 105);
+    spec.feat_dim = 39;
+    spec.len_range = (6, 60);
+    let set = generate(&spec);
+
+    let res_xla = MahcDriver::new(&set, cfg(3, Some(30), 3), &xla)
+        .unwrap()
+        .run()
+        .unwrap();
+    let native = NativeBackend::new();
+    let res_nat = MahcDriver::new(&set, cfg(3, Some(30), 3), &native)
+        .unwrap()
+        .run()
+        .unwrap();
+    // Same algorithm over numerically-close backends: quality must agree
+    // closely (exact label equality is not guaranteed under f32 noise).
+    assert!(
+        (res_xla.f_measure - res_nat.f_measure).abs() < 0.1,
+        "xla F {:.3} vs native F {:.3}",
+        res_xla.f_measure,
+        res_nat.f_measure
+    );
+    for r in &res_xla.history.records {
+        assert!(r.max_occupancy <= 30);
+    }
+}

@@ -1,0 +1,193 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! No proptest in the vendor set, so this is a seeded-sweep harness:
+//! each property is checked over many randomly generated configurations
+//! (seeds printed on failure for reproduction).  Shrinking is traded
+//! for breadth — cases are small, so a failing seed is directly
+//! debuggable.
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, FinalK};
+use mahc::corpus::generate;
+use mahc::distance::{build_condensed, Condensed, NativeBackend};
+use mahc::mahc::{even_partition, initial_partition, split_oversized, MahcDriver};
+use mahc::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        f(seed);
+    }
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    for_seeds(25, |seed| {
+        let mut rng = Rng::seed_from(seed);
+        let n = 1 + rng.range(0, 400);
+        let p = 1 + rng.range(0, 12);
+        let parts = initial_partition(n, p, &mut rng);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "seed {seed} n={n} p={p}");
+        assert!(parts.iter().all(|s| !s.is_empty()), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_split_never_exceeds_beta_and_preserves_members() {
+    for_seeds(25, |seed| {
+        let mut rng = Rng::seed_from(1000 + seed);
+        let n_subsets = 1 + rng.range(0, 6);
+        let beta = 4 + rng.range(0, 60);
+        let mut subsets: Vec<Vec<usize>> = Vec::new();
+        let mut next_id = 0;
+        for _ in 0..n_subsets {
+            let size = 1 + rng.range(0, 300);
+            subsets.push((next_id..next_id + size).collect());
+            next_id += size;
+        }
+        let before: usize = subsets.iter().map(|s| s.len()).sum();
+        split_oversized(&mut subsets, beta, &mut rng, seed % 2 == 0);
+        assert!(
+            subsets.iter().all(|s| s.len() <= beta),
+            "seed {seed}: β={beta} violated"
+        );
+        let mut all: Vec<usize> = subsets.concat();
+        all.sort_unstable();
+        assert_eq!(all.len(), before, "seed {seed}: members lost");
+        all.dedup();
+        assert_eq!(all.len(), before, "seed {seed}: members duplicated");
+        // Balance: pieces from one split differ by ≤ 1... the global
+        // guarantee is weaker, but no subset may be empty.
+        assert!(subsets.iter().all(|s| !s.is_empty()), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_even_partition_balanced() {
+    for_seeds(40, |seed| {
+        let mut rng = Rng::seed_from(2000 + seed);
+        let n = 1 + rng.range(0, 500);
+        let p = 1 + rng.range(0, 20);
+        let ids: Vec<usize> = (0..n).collect();
+        let parts = even_partition(&ids, p);
+        let max = parts.iter().map(|s| s.len()).max().unwrap();
+        let min = parts.iter().map(|s| s.len()).min().unwrap();
+        assert!(max - min <= 1, "seed {seed}: {max}-{min}");
+    });
+}
+
+#[test]
+fn prop_driver_output_is_valid_partition() {
+    // Whole-driver invariant sweep over random small configs.
+    for_seeds(6, |seed| {
+        let mut rng = Rng::seed_from(3000 + seed);
+        let n = 40 + rng.range(0, 80);
+        let classes = 3 + rng.range(0, 5);
+        let set = generate(&DatasetSpec::tiny(n, classes, seed));
+        let p0 = 1 + rng.range(0, 5);
+        let beta = if rng.f64() < 0.5 {
+            Some(10 + rng.range(0, n))
+        } else {
+            None
+        };
+        let cfg = AlgoConfig {
+            p0,
+            beta,
+            convergence: Convergence::FixedIters(2 + rng.range(0, 3)),
+            final_k: if rng.f64() < 0.3 {
+                FinalK::Fixed(1 + rng.range(0, classes * 2))
+            } else {
+                FinalK::StageOneTotal
+            },
+            seed,
+            ..Default::default()
+        };
+        let backend = NativeBackend::new();
+        let res = MahcDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        // Valid dense labelling.
+        assert_eq!(res.labels.len(), n, "seed {seed}");
+        assert!(res.k >= 1, "seed {seed}");
+        assert!(
+            res.labels.iter().all(|&l| l < res.k),
+            "seed {seed}: label out of range"
+        );
+        let used: std::collections::HashSet<_> = res.labels.iter().collect();
+        assert_eq!(used.len(), res.k, "seed {seed}: empty final cluster");
+        // β invariant when management is on.
+        if let Some(b) = cfg.beta {
+            for r in &res.history.records {
+                assert!(r.max_occupancy <= b, "seed {seed}: β breached");
+            }
+        }
+        // Occupancy sanity: Σ subset sizes is n every iteration — the
+        // max/min bounds imply max*P ≥ n ≥ min*P.
+        for r in &res.history.records {
+            assert!(r.max_occupancy * r.subsets >= n, "seed {seed}");
+            assert!(r.min_occupancy * r.subsets <= n, "seed {seed}");
+            assert!(r.min_occupancy >= 1, "seed {seed}: empty subset");
+        }
+    });
+}
+
+#[test]
+fn prop_ward_heights_nonnegative_and_sorted() {
+    for_seeds(15, |seed| {
+        let mut rng = Rng::seed_from(4000 + seed);
+        let n = 2 + rng.range(0, 60);
+        let mut cond = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                cond.set(i, j, rng.f32() * 10.0);
+            }
+        }
+        let dendro = mahc::ahc::ward_linkage(&cond);
+        let h = dendro.merge_heights();
+        assert_eq!(h.len(), n - 1, "seed {seed}");
+        assert!(h.iter().all(|&x| x >= 0.0), "seed {seed}");
+        for w in h.windows(2) {
+            assert!(w[0] <= w[1], "seed {seed}: heights unsorted");
+        }
+        // Every cut k yields exactly k clusters.
+        for k in 1..=n.min(6) {
+            let labels = dendro.cut(k);
+            let used: std::collections::HashSet<_> = labels.iter().collect();
+            assert_eq!(used.len(), k, "seed {seed} k={k}");
+        }
+    });
+}
+
+#[test]
+fn prop_condensed_symmetric_consistency() {
+    for_seeds(10, |seed| {
+        let set = generate(&DatasetSpec::tiny(24, 3, 5000 + seed));
+        let refs: Vec<&mahc::corpus::Segment> = set.segments.iter().collect();
+        let cond = build_condensed(&refs, &NativeBackend::new(), 3).unwrap();
+        for i in 0..refs.len() {
+            for j in 0..refs.len() {
+                assert_eq!(cond.get(i, j), cond.get(j, i), "seed {seed}");
+            }
+            assert_eq!(cond.get(i, i), 0.0);
+        }
+        assert!(cond.as_slice().iter().all(|&d| d >= 0.0), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_f_measure_bounds_and_perfect_case() {
+    for_seeds(30, |seed| {
+        let mut rng = Rng::seed_from(6000 + seed);
+        let n = 1 + rng.range(0, 200);
+        let kc = 1 + rng.range(0, 10);
+        let truth: Vec<usize> = (0..n).map(|_| rng.range(0, kc)).collect();
+        let pred: Vec<usize> = (0..n).map(|_| rng.range(0, kc)).collect();
+        let f = mahc::metrics::f_measure(&pred, &truth);
+        assert!((0.0..=1.0).contains(&f), "seed {seed}: F={f}");
+        let f_perfect = mahc::metrics::f_measure(&truth, &truth);
+        assert!((f_perfect - 1.0).abs() < 1e-12, "seed {seed}");
+        assert!(f <= f_perfect + 1e-12, "seed {seed}");
+    });
+}
