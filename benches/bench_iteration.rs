@@ -1,5 +1,7 @@
 //! End-to-end MAHC iteration cost — the paper's Fig. 6 quantity — and
-//! the MAHC-vs-MAHC+M wall-clock comparison, plus a full-AHC reference.
+//! the MAHC-vs-MAHC+M wall-clock comparison, plus a full-AHC reference
+//! and the cross-iteration pair-cache ablation (cache off vs on, with
+//! per-iteration hit-rate telemetry).
 //!
 //! One sample = one complete clustering run (fixed iterations), so the
 //! numbers are directly comparable across algorithms on the same data.
@@ -34,11 +36,58 @@ fn main() {
     let beta = (n as f64 / 4.0 * 1.25).ceil() as usize;
     let cfg_managed = AlgoConfig {
         beta: Some(beta),
-        ..base
+        ..base.clone()
     };
     Bench::new("mahc+m/3iters")
         .quick()
         .run(|| MahcDriver::new(&set, cfg_managed.clone(), &backend).unwrap().run().unwrap());
+
+    // Cache ablation: identical run with the cross-iteration pair
+    // cache enabled.  Results are bitwise identical (asserted below);
+    // only wall-clock and the hit-rate telemetry differ.
+    let cfg_cached = AlgoConfig {
+        cache_bytes: 64 << 20,
+        ..cfg_managed.clone()
+    };
+    Bench::new("mahc+m-cached/3iters")
+        .quick()
+        .run(|| MahcDriver::new(&set, cfg_cached.clone(), &backend).unwrap().run().unwrap());
+
+    let plain = MahcDriver::new(&set, cfg_managed.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let cached = MahcDriver::new(&set, cfg_cached.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        plain.labels, cached.labels,
+        "cache must not change clustering results"
+    );
+    println!("cache telemetry (mahc+m-cached, β={beta}):");
+    for r in &cached.history.records {
+        println!(
+            "  iter {}: {:>5.1}% hit rate ({} hits, {} misses, {} evictions)",
+            r.iteration,
+            r.cache.hit_rate() * 100.0,
+            r.cache.hits,
+            r.cache.misses,
+            r.cache.evictions
+        );
+    }
+    let total = cached.history.cache_total();
+    println!(
+        "  run total: {:.1}% of pair distances served from cache",
+        total.hit_rate() * 100.0
+    );
+    if let Some(third) = cached.history.records.get(2) {
+        assert!(
+            third.cache.hit_rate() >= 0.30,
+            "expected >=30% of pair distances from cache by iteration 3, got {:.1}%",
+            third.cache.hit_rate() * 100.0
+        );
+    }
 
     Bench::new("full_ahc")
         .quick()

@@ -49,7 +49,11 @@ fn knee_once(xs: &[f64], ys: &[f64]) -> usize {
     for c in 2..=b - 2 {
         let left = line_rmse(&xs[..c], &ys[..c]);
         let right = line_rmse(&xs[c..], &ys[c..]);
-        let err = (c as f64 / b as f64) * left + ((b - c) as f64 / b as f64) * right;
+        // Salvador & Chan's length weighting (module header): the knee
+        // candidate c sits between the two fitted ranges, so the usable
+        // x-extent is b−1 intervals of which c−1 lie left of c.
+        let err = ((c - 1) as f64 / (b - 1) as f64) * left
+            + ((b - c) as f64 / (b - 1) as f64) * right;
         if err < best_err {
             best_err = err;
             best_c = c;
@@ -177,6 +181,33 @@ mod tests {
         let heights = vec![1.0f32; 59];
         let k = l_method(&heights, 60);
         assert!(k <= 5, "flat graph should give small k, got {k}");
+    }
+
+    #[test]
+    fn knee_weights_follow_salvador_chan() {
+        // Fixture where the documented (c−1)/(b−1) weighting and the
+        // old c/b weighting disagree.  b = 5 points, candidates c ∈
+        // {2, 3}; two-point fits are exact (RMSE 0) and a three-point
+        // fit over equally spaced xs has RMSE |y0 − 2y1 + y2| / (3√2):
+        //   ys = [1.2, 0, 0, 0, 1]:
+        //     c=2: left RMSE 0,          right RMSE 1.0/(3√2)
+        //     c=3: left RMSE 1.2/(3√2),  right RMSE 0
+        //   correct weights:  W(2) = (3/4)·R ≈ 0.177 > W(3) = (2/4)·L ≈ 0.141
+        //   old weights:      W(2) = (3/5)·R ≈ 0.141 < W(3) = (3/5)·L ≈ 0.170
+        // so the documented formula picks c = 3 (knee x = xs[2] = 4)
+        // where the old weighting picked c = 2 (knee x = 3).
+        let xs = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let ys = [1.2, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(knee_once(&xs, &ys), 4);
+
+        // Cross-check the fixture's premise with the building blocks.
+        let r3 = line_rmse(&xs[2..], &ys[2..]);
+        let l3 = line_rmse(&xs[..3], &ys[..3]);
+        assert!((r3 - 1.0 / (3.0 * 2f64.sqrt())).abs() < 1e-12);
+        assert!((l3 - 1.2 / (3.0 * 2f64.sqrt())).abs() < 1e-12);
+        // Documented weighting prefers c=3; the old one preferred c=2.
+        assert!(0.5 * l3 < 0.75 * r3);
+        assert!(0.6 * l3 > 0.6 * r3);
     }
 
     #[test]

@@ -187,6 +187,13 @@ pub struct AlgoConfig {
     pub seed: u64,
     /// L-method: cap on clusters per subset as a fraction of subset size.
     pub max_clusters_frac: f64,
+    /// Byte budget of the cross-iteration DTW pair cache (0 disables
+    /// it).  The companion bound to β: β caps any single resident
+    /// condensed matrix, `cache_bytes` caps the resident pool of reused
+    /// pair distances, so total distance memory stays thresholded
+    /// either way.  Results are identical with the cache on or off
+    /// (`distance::build_condensed_cached`); only wall-clock changes.
+    pub cache_bytes: usize,
 }
 
 impl Default for AlgoConfig {
@@ -202,6 +209,7 @@ impl Default for AlgoConfig {
             split_shuffle: false,
             seed: 1234,
             max_clusters_frac: 0.25,
+            cache_bytes: 0,
         }
     }
 }
@@ -214,6 +222,12 @@ impl AlgoConfig {
 
     pub fn with_p0(mut self, p0: usize) -> Self {
         self.p0 = p0;
+        self
+    }
+
+    /// Enable the cross-iteration pair cache with a byte budget.
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = bytes;
         self
     }
 
@@ -285,6 +299,8 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
             "merge_min" => cfg.merge_min = Some(v.parse()?),
             "split_shuffle" => cfg.split_shuffle = v.parse()?,
             "max_clusters_frac" => cfg.max_clusters_frac = v.parse()?,
+            "cache_bytes" => cfg.cache_bytes = v.parse()?,
+            "cache_mb" => cfg.cache_bytes = v.parse::<usize>()? << 20,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -333,6 +349,28 @@ mod tests {
         assert_eq!(cfg.p0, 6);
         assert_eq!(cfg.beta, Some(900));
         assert_eq!(cfg.convergence, Convergence::FixedIters(8));
+    }
+
+    #[test]
+    fn cache_keys_parse() {
+        let mut cfg = AlgoConfig::default();
+        assert_eq!(cfg.cache_bytes, 0, "cache off by default");
+        apply_overrides(
+            &mut cfg,
+            &[("cache_mb".to_string(), "64".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.cache_bytes, 64 << 20);
+        apply_overrides(
+            &mut cfg,
+            &[("cache_bytes".to_string(), "4096".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.cache_bytes, 4096);
+        assert_eq!(
+            AlgoConfig::default().with_cache_bytes(123).cache_bytes,
+            123
+        );
     }
 
     #[test]

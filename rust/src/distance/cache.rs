@@ -1,0 +1,274 @@
+//! Cross-iteration DTW pair-distance cache.
+//!
+//! The MAHC refine step deliberately keeps stage-1 cluster members
+//! together, so the vast majority of within-subset segment pairs recur
+//! from one iteration to the next (and medoid pairs recur in stage 2) —
+//! yet the driver used to recompute every condensed matrix from
+//! scratch.  [`PairCache`] closes that gap: a sharded, capacity-bounded
+//! map from global segment-id pairs `(min, max)` to their DTW distance,
+//! sitting *above* the [`super::DtwBackend`] trait so both the native
+//! DP and the XLA tile executor benefit.
+//!
+//! The capacity bound is the time-side companion of the paper's space
+//! bound: β caps any single resident condensed matrix at
+//! β(β−1)/2 · 4 bytes, and `capacity_bytes` caps the resident
+//! cross-iteration distance pool, so total distance memory stays
+//! thresholded in the same spirit (see EXPERIMENTS.md §Perf for the
+//! measured budget/hit-rate trade-off).  Eviction is per-shard FIFO —
+//! deterministic in insertion order and cheap; because cached values
+//! equal the values the backend would recompute, *results are bitwise
+//! identical to the uncached path regardless of hit or eviction
+//! pattern* (asserted by `rust/tests/cache_determinism.rs` for the
+//! native backend, whose per-pair results are independent of call
+//! batching).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::telemetry::CacheStats;
+
+/// Shards: enough to keep worker threads from serialising on one lock,
+/// few enough that the per-shard FIFO stays cache-friendly.
+const SHARDS: usize = 16;
+
+/// Approximate resident cost of one cached pair: 12 bytes of payload
+/// (u64 key + f32 value) plus hash-table control/load-factor overhead
+/// and the FIFO queue slot.  Deliberately conservative so the
+/// configured byte budget is an upper bound, not a target to overrun.
+pub const ENTRY_BYTES: usize = 32;
+
+struct Shard {
+    map: HashMap<u64, f32>,
+    fifo: VecDeque<u64>,
+}
+
+/// Sharded, capacity-bounded map `(min_id, max_id) → distance`.
+///
+/// `Sync`: lookups and inserts take a per-shard mutex; counters are
+/// relaxed atomics.  Shared by reference across the distance builder's
+/// worker threads and across MAHC iterations.
+pub struct PairCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Maximum entries per shard (capacity_bytes / ENTRY_BYTES, split
+    /// evenly; at least one so the cache is never pathological).
+    per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PairCache {
+    /// Cache bounded to roughly `capacity_bytes` of resident distance
+    /// state ([`ENTRY_BYTES`] per pair).
+    pub fn with_capacity_bytes(capacity_bytes: usize) -> PairCache {
+        let total_entries = (capacity_bytes / ENTRY_BYTES).max(SHARDS);
+        let per_shard = (total_entries / SHARDS).max(1);
+        // Shards grow lazily: the FIFO bound enforces the budget, so
+        // preallocating the full capacity would charge the whole byte
+        // budget up front even for runs that never fill it.
+        let seed_capacity = per_shard.min(1024);
+        PairCache {
+            shards: (0..SHARDS)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::with_capacity(seed_capacity),
+                        fifo: VecDeque::with_capacity(seed_capacity),
+                    })
+                })
+                .collect(),
+            per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Symmetric pair key: order-free, unique for ids < 2³².
+    #[inline]
+    fn key(a: usize, b: usize) -> u64 {
+        debug_assert!(a != b, "diagonal pairs are implicitly zero");
+        debug_assert!(a < (1 << 32) && b < (1 << 32), "segment id exceeds u32");
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        ((lo as u64) << 32) | hi as u64
+    }
+
+    #[inline]
+    fn shard_of(key: u64) -> usize {
+        // SplitMix64-style finaliser: id pairs are highly structured,
+        // so mix before taking the shard index.
+        let mut z = key.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        (z >> 59) as usize % SHARDS
+    }
+
+    /// Look up the distance between global segment ids `a` and `b`,
+    /// counting the probe as a hit or miss.
+    pub fn get(&self, a: usize, b: usize) -> Option<f32> {
+        let key = Self::key(a, b);
+        let shard = self.shards[Self::shard_of(key)].lock().unwrap();
+        let found = shard.map.get(&key).copied();
+        drop(shard);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert the distance for `(a, b)`, evicting FIFO-oldest entries
+    /// of the shard when its capacity share is exhausted.  Re-inserting
+    /// an existing key overwrites in place (values for a pair never
+    /// differ, so this is a no-op in practice).
+    pub fn insert(&self, a: usize, b: usize, v: f32) {
+        let key = Self::key(a, b);
+        let mut shard = self.shards[Self::shard_of(key)].lock().unwrap();
+        if shard.map.insert(key, v).is_none() {
+            shard.fifo.push_back(key);
+            let mut evicted = 0u64;
+            while shard.fifo.len() > self.per_shard {
+                if let Some(old) = shard.fifo.pop_front() {
+                    shard.map.remove(&old);
+                    evicted += 1;
+                }
+            }
+            drop(shard);
+            if evicted > 0 {
+                self.evictions.fetch_add(evicted, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Number of resident pairs.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum resident pairs across all shards.
+    pub fn capacity_entries(&self) -> usize {
+        self.per_shard * SHARDS
+    }
+
+    /// Approximate resident bytes ([`ENTRY_BYTES`] accounting).
+    pub fn bytes(&self) -> usize {
+        self.len() * ENTRY_BYTES
+    }
+
+    /// Cumulative counters since construction.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.fifo.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_insert_round_trip_and_symmetry() {
+        let c = PairCache::with_capacity_bytes(1 << 20);
+        assert_eq!(c.get(3, 9), None);
+        c.insert(3, 9, 1.25);
+        assert_eq!(c.get(3, 9), Some(1.25));
+        assert_eq!(c.get(9, 3), Some(1.25), "key is order-free");
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn capacity_bound_is_enforced() {
+        // Tiny budget: SHARDS entries minimum, one per shard.
+        let c = PairCache::with_capacity_bytes(1);
+        assert_eq!(c.capacity_entries(), SHARDS);
+        for i in 0..1000usize {
+            c.insert(i, i + 1000, i as f32);
+        }
+        assert!(c.len() <= c.capacity_entries());
+        assert!(c.stats().evictions >= 1000 - SHARDS as u64);
+        assert!(c.bytes() <= c.capacity_entries() * ENTRY_BYTES);
+    }
+
+    #[test]
+    fn eviction_is_fifo_within_a_shard() {
+        let c = PairCache::with_capacity_bytes(1);
+        // Find two keys landing in the same shard; inserting per_shard+1
+        // of them must evict the oldest.
+        let base = PairCache::shard_of(PairCache::key(0, 1_000_000));
+        let mut same: Vec<usize> = Vec::new();
+        let mut i = 0usize;
+        while same.len() < 2 {
+            if PairCache::shard_of(PairCache::key(i, i + 1_000_000)) == base {
+                same.push(i);
+            }
+            i += 1;
+        }
+        c.insert(same[0], same[0] + 1_000_000, 1.0);
+        c.insert(same[1], same[1] + 1_000_000, 2.0);
+        // per_shard == 1 here: the first insert was displaced.
+        assert_eq!(c.get(same[0], same[0] + 1_000_000), None);
+        assert_eq!(c.get(same[1], same[1] + 1_000_000), Some(2.0));
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate_fifo_slots() {
+        let c = PairCache::with_capacity_bytes(1 << 20);
+        for _ in 0..100 {
+            c.insert(1, 2, 0.5);
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn concurrent_use_is_safe_and_consistent() {
+        let c = PairCache::with_capacity_bytes(1 << 20);
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let c = &c;
+                scope.spawn(move || {
+                    for i in 0..500usize {
+                        let (a, b) = (i, i + 10_000);
+                        c.insert(a, b, (a + b) as f32);
+                        assert_eq!(c.get(a, b), Some((a + b) as f32));
+                        let _ = t;
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 500);
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let c = PairCache::with_capacity_bytes(1 << 20);
+        c.insert(1, 2, 3.0);
+        let _ = c.get(1, 2);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(1, 2), None);
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+}

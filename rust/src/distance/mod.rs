@@ -8,8 +8,10 @@
 //! [`DtwBackend`] — either the native Rust DP ([`NativeBackend`]) or
 //! the AOT XLA executable (`runtime::XlaDtwBackend`) — in parallel.
 
+pub mod cache;
 pub mod condensed;
 
+pub use cache::PairCache;
 pub use condensed::Condensed;
 
 use crate::corpus::Segment;
@@ -89,10 +91,25 @@ impl DtwBackend for NativeBackend {
         let mut out = Vec::with_capacity(xs.len() * ys.len());
         match self.band {
             Some(b) => {
+                // Same Transposed/DtwScratch treatment as the unbanded
+                // path: transpose each Y once per call, reuse one
+                // scratch — zero allocation in the pair loop.
+                let yts: Vec<crate::dtw::classic::Transposed> = ys
+                    .iter()
+                    .map(|y| {
+                        crate::dtw::classic::Transposed::from_row_major(&y.feats, y.dim, y.len)
+                    })
+                    .collect();
+                let mut scratch = crate::dtw::classic::DtwScratch::new();
                 for x in xs {
-                    for y in ys {
-                        out.push(crate::dtw::dtw_banded(
-                            &x.feats, &y.feats, x.dim, x.len, y.len, b,
+                    for yt in &yts {
+                        out.push(crate::dtw::classic::dtw_banded_transposed(
+                            &x.feats,
+                            x.dim,
+                            x.len,
+                            yt,
+                            b,
+                            &mut scratch,
                         ));
                     }
                 }
@@ -183,6 +200,117 @@ pub fn build_condensed(
     Ok(cond)
 }
 
+/// [`build_condensed`] with a cross-iteration [`PairCache`] above the
+/// backend: only cache-miss pairs reach `backend.pairwise`.
+///
+/// `cache = None` is exactly [`build_condensed`].  With a cache, each
+/// row block first probes every triangle pair by *global segment id*
+/// ([`Segment::id`]); fully-cold blocks fall back to the same single
+/// rectangle dispatch as the uncached builder (so cold-path batching is
+/// unchanged), fully-warm blocks touch the backend not at all, and
+/// partially-warm blocks compute one row-shaped request per row that
+/// still has gaps.  Because a cached value is the value the backend
+/// would return for that pair (the native backend is batch-shape
+/// independent), the resulting matrix is bitwise identical to the
+/// uncached build regardless of cache state.
+pub fn build_condensed_cached(
+    segments: &[&Segment],
+    backend: &dyn DtwBackend,
+    threads: usize,
+    cache: Option<&PairCache>,
+) -> anyhow::Result<Condensed> {
+    let Some(cache) = cache else {
+        return build_condensed(segments, backend, threads);
+    };
+    let n = segments.len();
+    let mut cond = Condensed::zeros(n);
+    if n < 2 {
+        return Ok(cond);
+    }
+
+    let block = backend.preferred_rows().max(1);
+    let nblocks = (n - 1).div_ceil(block);
+    type BlockRows = (usize, Vec<Vec<f32>>);
+    let rows: Vec<anyhow::Result<BlockRows>> = parallel_map(nblocks, threads, |b| {
+        let i0 = 1 + b * block;
+        let i1 = (i0 + block).min(n);
+
+        // Probe every triangle pair of the block up front.
+        let mut vals: Vec<Vec<f32>> = Vec::with_capacity(i1 - i0);
+        let mut missing: Vec<Vec<usize>> = Vec::with_capacity(i1 - i0);
+        let (mut any_hit, mut any_miss) = (false, false);
+        for i in i0..i1 {
+            let mut row = vec![0.0f32; i];
+            let mut miss = Vec::new();
+            for (j, slot) in row.iter_mut().enumerate() {
+                match cache.get(segments[i].id, segments[j].id) {
+                    Some(v) => {
+                        *slot = v;
+                        any_hit = true;
+                    }
+                    None => {
+                        miss.push(j);
+                        any_miss = true;
+                    }
+                }
+            }
+            vals.push(row);
+            missing.push(miss);
+        }
+
+        if !any_miss {
+            return Ok((i0, vals));
+        }
+        if !any_hit {
+            // Cold block: identical batching to the uncached builder —
+            // one rectangle dispatch — then publish every pair.
+            let xs: Vec<&Segment> = segments[i0..i1].to_vec();
+            let ys: Vec<&Segment> = segments[..i1].to_vec();
+            let d = backend.pairwise(&xs, &ys)?;
+            let width = i1;
+            for i in i0..i1 {
+                let src = &d[(i - i0) * width..(i - i0) * width + i];
+                for (j, &v) in src.iter().enumerate() {
+                    vals[i - i0][j] = v;
+                    cache.insert(segments[i].id, segments[j].id, v);
+                }
+            }
+            return Ok((i0, vals));
+        }
+        // Partially warm: compute only the gaps, one request per row.
+        for (r, miss) in missing.iter().enumerate() {
+            if miss.is_empty() {
+                continue;
+            }
+            let i = i0 + r;
+            let ys: Vec<&Segment> = miss.iter().map(|&j| segments[j]).collect();
+            let d = backend.pairwise(&segments[i..i + 1], &ys)?;
+            anyhow::ensure!(
+                d.len() == ys.len(),
+                "backend returned {} distances for {} pairs",
+                d.len(),
+                ys.len()
+            );
+            for (&j, &v) in miss.iter().zip(&d) {
+                vals[r][j] = v;
+                cache.insert(segments[i].id, segments[j].id, v);
+            }
+        }
+        Ok((i0, vals))
+    });
+
+    for r in rows {
+        let (i0, vals) = r?;
+        for (r_idx, row) in vals.into_iter().enumerate() {
+            let i = i0 + r_idx;
+            for (j, v) in row.into_iter().enumerate() {
+                cond.set(i, j, v);
+            }
+        }
+    }
+    Ok(cond)
+}
+
 /// Cross-set distance matrix (rows = xs, cols = ys), parallel over
 /// row blocks of the backend's preferred size.
 pub fn build_cross(
@@ -197,6 +325,111 @@ pub fn build_cross(
         let i0 = b * block;
         let i1 = (i0 + block).min(xs.len());
         backend.pairwise(&xs[i0..i1], ys)
+    });
+    let mut out = Vec::with_capacity(xs.len() * ys.len());
+    for r in rows {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+/// [`build_cross`] with the same [`PairCache`] policy as
+/// [`build_condensed_cached`].  Pairs where both sides carry the same
+/// global id (possible when `xs` and `ys` overlap) bypass the cache and
+/// are always computed, so the symmetric `(min, max)` key stays
+/// well-defined.
+///
+/// API parity for the cross builder: the MAHC driver itself only needs
+/// condensed builds today, so like [`build_cross`] this has no caller
+/// on the iteration path — external workloads (e.g. nearest-medoid
+/// assignment of out-of-sample segments) are the intended consumers.
+pub fn build_cross_cached(
+    xs: &[&Segment],
+    ys: &[&Segment],
+    backend: &dyn DtwBackend,
+    threads: usize,
+    cache: Option<&PairCache>,
+) -> anyhow::Result<Vec<f32>> {
+    let Some(cache) = cache else {
+        return build_cross(xs, ys, backend, threads);
+    };
+    if xs.is_empty() || ys.is_empty() {
+        return Ok(Vec::new());
+    }
+    let block = backend.preferred_rows().max(1);
+    let nblocks = xs.len().div_ceil(block);
+    let rows: Vec<anyhow::Result<Vec<f32>>> = parallel_map(nblocks, threads, |b| {
+        let i0 = b * block;
+        let i1 = (i0 + block).min(xs.len());
+        let ny = ys.len();
+        let mut vals = vec![0.0f32; (i1 - i0) * ny];
+        let mut missing: Vec<Vec<usize>> = Vec::with_capacity(i1 - i0);
+        let (mut any_hit, mut any_miss) = (false, false);
+        for i in i0..i1 {
+            let mut miss = Vec::new();
+            for (j, y) in ys.iter().enumerate() {
+                let cached = if xs[i].id == y.id {
+                    None
+                } else {
+                    cache.get(xs[i].id, y.id)
+                };
+                match cached {
+                    Some(v) => {
+                        vals[(i - i0) * ny + j] = v;
+                        any_hit = true;
+                    }
+                    None => {
+                        miss.push(j);
+                        any_miss = true;
+                    }
+                }
+            }
+            missing.push(miss);
+        }
+
+        if !any_miss {
+            return Ok(vals);
+        }
+        if !any_hit {
+            // Cold block: one rectangle dispatch, as build_cross does.
+            let d = backend.pairwise(&xs[i0..i1], ys)?;
+            anyhow::ensure!(
+                d.len() == (i1 - i0) * ny,
+                "backend returned {} distances for {} pairs",
+                d.len(),
+                (i1 - i0) * ny
+            );
+            for i in i0..i1 {
+                for (j, y) in ys.iter().enumerate() {
+                    let v = d[(i - i0) * ny + j];
+                    if xs[i].id != y.id {
+                        cache.insert(xs[i].id, y.id, v);
+                    }
+                }
+            }
+            return Ok(d);
+        }
+        for (r, miss) in missing.iter().enumerate() {
+            if miss.is_empty() {
+                continue;
+            }
+            let i = i0 + r;
+            let sub: Vec<&Segment> = miss.iter().map(|&j| ys[j]).collect();
+            let d = backend.pairwise(&xs[i..i + 1], &sub)?;
+            anyhow::ensure!(
+                d.len() == sub.len(),
+                "backend returned {} distances for {} pairs",
+                d.len(),
+                sub.len()
+            );
+            for (&j, &v) in miss.iter().zip(&d) {
+                vals[r * ny + j] = v;
+                if xs[i].id != ys[j].id {
+                    cache.insert(xs[i].id, ys[j].id, v);
+                }
+            }
+        }
+        Ok(vals)
     });
     let mut out = Vec::with_capacity(xs.len() * ys.len());
     for r in rows {
@@ -263,6 +496,92 @@ mod tests {
             refs[5].len,
         );
         assert_eq!(m[1 * 4 + 2], want);
+    }
+
+    #[test]
+    fn cached_condensed_matches_uncached_across_states() {
+        let set = generate(&DatasetSpec::tiny(30, 4, 7));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        let want = build_condensed(&refs, &backend, 3).unwrap();
+
+        // Cold, warm, and byte-starved (evicting) caches all reproduce
+        // the uncached matrix bit for bit.
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        let cold = build_condensed_cached(&refs, &backend, 3, Some(&cache)).unwrap();
+        assert_eq!(cold.as_slice(), want.as_slice());
+        let warm = build_condensed_cached(&refs, &backend, 3, Some(&cache)).unwrap();
+        assert_eq!(warm.as_slice(), want.as_slice());
+        let stats = cache.stats();
+        assert_eq!(stats.hits as usize, want.len(), "warm pass fully served");
+
+        let tiny = PairCache::with_capacity_bytes(1); // forces eviction
+        for _ in 0..3 {
+            let got = build_condensed_cached(&refs, &backend, 2, Some(&tiny)).unwrap();
+            assert_eq!(got.as_slice(), want.as_slice());
+        }
+        assert!(tiny.stats().evictions > 0, "tiny budget must evict");
+
+        // None delegates to the plain builder.
+        let none = build_condensed_cached(&refs, &backend, 3, None).unwrap();
+        assert_eq!(none.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn cached_partial_warm_blocks_fill_gaps() {
+        // Pre-seed the cache with a *subset* of rows' pairs so blocks
+        // are partially warm, exercising the per-row gap path.
+        let set = generate(&DatasetSpec::tiny(24, 3, 8));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        let want = build_condensed(&refs, &backend, 2).unwrap();
+
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        for i in 1..refs.len() {
+            for j in 0..i {
+                if (i + j) % 3 == 0 {
+                    cache.insert(refs[i].id, refs[j].id, want.get(i, j));
+                }
+            }
+        }
+        let got = build_condensed_cached(&refs, &backend, 2, Some(&cache)).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice());
+        assert!(cache.stats().hits > 0);
+        assert!(cache.stats().misses > 0);
+    }
+
+    #[test]
+    fn cached_cross_matches_uncached_and_skips_self_pairs() {
+        let set = generate(&DatasetSpec::tiny(20, 3, 9));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        // Overlapping xs/ys: shared segments have equal ids, which must
+        // bypass the cache rather than hit the symmetric-key assert.
+        let (xs, ys) = (&refs[..8], &refs[4..16]);
+        let want = build_cross(xs, ys, &backend, 2).unwrap();
+
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        let cold = build_cross_cached(xs, ys, &backend, 2, Some(&cache)).unwrap();
+        assert_eq!(cold, want);
+        let warm = build_cross_cached(xs, ys, &backend, 2, Some(&cache)).unwrap();
+        assert_eq!(warm, want);
+        let none = build_cross_cached(xs, ys, &backend, 2, None).unwrap();
+        assert_eq!(none, want);
+    }
+
+    #[test]
+    fn cached_condensed_thread_count_invariant() {
+        let set = generate(&DatasetSpec::tiny(26, 3, 10));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        let want = build_condensed(&refs, &backend, 1).unwrap();
+        for threads in [1usize, 2, 8] {
+            let cache = PairCache::with_capacity_bytes(1 << 18);
+            let a = build_condensed_cached(&refs, &backend, threads, Some(&cache)).unwrap();
+            let b = build_condensed_cached(&refs, &backend, threads, Some(&cache)).unwrap();
+            assert_eq!(a.as_slice(), want.as_slice(), "threads={threads}");
+            assert_eq!(b.as_slice(), want.as_slice(), "threads={threads}");
+        }
     }
 
     #[test]

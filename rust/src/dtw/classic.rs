@@ -12,16 +12,13 @@
 /// "no path".
 pub const INFEASIBLE: f32 = 1.0e28;
 
-#[inline]
+/// Frame distance ||x − y||, used by tests as the scalar oracle for the
+/// row-vectorised fills.  The zip-fold accumulation order is the
+/// contract: both the unbanded and banded band fills sum squared
+/// differences in the same `d` order, so their sums are bitwise equal
+/// to this fold (see EXPERIMENTS.md §Perf).
+#[cfg(test)]
 fn frame_dist(x: &[f32], y: &[f32]) -> f32 {
-    sq_dist(x, y).sqrt()
-}
-
-/// Squared Euclidean distance.  The zip-fold autovectorises well under
-/// LLVM (measured faster than a manual 4-accumulator unroll on this
-/// target — see EXPERIMENTS.md §Perf).
-#[inline]
-fn sq_dist(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
     x.iter()
         .zip(y)
@@ -29,7 +26,8 @@ fn sq_dist(x: &[f32], y: &[f32]) -> f32 {
             let d = a - b;
             d * d
         })
-        .sum()
+        .sum::<f32>()
+        .sqrt()
 }
 
 /// Normalised DTW distance between two flat `(len, dim)` sequences.
@@ -170,9 +168,51 @@ pub fn dtw_transposed(
 }
 
 fn dtw_banded_impl(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band: usize) -> f32 {
+    let yt = Transposed::from_row_major(y, dim, ly);
+    let mut scratch = DtwScratch::new();
+    dtw_banded_transposed(x, dim, lx, &yt, band, &mut scratch)
+}
+
+/// Banded DTW with the same [`Transposed`]/[`DtwScratch`] treatment as
+/// [`dtw_transposed`]: the band slice of the local-distance row fills
+/// with vector FMAs across j and the DP reuses the scratch rows, so the
+/// pair loop allocates nothing.  Semantics — including the [`INFEASIBLE`]
+/// sentinel and f32 summation order — are identical to the historical
+/// two-`Vec`-per-pair implementation (pinned by tests), so cached and
+/// uncached banded builds stay bitwise comparable.
+pub fn dtw_banded_transposed(
+    x: &[f32],
+    dim: usize,
+    lx: usize,
+    yt: &Transposed,
+    band: usize,
+    scratch: &mut DtwScratch,
+) -> f32 {
     const BIG: f32 = 1.0e30;
-    let mut prev = vec![BIG; ly];
-    let mut cur = vec![BIG; ly];
+    let ly = yt.len;
+    debug_assert_eq!(dim, yt.dim);
+    assert!(lx >= 1 && ly >= 1, "empty sequence");
+    scratch.resize(ly);
+    let DtwScratch { dist, prev, cur } = scratch;
+
+    // Band slice of the local-distance row for x frame i:
+    // dist[j] = ||x_i − y_j|| for j in [j_lo, j_hi).  Accumulation
+    // order over d matches `frame_dist`'s fold, so sums are bitwise
+    // equal to the scalar path.
+    let fill_band = |dist: &mut [f32], xi: &[f32], j_lo: usize, j_hi: usize| {
+        let dw = &mut dist[j_lo..j_hi];
+        dw.fill(0.0);
+        for (d, &xv) in xi.iter().enumerate() {
+            let yrow = &yt.dim_row(d)[j_lo..j_hi];
+            for (acc, &yv) in dw.iter_mut().zip(yrow) {
+                let t = xv - yv;
+                *acc += t * t; // vector FMA across j
+            }
+        }
+        for v in dw.iter_mut() {
+            *v = v.sqrt(); // vector sqrt across j
+        }
+    };
 
     for i in 0..lx {
         let xi = &x[i * dim..(i + 1) * dim];
@@ -181,8 +221,14 @@ fn dtw_banded_impl(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band:
         for v in cur.iter_mut() {
             *v = BIG;
         }
+        if j_lo >= j_hi {
+            // Band left the matrix entirely: no reachable cell this row.
+            std::mem::swap(prev, cur);
+            continue;
+        }
+        fill_band(dist, xi, j_lo, j_hi);
         for j in j_lo..j_hi {
-            let d = frame_dist(xi, &y[j * dim..(j + 1) * dim]);
+            let d = dist[j];
             let best = if i == 0 && j == 0 {
                 0.0
             } else {
@@ -200,7 +246,7 @@ fn dtw_banded_impl(x: &[f32], y: &[f32], dim: usize, lx: usize, ly: usize, band:
             };
             cur[j] = if best >= BIG { BIG } else { d + best };
         }
-        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(prev, cur);
     }
 
     let total = prev[ly - 1];
@@ -311,5 +357,74 @@ mod tests {
     #[should_panic]
     fn empty_sequence_panics() {
         dtw(&[], &[1.0], 1, 0, 1);
+    }
+
+    /// Deterministic multi-dim test sequences of assorted lengths.
+    fn multidim_seqs(dim: usize) -> Vec<(Vec<f32>, usize)> {
+        [3usize, 5, 9, 12]
+            .iter()
+            .map(|&len| {
+                let feats: Vec<f32> = (0..len * dim)
+                    .map(|k| ((k * 7 + len) as f32 * 0.31).sin() * 2.0)
+                    .collect();
+                (feats, len)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn banded_scratch_reuse_bitwise_matches_one_shot() {
+        // One scratch shared across pairs of different shapes must give
+        // exactly the per-pair-allocating API's results — this is the
+        // NativeBackend::banded hot-path contract.
+        let dim = 3;
+        let seqs = multidim_seqs(dim);
+        let mut scratch = DtwScratch::new();
+        for (xf, lx) in &seqs {
+            for (yf, ly) in &seqs {
+                let yt = Transposed::from_row_major(yf, dim, *ly);
+                for band in [0usize, 2, 100] {
+                    let shared = dtw_banded_transposed(xf, dim, *lx, &yt, band, &mut scratch);
+                    let fresh = dtw_banded(xf, yf, dim, *lx, *ly, band);
+                    assert_eq!(shared.to_bits(), fresh.to_bits(), "band {band}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_wide_band_matches_unbanded_multidim() {
+        let dim = 3;
+        let seqs = multidim_seqs(dim);
+        for (xf, lx) in &seqs {
+            for (yf, ly) in &seqs {
+                let full = dtw(xf, yf, dim, *lx, *ly);
+                let banded = dtw_banded(xf, yf, dim, *lx, *ly, 64);
+                assert!(
+                    (full - banded).abs() < 1e-5,
+                    "full {full} vs banded {banded}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn banded_band_fill_matches_frame_dist_oracle() {
+        // The vectorised band fill must agree with the scalar frame
+        // distance bit for bit (same accumulation order over d).
+        let dim = 4;
+        let x: Vec<f32> = (0..dim).map(|d| d as f32 * 0.7 - 1.0).collect();
+        let y: Vec<f32> = (0..3 * dim).map(|k| (k as f32 * 0.13).cos()).collect();
+        let yt = Transposed::from_row_major(&y, dim, 3);
+        // Degenerate 1-frame x against 3-frame y with a full band: the
+        // DP total is min over a monotone path; with lx=1 the path must
+        // visit every j, so the result is Σ_j d(x, y_j) / 4.
+        let mut scratch = DtwScratch::new();
+        let got = dtw_banded_transposed(&x, dim, 1, &yt, 8, &mut scratch);
+        let want: f32 = (0..3)
+            .map(|j| frame_dist(&x, &y[j * dim..(j + 1) * dim]))
+            .sum::<f32>()
+            / 4.0;
+        assert_eq!(got.to_bits(), want.to_bits());
     }
 }

@@ -28,13 +28,24 @@
 //! | [`corpus`] | synthetic TIMIT-like triphone segment corpus (see DESIGN.md §5) |
 //! | [`dtw`] | native DTW reference backend (classic + Sakoe-Chiba band) |
 //! | [`runtime`] | PJRT client wrapper: artifact registry + executable cache |
-//! | [`distance`] | condensed distance-matrix builder over pluggable backends |
+//! | [`distance`] | condensed distance-matrix builder over pluggable backends + the cross-iteration pair cache |
 //! | [`ahc`] | Ward NN-chain AHC, dendrogram, L-method, medoids |
 //! | [`mahc`] | the paper's contribution: MAHC+M iterative coordinator |
 //! | [`metrics`] | F-measure, purity, NMI |
 //! | [`telemetry`] | per-iteration history records + CSV/JSON emitters |
 //! | [`baselines`] | full AHC and MAHC-without-management baselines |
 //! | [`figures`] | regeneration harness for every paper table/figure |
+
+// Style lints that fight deliberate choices in this crate: inherent
+// `to_string` on the serialisers (no Display round-trip intended),
+// explicit Default impls kept next to their constructors, test-local
+// config mutation, and the builder's block-result tuples.
+#![allow(
+    clippy::inherent_to_string,
+    clippy::derivable_impls,
+    clippy::field_reassign_with_default,
+    clippy::type_complexity
+)]
 
 pub mod ahc;
 pub mod baselines;

@@ -8,9 +8,9 @@ use super::stage::{run_stage1, SubsetOutcome};
 use crate::ahc;
 use crate::config::{AlgoConfig, Convergence, FinalK};
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed, DtwBackend};
+use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{IterationRecord, RunHistory};
+use crate::telemetry::{CacheStats, IterationRecord, RunHistory};
 use crate::util::rng::Rng;
 
 /// Final output of a clustering run.
@@ -58,6 +58,15 @@ impl<'a> MahcDriver<'a> {
         let algo_name = if cfg.beta.is_some() { "mahc+m" } else { "mahc" };
         let mut history = RunHistory::new(&self.set.name, algo_name);
 
+        // Cross-iteration DTW pair cache (the time-side dual of β's
+        // space bound — see `distance::cache`).  One cache per run:
+        // refine keeps stage-1 cluster members together, so recurring
+        // within-subset and medoid pairs are served from here instead
+        // of the backend from iteration 2 onwards.
+        let cache = (cfg.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(cfg.cache_bytes));
+        let cache = cache.as_ref();
+        let mut cache_snapshot = CacheStats::default();
+
         let mut rng = Rng::seed_from(cfg.seed);
         let mut subsets = initial_partition(n, cfg.p0, &mut rng);
         // If β is already violated by the initial division, enforce it
@@ -90,6 +99,7 @@ impl<'a> MahcDriver<'a> {
                 self.backend,
                 cfg.threads,
                 cfg.max_clusters_frac,
+                cache,
             )?;
             let total_clusters: usize = outcomes.iter().map(|o| o.k).sum();
             first_stage_total.get_or_insert(total_clusters);
@@ -99,7 +109,19 @@ impl<'a> MahcDriver<'a> {
             // the per-iteration evaluation clustering (steps 13-15 as
             // if concluding now — the F the paper plots), the final
             // clustering, and the refine grouping (step 7).
-            let stage2 = MedoidStage::build(self.set, &outcomes, self.backend, cfg.threads)?;
+            let stage2 =
+                MedoidStage::build(self.set, &outcomes, self.backend, cfg.threads, cache)?;
+
+            // Per-iteration cache counter movement (zeros when off).
+            let cache_iter = match cache {
+                Some(c) => {
+                    let now = c.stats();
+                    let delta = now.delta(&cache_snapshot);
+                    cache_snapshot = now;
+                    delta
+                }
+                None => CacheStats::default(),
+            };
 
             // Evaluation / conclusion clustering: K = ΣKⱼ (paper §5
             // validates the first-stage total as the final K estimate).
@@ -130,6 +152,7 @@ impl<'a> MahcDriver<'a> {
                     f_measure: f,
                     wall: t0.elapsed(),
                     peak_matrix_bytes: stage1_bytes.max(stage2.bytes),
+                    cache: cache_iter,
                 });
                 final_labels = labels_iter;
                 final_k = k_iter;
@@ -166,6 +189,7 @@ impl<'a> MahcDriver<'a> {
                 f_measure: f,
                 wall: t0.elapsed(),
                 peak_matrix_bytes: stage1_bytes.max(stage2.bytes),
+                cache: cache_iter,
             });
 
             prev_p = p_i;
@@ -202,6 +226,7 @@ impl MedoidStage {
         outcomes: &[SubsetOutcome],
         backend: &dyn DtwBackend,
         threads: usize,
+        cache: Option<&PairCache>,
     ) -> anyhow::Result<MedoidStage> {
         let medoid_ids: Vec<usize> = outcomes
             .iter()
@@ -214,9 +239,11 @@ impl MedoidStage {
         debug_assert_eq!(medoid_ids.len(), clusters_members.len());
         anyhow::ensure!(!medoid_ids.is_empty(), "no medoids from stage 1");
 
+        // Medoids recur across iterations (a settled subset re-elects
+        // the same representatives), so stage 2 reuses the same cache.
         let medoid_segs: Vec<&Segment> =
             medoid_ids.iter().map(|&i| &set.segments[i]).collect();
-        let cond = build_condensed(&medoid_segs, backend, threads)?;
+        let cond = build_condensed_cached(&medoid_segs, backend, threads, cache)?;
         let bytes = cond.bytes();
         let dendro = ahc::ward_linkage(&cond);
         Ok(MedoidStage {
@@ -371,6 +398,43 @@ mod tests {
         let b = run(cfg, 70, 4, 27);
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.k, b.k);
+    }
+
+    #[test]
+    fn cache_changes_nothing_but_serves_hits() {
+        let cfg = AlgoConfig {
+            p0: 3,
+            beta: Some(30),
+            convergence: Convergence::FixedIters(4),
+            ..Default::default()
+        };
+        let plain = run(cfg.clone(), 90, 5, 31);
+        let cached = run(
+            AlgoConfig {
+                cache_bytes: 8 << 20,
+                ..cfg
+            },
+            90,
+            5,
+            31,
+        );
+        // Identical clustering, bit for bit.
+        assert_eq!(plain.labels, cached.labels);
+        assert_eq!(plain.k, cached.k);
+        assert_eq!(plain.f_measure, cached.f_measure);
+        // The plain run reports a silent cache; the cached run reports
+        // probes and, from iteration 2 on, reuse.
+        assert_eq!(plain.history.cache_total().hits, 0);
+        assert_eq!(plain.history.cache_total().misses, 0);
+        let total = cached.history.cache_total();
+        assert!(total.misses > 0);
+        assert!(total.hits > 0, "recurring pairs must be served from cache");
+        assert!(
+            cached.history.records[1..]
+                .iter()
+                .any(|r| r.cache.hits > 0),
+            "later iterations see warm pairs"
+        );
     }
 
     #[test]

@@ -66,15 +66,27 @@ pub fn split_oversized(
 /// Merge ablation: absorb subsets smaller than `min_size` into the
 /// smallest other subset (keeping the β bound if one is given).
 /// Returns the number of merges performed.
+///
+/// A subset that fits nowhere under β is *set aside* and the scan
+/// continues with the remaining small subsets — the historical
+/// implementation pushed it back and returned immediately, silently
+/// skipping every other candidate still in the queue.  Unmergeable
+/// subsets rejoin the pool at the end, so membership is preserved and
+/// they stay visible to the next iteration's refine step.
 pub fn merge_small(
     subsets: &mut Vec<Vec<usize>>,
     min_size: usize,
     beta: Option<usize>,
 ) -> usize {
     let mut merges = 0;
+    // Subsets proven unmergeable this pass.  They are withheld from
+    // further selection (retrying them cannot succeed: candidate
+    // targets only grow) but remain valid merge *inputs* conceptually —
+    // appending them back at the end keeps the function idempotent.
+    let mut unmergeable: Vec<Vec<usize>> = Vec::new();
     loop {
         if subsets.len() < 2 {
-            return merges;
+            break;
         }
         // Find the smallest subset below the threshold.
         let (idx, len) = match subsets
@@ -84,10 +96,10 @@ pub fn merge_small(
             .min_by_key(|&(_, l)| l)
         {
             Some(x) => x,
-            None => return merges,
+            None => break,
         };
         if len >= min_size {
-            return merges;
+            break;
         }
         let small = subsets.swap_remove(idx);
         // Merge into the now-smallest subset that stays within β.
@@ -106,12 +118,14 @@ pub fn merge_small(
                 merges += 1;
             }
             None => {
-                // No target fits within β: put it back and stop.
-                subsets.push(small);
-                return merges;
+                // No target fits within β: set this one aside and keep
+                // scanning the other small subsets.
+                unmergeable.push(small);
             }
         }
     }
+    subsets.append(&mut unmergeable);
+    merges
 }
 
 #[cfg(test)]
@@ -191,6 +205,31 @@ mod tests {
         let merges = merge_small(&mut subsets, 5, Some(40));
         assert_eq!(merges, 0);
         assert_eq!(subsets.len(), 3);
+    }
+
+    #[test]
+    fn merge_continues_past_unmergeable_subsets() {
+        // Two unmergeable smalls (nothing fits under β=6) plus one
+        // mergeable pair: the scan must process all of them instead of
+        // aborting at the first failure, and every member must survive.
+        let mut subsets = vec![
+            subset(0..6),   // full
+            subset(6..11),  // 5 — would breach β with any small
+            subset(11..15), // 4 — unmergeable (4+4=8, 4+2=6 ≤ β merges!)
+            subset(15..19), // 4 — unmergeable after the 2 is absorbed
+            subset(19..21), // 2 — merges into a 4 (4+2=6 ≤ β)
+        ];
+        let merges = merge_small(&mut subsets, 5, Some(6));
+        assert_eq!(merges, 1, "only the pair fits anywhere under β");
+        // Membership preserved exactly.
+        let mut all: Vec<usize> = subsets.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..21).collect::<Vec<_>>());
+        // The unmergeable 4 survived as its own subset (not dropped by
+        // an early abort) and the 2 was absorbed somewhere.
+        let mut sizes: Vec<usize> = subsets.iter().map(|s| s.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![4, 5, 6, 6]);
     }
 
     #[test]

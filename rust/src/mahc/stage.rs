@@ -4,7 +4,7 @@
 
 use crate::ahc;
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed, DtwBackend};
+use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
 use crate::util::pool::parallel_map;
 
 /// Result of clustering one subset.
@@ -43,10 +43,11 @@ pub fn run_stage1(
     backend: &dyn DtwBackend,
     threads: usize,
     max_clusters_frac: f64,
+    cache: Option<&PairCache>,
 ) -> anyhow::Result<Vec<SubsetOutcome>> {
     let results: Vec<anyhow::Result<SubsetOutcome>> =
         parallel_map(subsets.len(), threads, |s| {
-            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac)
+            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac, cache)
         });
     results.into_iter().collect()
 }
@@ -56,11 +57,14 @@ fn cluster_one_subset(
     ids: &[usize],
     backend: &dyn DtwBackend,
     max_clusters_frac: f64,
+    cache: Option<&PairCache>,
 ) -> anyhow::Result<SubsetOutcome> {
     let refs: Vec<&Segment> = ids.iter().map(|&i| &set.segments[i]).collect();
     // Distance build is itself single-threaded here: parallelism is
     // across subsets (matching the paper's "in parallel" stage 1).
-    let cond = build_condensed(&refs, backend, 1)?;
+    // Pairs kept together by the refine step hit the cross-iteration
+    // cache and never reach the backend again.
+    let cond = build_condensed_cached(&refs, backend, 1, cache)?;
     let max_k = ((ids.len() as f64 * max_clusters_frac).ceil() as usize).max(2);
     let clustering = ahc::cluster_subset(&cond, max_k, None);
     let medoid_ids = clustering
@@ -107,7 +111,7 @@ mod tests {
     fn outcomes_cover_subsets() {
         let set = generate(&DatasetSpec::tiny(60, 4, 11));
         let subsets = vec![(0..30).collect::<Vec<_>>(), (30..60).collect::<Vec<_>>()];
-        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 2, 0.4).unwrap();
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 2, 0.4, None).unwrap();
         assert_eq!(out.len(), 2);
         for (o, s) in out.iter().zip(&subsets) {
             assert_eq!(&o.ids, s);
@@ -126,7 +130,7 @@ mod tests {
     fn cluster_members_partition_ids() {
         let set = generate(&DatasetSpec::tiny(40, 3, 12));
         let subsets = vec![(0..40).collect::<Vec<_>>()];
-        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4).unwrap();
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4, None).unwrap();
         let members = out[0].cluster_members();
         let mut all: Vec<usize> = members.concat();
         all.sort_unstable();
@@ -142,7 +146,7 @@ mod tests {
             (20..35).collect::<Vec<_>>(),
             (35..50).collect::<Vec<_>>(),
         ];
-        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 3, 0.4).unwrap();
+        let out = run_stage1(&set, &subsets, &NativeBackend::new(), 3, 0.4, None).unwrap();
         let (labels, k) = global_labels(50, &out);
         assert_eq!(labels.len(), 50);
         assert_eq!(k, out.iter().map(|o| o.k).sum::<usize>());
@@ -160,8 +164,8 @@ mod tests {
             (16..32).collect::<Vec<_>>(),
             (32..48).collect::<Vec<_>>(),
         ];
-        let a = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4).unwrap();
-        let b = run_stage1(&set, &subsets, &NativeBackend::new(), 4, 0.4).unwrap();
+        let a = run_stage1(&set, &subsets, &NativeBackend::new(), 1, 0.4, None).unwrap();
+        let b = run_stage1(&set, &subsets, &NativeBackend::new(), 4, 0.4, None).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.labels, y.labels);
             assert_eq!(x.medoid_ids, y.medoid_ids);

@@ -29,7 +29,7 @@ use mahc::util::cli::Args;
 
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
-    "algo", "artifacts", "out", "config", "merge-min",
+    "algo", "artifacts", "out", "config", "merge-min", "cache-mb",
 ];
 
 fn main() {
@@ -51,6 +51,7 @@ fn run() -> anyhow::Result<()> {
             eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|xla] [--threads N] [--seed N] [--out FILE]");
+            eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -86,6 +87,9 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     }
     if let Some(m) = args.get_parsed::<usize>("merge-min")? {
         cfg.merge_min = Some(m);
+    }
+    if let Some(mb) = args.get_parsed::<usize>("cache-mb")? {
+        cfg.cache_bytes = mb << 20;
     }
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
@@ -146,6 +150,7 @@ fn cluster_with(
         }
         "mahc" | "mahc+m" => {
             let mut cfg = cfg;
+            let cache_on = cfg.cache_bytes > 0;
             if algo == "mahc" {
                 cfg.beta = None;
             } else if cfg.beta.is_none() {
@@ -175,6 +180,17 @@ fn cluster_with(
                 res.f_measure,
                 res.history.peak_bytes() as f64 / (1 << 20) as f64
             );
+            if cache_on {
+                let t = res.history.cache_total();
+                println!(
+                    "cache: {:.1}% of pair distances served from cache \
+                     ({} hits, {} misses, {} evictions)",
+                    t.hit_rate() * 100.0,
+                    t.hits,
+                    t.misses,
+                    t.evictions
+                );
+            }
             if let Some(path) = args.get("out") {
                 std::fs::write(path, res.history.to_json().to_string())?;
                 eprintln!("wrote {path}");

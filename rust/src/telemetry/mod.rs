@@ -9,6 +9,51 @@
 use crate::util::json::{self, Json};
 use std::time::Duration;
 
+/// Counters of the cross-iteration DTW pair cache
+/// ([`crate::distance::PairCache`]).  A value is either a cumulative
+/// snapshot (as [`crate::distance::PairCache::stats`] returns) or a
+/// per-iteration delta (as stored on [`IterationRecord`]) — the
+/// [`CacheStats::delta`] helper converts the former into the latter.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Pair lookups answered from the cache.
+    pub hits: u64,
+    /// Pair lookups that fell through to the DTW backend.
+    pub misses: u64,
+    /// Entries displaced by the capacity bound.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Counter movement since an `earlier` snapshot.
+    pub fn delta(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+
+    /// Fraction of lookups served from the cache (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("hits", json::num(self.hits as f64)),
+            ("misses", json::num(self.misses as f64)),
+            ("evictions", json::num(self.evictions as f64)),
+            ("hit_rate", json::num(self.hit_rate())),
+        ])
+    }
+}
+
 /// Everything observable about one MAHC iteration.
 #[derive(Debug, Clone)]
 pub struct IterationRecord {
@@ -32,6 +77,9 @@ pub struct IterationRecord {
     pub wall: Duration,
     /// Peak condensed-matrix bytes across concurrent subset jobs.
     pub peak_matrix_bytes: usize,
+    /// Pair-cache counter movement during this iteration (all zero when
+    /// the cache is disabled).
+    pub cache: CacheStats,
 }
 
 impl IterationRecord {
@@ -53,6 +101,7 @@ impl IterationRecord {
                 "peak_matrix_bytes",
                 json::num(self.peak_matrix_bytes as f64),
             ),
+            ("cache", self.cache.to_json()),
         ])
     }
 }
@@ -110,6 +159,22 @@ impl RunHistory {
         self.records.iter().map(|r| r.wall.as_secs_f64()).collect()
     }
 
+    /// Per-iteration cache counters (Fig-6-style series for the cache).
+    pub fn cache_series(&self) -> Vec<CacheStats> {
+        self.records.iter().map(|r| r.cache).collect()
+    }
+
+    /// Whole-run cache counters (sum of per-iteration deltas).
+    pub fn cache_total(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for r in &self.records {
+            total.hits += r.cache.hits;
+            total.misses += r.cache.misses;
+            total.evictions += r.cache.evictions;
+        }
+        total
+    }
+
     /// Peak matrix bytes over the whole run — the memory-guarantee
     /// number the β threshold must bound.
     pub fn peak_bytes(&self) -> usize {
@@ -137,6 +202,11 @@ mod tests {
             f_measure: 0.5,
             wall: Duration::from_millis(100),
             peak_matrix_bytes: maxo * maxo * 2,
+            cache: CacheStats {
+                hits: 3,
+                misses: 7,
+                evictions: 1,
+            },
         }
     }
 
@@ -148,6 +218,36 @@ mod tests {
         assert_eq!(h.subsets_series(), vec![4, 6]);
         assert_eq!(h.max_occupancy_series(), vec![100, 80]);
         assert_eq!(h.peak_bytes(), 100 * 100 * 2);
+        let total = h.cache_total();
+        assert_eq!(total.hits, 6);
+        assert_eq!(total.misses, 14);
+        assert_eq!(total.evictions, 2);
+        assert!((total.hit_rate() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_stats_delta_and_rate() {
+        let early = CacheStats {
+            hits: 10,
+            misses: 30,
+            evictions: 1,
+        };
+        let late = CacheStats {
+            hits: 40,
+            misses: 50,
+            evictions: 4,
+        };
+        let d = late.delta(&early);
+        assert_eq!(
+            d,
+            CacheStats {
+                hits: 30,
+                misses: 20,
+                evictions: 3
+            }
+        );
+        assert!((d.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
     }
 
     #[test]

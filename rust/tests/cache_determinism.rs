@@ -1,0 +1,156 @@
+//! The pair cache's correctness contract: enabling it — at any budget,
+//! under any hit/eviction pattern, on any thread count — changes *no*
+//! output bit anywhere in the system.  Wall-clock is the only
+//! observable allowed to move.
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::{generate, Segment};
+use mahc::distance::{
+    build_condensed, build_condensed_cached, build_cross, build_cross_cached, NativeBackend,
+    PairCache,
+};
+use mahc::mahc::MahcDriver;
+
+#[test]
+fn condensed_bitwise_identical_across_cache_states_and_threads() {
+    let set = generate(&DatasetSpec::tiny(60, 5, 2024));
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = NativeBackend::new();
+    let want = build_condensed(&refs, &backend, 1).unwrap();
+
+    // Budgets from "evicts almost everything" to "holds everything";
+    // for each, repeated builds on several thread counts must reproduce
+    // the uncached matrix bit for bit whatever the cache contains.
+    for budget in [1usize, 512, 64 << 10, 8 << 20] {
+        let cache = PairCache::with_capacity_bytes(budget);
+        for threads in [1usize, 2, 4, 8] {
+            for pass in 0..3 {
+                let got =
+                    build_condensed_cached(&refs, &backend, threads, Some(&cache)).unwrap();
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "budget={budget} threads={threads} pass={pass}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn condensed_identical_with_partially_poisoned_warmth() {
+    // Warm the cache from a *different* segment subset first so a later
+    // build sees a mixture of hits, misses, and unrelated entries.
+    let set = generate(&DatasetSpec::tiny(80, 6, 2025));
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = NativeBackend::new();
+    let cache = PairCache::with_capacity_bytes(1 << 20);
+
+    let first: Vec<&Segment> = refs[..50].to_vec();
+    let overlap: Vec<&Segment> = refs[30..].to_vec();
+    let _ = build_condensed_cached(&first, &backend, 4, Some(&cache)).unwrap();
+
+    let want = build_condensed(&overlap, &backend, 1).unwrap();
+    let got = build_condensed_cached(&overlap, &backend, 4, Some(&cache)).unwrap();
+    assert_eq!(got.as_slice(), want.as_slice());
+    // The overlapping id range [30, 50) really was served from cache.
+    let s = cache.stats();
+    assert!(s.hits >= (50 - 30) * (50 - 30 - 1) / 2, "hits {}", s.hits);
+}
+
+#[test]
+fn cross_bitwise_identical_across_cache_states() {
+    let set = generate(&DatasetSpec::tiny(40, 4, 2026));
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = NativeBackend::new();
+    let (xs, ys) = (&refs[..15], &refs[10..40]);
+    let want = build_cross(xs, ys, &backend, 1).unwrap();
+    for budget in [1usize, 1 << 20] {
+        let cache = PairCache::with_capacity_bytes(budget);
+        for threads in [1usize, 3] {
+            for _ in 0..2 {
+                let got = build_cross_cached(xs, ys, &backend, threads, Some(&cache)).unwrap();
+                assert_eq!(got, want, "budget={budget} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn full_mahc_m_run_is_unchanged_by_the_cache() {
+    // The end-to-end guarantee: labels, K, F-measure, and the entire
+    // occupancy/split telemetry are identical with the cache off, amply
+    // budgeted, or starved into constant eviction.
+    let set = generate(&DatasetSpec::tiny(150, 8, 2027));
+    let backend = NativeBackend::new();
+    let base = AlgoConfig {
+        p0: 4,
+        beta: Some(50),
+        convergence: Convergence::FixedIters(4),
+        ..Default::default()
+    };
+
+    let off = MahcDriver::new(&set, base.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    for budget in [64usize, 16 << 20] {
+        let cfg = AlgoConfig {
+            cache_bytes: budget,
+            ..base.clone()
+        };
+        let on = MahcDriver::new(&set, cfg, &backend).unwrap().run().unwrap();
+        assert_eq!(on.labels, off.labels, "budget={budget}");
+        assert_eq!(on.k, off.k, "budget={budget}");
+        assert_eq!(
+            on.f_measure.to_bits(),
+            off.f_measure.to_bits(),
+            "budget={budget}"
+        );
+        for (a, b) in on.history.records.iter().zip(&off.history.records) {
+            assert_eq!(a.subsets, b.subsets, "budget={budget}");
+            assert_eq!(a.max_occupancy, b.max_occupancy, "budget={budget}");
+            assert_eq!(a.splits, b.splits, "budget={budget}");
+            assert_eq!(a.total_clusters, b.total_clusters, "budget={budget}");
+            assert_eq!(
+                a.f_measure.to_bits(),
+                b.f_measure.to_bits(),
+                "budget={budget}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ample_cache_reaches_high_hit_rate_by_iteration_three() {
+    // The perf claim behind the feature, pinned at test scale: once the
+    // subsets settle, most pair distances recur, so from iteration 3 on
+    // a comfortably-budgeted cache serves a large share of lookups.
+    let set = generate(&DatasetSpec::tiny(160, 8, 2028));
+    let backend = NativeBackend::new();
+    let cfg = AlgoConfig {
+        p0: 4,
+        beta: Some(55),
+        convergence: Convergence::FixedIters(5),
+        cache_bytes: 16 << 20,
+        ..Default::default()
+    };
+    let res = MahcDriver::new(&set, cfg, &backend).unwrap().run().unwrap();
+    assert!(res.history.records.len() >= 3);
+    let rates: Vec<f64> = res
+        .history
+        .records
+        .iter()
+        .map(|r| r.cache.hit_rate())
+        .collect();
+    let best_from_third = rates[2..].iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        best_from_third >= 0.30,
+        "no iteration from the third on reached a 30% hit rate: {rates:?}"
+    );
+    // Iteration 1's stage-1 builds are necessarily all misses (subsets
+    // partition the ids, so no pair repeats within the iteration); any
+    // first-iteration hits come from same-subset medoid pairs alone.
+    let first = &res.history.records[0].cache;
+    assert!(first.misses > 0);
+}

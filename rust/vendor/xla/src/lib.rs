@@ -1,0 +1,124 @@
+//! API-compatible stub of the `xla-rs` PJRT bindings (see README.md).
+//!
+//! Mirrors the names and signatures `mahc::runtime::engine` consumes.
+//! Construction of the PJRT client — the first call on every real code
+//! path — returns [`Error`], so nothing downstream ever executes; the
+//! remaining methods exist to satisfy the type checker and are
+//! `unreachable` in practice (they too return errors rather than
+//! panicking, defensively).
+
+use std::fmt;
+
+const STUB_MSG: &str = "xla stub: vendored placeholder bindings — point the workspace's `xla` \
+     path dependency at a real xla-rs checkout to use the PJRT runtime";
+
+/// Error type matching `xla-rs`'s surface: `Display` + `std::error::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err() -> Error {
+    Error(STUB_MSG.to_string())
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (stub: carries nothing).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+/// Element types accepted by [`Literal::vec1`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(stub_err())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(stub_err())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_err())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub: this is the first call on every real
+    /// path, so downstream methods are never reached.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_with_the_stub_message() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
