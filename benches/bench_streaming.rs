@@ -1,0 +1,88 @@
+//! Streaming vs batch MAHC cost, and the shard-size knob.
+//!
+//! One sample = one complete run over the same corpus, so batch and
+//! stream numbers are directly comparable.  Alongside wall-clock the
+//! harness prints the memory story — peak condensed-matrix bytes per
+//! configuration — which is the quantity the β bound (and therefore
+//! the shard size) controls.
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, NamedDataset, StreamConfig};
+use mahc::corpus::generate;
+use mahc::distance::NativeBackend;
+use mahc::mahc::{MahcDriver, StreamingDriver};
+use mahc::util::bench::Bench;
+
+fn main() {
+    let set = generate(&DatasetSpec::named(NamedDataset::SmallA, 0.02));
+    let n = set.len();
+    println!("== bench_streaming: small_a at N={n} ==");
+    let backend = NativeBackend::new();
+
+    let beta = (n as f64 / 4.0 * 1.25).ceil() as usize;
+    let algo = AlgoConfig {
+        p0: 4,
+        beta: Some(beta),
+        convergence: Convergence::FixedIters(3),
+        cache_bytes: 64 << 20,
+        ..Default::default()
+    };
+
+    Bench::new("batch/3iters").quick().run(|| {
+        MahcDriver::new(&set, algo.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap()
+    });
+
+    for shard_size in [n, n.div_ceil(2), n.div_ceil(4)] {
+        let cfg = StreamConfig::new(algo.clone(), shard_size);
+        let name = format!("stream/shard={shard_size}");
+        Bench::new(&name).quick().run(|| {
+            StreamingDriver::new(&set, cfg.clone(), &backend)
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+    }
+
+    // Memory + quality story at each shard size (one run each).
+    let batch = MahcDriver::new(&set, algo.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    println!("\nβ={beta}  batch: K={} F={:.4} peak_B={}", batch.k, batch.f_measure, batch.history.peak_bytes());
+    println!("shard_size shards  K     F      peak_B  cache_hit%  assign_hit%");
+    for shard_size in [n, n.div_ceil(2), n.div_ceil(4), n.div_ceil(8)] {
+        let cfg = StreamConfig::new(algo.clone(), shard_size);
+        let res = StreamingDriver::new(&set, cfg, &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        for r in &res.history.records {
+            assert!(
+                r.max_occupancy <= beta,
+                "β bound violated in shard {}",
+                r.iteration
+            );
+        }
+        println!(
+            "{:>10} {:>6} {:>4} {:.4} {:>8} {:>11.1} {:>12.1}",
+            shard_size,
+            res.shards,
+            res.k,
+            res.f_measure,
+            res.history.peak_bytes(),
+            res.history.cache_total().hit_rate() * 100.0,
+            res.assign_cache.hit_rate() * 100.0
+        );
+    }
+
+    // The single-shard stream must be the batch run, bit for bit.
+    let one = StreamingDriver::new(&set, StreamConfig::new(algo, n), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(one.labels, batch.labels, "single-shard stream diverged");
+    assert_eq!(one.k, batch.k);
+    println!("\nsingle-shard stream reproduces the batch run: MATCH");
+}

@@ -252,6 +252,48 @@ impl AlgoConfig {
     }
 }
 
+/// Knobs of the streaming driver ([`crate::mahc::streaming`]): the
+/// batch algorithm configuration plus the shape of the arriving stream.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Per-episode algorithm knobs (β, P₀, convergence, cache, ...).
+    pub algo: AlgoConfig,
+    /// Segments per arriving shard.  Together with β this bounds the
+    /// active set of every episode, and with it peak matrix memory —
+    /// independent of how long the stream runs.
+    pub shard_size: usize,
+    /// Stream-order seed: `None` consumes the corpus in id order (the
+    /// arrival order of a real stream), `Some(s)` shuffles the stream
+    /// for order-sensitivity ablations.
+    pub shard_seed: Option<u64>,
+}
+
+impl StreamConfig {
+    pub fn new(algo: AlgoConfig, shard_size: usize) -> Self {
+        StreamConfig {
+            algo,
+            shard_size,
+            shard_seed: None,
+        }
+    }
+
+    pub fn with_shard_seed(mut self, seed: u64) -> Self {
+        self.shard_seed = Some(seed);
+        self
+    }
+
+    /// Validate the algo knobs plus the stream shape.  A shard larger
+    /// than β is legal — `split_oversized` repairs the initial division
+    /// of every episode — so only outright contradictions are errors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.algo.validate()?;
+        if self.shard_size == 0 {
+            anyhow::bail!("shard_size must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Parse a minimal `key = value` config file (TOML subset: comments with
 /// `#`, bare scalars, no tables).  Returns key/value pairs for the
 /// caller to interpret; unknown keys are the caller's concern so that
@@ -378,6 +420,21 @@ mod tests {
         let mut cfg = AlgoConfig::default();
         let kv = vec![("bogus".to_string(), "1".to_string())];
         assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+
+    #[test]
+    fn stream_config_validation() {
+        let ok = StreamConfig::new(AlgoConfig::default(), 64);
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.shard_seed, None, "corpus order by default");
+        let seeded = StreamConfig::new(AlgoConfig::default(), 64).with_shard_seed(9);
+        assert_eq!(seeded.shard_seed, Some(9));
+        let bad = StreamConfig::new(AlgoConfig::default(), 0);
+        assert!(bad.validate().is_err());
+        // Algo-level errors surface through the stream validator too.
+        let mut algo = AlgoConfig::default();
+        algo.p0 = 0;
+        assert!(StreamConfig::new(algo, 64).validate().is_err());
     }
 
     #[test]

@@ -14,14 +14,17 @@
 //! [`waveform`] additionally synthesises formant-style audio per
 //! segment so the end-to-end example can exercise the AOT MFCC
 //! front-end; [`stats`] computes the Table-1/Fig-3 composition
-//! summaries.
+//! summaries; [`shards`] presents a corpus as a bounded stream of id
+//! batches for the streaming driver.
 
 pub mod dataset;
 pub mod generator;
 pub mod phones;
+pub mod shards;
 pub mod stats;
 pub mod waveform;
 
 pub use dataset::{Segment, SegmentSet};
 pub use generator::generate;
+pub use shards::Shards;
 pub use stats::CompositionStats;

@@ -1,0 +1,109 @@
+//! Shard iterator: present a corpus as a bounded stream of id batches.
+//!
+//! The streaming driver ([`crate::mahc::streaming`]) consumes a corpus
+//! shard by shard instead of all at once.  [`Shards`] yields successive
+//! id batches of at most `shard_size` segments, either in corpus order
+//! (`seed = None`, the arrival order of a real stream) or over a seeded
+//! shuffle (`seed = Some(_)`, which simulates an order-randomised stream
+//! for ablations).  Every id appears in exactly one shard; the final
+//! shard may be short.
+
+use crate::util::rng::Rng;
+
+/// Iterator over id shards of a corpus of `n` segments.
+#[derive(Debug, Clone)]
+pub struct Shards {
+    order: Vec<usize>,
+    shard_size: usize,
+    at: usize,
+}
+
+impl Shards {
+    /// Plan a shard sequence over ids `0..n`.  `shard_size` is clamped
+    /// to at least 1; `seed` shuffles the stream order when given.
+    pub fn new(n: usize, shard_size: usize, seed: Option<u64>) -> Shards {
+        let mut order: Vec<usize> = (0..n).collect();
+        if let Some(s) = seed {
+            Rng::seed_from(s).shuffle(&mut order);
+        }
+        Shards {
+            order,
+            shard_size: shard_size.max(1),
+            at: 0,
+        }
+    }
+
+    /// Total number of shards this plan yields.
+    pub fn total(&self) -> usize {
+        self.order.len().div_ceil(self.shard_size)
+    }
+
+    /// Shards still to be yielded.
+    pub fn remaining(&self) -> usize {
+        (self.order.len() - self.at).div_ceil(self.shard_size)
+    }
+}
+
+impl Iterator for Shards {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.at >= self.order.len() {
+            return None;
+        }
+        let end = (self.at + self.shard_size).min(self.order.len());
+        let shard = self.order[self.at..end].to_vec();
+        self.at = end;
+        Some(shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_id_exactly_once() {
+        for seed in [None, Some(7u64)] {
+            let shards: Vec<Vec<usize>> = Shards::new(103, 25, seed).collect();
+            assert_eq!(shards.len(), 5);
+            let mut all: Vec<usize> = shards.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..103).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn unseeded_preserves_corpus_order() {
+        let shards: Vec<Vec<usize>> = Shards::new(10, 4, None).collect();
+        assert_eq!(
+            shards,
+            vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]
+        );
+    }
+
+    #[test]
+    fn seeded_order_is_deterministic_and_shuffled() {
+        let a: Vec<Vec<usize>> = Shards::new(64, 16, Some(3)).collect();
+        let b: Vec<Vec<usize>> = Shards::new(64, 16, Some(3)).collect();
+        assert_eq!(a, b);
+        let c: Vec<Vec<usize>> = Shards::new(64, 16, None).collect();
+        assert_ne!(a, c, "seeded stream must differ from corpus order");
+    }
+
+    #[test]
+    fn counts_and_degenerate_sizes() {
+        let plan = Shards::new(10, 100, None);
+        assert_eq!(plan.total(), 1);
+        let plan = Shards::new(0, 5, None);
+        assert_eq!(plan.total(), 0);
+        assert_eq!(plan.collect::<Vec<_>>().len(), 0);
+        // shard_size 0 is clamped to 1 rather than looping forever.
+        let plan = Shards::new(3, 0, None);
+        assert_eq!(plan.total(), 3);
+        let mut plan = Shards::new(7, 3, Some(1));
+        assert_eq!(plan.remaining(), 3);
+        plan.next();
+        assert_eq!(plan.remaining(), 2);
+    }
+}

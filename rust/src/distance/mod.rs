@@ -339,10 +339,11 @@ pub fn build_cross(
 /// are always computed, so the symmetric `(min, max)` key stays
 /// well-defined.
 ///
-/// API parity for the cross builder: the MAHC driver itself only needs
-/// condensed builds today, so like [`build_cross`] this has no caller
-/// on the iteration path — external workloads (e.g. nearest-medoid
-/// assignment of out-of-sample segments) are the intended consumers.
+/// The streaming driver's retirement step is the production consumer:
+/// each shard's medoid × batch assignment rectangle
+/// (`mahc::streaming`) probes this cache first, so medoid–member pairs
+/// the episode's condensed builds just computed never reach the DTW
+/// backend a second time.
 pub fn build_cross_cached(
     xs: &[&Segment],
     ys: &[&Segment],

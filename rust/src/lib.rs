@@ -30,7 +30,7 @@
 //! | [`runtime`] | PJRT client wrapper: artifact registry + executable cache |
 //! | [`distance`] | condensed distance-matrix builder over pluggable backends + the cross-iteration pair cache |
 //! | [`ahc`] | Ward NN-chain AHC, dendrogram, L-method, medoids |
-//! | [`mahc`] | the paper's contribution: MAHC+M iterative coordinator |
+//! | [`mahc`] | the paper's contribution: MAHC+M iterative coordinator, batch and streaming |
 //! | [`metrics`] | F-measure, purity, NMI |
 //! | [`telemetry`] | per-iteration history records + CSV/JSON emitters |
 //! | [`baselines`] | full AHC and MAHC-without-management baselines |
@@ -61,5 +61,5 @@ pub mod runtime;
 pub mod telemetry;
 pub mod util;
 
-pub use config::{AlgoConfig, DatasetSpec};
-pub use mahc::{MahcDriver, MahcResult};
+pub use config::{AlgoConfig, DatasetSpec, StreamConfig};
+pub use mahc::{MahcDriver, MahcResult, StreamResult, StreamingDriver};

@@ -1,8 +1,15 @@
 //! The MAHC+M iteration loop (Algorithm 1) and its result type.
+//!
+//! The loop itself is factored as an *episode* over an explicit id set
+//! ([`run_episode`]): the batch driver runs one episode over the whole
+//! corpus, the streaming driver ([`super::streaming`]) runs one episode
+//! per arriving shard (shard members ∪ carried medoids).  Both therefore
+//! execute bit-identical arithmetic — a single-shard stream reproduces
+//! [`MahcDriver::run`] exactly.
 
 use std::time::Instant;
 
-use super::partition::initial_partition;
+use super::partition::partition_ids;
 use super::split::{merge_small, split_oversized};
 use super::stage::{run_stage1, SubsetOutcome};
 use crate::ahc;
@@ -53,8 +60,6 @@ impl<'a> MahcDriver<'a> {
     /// Run the full algorithm; returns the final clustering + history.
     pub fn run(&self) -> anyhow::Result<MahcResult> {
         let cfg = &self.cfg;
-        let n = self.set.len();
-        let truth = self.set.labels();
         let algo_name = if cfg.beta.is_some() { "mahc+m" } else { "mahc" };
         let mut history = RunHistory::new(&self.set.name, algo_name);
 
@@ -65,83 +70,182 @@ impl<'a> MahcDriver<'a> {
         // of the backend from iteration 2 onwards.
         let cache = (cfg.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(cfg.cache_bytes));
         let cache = cache.as_ref();
-        let mut cache_snapshot = CacheStats::default();
 
         let mut rng = Rng::seed_from(cfg.seed);
-        let mut subsets = initial_partition(n, cfg.p0, &mut rng);
-        // If β is already violated by the initial division, enforce it
-        // before the first iteration (the paper chooses P₀ so that this
-        // does not happen; we guarantee it regardless).
-        if let Some(beta) = cfg.beta {
-            split_oversized(&mut subsets, beta, &mut rng, cfg.split_shuffle);
-        }
+        let ids: Vec<usize> = (0..self.set.len()).collect();
+        let ep = run_episode(
+            self.set,
+            &ids,
+            cfg,
+            self.backend,
+            cache,
+            &mut rng,
+            Some(&mut history),
+        )?;
 
-        let max_iters = match cfg.convergence {
-            Convergence::FixedIters(k) => k.max(1),
-            Convergence::SettledSubsets { max_iters } => max_iters.max(1),
+        // `ep.labels` is parallel to `ids` == indexed by segment id, and
+        // the episode's truth slice was the full ground truth, so its
+        // F-measure is the run's F-measure.
+        Ok(MahcResult {
+            labels: ep.labels,
+            k: ep.k,
+            f_measure: ep.f_measure,
+            history,
+        })
+    }
+}
+
+/// Aggregates of one episode, for per-shard telemetry records.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct EpisodeSummary {
+    /// Iterations the episode actually ran.
+    pub iterations: usize,
+    /// Subset count entering the final iteration.
+    pub final_subsets: usize,
+    /// Largest subset occupancy over all iterations (≤ β when set).
+    pub max_occupancy: usize,
+    /// Smallest subset occupancy over all iterations.
+    pub min_occupancy: usize,
+    /// Largest post-refine, pre-split occupancy over all iterations.
+    pub max_occupancy_pre_split: usize,
+    /// Total subsets split over all iterations.
+    pub splits: usize,
+    /// ΣKⱼ of the final iteration's stage 1.
+    pub total_clusters: usize,
+    /// Peak condensed-matrix bytes over the episode.
+    pub peak_matrix_bytes: usize,
+}
+
+/// Result of one episode of the iteration loop over an id set.
+#[derive(Debug, Clone)]
+pub(crate) struct EpisodeOutcome {
+    /// Final cluster label per active object, parallel to the episode's
+    /// `ids` argument (dense, 0..k).
+    pub labels: Vec<usize>,
+    /// Final number of clusters K among the active objects.
+    pub k: usize,
+    /// F-measure of the final clustering over the active objects only.
+    pub f_measure: f64,
+    /// Global segment id of each stage-1 cluster medoid from the final
+    /// iteration — the representatives a streaming run carries forward.
+    pub medoid_ids: Vec<usize>,
+    pub summary: EpisodeSummary,
+}
+
+/// One episode of Algorithm 1 over the objects in `ids` (global segment
+/// ids into `set`).  Consumes `rng` exactly as the historical batch loop
+/// did, so with `ids == 0..n` this *is* [`MahcDriver::run`]'s loop; the
+/// streaming driver calls it with (shard ∪ carried medoids).  Pushes one
+/// [`IterationRecord`] per iteration into `history` when given.
+pub(crate) fn run_episode(
+    set: &SegmentSet,
+    ids: &[usize],
+    cfg: &AlgoConfig,
+    backend: &dyn DtwBackend,
+    cache: Option<&PairCache>,
+    rng: &mut Rng,
+    mut history: Option<&mut RunHistory>,
+) -> anyhow::Result<EpisodeOutcome> {
+    anyhow::ensure!(!ids.is_empty(), "episode over an empty id set");
+    let n_active = ids.len();
+    // Position of each global id inside `ids` (usize::MAX = inactive).
+    let mut pos_of = vec![usize::MAX; set.len()];
+    for (p, &id) in ids.iter().enumerate() {
+        pos_of[id] = p;
+    }
+    let truth = set.labels();
+    let truth_active: Vec<usize> = ids.iter().map(|&id| truth[id]).collect();
+
+    let mut cache_snapshot = match cache {
+        Some(c) => c.stats(),
+        None => CacheStats::default(),
+    };
+
+    let mut subsets = partition_ids(ids, cfg.p0, rng);
+    // If β is already violated by the initial division, enforce it
+    // before the first iteration (the paper chooses P₀ so that this
+    // does not happen; we guarantee it regardless).
+    if let Some(beta) = cfg.beta {
+        split_oversized(&mut subsets, beta, rng, cfg.split_shuffle);
+    }
+
+    let max_iters = match cfg.convergence {
+        Convergence::FixedIters(k) => k.max(1),
+        Convergence::SettledSubsets { max_iters } => max_iters.max(1),
+    };
+
+    let mut first_stage_total: Option<usize> = None;
+    let mut prev_p = usize::MAX;
+    let mut summary = EpisodeSummary {
+        min_occupancy: usize::MAX,
+        ..Default::default()
+    };
+
+    for i in 0..max_iters {
+        let t0 = Instant::now();
+        let p_i = subsets.len();
+        let occ_max = subsets.iter().map(|s| s.len()).max().unwrap_or(0);
+        let occ_min = subsets.iter().map(|s| s.len()).min().unwrap_or(0);
+
+        // Steps 3-5: per-subset AHC, L-method, medoids.
+        let outcomes = run_stage1(
+            set,
+            &subsets,
+            backend,
+            cfg.threads,
+            cfg.max_clusters_frac,
+            cache,
+        )?;
+        let total_clusters: usize = outcomes.iter().map(|o| o.k).sum();
+        first_stage_total.get_or_insert(total_clusters);
+        let stage1_bytes = outcomes.iter().map(|o| o.matrix_bytes).max().unwrap_or(0);
+
+        // One medoid dendrogram per iteration serves three cuts:
+        // the per-iteration evaluation clustering (steps 13-15 as
+        // if concluding now — the F the paper plots), the final
+        // clustering, and the refine grouping (step 7).
+        let stage2 = MedoidStage::build(set, &outcomes, backend, cfg.threads, cache)?;
+
+        // Per-iteration cache counter movement (zeros when off).
+        let cache_iter = match cache {
+            Some(c) => {
+                let now = c.stats();
+                let delta = now.delta(&cache_snapshot);
+                cache_snapshot = now;
+                delta
+            }
+            None => CacheStats::default(),
         };
 
-        let mut first_stage_total: Option<usize> = None;
-        let mut prev_p = usize::MAX;
-        let mut final_labels: Vec<usize> = Vec::new();
-        let mut final_k = 1usize;
+        // Evaluation / conclusion clustering: K = ΣKⱼ (paper §5
+        // validates the first-stage total as the final K estimate).
+        let k_target = match cfg.final_k {
+            FinalK::StageOneTotal => first_stage_total.unwrap_or(1),
+            FinalK::Fixed(k) => k,
+        };
+        let (labels_iter, k_iter) = stage2.cut_to_labels(&pos_of, n_active, k_target);
+        let f = metrics::f_measure(&labels_iter, &truth_active);
 
-        for i in 0..max_iters {
-            let t0 = Instant::now();
-            let p_i = subsets.len();
-            let occ_max = subsets.iter().map(|s| s.len()).max().unwrap_or(0);
-            let occ_min = subsets.iter().map(|s| s.len()).min().unwrap_or(0);
+        // Step 6: convergence test (i > 2 in the paper's 1-based
+        // numbering — we require at least 3 completed iterations).
+        let converged = match cfg.convergence {
+            Convergence::FixedIters(k) => i + 1 >= k,
+            Convergence::SettledSubsets { .. } => i >= 3 && p_i == prev_p,
+        };
+        let last = converged || i + 1 == max_iters;
 
-            // Steps 3-5: per-subset AHC, L-method, medoids.
-            let outcomes = run_stage1(
-                self.set,
-                &subsets,
-                self.backend,
-                cfg.threads,
-                cfg.max_clusters_frac,
-                cache,
-            )?;
-            let total_clusters: usize = outcomes.iter().map(|o| o.k).sum();
-            first_stage_total.get_or_insert(total_clusters);
-            let stage1_bytes = outcomes.iter().map(|o| o.matrix_bytes).max().unwrap_or(0);
+        let iter_bytes = stage1_bytes.max(stage2.bytes);
+        summary.iterations = i + 1;
+        summary.final_subsets = p_i;
+        summary.max_occupancy = summary.max_occupancy.max(occ_max);
+        summary.min_occupancy = summary.min_occupancy.min(occ_min);
+        summary.total_clusters = total_clusters;
+        summary.peak_matrix_bytes = summary.peak_matrix_bytes.max(iter_bytes);
 
-            // One medoid dendrogram per iteration serves three cuts:
-            // the per-iteration evaluation clustering (steps 13-15 as
-            // if concluding now — the F the paper plots), the final
-            // clustering, and the refine grouping (step 7).
-            let stage2 =
-                MedoidStage::build(self.set, &outcomes, self.backend, cfg.threads, cache)?;
-
-            // Per-iteration cache counter movement (zeros when off).
-            let cache_iter = match cache {
-                Some(c) => {
-                    let now = c.stats();
-                    let delta = now.delta(&cache_snapshot);
-                    cache_snapshot = now;
-                    delta
-                }
-                None => CacheStats::default(),
-            };
-
-            // Evaluation / conclusion clustering: K = ΣKⱼ (paper §5
-            // validates the first-stage total as the final K estimate).
-            let k_target = match cfg.final_k {
-                FinalK::StageOneTotal => first_stage_total.unwrap_or(1),
-                FinalK::Fixed(k) => k,
-            };
-            let (labels_iter, k_iter) = stage2.cut_to_labels(n, k_target);
-            let f = metrics::f_measure(&labels_iter, &truth);
-
-            // Step 6: convergence test (i > 2 in the paper's 1-based
-            // numbering — we require at least 3 completed iterations).
-            let converged = match cfg.convergence {
-                Convergence::FixedIters(k) => i + 1 >= k,
-                Convergence::SettledSubsets { .. } => i >= 3 && p_i == prev_p,
-            };
-            let last = converged || i + 1 == max_iters;
-
-            if last {
-                history.push(IterationRecord {
+        if last {
+            summary.max_occupancy_pre_split = summary.max_occupancy_pre_split.max(occ_max);
+            if let Some(h) = history.as_mut() {
+                h.push(IterationRecord {
                     iteration: i,
                     subsets: p_i,
                     max_occupancy: occ_max,
@@ -151,34 +255,44 @@ impl<'a> MahcDriver<'a> {
                     total_clusters,
                     f_measure: f,
                     wall: t0.elapsed(),
-                    peak_matrix_bytes: stage1_bytes.max(stage2.bytes),
+                    peak_matrix_bytes: iter_bytes,
                     cache: cache_iter,
+                    carried_medoids: 0,
                 });
-                final_labels = labels_iter;
-                final_k = k_iter;
-                break;
             }
+            return Ok(EpisodeOutcome {
+                labels: labels_iter,
+                k: k_iter,
+                f_measure: f,
+                medoid_ids: stage2.medoid_ids,
+                summary,
+            });
+        }
 
-            // Steps 7-8 (refine): group medoids into P_i clusters; every
-            // stage-1 cluster's members follow their medoid.
-            let (group_labels, groups) = stage2.cut_groups(p_i);
-            let mut new_subsets: Vec<Vec<usize>> = vec![Vec::new(); groups];
-            for (m, members) in stage2.clusters_members.iter().enumerate() {
-                new_subsets[group_labels[m]].extend(members.iter().copied());
-            }
-            new_subsets.retain(|s| !s.is_empty());
-            let pre_split_max = new_subsets.iter().map(|s| s.len()).max().unwrap_or(0);
+        // Steps 7-8 (refine): group medoids into P_i clusters; every
+        // stage-1 cluster's members follow their medoid.
+        let (group_labels, groups) = stage2.cut_groups(p_i);
+        let mut new_subsets: Vec<Vec<usize>> = vec![Vec::new(); groups];
+        for (m, members) in stage2.clusters_members.iter().enumerate() {
+            new_subsets[group_labels[m]].extend(members.iter().copied());
+        }
+        new_subsets.retain(|s| !s.is_empty());
+        let pre_split_max = new_subsets.iter().map(|s| s.len()).max().unwrap_or(0);
 
-            // Step 9: cluster size management (the contribution).
-            let split_out = match cfg.beta {
-                Some(beta) => split_oversized(&mut new_subsets, beta, &mut rng, cfg.split_shuffle),
-                None => Default::default(),
-            };
-            if let Some(min) = cfg.merge_min {
-                merge_small(&mut new_subsets, min, cfg.beta);
-            }
+        // Step 9: cluster size management (the contribution).
+        let split_out = match cfg.beta {
+            Some(beta) => split_oversized(&mut new_subsets, beta, rng, cfg.split_shuffle),
+            None => Default::default(),
+        };
+        if let Some(min) = cfg.merge_min {
+            merge_small(&mut new_subsets, min, cfg.beta);
+        }
 
-            history.push(IterationRecord {
+        summary.max_occupancy_pre_split = summary.max_occupancy_pre_split.max(pre_split_max);
+        summary.splits += split_out.subsets_split;
+
+        if let Some(h) = history.as_mut() {
+            h.push(IterationRecord {
                 iteration: i,
                 subsets: p_i,
                 max_occupancy: occ_max,
@@ -188,22 +302,17 @@ impl<'a> MahcDriver<'a> {
                 total_clusters,
                 f_measure: f,
                 wall: t0.elapsed(),
-                peak_matrix_bytes: stage1_bytes.max(stage2.bytes),
+                peak_matrix_bytes: iter_bytes,
                 cache: cache_iter,
+                carried_medoids: 0,
             });
-
-            prev_p = p_i;
-            subsets = new_subsets;
         }
 
-        let f_measure = metrics::f_measure(&final_labels, &truth);
-        Ok(MahcResult {
-            labels: final_labels,
-            k: final_k,
-            f_measure,
-            history,
-        })
+        prev_p = p_i;
+        subsets = new_subsets;
     }
+
+    unreachable!("loop always returns on its last iteration");
 }
 
 /// Stage 2 state shared by refine / evaluation / finalisation: the
@@ -211,6 +320,9 @@ impl<'a> MahcDriver<'a> {
 /// dendrogram over the medoid distance matrix — built once per
 /// iteration, cut as many times as needed.
 struct MedoidStage {
+    /// Global segment id of each medoid, parallel to the dendrogram's
+    /// leaf order.
+    medoid_ids: Vec<usize>,
     /// Member ids (global) of each stage-1 cluster, parallel to the
     /// medoid order used in the dendrogram.
     clusters_members: Vec<Vec<usize>>,
@@ -248,6 +360,7 @@ impl MedoidStage {
         let dendro = ahc::ward_linkage(&cond);
         Ok(MedoidStage {
             s: medoid_ids.len(),
+            medoid_ids,
             clusters_members,
             dendro,
             bytes,
@@ -264,13 +377,20 @@ impl MedoidStage {
     }
 
     /// Steps 13-15: cut into `k_target` clusters and propagate labels
-    /// to every member; returns (labels by segment id, actual k).
-    fn cut_to_labels(&self, n: usize, k_target: usize) -> (Vec<usize>, usize) {
+    /// to every member; returns (labels parallel to the episode's
+    /// active-id order, actual k).  `pos_of` maps global segment id to
+    /// position among the `n_active` active objects.
+    fn cut_to_labels(
+        &self,
+        pos_of: &[usize],
+        n_active: usize,
+        k_target: usize,
+    ) -> (Vec<usize>, usize) {
         let (group_labels, k) = self.cut_groups(k_target);
-        let mut labels = vec![usize::MAX; n];
+        let mut labels = vec![usize::MAX; n_active];
         for (m, members) in self.clusters_members.iter().enumerate() {
             for &id in members {
-                labels[id] = group_labels[m];
+                labels[pos_of[id]] = group_labels[m];
             }
         }
         debug_assert!(labels.iter().all(|&l| l != usize::MAX));
@@ -341,6 +461,7 @@ mod tests {
         for rec in &res.history.records {
             assert!(rec.splits == 0, "no splits without β");
             assert!(rec.max_occupancy >= rec.min_occupancy);
+            assert_eq!(rec.carried_medoids, 0, "batch runs carry nothing");
         }
     }
 
@@ -447,5 +568,32 @@ mod tests {
         };
         let backend = NativeBackend::new();
         assert!(MahcDriver::new(&set, AlgoConfig::default(), &backend).is_err());
+    }
+
+    #[test]
+    fn episode_over_subset_of_ids_is_self_contained() {
+        // The streaming building block: an episode over a strict subset
+        // of the corpus must label exactly those objects, pick medoids
+        // from them, and leave the rest untouched.
+        let set = generate(&DatasetSpec::tiny(80, 5, 28));
+        let backend = NativeBackend::new();
+        let cfg = AlgoConfig {
+            p0: 2,
+            beta: Some(20),
+            convergence: Convergence::FixedIters(3),
+            ..Default::default()
+        };
+        let ids: Vec<usize> = (0..80).filter(|i| i % 2 == 0).collect();
+        let mut rng = Rng::seed_from(cfg.seed);
+        let ep = run_episode(&set, &ids, &cfg, &backend, None, &mut rng, None).unwrap();
+        assert_eq!(ep.labels.len(), ids.len());
+        assert!(ep.labels.iter().all(|&l| l < ep.k));
+        assert!(!ep.medoid_ids.is_empty());
+        for m in &ep.medoid_ids {
+            assert!(ids.contains(m), "medoid {m} outside the episode's ids");
+        }
+        assert!(ep.summary.max_occupancy <= 20);
+        assert!(ep.summary.iterations == 3);
+        assert!(ep.summary.min_occupancy <= ep.summary.max_occupancy);
     }
 }

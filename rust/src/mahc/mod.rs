@@ -11,13 +11,18 @@
 //!   paper's Fig. 11 argues is unnecessary);
 //! * [`driver`] — the iteration loop: stage 1 → medoid clustering
 //!   (step 7) → refine (step 8) → split (step 9) → convergence test →
-//!   final clustering (steps 13-15), with telemetry per iteration.
+//!   final clustering (steps 13-15), with telemetry per iteration;
+//! * [`streaming`] — the online form: one episode of the same loop per
+//!   arriving shard, carrying medoids forward so peak memory stays
+//!   bounded by β for streams of any length.
 
 pub mod driver;
 pub mod partition;
 pub mod split;
 pub mod stage;
+pub mod streaming;
 
 pub use driver::{MahcDriver, MahcResult};
-pub use partition::{even_partition, initial_partition};
+pub use partition::{even_partition, initial_partition, partition_ids};
 pub use split::{merge_small, split_oversized};
+pub use streaming::{StreamResult, StreamingDriver};

@@ -8,7 +8,16 @@ use crate::util::rng::Rng;
 //  processors"; contents are arbitrary, so a seeded shuffle keeps runs
 /// reproducible while avoiding any accidental ordering structure).
 pub fn initial_partition(n: usize, p: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
-    let mut ids: Vec<usize> = (0..n).collect();
+    let ids: Vec<usize> = (0..n).collect();
+    partition_ids(&ids, p, rng)
+}
+
+/// [`initial_partition`] over an explicit id list: shuffle a copy of
+/// `ids` and divide it into `p` near-equal subsets.  The streaming
+/// driver partitions (shard ∪ carried medoids) id sets this way; with
+/// `ids == 0..n` it is exactly [`initial_partition`].
+pub fn partition_ids(ids: &[usize], p: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut ids = ids.to_vec();
     rng.shuffle(&mut ids);
     even_partition(&ids, p)
 }
@@ -78,5 +87,25 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(even_partition(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn partition_ids_matches_initial_partition_on_full_range() {
+        let full: Vec<usize> = (0..64).collect();
+        let a = initial_partition(64, 5, &mut Rng::seed_from(11));
+        let b = partition_ids(&full, 5, &mut Rng::seed_from(11));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partition_ids_covers_arbitrary_id_sets() {
+        let ids: Vec<usize> = (0..90).filter(|i| i % 3 != 0).collect();
+        let parts = partition_ids(&ids, 4, &mut Rng::seed_from(5));
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        assert_eq!(all, want);
     }
 }

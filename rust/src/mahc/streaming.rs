@@ -1,0 +1,426 @@
+//! Streaming MAHC: shard-at-a-time clustering under the β bound.
+//!
+//! The batch driver needs the whole corpus up front; this driver
+//! consumes it as a sequence of bounded shards ([`Shards`]) and keeps
+//! clustering state *O(shard) + O(medoids)* no matter how long the
+//! stream runs:
+//!
+//! 1. **Episode** — each arriving shard is clustered together with the
+//!    carried-forward medoid set by one episode of the batch iteration
+//!    loop ([`run_episode`]): same stage 1, same L-method, same β
+//!    enforcement via `split_oversized`, same optional `merge_small`.
+//!    Peak matrix bytes therefore stay bounded by β(β−1)/2·4 B exactly
+//!    as in batch runs.
+//! 2. **Carry** — the final iteration's stage-1 medoids become the
+//!    carried set for the next shard.  Because the L-method caps each
+//!    subset's clusters at `max_clusters_frac`·n, the carried set
+//!    reaches a bounded fixed point (≈ frac/(1−frac) · shard_size)
+//!    instead of growing with the stream.
+//! 3. **Retire** — every active object that is *not* carried forward is
+//!    assigned to its nearest surviving medoid via the medoid × batch
+//!    rectangle ([`build_cross_cached`]): with the pair cache enabled,
+//!    medoid–member pairs computed by the episode's condensed builds
+//!    are served from cache instead of reaching the DTW backend again.
+//!    The assignment is a forwarding pointer; when later episodes merge
+//!    medoids, retired members follow transitively.
+//!
+//! A single shard containing the whole corpus runs exactly one episode
+//! with an empty carried set and the same RNG stream as the batch
+//! driver, so its labels, K and F-measure are bitwise identical to
+//! [`MahcDriver::run`] — pinned by tests here and in
+//! `rust/tests/pipeline.rs`.
+//!
+//! [`MahcDriver::run`]: super::MahcDriver::run
+
+use std::time::Instant;
+
+use super::driver::run_episode;
+use crate::config::StreamConfig;
+use crate::corpus::{Segment, SegmentSet, Shards};
+use crate::distance::{build_cross_cached, DtwBackend, PairCache};
+use crate::metrics;
+use crate::telemetry::{CacheStats, IterationRecord, RunHistory};
+use crate::util::rng::Rng;
+
+/// Final output of a streaming clustering run.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// Final cluster label per segment id (dense, 0..k).
+    pub labels: Vec<usize>,
+    /// Final number of clusters K.
+    pub k: usize,
+    /// F-measure of the final clustering against ground truth.
+    pub f_measure: f64,
+    /// One [`IterationRecord`] per shard: `iteration` is the shard
+    /// index, `carried_medoids` the carried set entering that shard,
+    /// occupancy/splits/peak-bytes aggregated over the shard's episode.
+    pub history: RunHistory,
+    /// Number of shards the stream delivered.
+    pub shards: usize,
+    /// Pair-cache counters of the retirement rectangles alone (subset
+    /// of the per-shard totals): nonzero hits here mean medoid × batch
+    /// assignment was served from pairs the episodes already computed.
+    pub assign_cache: CacheStats,
+}
+
+/// Shard-at-a-time MAHC over a [`Shards`] stream.
+pub struct StreamingDriver<'a> {
+    set: &'a SegmentSet,
+    cfg: StreamConfig,
+    backend: &'a dyn DtwBackend,
+}
+
+impl<'a> StreamingDriver<'a> {
+    pub fn new(
+        set: &'a SegmentSet,
+        cfg: StreamConfig,
+        backend: &'a dyn DtwBackend,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        if set.is_empty() {
+            anyhow::bail!("empty dataset");
+        }
+        Ok(StreamingDriver { set, cfg, backend })
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// Consume the whole stream; returns the final clustering + one
+    /// telemetry record per shard.
+    pub fn run(&self) -> anyhow::Result<StreamResult> {
+        let algo = &self.cfg.algo;
+        let n = self.set.len();
+        let algo_name = if algo.beta.is_some() {
+            "mahc+m-stream"
+        } else {
+            "mahc-stream"
+        };
+        let mut history = RunHistory::new(&self.set.name, algo_name);
+
+        // One cache for the whole stream: episodes warm it with subset
+        // and medoid pairs, retirement rectangles and later episodes
+        // reap the hits.
+        let cache =
+            (algo.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(algo.cache_bytes));
+        let cache = cache.as_ref();
+        let mut assign_cache = CacheStats::default();
+
+        let mut rng = Rng::seed_from(algo.seed);
+        let plan = Shards::new(n, self.cfg.shard_size, self.cfg.shard_seed);
+        let total_shards = plan.total();
+
+        // Forwarding pointer per segment id: the medoid a retired
+        // object was assigned to (usize::MAX while unset / still
+        // active).  Resolved transitively once the stream ends.
+        let mut attach: Vec<usize> = vec![usize::MAX; n];
+        let mut carried: Vec<usize> = Vec::new();
+        let mut last_episode = None;
+
+        for (t, shard) in plan.enumerate() {
+            let t0 = Instant::now();
+            let carried_in = carried.len();
+            let active: Vec<usize> = carried
+                .iter()
+                .copied()
+                .chain(shard.iter().copied())
+                .collect();
+
+            let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+            let ep = run_episode(
+                self.set,
+                &active,
+                algo,
+                self.backend,
+                cache,
+                &mut rng,
+                None,
+            )?;
+
+            let mut rect_bytes = 0usize;
+            let mut rect_delta = CacheStats::default();
+            if t + 1 < total_shards {
+                // Retire: everything not carried forward follows its
+                // nearest surviving medoid (medoid × batch rectangle).
+                let mut is_medoid = vec![false; n];
+                for &m in &ep.medoid_ids {
+                    is_medoid[m] = true;
+                }
+                let retired: Vec<usize> =
+                    active.iter().copied().filter(|&id| !is_medoid[id]).collect();
+                if !retired.is_empty() {
+                    let xs: Vec<&Segment> = ep
+                        .medoid_ids
+                        .iter()
+                        .map(|&i| &self.set.segments[i])
+                        .collect();
+                    let ys: Vec<&Segment> =
+                        retired.iter().map(|&i| &self.set.segments[i]).collect();
+                    let rect_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+                    let d =
+                        build_cross_cached(&xs, &ys, self.backend, algo.threads, cache)?;
+                    if let Some(c) = cache {
+                        rect_delta = c.stats().delta(&rect_snapshot);
+                    }
+                    rect_bytes = xs.len() * ys.len() * std::mem::size_of::<f32>();
+                    // Column argmin over the rows=medoids rectangle,
+                    // walking each row contiguously.  Strict < on rows
+                    // in increasing order keeps ties on the first
+                    // medoid — deterministic under any thread count.
+                    let ny = ys.len();
+                    let mut best = vec![0usize; ny];
+                    let mut best_d = vec![f32::INFINITY; ny];
+                    for (i, row) in d.chunks_exact(ny).enumerate() {
+                        for (j, &v) in row.iter().enumerate() {
+                            if v < best_d[j] {
+                                best_d[j] = v;
+                                best[j] = i;
+                            }
+                        }
+                    }
+                    for (j, &id) in retired.iter().enumerate() {
+                        attach[id] = ep.medoid_ids[best[j]];
+                    }
+                }
+                carried = ep.medoid_ids.clone();
+            }
+            assign_cache.hits += rect_delta.hits;
+            assign_cache.misses += rect_delta.misses;
+            assign_cache.evictions += rect_delta.evictions;
+
+            let shard_delta = match cache {
+                Some(c) => c.stats().delta(&shard_snapshot),
+                None => CacheStats::default(),
+            };
+            history.push(IterationRecord {
+                iteration: t,
+                subsets: ep.summary.final_subsets,
+                max_occupancy: ep.summary.max_occupancy,
+                min_occupancy: ep.summary.min_occupancy,
+                max_occupancy_pre_split: ep.summary.max_occupancy_pre_split,
+                splits: ep.summary.splits,
+                total_clusters: ep.summary.total_clusters,
+                f_measure: ep.f_measure,
+                wall: t0.elapsed(),
+                peak_matrix_bytes: ep.summary.peak_matrix_bytes.max(rect_bytes),
+                cache: shard_delta,
+                carried_medoids: carried_in,
+            });
+            last_episode = Some((active, ep));
+        }
+
+        let (final_active, final_ep) =
+            last_episode.ok_or_else(|| anyhow::anyhow!("stream delivered no shards"))?;
+
+        // Labels of the final episode's active objects, by segment id.
+        let mut labels = vec![usize::MAX; n];
+        for (pos, &id) in final_active.iter().enumerate() {
+            labels[id] = final_ep.labels[pos];
+        }
+        // Retired objects follow their forwarding chain: each hop lands
+        // on a medoid that stayed active at least one more shard, so
+        // every chain terminates at a finally-labelled object.
+        for id in 0..n {
+            if labels[id] != usize::MAX {
+                continue;
+            }
+            let mut cur = id;
+            let mut hops = 0usize;
+            while labels[cur] == usize::MAX {
+                anyhow::ensure!(
+                    attach[cur] != usize::MAX,
+                    "segment {cur} neither labelled nor attached"
+                );
+                cur = attach[cur];
+                hops += 1;
+                anyhow::ensure!(
+                    hops <= total_shards,
+                    "forwarding chain longer than the stream"
+                );
+            }
+            labels[id] = labels[cur];
+        }
+
+        let f_measure = metrics::f_measure(&labels, &self.set.labels());
+        Ok(StreamResult {
+            labels,
+            k: final_ep.k,
+            f_measure,
+            history,
+            shards: total_shards,
+            assign_cache,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoConfig, Convergence, DatasetSpec};
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+    use crate::mahc::MahcDriver;
+
+    fn algo(p0: usize, beta: Option<usize>, iters: usize) -> AlgoConfig {
+        AlgoConfig {
+            p0,
+            beta,
+            convergence: Convergence::FixedIters(iters),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_shard_is_bitwise_equal_to_batch() {
+        let set = generate(&DatasetSpec::tiny(90, 6, 41));
+        let backend = NativeBackend::new();
+        let cfg = algo(3, Some(30), 3);
+        let batch = MahcDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        // Shard large enough to hold the whole corpus → one episode,
+        // empty carried set, same RNG stream as the batch driver.
+        let stream = StreamingDriver::new(&set, StreamConfig::new(cfg, set.len()), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(stream.shards, 1);
+        assert_eq!(stream.labels, batch.labels);
+        assert_eq!(stream.k, batch.k);
+        assert_eq!(stream.f_measure, batch.f_measure);
+    }
+
+    #[test]
+    fn multi_shard_respects_beta_and_labels_everyone() {
+        let set = generate(&DatasetSpec::tiny(120, 6, 42));
+        let backend = NativeBackend::new();
+        let beta = 25;
+        let stream = StreamingDriver::new(
+            &set,
+            StreamConfig::new(algo(2, Some(beta), 3), 40),
+            &backend,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_eq!(stream.shards, 3);
+        assert_eq!(stream.history.records.len(), 3);
+        assert_eq!(stream.labels.len(), 120);
+        assert!(stream.k >= 1);
+        assert!(stream.labels.iter().all(|&l| l < stream.k));
+        assert!(stream.f_measure > 0.0 && stream.f_measure <= 1.0);
+        for r in &stream.history.records {
+            assert!(
+                r.max_occupancy <= beta,
+                "shard {} occupancy {} > β",
+                r.iteration,
+                r.max_occupancy
+            );
+        }
+        // Nothing carried into the first shard; something carried after.
+        assert_eq!(stream.history.records[0].carried_medoids, 0);
+        for r in &stream.history.records[1..] {
+            assert!(r.carried_medoids > 0, "later shards must carry medoids");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let set = generate(&DatasetSpec::tiny(100, 5, 43));
+        let backend = NativeBackend::new();
+        let cfg = StreamConfig::new(algo(2, Some(30), 3), 35).with_shard_seed(7);
+        let a = StreamingDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let b = StreamingDriver::new(&set, cfg, &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.f_measure, b.f_measure);
+    }
+
+    #[test]
+    fn retirement_rectangle_reuses_episode_pairs() {
+        // With the pair cache on, the medoid × batch rectangle must see
+        // hits: medoid–member pairs inside one final subset were just
+        // computed by that subset's condensed build.
+        let set = generate(&DatasetSpec::tiny(120, 6, 44));
+        let backend = NativeBackend::new();
+        let mut a = algo(2, Some(30), 3);
+        a.cache_bytes = 8 << 20;
+        let stream = StreamingDriver::new(&set, StreamConfig::new(a, 40), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(stream.shards > 1);
+        assert!(
+            stream.assign_cache.hits > 0,
+            "rectangle should be served partly from cache ({:?})",
+            stream.assign_cache
+        );
+        // And the cache must not change the clustering itself.
+        let plain = StreamingDriver::new(
+            &set,
+            StreamConfig::new(algo(2, Some(30), 3), 40),
+            &backend,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_eq!(plain.labels, stream.labels);
+        assert_eq!(plain.k, stream.k);
+    }
+
+    #[test]
+    fn carried_set_stays_bounded() {
+        // The L-method cap keeps carried medoids at a fixed point
+        // instead of growing with the stream.
+        let set = generate(&DatasetSpec::tiny(200, 8, 45));
+        let backend = NativeBackend::new();
+        let stream = StreamingDriver::new(
+            &set,
+            StreamConfig::new(algo(2, Some(25), 2), 25),
+            &backend,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_eq!(stream.shards, 8);
+        let carried = stream.history.carried_series();
+        // Fixed point ≈ frac/(1-frac)·(shard+carried); with frac=0.25
+        // that is well under one shard of medoids.
+        let cap = 2 * 25;
+        for (t, &c) in carried.iter().enumerate() {
+            assert!(c <= cap, "shard {t} carried {c} > {cap}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs_and_empty_sets() {
+        let set = generate(&DatasetSpec::tiny(20, 2, 46));
+        let backend = NativeBackend::new();
+        assert!(StreamingDriver::new(
+            &set,
+            StreamConfig::new(AlgoConfig::default(), 0),
+            &backend
+        )
+        .is_err());
+        let empty = SegmentSet {
+            name: "empty".into(),
+            dim: 3,
+            segments: Vec::new(),
+            num_classes: 0,
+        };
+        assert!(StreamingDriver::new(
+            &empty,
+            StreamConfig::new(AlgoConfig::default(), 8),
+            &backend
+        )
+        .is_err());
+    }
+}

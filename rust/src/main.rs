@@ -5,6 +5,9 @@
 //! * `cluster` — run MAHC+M (or plain MAHC / full AHC) on one of the
 //!   paper's dataset compositions, print per-iteration telemetry and
 //!   the final F-measure, optionally dump run JSON.
+//! * `stream` — shard-at-a-time MAHC: consume the corpus as a stream of
+//!   `--shard-size` batches, carrying medoids forward under the β
+//!   bound; prints per-shard telemetry.
 //! * `datagen` — generate a dataset and print its Table-1 composition.
 //! * `inspect` — validate the artifact manifest and report entries.
 //!
@@ -13,23 +16,24 @@
 //! ```text
 //! mahc cluster --dataset small_a --scale 0.05 --p0 6 --beta 200 --iters 5
 //! mahc cluster --dataset small_b --scale 0.05 --algo ahc
+//! mahc stream --dataset small_a --scale 0.05 --shard-size 300 --beta 150 --cache-mb 64
 //! mahc datagen --dataset medium --scale 0.1
 //! mahc inspect --artifacts artifacts
 //! ```
 
 use mahc::baselines;
 use mahc::config::{
-    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset,
+    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, StreamConfig,
 };
 use mahc::corpus::{generate, CompositionStats};
 use mahc::distance::{BackendKind, DtwBackend, NativeBackend};
-use mahc::mahc::MahcDriver;
+use mahc::mahc::{MahcDriver, StreamingDriver};
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use mahc::util::cli::Args;
 
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
-    "algo", "artifacts", "out", "config", "merge-min", "cache-mb",
+    "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
 ];
 
 fn main() {
@@ -43,15 +47,20 @@ fn run() -> anyhow::Result<()> {
     let args = Args::from_env(VALUE_KEYS)?;
     match args.subcommand() {
         Some("cluster") => cluster(&args),
+        Some("stream") => stream(&args),
         Some("datagen") => datagen(&args),
         Some("inspect") => inspect(&args),
-        Some(other) => anyhow::bail!("unknown subcommand '{other}' (cluster|datagen|inspect)"),
+        Some(other) => {
+            anyhow::bail!("unknown subcommand '{other}' (cluster|stream|datagen|inspect)")
+        }
         None => {
-            eprintln!("usage: mahc <cluster|datagen|inspect> [options]");
+            eprintln!("usage: mahc <cluster|stream|datagen|inspect> [options]");
             eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|xla] [--threads N] [--seed N] [--out FILE]");
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
+            eprintln!("  stream  --dataset <name> [--scale F] --shard-size N [--shard-seed N]");
+            eprintln!("          [--p0 N] [--beta N] [--iters N] [--cache-mb N] [--out FILE]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -197,6 +206,101 @@ fn cluster_with(
             }
         }
         other => anyhow::bail!("unknown algo '{other}' (ahc|mahc|mahc+m)"),
+    }
+    Ok(())
+}
+
+fn stream(args: &Args) -> anyhow::Result<()> {
+    let spec = dataset_from(args)?;
+    let mut algo = algo_config_from(args)?;
+
+    eprintln!(
+        "generating {} (N={}, classes={}) ...",
+        spec.name, spec.segments, spec.classes
+    );
+    let set = generate(&spec);
+    let stats = CompositionStats::of(&set);
+    eprintln!("  composition: {}", stats.table_row());
+
+    // Default shard: a quarter of the corpus (so the bare subcommand
+    // demonstrates a real multi-shard stream).
+    let shard_size: usize = args.get_or("shard-size", set.len().div_ceil(4).max(1))?;
+    if algo.beta.is_none() {
+        // Default β scales with the *shard*, not the corpus: the active
+        // set of an episode is one shard plus the carried medoids.
+        algo.beta = Some((2 * shard_size / algo.p0.max(1)).max(8));
+    }
+    let mut cfg = StreamConfig::new(algo, shard_size);
+    if let Some(s) = args.get_parsed::<u64>("shard-seed")? {
+        cfg.shard_seed = Some(s);
+    }
+
+    match cfg.algo.backend {
+        BackendKind::Native => {
+            let backend = NativeBackend::new();
+            stream_with(&set, cfg, &backend, args)
+        }
+        BackendKind::Xla => {
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let rt = Runtime::new(std::path::Path::new(dir))?;
+            let backend = XlaDtwBackend::new(&rt)?;
+            stream_with(&set, cfg, &backend, args)
+        }
+    }
+}
+
+fn stream_with(
+    set: &mahc::corpus::SegmentSet,
+    cfg: StreamConfig,
+    backend: &dyn DtwBackend,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let cache_on = cfg.algo.cache_bytes > 0;
+    let beta = cfg.algo.beta;
+    let driver = StreamingDriver::new(set, cfg, backend)?;
+    let res = driver.run()?;
+    println!("shard carried  P_f  maxOcc splits   K_tot   F       wall_s");
+    for r in &res.history.records {
+        println!(
+            "{:>5} {:>7} {:>4} {:>7} {:>6} {:>7} {:.4} {:>8.2}",
+            r.iteration,
+            r.carried_medoids,
+            r.subsets,
+            r.max_occupancy,
+            r.splits,
+            r.total_clusters,
+            r.f_measure,
+            r.wall.as_secs_f64()
+        );
+    }
+    println!(
+        "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={})",
+        res.k,
+        res.f_measure,
+        res.history.peak_bytes() as f64 / (1 << 20) as f64,
+        res.shards,
+        beta.map_or("off".to_string(), |b| b.to_string())
+    );
+    if cache_on {
+        let t = res.history.cache_total();
+        println!(
+            "cache: {:.1}% of pair distances served from cache \
+             ({} hits, {} misses, {} evictions)",
+            t.hit_rate() * 100.0,
+            t.hits,
+            t.misses,
+            t.evictions
+        );
+        println!(
+            "assignment rectangles: {:.1}% from cache ({} hits, {} misses)",
+            res.assign_cache.hit_rate() * 100.0,
+            res.assign_cache.hits,
+            res.assign_cache.misses
+        );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, res.history.to_json().to_string())?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

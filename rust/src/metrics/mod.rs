@@ -197,4 +197,80 @@ mod tests {
         assert!((nmi(&pred, &truth) - nmi(&renamed, &truth)).abs() < 1e-12);
         assert!((purity(&pred, &truth) - purity(&renamed, &truth)).abs() < 1e-12);
     }
+
+    #[test]
+    fn non_dense_label_ids_score_like_their_dense_relabelling() {
+        // The contingency table is indexed by max(label)+1, so sparse
+        // ids produce empty rows/columns.  Pinned behaviour: empty
+        // slots are skipped everywhere, making sparse ids score exactly
+        // like the dense relabelling — on both the pred and truth side.
+        let truth_dense = vec![0, 0, 1, 1, 2, 2];
+        let pred_dense = vec![0, 0, 1, 2, 2, 2];
+        let truth_sparse = vec![3, 3, 9, 9, 14, 14];
+        let pred_sparse = vec![5, 5, 11, 40, 40, 40];
+        for (a, b) in [
+            (
+                f_measure(&pred_dense, &truth_dense),
+                f_measure(&pred_sparse, &truth_sparse),
+            ),
+            (
+                purity(&pred_dense, &truth_dense),
+                purity(&pred_sparse, &truth_sparse),
+            ),
+            (
+                nmi(&pred_dense, &truth_dense),
+                nmi(&pred_sparse, &truth_sparse),
+            ),
+        ] {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "sparse ids must not change the score: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_class_truth_degenerates_gracefully() {
+        // One ground-truth class, shredded prediction: F is the best
+        // per-cluster harmonic mean, purity is trivially 1, NMI is 0
+        // (no information to share with a zero-entropy partition).
+        let truth = vec![0, 0, 0, 0];
+        let pred = vec![0, 1, 2, 3];
+        // Each singleton cluster: pr = 1, re = 1/4 -> F = 2/5.
+        assert!((f_measure(&pred, &truth) - 0.4).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!(nmi(&pred, &truth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_cluster_single_class_is_perfect() {
+        // Both partitions are one block: identical, so every metric is
+        // at its maximum (NMI's 0/0 is defined as 1 for this reason).
+        let truth = vec![0, 0, 0];
+        let pred = vec![0, 0, 0];
+        assert!((f_measure(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((nmi(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_ids_do_not_panic_at_any_alignment() {
+        // Large sparse ids on one side only, every degenerate pairing:
+        // nothing here may panic or leave the [0, 1] range.
+        let cases = [
+            (vec![100, 100, 200], vec![0, 1, 1]),
+            (vec![0, 1, 1], vec![100, 100, 200]),
+            (vec![7], vec![3]),
+            (vec![0, 50], vec![50, 0]),
+        ];
+        for (pred, truth) in cases {
+            for v in [
+                f_measure(&pred, &truth),
+                purity(&pred, &truth),
+                nmi(&pred, &truth),
+            ] {
+                assert!((0.0..=1.0).contains(&v), "{pred:?} vs {truth:?} -> {v}");
+            }
+        }
+    }
 }

@@ -80,6 +80,10 @@ pub struct IterationRecord {
     /// Pair-cache counter movement during this iteration (all zero when
     /// the cache is disabled).
     pub cache: CacheStats,
+    /// Medoids carried into this step from earlier work.  Always 0 for
+    /// the batch driver; the streaming driver records the size of the
+    /// carried-forward medoid set entering each shard's episode here.
+    pub carried_medoids: usize,
 }
 
 impl IterationRecord {
@@ -102,6 +106,7 @@ impl IterationRecord {
                 json::num(self.peak_matrix_bytes as f64),
             ),
             ("cache", self.cache.to_json()),
+            ("carried_medoids", json::num(self.carried_medoids as f64)),
         ])
     }
 }
@@ -164,6 +169,12 @@ impl RunHistory {
         self.records.iter().map(|r| r.cache).collect()
     }
 
+    /// Carried-medoid counts per record (all zero for batch runs; the
+    /// streaming driver's warm-state series).
+    pub fn carried_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.carried_medoids).collect()
+    }
+
     /// Whole-run cache counters (sum of per-iteration deltas).
     pub fn cache_total(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -207,6 +218,7 @@ mod tests {
                 misses: 7,
                 evictions: 1,
             },
+            carried_medoids: subsets * 2,
         }
     }
 
@@ -217,6 +229,7 @@ mod tests {
         h.push(rec(1, 6, 80));
         assert_eq!(h.subsets_series(), vec![4, 6]);
         assert_eq!(h.max_occupancy_series(), vec![100, 80]);
+        assert_eq!(h.carried_series(), vec![8, 12]);
         assert_eq!(h.peak_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
@@ -262,6 +275,10 @@ mod tests {
         assert_eq!(
             iters[0].get("max_occupancy").unwrap().as_usize().unwrap(),
             10
+        );
+        assert_eq!(
+            iters[0].get("carried_medoids").unwrap().as_usize().unwrap(),
+            4
         );
     }
 }

@@ -1,0 +1,154 @@
+//! Exact-linkage oracle: `ward_linkage` (NN-chain, O(n²)) against a
+//! naive O(n³) global-minimum Lance-Williams agglomerator.
+//!
+//! Both implementations apply the identical Ward2 update — f64
+//! arithmetic on f32-stored working distances, `.max(0.0).sqrt()`, cast
+//! back to f32 — so for tie-free inputs they must build the *same tree*:
+//! after the shared height-sort relabelling (`Dendrogram::from_raw_merges`)
+//! every flat cut and every merge size must match **bitwise**.
+//!
+//! Merge *heights* carry one caveat: NN-chain may pop a mutual pair
+//! before the global minimum, so later Lance-Williams updates fold the
+//! same clusters in a different order.  The recursions are equal in
+//! exact arithmetic but reassociate differently through the f32 stores,
+//! so a height may differ in its last bits (measured ≤ 2 ulp over this
+//! test's whole grid; 45/117 grid cells agree exactly).  The test
+//! therefore pins heights to ≤ 16 ulp — tight enough to catch any real
+//! formula or bookkeeping divergence (wrong size weighting shifts
+//! heights by whole percents) while honest about reassociation.
+
+use mahc::ahc::{ward_linkage, Dendrogram};
+use mahc::distance::Condensed;
+use mahc::util::rng::Rng;
+
+/// Condensed |xi − xj| matrix over random 1-D normal points (continuous
+/// coordinates: ties have essentially zero probability, which the
+/// same-tree contract requires).
+fn random_condensed(n: usize, rng: &mut Rng) -> Condensed {
+    let pts: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 4.0).collect();
+    let mut cond = Condensed::zeros(n);
+    for i in 0..n {
+        for j in 0..i {
+            cond.set(i, j, (pts[i] - pts[j]).abs());
+        }
+    }
+    cond
+}
+
+/// Naive Ward: repeatedly merge the globally closest pair, applying the
+/// same Lance-Williams Ward2 update as `ahc::nnchain::merge_into` —
+/// operation for operation, including the f64/f32 boundaries.  Returns
+/// raw (a, b, height) merges with a < b, in merge order.
+fn naive_ward(cond: &Condensed) -> Vec<(usize, usize, f32)> {
+    let n = cond.n();
+    let mut d = cond.clone();
+    let mut size = vec![1usize; n];
+    let mut alive = vec![true; n];
+    let mut raw = Vec::new();
+    for _ in 0..n.saturating_sub(1) {
+        let mut best = (usize::MAX, usize::MAX, f32::INFINITY);
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            for j in 0..i {
+                if !alive[j] {
+                    continue;
+                }
+                let v = d.get(i, j);
+                if v < best.2 {
+                    best = (j, i, v);
+                }
+            }
+        }
+        let (a, b, h) = best;
+        assert!(a < b, "no mergeable pair found");
+        let (na, nb) = (size[a] as f64, size[b] as f64);
+        let dab2 = (h as f64) * (h as f64);
+        for k in 0..n {
+            if k == a || k == b || !alive[k] {
+                continue;
+            }
+            let nk = size[k] as f64;
+            let dak = d.get(a, k) as f64;
+            let dbk = d.get(b, k) as f64;
+            let num = (na + nk) * dak * dak + (nb + nk) * dbk * dbk - nk * dab2;
+            let new = (num / (na + nb + nk)).max(0.0).sqrt();
+            d.set(a, k, new as f32);
+        }
+        alive[b] = false;
+        size[a] += size[b];
+        raw.push((a, b, h));
+    }
+    raw
+}
+
+fn sorted_heights(mut h: Vec<f32>) -> Vec<f32> {
+    h.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    h
+}
+
+/// Distance in units-in-the-last-place between two same-sign finite
+/// floats (heights are non-negative by construction).
+fn ulp_diff(a: f32, b: f32) -> u32 {
+    (a.to_bits() as i64 - b.to_bits() as i64).unsigned_abs() as u32
+}
+
+#[test]
+fn chain_matches_naive_reference() {
+    for n in 2..=40usize {
+        for seed in [1u64, 71, 913] {
+            let mut rng = Rng::seed_from(seed.wrapping_mul(n as u64 + 1));
+            let cond = random_condensed(n, &mut rng);
+
+            let chain = ward_linkage(&cond);
+            let raw = naive_ward(&cond);
+            assert_eq!(chain.merges().len(), n - 1, "n={n} seed={seed}");
+            assert_eq!(raw.len(), n - 1, "n={n} seed={seed}");
+
+            // Merge heights: same multiset up to Lance-Williams
+            // reassociation (see module docs) — a handful of ulps, far
+            // below anything a formula bug could produce.
+            let got = sorted_heights(chain.merge_heights());
+            let want = sorted_heights(raw.iter().map(|&(_, _, h)| h).collect());
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    ulp_diff(g, w) <= 16,
+                    "n={n} seed={seed} height[{i}]: chain {g} vs naive {w} \
+                     ({} ulp apart)",
+                    ulp_diff(g, w)
+                );
+            }
+
+            // Flat cuts: run the naive merge list through the same
+            // height-sort relabelling and compare every cut bitwise.
+            let reference = Dendrogram::from_raw_merges(n, raw);
+            for k in [1usize, 2, 3, n / 2, n.saturating_sub(1), n] {
+                let k = k.clamp(1, n);
+                assert_eq!(
+                    chain.cut(k),
+                    reference.cut(k),
+                    "n={n} seed={seed} cut k={k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_sizes_agree_with_reference() {
+    // The relabelled trees must agree on cluster sizes at each merge,
+    // not just on cuts: size bookkeeping is what the Ward2 update
+    // weights by, so a silent divergence here would skew every later
+    // height by whole factors.
+    for seed in [5u64, 6, 7] {
+        let mut rng = Rng::seed_from(seed);
+        let n = 33;
+        let cond = random_condensed(n, &mut rng);
+        let chain = ward_linkage(&cond);
+        let reference = Dendrogram::from_raw_merges(n, naive_ward(&cond));
+        let a: Vec<usize> = chain.merges().iter().map(|m| m.size).collect();
+        let b: Vec<usize> = reference.merges().iter().map(|m| m.size).collect();
+        assert_eq!(a, b, "seed={seed}");
+    }
+}

@@ -3,10 +3,10 @@
 //! test scale.
 
 use mahc::baselines::full_ahc;
-use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::generate;
 use mahc::distance::NativeBackend;
-use mahc::mahc::MahcDriver;
+use mahc::mahc::{MahcDriver, StreamingDriver};
 use mahc::metrics;
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use std::path::Path;
@@ -95,6 +95,77 @@ fn metrics_sane_on_final_labels() {
     assert!((0.0..=1.0).contains(&p));
     assert!((0.0..=1.0).contains(&n));
     assert!((f - res.f_measure).abs() < 1e-12);
+}
+
+#[test]
+fn streaming_single_shard_reproduces_batch_exactly() {
+    // The streaming acceptance bar: one shard holding the whole corpus
+    // runs the same episode with the same RNG stream as the batch
+    // driver, so labels, K and F must be *bitwise* equal — with and
+    // without the pair cache.
+    let set = generate(&DatasetSpec::tiny(150, 8, 106));
+    let backend = NativeBackend::new();
+    for cache_bytes in [0usize, 8 << 20] {
+        let mut config = cfg(3, Some(50), 4);
+        config.cache_bytes = cache_bytes;
+        let batch = MahcDriver::new(&set, config.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let stream =
+            StreamingDriver::new(&set, StreamConfig::new(config, set.len()), &backend)
+                .unwrap()
+                .run()
+                .unwrap();
+        assert_eq!(stream.shards, 1);
+        assert_eq!(
+            stream.labels, batch.labels,
+            "cache_bytes={cache_bytes}: labels diverged"
+        );
+        assert_eq!(stream.k, batch.k);
+        assert_eq!(stream.f_measure, batch.f_measure);
+    }
+}
+
+#[test]
+fn streaming_multi_shard_obeys_beta_and_warms_the_cross_cache() {
+    // A real stream: β must hold inside every shard's episode, every
+    // object must come out labelled, later shards must carry medoids,
+    // and the medoid × batch retirement rectangles
+    // (`build_cross_cached`) must see nonzero cache hits — the pairs
+    // were just computed by the episodes' condensed builds.
+    let set = generate(&DatasetSpec::tiny(160, 8, 107));
+    let backend = NativeBackend::new();
+    let beta = 30;
+    let mut algo = cfg(2, Some(beta), 3);
+    algo.cache_bytes = 8 << 20;
+    let stream = StreamingDriver::new(&set, StreamConfig::new(algo, 50), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(stream.shards, 4);
+    assert_eq!(stream.history.records.len(), 4);
+    for r in &stream.history.records {
+        assert!(
+            r.max_occupancy <= beta,
+            "shard {} recorded occupancy {} > β={beta}",
+            r.iteration,
+            r.max_occupancy
+        );
+    }
+    assert_eq!(stream.history.records[0].carried_medoids, 0);
+    for r in &stream.history.records[1..] {
+        assert!(r.carried_medoids > 0, "no medoids carried into shard");
+    }
+    assert_eq!(stream.labels.len(), set.len());
+    assert!(stream.labels.iter().all(|&l| l < stream.k));
+    assert!(
+        stream.assign_cache.hits > 0,
+        "retirement rectangles never hit the pair cache: {:?}",
+        stream.assign_cache
+    );
+    // Quality stays in the plausible band for separable data.
+    assert!(stream.f_measure > 0.3 && stream.f_measure <= 1.0);
 }
 
 #[test]
