@@ -1,0 +1,77 @@
+//! Scalar vs lane-parallel DTW backend throughput on the default
+//! generator corpus, in pair-alignments per second.
+//!
+//! The blocked backend's whole claim is "same bits, more pairs per
+//! second": this harness first proves the bits (full-tile bitwise
+//! parity, a cheap subset of `rust/tests/backend_parity.rs`), then
+//! measures both backends on the same tiles and asserts the ≥1.5×
+//! pairs/sec floor recorded in EXPERIMENTS.md §Backends.  Banded
+//! alignments share the scalar kernel, so only the full-band path is
+//! raced.
+
+use mahc::config::DatasetSpec;
+use mahc::corpus::{generate, Segment};
+use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::util::bench::Bench;
+
+fn main() {
+    // The default generator corpus shape: 39-dim MFCC-like features,
+    // paper-realistic segment lengths.
+    let mut spec = DatasetSpec::tiny(96, 8, 11);
+    spec.feat_dim = 39;
+    spec.len_range = (6, 60);
+    let set = generate(&spec);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let (xs, ys) = (&refs[..32], &refs[32..96]);
+    let pairs = (xs.len() * ys.len()) as u64;
+
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+
+    // Parity before speed: a benchmark of wrong answers is worthless.
+    let a = native.pairwise(xs, ys).unwrap();
+    let b = blocked.pairwise(xs, ys).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "pair {i}: {x} vs {y}");
+    }
+
+    println!("== bench_backends: 32x64 pair tile, T in 6..60, D=39 ==");
+    let rn = Bench::new("native/tile32x64")
+        .throughput(pairs)
+        .run(|| native.pairwise(xs, ys).unwrap());
+    let rb = Bench::new("blocked/tile32x64")
+        .throughput(pairs)
+        .run(|| blocked.pairwise(xs, ys).unwrap());
+    let tile_ratio = rb.throughput.unwrap() / rn.throughput.unwrap();
+
+    // The production shape: a full condensed build through the parallel
+    // builder (same 16-row blocking for both backends).
+    let cond_pairs = (refs.len() * (refs.len() - 1) / 2) as u64;
+    let cn = Bench::new("native/condensed96")
+        .throughput(cond_pairs)
+        .run(|| build_condensed(&refs, &native, 4).unwrap());
+    let cb = Bench::new("blocked/condensed96")
+        .throughput(cond_pairs)
+        .run(|| build_condensed(&refs, &blocked, 4).unwrap());
+    let cond_ratio = cb.throughput.unwrap() / cn.throughput.unwrap();
+
+    println!();
+    println!("blocked/native pairs-per-sec ratio:");
+    println!("  tile32x64    {tile_ratio:.2}x");
+    println!("  condensed96  {cond_ratio:.2}x");
+
+    // The acceptance floor from EXPERIMENTS.md §Backends.  Override via
+    // MAHC_BENCH_FLOOR (e.g. 0 to record numbers on hardware whose
+    // vector units can't honour the default — correctness parity above
+    // has already passed by this point either way).
+    let floor: f64 = std::env::var("MAHC_BENCH_FLOOR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    assert!(
+        tile_ratio >= floor,
+        "blocked backend must deliver >= {floor}x pairs/sec on the default \
+         corpus tile (got {tile_ratio:.2}x) — see EXPERIMENTS.md §Backends"
+    );
+}

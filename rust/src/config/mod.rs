@@ -175,7 +175,9 @@ pub struct AlgoConfig {
     /// Merge undersized subsets (paper §7 concludes this is unnecessary;
     /// kept as an ablation switch, Fig. 11).
     pub merge_min: Option<usize>,
-    /// Distance backend (native Rust DTW or the PJRT XLA artifact).
+    /// Distance backend (scalar native DTW, the lane-parallel blocked
+    /// kernel, or the PJRT XLA artifact).  Native and blocked produce
+    /// bitwise-identical clusterings (`rust/tests/backend_parity.rs`).
     pub backend: BackendKind,
     /// Worker threads for per-subset stage-1 jobs.
     pub threads: usize,
@@ -413,6 +415,29 @@ mod tests {
             AlgoConfig::default().with_cache_bytes(123).cache_bytes,
             123
         );
+    }
+
+    #[test]
+    fn backend_key_accepts_all_kinds() {
+        let mut cfg = AlgoConfig::default();
+        for (value, want) in [
+            ("blocked", BackendKind::Blocked),
+            ("scalar", BackendKind::Native),
+            ("native", BackendKind::Native),
+            ("xla", BackendKind::Xla),
+        ] {
+            apply_overrides(
+                &mut cfg,
+                &[("backend".to_string(), value.to_string())],
+            )
+            .unwrap();
+            assert_eq!(cfg.backend, want, "backend = {value}");
+        }
+        assert!(apply_overrides(
+            &mut cfg,
+            &[("backend".to_string(), "gpu".to_string())]
+        )
+        .is_err());
     }
 
     #[test]

@@ -95,6 +95,12 @@ mod tests {
     fn counts_and_degenerate_sizes() {
         let plan = Shards::new(10, 100, None);
         assert_eq!(plan.total(), 1);
+        // shard_size == n is the exact single-shard boundary, and a
+        // unit shard size yields one id per shard in order.
+        let exact: Vec<Vec<usize>> = Shards::new(10, 10, None).collect();
+        assert_eq!(exact, vec![(0..10).collect::<Vec<_>>()]);
+        let unit: Vec<Vec<usize>> = Shards::new(4, 1, None).collect();
+        assert_eq!(unit, vec![vec![0], vec![1], vec![2], vec![3]]);
         let plan = Shards::new(0, 5, None);
         assert_eq!(plan.total(), 0);
         assert_eq!(plan.collect::<Vec<_>>().len(), 0);

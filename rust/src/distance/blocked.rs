@@ -1,0 +1,357 @@
+//! Lane-parallel multi-pair DTW backend.
+//!
+//! [`super::NativeBackend`] aligns one (x, y) pair at a time: its inner
+//! DP loop is a serial dependence chain through `left`, so the recurrence
+//! runs at scalar latency no matter how wide the machine's vector units
+//! are.  [`BlockedBackend`] instead evaluates up to [`LANES`] pairs that
+//! share one query segment per kernel call, laying the local-distance and
+//! DP rows out struct-of-arrays (`[j][lane]` interleaved) so every
+//! per-cell operation becomes a fixed-width lane loop over a plain
+//! `[f32; LANES]` chunk — a shape LLVM autovectorises on stable Rust,
+//! no `std::simd` required.
+//!
+//! **Backend-invariance contract** (verified by
+//! `rust/tests/backend_parity.rs`, documented in EXPERIMENTS.md
+//! §Backends): each lane executes *exactly* the scalar kernel's per-cell
+//! operation sequence — the same ascending-`d` squared-difference fold,
+//! the same `diag.min(up).min(left)` operand order, the same
+//! `dist + best` add — and lanes never mix, so full-band results are
+//! **bitwise identical** to [`super::NativeBackend`].  Banded alignments
+//! go through the very same scalar kernel
+//! ([`crate::dtw::classic::dtw_banded_transposed`]) the native backend
+//! uses, so the banded deviation bound is trivially zero ulp.
+//!
+//! Lanes are grouped by descending segment length (a stable sort, so
+//! grouping is deterministic) to keep the zero-padding to each group's
+//! longest member small; padded columns sit *after* a lane's own final
+//! column and the DP is causal in `j`, so they can never influence the
+//! cell the lane's result is read from.
+
+use super::{DtwBackend, NativeBackend};
+use crate::corpus::Segment;
+
+/// Pairs aligned per kernel call.  Eight f32 lanes fill one AVX2 vector
+/// (two NEON vectors); the lane loops below are written over
+/// `chunks_exact(LANES)` so the width is a compile-time constant.
+pub const LANES: usize = 8;
+
+/// Lane-parallel multi-pair DTW backend.
+pub struct BlockedBackend {
+    /// Optional Sakoe-Chiba band radius.  Banded calls are delegated to
+    /// the shared scalar band kernel (zero-ulp parity with
+    /// [`super::NativeBackend`]); only full-band alignments take the
+    /// lane-parallel path.
+    pub band: Option<usize>,
+}
+
+impl BlockedBackend {
+    pub fn new() -> Self {
+        BlockedBackend { band: None }
+    }
+
+    pub fn banded(band: usize) -> Self {
+        BlockedBackend { band: Some(band) }
+    }
+}
+
+impl Default for BlockedBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Up to [`LANES`] Y segments packed `[d][j][lane]`-interleaved:
+/// `data[(d * ly_max + j) * LANES + l]` holds frame `j`, dimension `d`
+/// of lane `l`'s segment, zero beyond that lane's length.  One group is
+/// packed per lane set and reused across every X row of the call block,
+/// so packing cost amortises exactly like
+/// [`crate::dtw::classic::Transposed`] does for the scalar backend.
+struct LaneGroup {
+    dim: usize,
+    ly_max: usize,
+    lens: [usize; LANES],
+    lanes: usize,
+    data: Vec<f32>,
+}
+
+impl LaneGroup {
+    fn pack(ys: &[&Segment]) -> LaneGroup {
+        debug_assert!(!ys.is_empty() && ys.len() <= LANES);
+        let dim = ys[0].dim;
+        let ly_max = ys.iter().map(|y| y.len).max().unwrap_or(1).max(1);
+        let mut lens = [0usize; LANES];
+        let mut data = vec![0.0f32; dim * ly_max * LANES];
+        for (l, y) in ys.iter().enumerate() {
+            debug_assert_eq!(y.dim, dim);
+            // Same loud failures as the scalar kernel's asserts; without
+            // them a zero-length lane would underflow the result index
+            // in dtw_lanes, and a short buffer would die on an anonymous
+            // slice-index panic instead of the documented message.
+            assert!(y.len >= 1, "empty sequence");
+            assert!(y.feats.len() >= y.len * dim, "buffer too short");
+            lens[l] = y.len;
+            for j in 0..y.len {
+                for d in 0..dim {
+                    data[(d * ly_max + j) * LANES + l] = y.feats[j * dim + d];
+                }
+            }
+        }
+        LaneGroup {
+            dim,
+            ly_max,
+            lens,
+            lanes: ys.len(),
+            data,
+        }
+    }
+
+    #[inline]
+    fn dim_rows(&self, d: usize) -> &[f32] {
+        &self.data[d * self.ly_max * LANES..(d + 1) * self.ly_max * LANES]
+    }
+}
+
+/// Reusable SoA rows so the pair-group loop allocates nothing.
+#[derive(Debug, Default)]
+struct LaneScratch {
+    dist: Vec<f32>,
+    prev: Vec<f32>,
+    cur: Vec<f32>,
+}
+
+impl LaneScratch {
+    fn resize(&mut self, width: usize) {
+        self.dist.resize(width, 0.0);
+        self.prev.resize(width, 0.0);
+        self.cur.resize(width, 0.0);
+    }
+}
+
+/// Align one query against every lane of `g` simultaneously, writing one
+/// normalised distance per real lane into `out[..g.lanes]`.
+///
+/// Per lane this is exactly [`crate::dtw::classic::dtw_transposed`]:
+/// the local-distance fold accumulates over `d` in ascending order, row
+/// 0 is a running prefix sum, and interior cells compute
+/// `dist + diag.min(up).min(left)` — operand order preserved, so every
+/// lane's f32 result is bitwise equal to the scalar kernel's.  Padded
+/// columns (`j >= lens[l]`) and padded lanes (`l >= g.lanes`) carry
+/// zeros; the DP is causal in `j`, so they never reach the cell
+/// `(lx-1, lens[l]-1)` a lane's answer is read from.
+fn dtw_lanes(
+    x: &[f32],
+    dim: usize,
+    lx: usize,
+    g: &LaneGroup,
+    scratch: &mut LaneScratch,
+    out: &mut [f32; LANES],
+) {
+    debug_assert_eq!(dim, g.dim);
+    assert!(lx >= 1, "empty sequence");
+    assert!(x.len() >= lx * dim, "buffer too short");
+    // `resize` pins each row buffer to exactly ly_max·LANES, so the
+    // chunked lane loops below see no stale tail from a larger group.
+    scratch.resize(g.ly_max * LANES);
+    let LaneScratch { dist, prev, cur } = scratch;
+
+    // Local-distance rows for x frame i: dist[j·LANES + l] =
+    // ||x_i − y_l[j]||.  Vector FMAs across the contiguous (j, lane)
+    // axis, one vector sqrt at the end — the scalar `fill_row` widened
+    // by LANES, same ascending-d accumulation order per cell.
+    let fill_rows = |dist: &mut [f32], xi: &[f32]| {
+        dist.fill(0.0);
+        for (d, &xv) in xi.iter().enumerate() {
+            for (acc, &yv) in dist.iter_mut().zip(g.dim_rows(d)) {
+                let t = xv - yv;
+                *acc += t * t;
+            }
+        }
+        for v in dist.iter_mut() {
+            *v = v.sqrt();
+        }
+    };
+
+    // Row 0: per-lane running prefix sum along j.
+    fill_rows(dist, &x[0..dim]);
+    let mut run = [0.0f32; LANES];
+    for (pj, dj) in prev
+        .chunks_exact_mut(LANES)
+        .zip(dist.chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            run[l] += dj[l];
+            pj[l] = run[l];
+        }
+    }
+
+    for i in 1..lx {
+        fill_rows(dist, &x[i * dim..(i + 1) * dim]);
+        // Column 0, then the interior recurrence with `left` and `diag`
+        // riding in fixed-width lane registers.
+        let mut left = [0.0f32; LANES];
+        let mut diag = [0.0f32; LANES];
+        for l in 0..LANES {
+            left[l] = prev[l] + dist[l];
+            cur[l] = left[l];
+            diag[l] = prev[l];
+        }
+        for j in 1..g.ly_max {
+            let pj = &prev[j * LANES..(j + 1) * LANES];
+            let dj = &dist[j * LANES..(j + 1) * LANES];
+            let cj = &mut cur[j * LANES..(j + 1) * LANES];
+            for l in 0..LANES {
+                let up = pj[l];
+                let best = diag[l].min(up).min(left[l]);
+                left[l] = dj[l] + best;
+                cj[l] = left[l];
+                diag[l] = up;
+            }
+        }
+        std::mem::swap(prev, cur);
+    }
+
+    for l in 0..g.lanes {
+        let ly = g.lens[l];
+        out[l] = prev[(ly - 1) * LANES + l] / (lx + ly) as f32;
+    }
+}
+
+impl DtwBackend for BlockedBackend {
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        if self.band.is_some() {
+            // Banded path: delegate to NativeBackend outright so the
+            // zero-ulp banded parity is structural (one kernel, one
+            // call path) rather than a copy kept in sync by hand.
+            return NativeBackend { band: self.band }.pairwise(xs, ys);
+        }
+
+        let ny = ys.len();
+        let mut out = vec![0.0f32; xs.len() * ny];
+        if xs.is_empty() || ny == 0 {
+            return Ok(out);
+        }
+        // Group lanes by descending length (stable, hence deterministic)
+        // so each group pads only to its own longest member; results are
+        // scattered back through the original column index, so the
+        // output layout — and every individual value — is independent of
+        // the grouping.
+        let mut order: Vec<usize> = (0..ny).collect();
+        order.sort_by_key(|&j| std::cmp::Reverse(ys[j].len));
+
+        let mut scratch = LaneScratch::default();
+        let mut lane_out = [0.0f32; LANES];
+        for cols in order.chunks(LANES) {
+            let group_ys: Vec<&Segment> = cols.iter().map(|&j| ys[j]).collect();
+            let group = LaneGroup::pack(&group_ys);
+            for (xi, x) in xs.iter().enumerate() {
+                dtw_lanes(&x.feats, x.dim, x.len, &group, &mut scratch, &mut lane_out);
+                for (l, &j) in cols.iter().enumerate() {
+                    out[xi * ny + j] = lane_out[l];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn preferred_rows(&self) -> usize {
+        // Must match NativeBackend: the condensed/cross builders block
+        // triangle rows by this size, and the cached builders probe the
+        // PairCache per block — equal block shapes keep probe order and
+        // hit patterns backend-invariant (asserted in backend_parity).
+        16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+
+    fn corpus(n: usize, dim: usize, len_range: (usize, usize), seed: u64) -> Vec<Segment> {
+        let mut spec = DatasetSpec::tiny(n, 3, seed);
+        spec.feat_dim = dim;
+        spec.len_range = len_range;
+        generate(&spec).segments
+    }
+
+    fn assert_bitwise(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: pair {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn full_band_bitwise_equals_native_across_shapes() {
+        for (dim, lr, seed) in [(1usize, (2, 7), 1u64), (4, (3, 12), 2), (13, (6, 24), 3)] {
+            let segs = corpus(20, dim, lr, seed);
+            let refs: Vec<&Segment> = segs.iter().collect();
+            let native = NativeBackend::new().pairwise(&refs[..9], &refs[9..]).unwrap();
+            let blocked = BlockedBackend::new().pairwise(&refs[..9], &refs[9..]).unwrap();
+            assert_bitwise(&native, &blocked, &format!("dim={dim}"));
+        }
+    }
+
+    #[test]
+    fn remainder_lane_groups_are_exact() {
+        // ys counts around the LANES boundary exercise full groups,
+        // a final short group, and a lone lane.
+        let segs = corpus(24, 5, (4, 16), 9);
+        let refs: Vec<&Segment> = segs.iter().collect();
+        for ny in [1usize, 3, 7, 8, 9, 15, 17] {
+            let native = NativeBackend::new().pairwise(&refs[..4], &refs[4..4 + ny]).unwrap();
+            let blocked = BlockedBackend::new().pairwise(&refs[..4], &refs[4..4 + ny]).unwrap();
+            assert_bitwise(&native, &blocked, &format!("ny={ny}"));
+        }
+    }
+
+    #[test]
+    fn single_frame_segments_align() {
+        let mut segs = corpus(10, 3, (1, 5), 12);
+        // Force a genuine length-1 segment into the mix.
+        segs[0].len = 1;
+        segs[0].feats.truncate(3);
+        let refs: Vec<&Segment> = segs.iter().collect();
+        let native = NativeBackend::new().pairwise(&refs[..3], &refs[3..]).unwrap();
+        let blocked = BlockedBackend::new().pairwise(&refs[..3], &refs[3..]).unwrap();
+        assert_bitwise(&native, &blocked, "len-1");
+        let swapped = BlockedBackend::new().pairwise(&refs[3..], &refs[..3]).unwrap();
+        let native_sw = NativeBackend::new().pairwise(&refs[3..], &refs[..3]).unwrap();
+        assert_bitwise(&native_sw, &swapped, "len-1 swapped");
+    }
+
+    #[test]
+    fn banded_shares_the_scalar_kernel_bitwise() {
+        let segs = corpus(16, 4, (5, 20), 13);
+        let refs: Vec<&Segment> = segs.iter().collect();
+        for band in [0usize, 2, 8, 100] {
+            let native = NativeBackend::banded(band).pairwise(&refs[..6], &refs[6..]).unwrap();
+            let blocked = BlockedBackend::banded(band).pairwise(&refs[..6], &refs[6..]).unwrap();
+            assert_bitwise(&native, &blocked, &format!("band={band}"));
+        }
+    }
+
+    #[test]
+    fn empty_inputs_yield_empty_output() {
+        let segs = corpus(4, 3, (3, 8), 14);
+        let refs: Vec<&Segment> = segs.iter().collect();
+        let b = BlockedBackend::new();
+        assert!(b.pairwise(&refs[..0], &refs).unwrap().is_empty());
+        assert!(b.pairwise(&refs, &refs[..0]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn block_shape_matches_native() {
+        assert_eq!(
+            BlockedBackend::new().preferred_rows(),
+            NativeBackend::new().preferred_rows(),
+            "builder blocking (and with it cache probe order) must be backend-invariant"
+        );
+    }
+}

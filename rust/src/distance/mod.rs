@@ -5,12 +5,16 @@
 //! n segments needs an n(n−1)/2-entry condensed matrix ([`Condensed`]),
 //! so β (the subset occupancy threshold) directly bounds peak memory.
 //! [`build_condensed`] fills one by tiling pair blocks over a
-//! [`DtwBackend`] — either the native Rust DP ([`NativeBackend`]) or
-//! the AOT XLA executable (`runtime::XlaDtwBackend`) — in parallel.
+//! [`DtwBackend`] — the native scalar Rust DP ([`NativeBackend`]), the
+//! lane-parallel multi-pair kernel ([`BlockedBackend`], bitwise-equal
+//! results, see `blocked`), or the AOT XLA executable
+//! (`runtime::XlaDtwBackend`) — in parallel.
 
+pub mod blocked;
 pub mod cache;
 pub mod condensed;
 
+pub use blocked::BlockedBackend;
 pub use cache::PairCache;
 pub use condensed::Condensed;
 
@@ -22,6 +26,10 @@ use crate::util::pool::parallel_map;
 pub enum BackendKind {
     /// Pure-Rust rolling-row DP (reference; fully deterministic).
     Native,
+    /// Lane-parallel multi-pair DP ([`BlockedBackend`]): vectorises
+    /// across pairs, bitwise-equal to `Native` (full band; banded via
+    /// the shared scalar kernel).
+    Blocked,
     /// AOT-compiled Pallas kernel through PJRT (`artifacts/dtw_*.hlo.txt`).
     Xla,
 }
@@ -29,15 +37,19 @@ pub enum BackendKind {
 impl BackendKind {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
-            "native" => Ok(BackendKind::Native),
+            // "scalar" is the conventional alias the conformance/CI
+            // matrix uses for the reference backend.
+            "native" | "scalar" => Ok(BackendKind::Native),
+            "blocked" => Ok(BackendKind::Blocked),
             "xla" => Ok(BackendKind::Xla),
-            other => anyhow::bail!("unknown backend '{other}' (native|xla)"),
+            other => anyhow::bail!("unknown backend '{other}' (native|blocked|xla)"),
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
+            BackendKind::Blocked => "blocked",
             BackendKind::Xla => "xla",
         }
     }
@@ -588,6 +600,12 @@ mod tests {
     #[test]
     fn backend_kind_parse() {
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("scalar").unwrap(), BackendKind::Native);
+        assert_eq!(
+            BackendKind::parse("blocked").unwrap(),
+            BackendKind::Blocked
+        );
+        assert_eq!(BackendKind::Blocked.name(), "blocked");
         assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
         assert!(BackendKind::parse("gpu").is_err());
     }

@@ -393,6 +393,87 @@ mod tests {
     }
 
     #[test]
+    fn full_cover_band_is_bitwise_equal_to_unbanded() {
+        // band ≥ max(lx, ly) makes every cell reachable, and the banded
+        // DP's min chain — min(min(min(BIG, up), diag), left) with all
+        // operands finite, non-negative and below BIG — selects the same
+        // value as the unbanded diag.min(up).min(left); additions
+        // commute bitwise in IEEE 754.  So full coverage is not merely
+        // close: it is bit-for-bit the unbanded result.
+        let dim = 3;
+        let seqs = multidim_seqs(dim);
+        for (xf, lx) in &seqs {
+            for (yf, ly) in &seqs {
+                let full = dtw(xf, yf, dim, *lx, *ly);
+                let band = (*lx).max(*ly);
+                let banded = dtw_banded(xf, yf, dim, *lx, *ly, band);
+                assert_eq!(
+                    full.to_bits(),
+                    banded.to_bits(),
+                    "lx={lx} ly={ly} band={band}: {full} vs {banded}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn band_cost_monotone_non_increasing_as_band_widens() {
+        // Widening the band only adds candidate paths, so the optimum
+        // can never get worse; INFEASIBLE (no path) dominates any
+        // feasible cost, so the monotone chain holds from band 0 up.
+        let dim = 2;
+        let seqs = multidim_seqs(dim);
+        for (xf, lx) in &seqs {
+            for (yf, ly) in &seqs {
+                let mut prev = f32::INFINITY;
+                for band in 0..=(*lx).max(*ly) + 1 {
+                    let cost = dtw_banded(xf, yf, dim, *lx, *ly, band);
+                    assert!(
+                        cost <= prev,
+                        "lx={lx} ly={ly}: band {band} cost {cost} > narrower {prev}"
+                    );
+                    prev = cost;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn length_one_segments_band_semantics() {
+        // 1×m with band 0 reaches only cell (0,0): no path to the final
+        // column, so the alignment is infeasible; a covering band must
+        // reproduce the unbanded result exactly.
+        let dim = 2;
+        let x = seq(&[0.5, -1.0]); // 1 frame
+        let y: Vec<f32> = (0..4 * dim).map(|k| (k as f32 * 0.3).sin()).collect();
+        assert!(dtw_banded(&x, &y, dim, 1, 4, 0) >= INFEASIBLE / 2.0);
+        assert_eq!(
+            dtw_banded(&x, &y, dim, 1, 4, 4).to_bits(),
+            dtw(&x, &y, dim, 1, 4).to_bits()
+        );
+        // 1×1 is feasible even at band 0 and equals the unbanded pair.
+        let z = seq(&[2.0, 2.0]);
+        assert_eq!(
+            dtw_banded(&x, &z, dim, 1, 1, 0).to_bits(),
+            dtw(&x, &z, dim, 1, 1).to_bits()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer too short")]
+    fn short_buffer_for_claimed_shape_panics() {
+        // A dim/len claim larger than the buffer (the dim-mismatch
+        // failure mode) must be a loud panic, not a quiet misread.
+        dtw(&[1.0], &[1.0, 2.0, 3.0, 4.0], 2, 1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer too short")]
+    fn banded_short_buffer_panics_too() {
+        dtw_banded(&[1.0, 2.0, 3.0], &[1.0, 2.0], 2, 2, 1, 1);
+    }
+
+    #[test]
     fn banded_wide_band_matches_unbanded_multidim() {
         let dim = 3;
         let seqs = multidim_seqs(dim);

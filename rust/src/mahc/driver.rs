@@ -17,7 +17,7 @@ use crate::config::{AlgoConfig, Convergence, FinalK};
 use crate::corpus::{Segment, SegmentSet};
 use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{CacheStats, IterationRecord, RunHistory};
+use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory};
 use crate::util::rng::Rng;
 
 /// Final output of a clustering run.
@@ -114,6 +114,9 @@ pub(crate) struct EpisodeSummary {
     pub total_clusters: usize,
     /// Peak condensed-matrix bytes over the episode.
     pub peak_matrix_bytes: usize,
+    /// Pair distances produced over the episode (stage-1 condensed
+    /// builds + medoid matrices; cache hits included).
+    pub pairs: usize,
 }
 
 /// Result of one episode of the iteration loop over an id set.
@@ -234,8 +237,18 @@ pub(crate) fn run_episode(
         };
         let last = converged || i + 1 == max_iters;
 
+        // Pair distances this iteration produced: one condensed
+        // triangle per subset plus the medoid triangle (served by the
+        // backend or the cache; either way a pair was delivered).
+        let iter_pairs: usize = subsets
+            .iter()
+            .map(|s| s.len() * (s.len().saturating_sub(1)) / 2)
+            .sum::<usize>()
+            + stage2.s * (stage2.s - 1) / 2;
+
         let iter_bytes = stage1_bytes.max(stage2.bytes);
         summary.iterations = i + 1;
+        summary.pairs += iter_pairs;
         summary.final_subsets = p_i;
         summary.max_occupancy = summary.max_occupancy.max(occ_max);
         summary.min_occupancy = summary.min_occupancy.min(occ_min);
@@ -245,6 +258,7 @@ pub(crate) fn run_episode(
         if last {
             summary.max_occupancy_pre_split = summary.max_occupancy_pre_split.max(occ_max);
             if let Some(h) = history.as_mut() {
+                let wall = t0.elapsed();
                 h.push(IterationRecord {
                     iteration: i,
                     subsets: p_i,
@@ -254,10 +268,12 @@ pub(crate) fn run_episode(
                     splits: 0,
                     total_clusters,
                     f_measure: f,
-                    wall: t0.elapsed(),
+                    wall,
                     peak_matrix_bytes: iter_bytes,
                     cache: cache_iter,
                     carried_medoids: 0,
+                    backend: backend.name().to_string(),
+                    pairs_per_sec: pairs_rate(iter_pairs, wall),
                 });
             }
             return Ok(EpisodeOutcome {
@@ -292,6 +308,7 @@ pub(crate) fn run_episode(
         summary.splits += split_out.subsets_split;
 
         if let Some(h) = history.as_mut() {
+            let wall = t0.elapsed();
             h.push(IterationRecord {
                 iteration: i,
                 subsets: p_i,
@@ -301,10 +318,12 @@ pub(crate) fn run_episode(
                 splits: split_out.subsets_split,
                 total_clusters,
                 f_measure: f,
-                wall: t0.elapsed(),
+                wall,
                 peak_matrix_bytes: iter_bytes,
                 cache: cache_iter,
                 carried_medoids: 0,
+                backend: backend.name().to_string(),
+                pairs_per_sec: pairs_rate(iter_pairs, wall),
             });
         }
 
@@ -424,6 +443,13 @@ mod tests {
         assert!(res.labels.iter().all(|&l| l < res.k));
         assert_eq!(res.history.records.len(), 3);
         assert!(res.f_measure > 0.0 && res.f_measure <= 1.0);
+        for r in &res.history.records {
+            assert_eq!(r.backend, "native", "records name the serving backend");
+            assert!(
+                r.pairs_per_sec > 0.0,
+                "every iteration computes pairs over nonzero wall"
+            );
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::config::StreamConfig;
 use crate::corpus::{Segment, SegmentSet, Shards};
 use crate::distance::{build_cross_cached, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{CacheStats, IterationRecord, RunHistory};
+use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory};
 use crate::util::rng::Rng;
 
 /// Final output of a streaming clustering run.
@@ -139,6 +139,7 @@ impl<'a> StreamingDriver<'a> {
             )?;
 
             let mut rect_bytes = 0usize;
+            let mut rect_pairs = 0usize;
             let mut rect_delta = CacheStats::default();
             if t + 1 < total_shards {
                 // Retire: everything not carried forward follows its
@@ -163,7 +164,8 @@ impl<'a> StreamingDriver<'a> {
                     if let Some(c) = cache {
                         rect_delta = c.stats().delta(&rect_snapshot);
                     }
-                    rect_bytes = xs.len() * ys.len() * std::mem::size_of::<f32>();
+                    rect_pairs = xs.len() * ys.len();
+                    rect_bytes = rect_pairs * std::mem::size_of::<f32>();
                     // Column argmin over the rows=medoids rectangle,
                     // walking each row contiguously.  Strict < on rows
                     // in increasing order keeps ties on the first
@@ -193,6 +195,7 @@ impl<'a> StreamingDriver<'a> {
                 Some(c) => c.stats().delta(&shard_snapshot),
                 None => CacheStats::default(),
             };
+            let wall = t0.elapsed();
             history.push(IterationRecord {
                 iteration: t,
                 subsets: ep.summary.final_subsets,
@@ -202,10 +205,14 @@ impl<'a> StreamingDriver<'a> {
                 splits: ep.summary.splits,
                 total_clusters: ep.summary.total_clusters,
                 f_measure: ep.f_measure,
-                wall: t0.elapsed(),
+                wall,
                 peak_matrix_bytes: ep.summary.peak_matrix_bytes.max(rect_bytes),
                 cache: shard_delta,
                 carried_medoids: carried_in,
+                backend: self.backend.name().to_string(),
+                // Shard throughput counts the episode's pairs plus the
+                // retirement rectangle's.
+                pairs_per_sec: pairs_rate(ep.summary.pairs + rect_pairs, wall),
             });
             last_episode = Some((active, ep));
         }
@@ -324,6 +331,88 @@ mod tests {
         for r in &stream.history.records[1..] {
             assert!(r.carried_medoids > 0, "later shards must carry medoids");
         }
+    }
+
+    #[test]
+    fn any_shard_size_at_least_n_reproduces_batch_bitwise() {
+        // The bitwise-batch guarantee must not depend on shard_size
+        // being *exactly* n: any capacity that swallows the corpus in
+        // one shard runs one episode on the same RNG stream.
+        let set = generate(&DatasetSpec::tiny(70, 5, 47));
+        let backend = NativeBackend::new();
+        let cfg = algo(3, Some(28), 3);
+        let batch = MahcDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        for shard_size in [set.len(), set.len() + 1, 10 * set.len()] {
+            let stream = StreamingDriver::new(
+                &set,
+                StreamConfig::new(cfg.clone(), shard_size),
+                &backend,
+            )
+            .unwrap()
+            .run()
+            .unwrap();
+            assert_eq!(stream.shards, 1, "shard_size={shard_size}");
+            assert_eq!(stream.labels, batch.labels, "shard_size={shard_size}");
+            assert_eq!(stream.k, batch.k, "shard_size={shard_size}");
+            assert_eq!(
+                stream.f_measure.to_bits(),
+                batch.f_measure.to_bits(),
+                "shard_size={shard_size}"
+            );
+        }
+    }
+
+    #[test]
+    fn unit_shards_run_cleanly_and_label_everyone() {
+        // shard_size = 1 is the most degenerate legal stream: every
+        // episode is (carried medoids ∪ one arrival), the first over a
+        // single object.  Pinned behaviour: no panic, every segment
+        // labelled, β and the carried bound still hold.
+        let set = generate(&DatasetSpec::tiny(14, 3, 48));
+        let backend = NativeBackend::new();
+        let stream = StreamingDriver::new(
+            &set,
+            StreamConfig::new(algo(2, Some(8), 2), 1),
+            &backend,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_eq!(stream.shards, 14);
+        assert_eq!(stream.history.records.len(), 14);
+        assert_eq!(stream.labels.len(), 14);
+        assert!(stream.k >= 1);
+        assert!(stream.labels.iter().all(|&l| l < stream.k));
+        for r in &stream.history.records {
+            assert!(r.max_occupancy <= 8, "shard {}: β violated", r.iteration);
+        }
+    }
+
+    #[test]
+    fn empty_corpus_fails_cleanly_not_panicking() {
+        // Both the shard planner and the driver must degrade to "no
+        // work" / a descriptive error, never a panic.
+        let plan = Shards::new(0, 5, None);
+        assert_eq!(plan.total(), 0);
+        assert!(plan.collect::<Vec<_>>().is_empty());
+        let empty = SegmentSet {
+            name: "empty".into(),
+            dim: 3,
+            segments: Vec::new(),
+            num_classes: 0,
+        };
+        let backend = NativeBackend::new();
+        let err = StreamingDriver::new(
+            &empty,
+            StreamConfig::new(algo(2, Some(8), 2), 4),
+            &backend,
+        )
+        .err()
+        .expect("empty corpus must be rejected at construction");
+        assert!(err.to_string().contains("empty"), "got: {err}");
     }
 
     #[test]

@@ -26,7 +26,7 @@ use mahc::config::{
     apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, StreamConfig,
 };
 use mahc::corpus::{generate, CompositionStats};
-use mahc::distance::{BackendKind, DtwBackend, NativeBackend};
+use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
 use mahc::mahc::{MahcDriver, StreamingDriver};
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use mahc::util::cli::Args;
@@ -57,10 +57,11 @@ fn run() -> anyhow::Result<()> {
             eprintln!("usage: mahc <cluster|stream|datagen|inspect> [options]");
             eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
-            eprintln!("          [--backend native|xla] [--threads N] [--seed N] [--out FILE]");
+            eprintln!("          [--backend native|blocked|xla] [--threads N] [--seed N] [--out FILE]");
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
             eprintln!("  stream  --dataset <name> [--scale F] --shard-size N [--shard-seed N]");
-            eprintln!("          [--p0 N] [--beta N] [--iters N] [--cache-mb N] [--out FILE]");
+            eprintln!("          [--p0 N] [--beta N] [--iters N] [--backend native|blocked|xla]");
+            eprintln!("          [--cache-mb N] [--out FILE]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -129,6 +130,10 @@ fn cluster(args: &Args) -> anyhow::Result<()> {
             let backend = NativeBackend::new();
             cluster_with(&set, cfg, &algo, &backend, args)
         }
+        BackendKind::Blocked => {
+            let backend = BlockedBackend::new();
+            cluster_with(&set, cfg, &algo, &backend, args)
+        }
         BackendKind::Xla => {
             let dir = args.get("artifacts").unwrap_or("artifacts");
             let rt = Runtime::new(std::path::Path::new(dir))?;
@@ -169,10 +174,10 @@ fn cluster_with(
             }
             let driver = MahcDriver::new(set, cfg, backend)?;
             let res = driver.run()?;
-            println!("iter  P_i   maxOcc minOcc splits   K_tot   F       wall_s");
+            println!("iter  P_i   maxOcc minOcc splits   K_tot   F       wall_s   pairs/s");
             for r in &res.history.records {
                 println!(
-                    "{:>4} {:>4} {:>8} {:>6} {:>6} {:>7} {:.4} {:>8.2}",
+                    "{:>4} {:>4} {:>8} {:>6} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
                     r.iteration,
                     r.subsets,
                     r.max_occupancy,
@@ -180,14 +185,16 @@ fn cluster_with(
                     r.splits,
                     r.total_clusters,
                     r.f_measure,
-                    r.wall.as_secs_f64()
+                    r.wall.as_secs_f64(),
+                    r.pairs_per_sec
                 );
             }
             println!(
-                "final: K={} F={:.4} peak_matrix={:.1} MiB",
+                "final: K={} F={:.4} peak_matrix={:.1} MiB backend={}",
                 res.k,
                 res.f_measure,
-                res.history.peak_bytes() as f64 / (1 << 20) as f64
+                res.history.peak_bytes() as f64 / (1 << 20) as f64,
+                backend.name()
             );
             if cache_on {
                 let t = res.history.cache_total();
@@ -240,6 +247,10 @@ fn stream(args: &Args) -> anyhow::Result<()> {
             let backend = NativeBackend::new();
             stream_with(&set, cfg, &backend, args)
         }
+        BackendKind::Blocked => {
+            let backend = BlockedBackend::new();
+            stream_with(&set, cfg, &backend, args)
+        }
         BackendKind::Xla => {
             let dir = args.get("artifacts").unwrap_or("artifacts");
             let rt = Runtime::new(std::path::Path::new(dir))?;
@@ -259,10 +270,10 @@ fn stream_with(
     let beta = cfg.algo.beta;
     let driver = StreamingDriver::new(set, cfg, backend)?;
     let res = driver.run()?;
-    println!("shard carried  P_f  maxOcc splits   K_tot   F       wall_s");
+    println!("shard carried  P_f  maxOcc splits   K_tot   F       wall_s   pairs/s");
     for r in &res.history.records {
         println!(
-            "{:>5} {:>7} {:>4} {:>7} {:>6} {:>7} {:.4} {:>8.2}",
+            "{:>5} {:>7} {:>4} {:>7} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
             r.iteration,
             r.carried_medoids,
             r.subsets,
@@ -270,16 +281,18 @@ fn stream_with(
             r.splits,
             r.total_clusters,
             r.f_measure,
-            r.wall.as_secs_f64()
+            r.wall.as_secs_f64(),
+            r.pairs_per_sec
         );
     }
     println!(
-        "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={})",
+        "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={}) backend={}",
         res.k,
         res.f_measure,
         res.history.peak_bytes() as f64 / (1 << 20) as f64,
         res.shards,
-        beta.map_or("off".to_string(), |b| b.to_string())
+        beta.map_or("off".to_string(), |b| b.to_string()),
+        backend.name()
     );
     if cache_on {
         let t = res.history.cache_total();

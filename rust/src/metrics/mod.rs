@@ -163,6 +163,27 @@ mod tests {
     }
 
     #[test]
+    fn f_measure_matches_hand_computed_fixture() {
+        // External fixture for the headline metric, worked through the
+        // paper's Eq. 2-4 by hand (not derived from this code):
+        //
+        //   truth: class A = {0,1,2,3,4} (n=5), class B = {5,6,7} (n=3)
+        //   pred:  cluster 0 = {0,1,2}, cluster 1 = {3,4,5,6}, cluster 2 = {7}
+        //
+        //   class A: vs c0: pr = 3/3, re = 3/5 → F = 2·(3/5)/(8/5) = 3/4
+        //            vs c1: pr = 2/4, re = 2/5 → F = 2·(1/5)/(9/10) = 4/9
+        //            best = 3/4
+        //   class B: vs c1: pr = 2/4, re = 2/3 → F = 2·(1/3)/(7/6) = 4/7
+        //            vs c2: pr = 1/1, re = 1/3 → F = 2·(1/3)/(4/3) = 1/2
+        //            best = 4/7
+        //
+        //   F = (5/8)·(3/4) + (3/8)·(4/7) = 15/32 + 3/14 = 153/224
+        let truth = vec![0, 0, 0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 0, 0, 1, 1, 1, 1, 2];
+        assert!((f_measure(&pred, &truth) - 153.0 / 224.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn empty_inputs() {
         assert_eq!(f_measure(&[], &[]), 0.0);
         assert_eq!(purity(&[], &[]), 0.0);

@@ -84,6 +84,13 @@ pub struct IterationRecord {
     /// the batch driver; the streaming driver records the size of the
     /// carried-forward medoid set entering each shard's episode here.
     pub carried_medoids: usize,
+    /// Name of the DTW backend that served this step's distances
+    /// ([`crate::distance::DtwBackend::name`]).
+    pub backend: String,
+    /// Pair distances the step's builders produced (stage-1 condensed
+    /// matrices + the medoid matrix; cache hits included since a hit
+    /// still yields a pair distance) per wall-clock second.
+    pub pairs_per_sec: f64,
 }
 
 impl IterationRecord {
@@ -107,7 +114,20 @@ impl IterationRecord {
             ),
             ("cache", self.cache.to_json()),
             ("carried_medoids", json::num(self.carried_medoids as f64)),
+            ("backend", json::s(&self.backend)),
+            ("pairs_per_sec", json::num(self.pairs_per_sec)),
         ])
+    }
+}
+
+/// Pair throughput over a wall-clock interval (0 when the clock did not
+/// advance, so degenerate timings never divide by zero).
+pub fn pairs_rate(pairs: usize, wall: Duration) -> f64 {
+    let secs = wall.as_secs_f64();
+    if secs > 0.0 {
+        pairs as f64 / secs
+    } else {
+        0.0
     }
 }
 
@@ -175,6 +195,11 @@ impl RunHistory {
         self.records.iter().map(|r| r.carried_medoids).collect()
     }
 
+    /// Per-record pair throughput (the §Backends comparison series).
+    pub fn pairs_per_sec_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.pairs_per_sec).collect()
+    }
+
     /// Whole-run cache counters (sum of per-iteration deltas).
     pub fn cache_total(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -219,6 +244,8 @@ mod tests {
                 evictions: 1,
             },
             carried_medoids: subsets * 2,
+            backend: "native".to_string(),
+            pairs_per_sec: 1000.0 * (i + 1) as f64,
         }
     }
 
@@ -230,6 +257,7 @@ mod tests {
         assert_eq!(h.subsets_series(), vec![4, 6]);
         assert_eq!(h.max_occupancy_series(), vec![100, 80]);
         assert_eq!(h.carried_series(), vec![8, 12]);
+        assert_eq!(h.pairs_per_sec_series(), vec![1000.0, 2000.0]);
         assert_eq!(h.peak_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
@@ -280,5 +308,20 @@ mod tests {
             iters[0].get("carried_medoids").unwrap().as_usize().unwrap(),
             4
         );
+        assert_eq!(
+            iters[0].get("backend").unwrap().as_str().unwrap(),
+            "native"
+        );
+        assert_eq!(
+            iters[0].get("pairs_per_sec").unwrap().as_usize().unwrap(),
+            1000
+        );
+    }
+
+    #[test]
+    fn pairs_rate_handles_degenerate_walls() {
+        assert_eq!(pairs_rate(500, Duration::from_secs(2)), 250.0);
+        assert_eq!(pairs_rate(500, Duration::ZERO), 0.0);
+        assert_eq!(pairs_rate(0, Duration::from_secs(1)), 0.0);
     }
 }

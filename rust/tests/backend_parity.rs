@@ -1,0 +1,237 @@
+//! Backend-parity conformance suite: the lane-parallel
+//! [`BlockedBackend`] must be *indistinguishable* from the scalar
+//! [`NativeBackend`] everywhere except wall-clock.
+//!
+//! Guarantees pinned here (and documented in EXPERIMENTS.md §Backends):
+//!
+//! * full-band pair distances are **bitwise identical** across dims,
+//!   length ranges, lane-remainder shapes, and thread counts;
+//! * banded pair distances are bitwise identical too (the blocked
+//!   backend routes bands through the shared scalar kernel, so the
+//!   banded deviation bound is zero ulp — tighter than the ≤16-ulp
+//!   linkage-height caveat it is documented beside);
+//! * the cached builders produce the same matrices *and the same
+//!   PairCache hit/miss/eviction counters* under either backend (probe
+//!   order is backend-invariant because both report the same
+//!   `preferred_rows`);
+//! * an end-to-end MAHC run — labels, K, F-measure bits, full
+//!   occupancy/split telemetry — and a multi-shard streaming run are
+//!   reproduced exactly under `--backend blocked`.
+//!
+//! The `MAHC_TEST_THREADS` / `MAHC_TEST_BACKEND` environment variables
+//! extend the built-in matrix; the CI backend-matrix job sweeps them
+//! over threads ∈ {1, 4} × backend ∈ {scalar, blocked}.
+
+mod common;
+
+use common::{assert_bitwise, backend_under_test, thread_matrix};
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, StreamConfig};
+use mahc::corpus::{generate, Segment, SegmentSet};
+use mahc::distance::{
+    build_condensed, build_condensed_cached, build_cross, BackendKind, BlockedBackend,
+    DtwBackend, NativeBackend, PairCache,
+};
+use mahc::mahc::{MahcDriver, StreamingDriver};
+
+fn corpus(n: usize, classes: usize, dim: usize, len_range: (usize, usize), seed: u64) -> SegmentSet {
+    let mut spec = DatasetSpec::tiny(n, classes, seed);
+    spec.feat_dim = dim;
+    spec.len_range = len_range;
+    generate(&spec)
+}
+
+#[test]
+fn condensed_full_band_bitwise_across_dims_lengths_threads() {
+    // Random generator corpora over a spread of dimensionalities and
+    // length distributions (including the paper's 39-dim MFCC shape and
+    // lengths straddling the 8-lane group width).
+    for (dim, len_range, seed) in [
+        (1usize, (2, 9), 101u64),
+        (3, (6, 24), 102),
+        (13, (6, 24), 103),
+        (39, (8, 60), 104),
+    ] {
+        let set = corpus(42, 5, dim, len_range, seed);
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let want = build_condensed(&refs, &NativeBackend::new(), 1).unwrap();
+        for threads in thread_matrix(&[1, 2, 4]) {
+            let got = build_condensed(&refs, &BlockedBackend::new(), threads).unwrap();
+            assert_bitwise(
+                want.as_slice(),
+                got.as_slice(),
+                &format!("dim={dim} threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn cross_rectangles_bitwise_including_lane_remainders() {
+    let set = corpus(40, 4, 7, (3, 30), 105);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    // Column counts around the 8-lane boundary: full groups, remainder
+    // groups, a lone lane.
+    for ny in [1usize, 5, 8, 9, 16, 23] {
+        let (xs, ys) = (&refs[..7], &refs[7..7 + ny]);
+        let want = build_cross(xs, ys, &NativeBackend::new(), 1).unwrap();
+        for threads in thread_matrix(&[1, 2, 4]) {
+            let got = build_cross(xs, ys, &BlockedBackend::new(), threads).unwrap();
+            assert_bitwise(&want, &got, &format!("ny={ny} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn banded_pairs_bitwise_zero_ulp() {
+    // Banded alignments share the scalar kernel, so parity is exact —
+    // including the INFEASIBLE sentinel for out-of-band length ratios.
+    let set = corpus(30, 4, 5, (2, 40), 106);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    for band in [0usize, 1, 4, 16, 128] {
+        let want = NativeBackend::banded(band)
+            .pairwise(&refs[..10], &refs[10..])
+            .unwrap();
+        let got = BlockedBackend::banded(band)
+            .pairwise(&refs[..10], &refs[10..])
+            .unwrap();
+        assert_bitwise(&want, &got, &format!("band={band}"));
+    }
+}
+
+#[test]
+fn cached_builds_and_hit_patterns_are_backend_invariant() {
+    // Both backends report the same preferred_rows, so the cached
+    // builder probes the cache in the same block order — the counters,
+    // not just the matrices, must agree.
+    let set = corpus(56, 5, 6, (4, 28), 107);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    assert_eq!(native.preferred_rows(), blocked.preferred_rows());
+
+    let want = build_condensed(&refs, &native, 1).unwrap();
+    for budget in [1usize << 8, 1 << 20] {
+        // Counters are compared on one thread: with eviction in play a
+        // multi-threaded insert order is timing-dependent, so only the
+        // single-threaded probe sequence is exactly reproducible.  (The
+        // matrices are bitwise-stable at any thread count — pinned by
+        // cache_determinism and the threads matrix above.)
+        let cn = PairCache::with_capacity_bytes(budget);
+        let cb = PairCache::with_capacity_bytes(budget);
+        for pass in 0..3 {
+            let a = build_condensed_cached(&refs, &native, 1, Some(&cn)).unwrap();
+            let b = build_condensed_cached(&refs, &blocked, 1, Some(&cb)).unwrap();
+            assert_bitwise(
+                want.as_slice(),
+                a.as_slice(),
+                &format!("native budget={budget} pass={pass}"),
+            );
+            assert_bitwise(
+                want.as_slice(),
+                b.as_slice(),
+                &format!("blocked budget={budget} pass={pass}"),
+            );
+        }
+        assert_eq!(
+            cn.stats(),
+            cb.stats(),
+            "budget={budget}: hit/miss/eviction counters must not depend on the backend"
+        );
+    }
+}
+
+fn mahc_cfg(threads: usize, cache_bytes: usize) -> AlgoConfig {
+    AlgoConfig {
+        p0: 3,
+        beta: Some(40),
+        convergence: Convergence::FixedIters(4),
+        threads,
+        cache_bytes,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_mahc_run_reproduced_exactly_under_blocked_backend() {
+    let set = corpus(110, 6, 13, (6, 24), 108);
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    let want = MahcDriver::new(&set, mahc_cfg(2, 0), &native)
+        .unwrap()
+        .run()
+        .unwrap();
+    for threads in thread_matrix(&[1, 2, 4]) {
+        let got = MahcDriver::new(&set, mahc_cfg(threads, 0), &blocked)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(got.labels, want.labels, "threads={threads}");
+        assert_eq!(got.k, want.k, "threads={threads}");
+        assert_eq!(
+            got.f_measure.to_bits(),
+            want.f_measure.to_bits(),
+            "threads={threads}"
+        );
+        for (a, b) in got.history.records.iter().zip(&want.history.records) {
+            assert_eq!(a.subsets, b.subsets);
+            assert_eq!(a.max_occupancy, b.max_occupancy);
+            assert_eq!(a.min_occupancy, b.min_occupancy);
+            assert_eq!(a.splits, b.splits);
+            assert_eq!(a.total_clusters, b.total_clusters);
+            assert_eq!(a.f_measure.to_bits(), b.f_measure.to_bits());
+            assert_eq!(a.backend, "blocked");
+            assert_eq!(b.backend, "native");
+        }
+    }
+}
+
+#[test]
+fn streaming_run_reproduced_exactly_under_blocked_backend() {
+    let set = corpus(120, 6, 13, (6, 24), 109);
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    let cfg = StreamConfig::new(mahc_cfg(2, 1 << 20), 40);
+    let want = StreamingDriver::new(&set, cfg.clone(), &native)
+        .unwrap()
+        .run()
+        .unwrap();
+    let got = StreamingDriver::new(&set, cfg, &blocked)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(want.shards > 1, "must exercise carry + retirement");
+    assert_eq!(got.labels, want.labels);
+    assert_eq!(got.k, want.k);
+    assert_eq!(got.f_measure.to_bits(), want.f_measure.to_bits());
+    assert_eq!(got.assign_cache, want.assign_cache);
+}
+
+#[test]
+fn end_to_end_matrix_from_env() {
+    // CI sweeps MAHC_TEST_BACKEND ∈ {scalar, blocked} ×
+    // MAHC_TEST_THREADS ∈ {1, 4}; locally this defaults to one blocked
+    // 2-thread cell.  Whatever the cell, the run must reproduce the
+    // single-threaded scalar reference bitwise — with the pair cache on,
+    // so scheduling, backend choice, and cache state are all exercised
+    // against one another.
+    let threads = *thread_matrix(&[2]).last().unwrap();
+    let backend = backend_under_test(BackendKind::Blocked);
+
+    let set = corpus(100, 5, 13, (6, 24), 110);
+    let reference = MahcDriver::new(&set, mahc_cfg(1, 0), &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    let got = MahcDriver::new(&set, mahc_cfg(threads, 4 << 20), backend.as_ref())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        got.labels,
+        reference.labels,
+        "{} t={threads}",
+        backend.name()
+    );
+    assert_eq!(got.k, reference.k);
+    assert_eq!(got.f_measure.to_bits(), reference.f_measure.to_bits());
+}

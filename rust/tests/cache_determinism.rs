@@ -1,32 +1,45 @@
 //! The pair cache's correctness contract: enabling it — at any budget,
-//! under any hit/eviction pattern, on any thread count — changes *no*
-//! output bit anywhere in the system.  Wall-clock is the only
-//! observable allowed to move.
+//! under any hit/eviction pattern, on any thread count, over any
+//! backend — changes *no* output bit anywhere in the system.
+//! Wall-clock is the only observable allowed to move.
+//!
+//! The CI backend-matrix job re-runs this suite per cell: the backend
+//! under test comes from `MAHC_TEST_BACKEND` (default native) and
+//! `MAHC_TEST_THREADS` extends the built-in thread sweeps.
 
+mod common;
+
+use common::{backend_under_test, thread_matrix};
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
 use mahc::corpus::{generate, Segment};
 use mahc::distance::{
-    build_condensed, build_condensed_cached, build_cross, build_cross_cached, NativeBackend,
+    build_condensed, build_condensed_cached, build_cross, build_cross_cached, BackendKind,
     PairCache,
 };
 use mahc::mahc::MahcDriver;
+
+/// Backend under test: native by default, or the CI matrix cell.
+fn backend() -> Box<dyn mahc::distance::DtwBackend> {
+    backend_under_test(BackendKind::Native)
+}
 
 #[test]
 fn condensed_bitwise_identical_across_cache_states_and_threads() {
     let set = generate(&DatasetSpec::tiny(60, 5, 2024));
     let refs: Vec<&Segment> = set.segments.iter().collect();
-    let backend = NativeBackend::new();
-    let want = build_condensed(&refs, &backend, 1).unwrap();
+    let backend = backend();
+    let backend = backend.as_ref();
+    let want = build_condensed(&refs, backend, 1).unwrap();
 
     // Budgets from "evicts almost everything" to "holds everything";
     // for each, repeated builds on several thread counts must reproduce
     // the uncached matrix bit for bit whatever the cache contains.
     for budget in [1usize, 512, 64 << 10, 8 << 20] {
         let cache = PairCache::with_capacity_bytes(budget);
-        for threads in [1usize, 2, 4, 8] {
+        for threads in thread_matrix(&[1, 2, 4, 8]) {
             for pass in 0..3 {
                 let got =
-                    build_condensed_cached(&refs, &backend, threads, Some(&cache)).unwrap();
+                    build_condensed_cached(&refs, backend, threads, Some(&cache)).unwrap();
                 assert_eq!(
                     got.as_slice(),
                     want.as_slice(),
@@ -43,15 +56,16 @@ fn condensed_identical_with_partially_poisoned_warmth() {
     // build sees a mixture of hits, misses, and unrelated entries.
     let set = generate(&DatasetSpec::tiny(80, 6, 2025));
     let refs: Vec<&Segment> = set.segments.iter().collect();
-    let backend = NativeBackend::new();
+    let backend = backend();
+    let backend = backend.as_ref();
     let cache = PairCache::with_capacity_bytes(1 << 20);
 
     let first: Vec<&Segment> = refs[..50].to_vec();
     let overlap: Vec<&Segment> = refs[30..].to_vec();
-    let _ = build_condensed_cached(&first, &backend, 4, Some(&cache)).unwrap();
+    let _ = build_condensed_cached(&first, backend, 4, Some(&cache)).unwrap();
 
-    let want = build_condensed(&overlap, &backend, 1).unwrap();
-    let got = build_condensed_cached(&overlap, &backend, 4, Some(&cache)).unwrap();
+    let want = build_condensed(&overlap, backend, 1).unwrap();
+    let got = build_condensed_cached(&overlap, backend, 4, Some(&cache)).unwrap();
     assert_eq!(got.as_slice(), want.as_slice());
     // The overlapping id range [30, 50) really was served from cache.
     let s = cache.stats();
@@ -62,14 +76,15 @@ fn condensed_identical_with_partially_poisoned_warmth() {
 fn cross_bitwise_identical_across_cache_states() {
     let set = generate(&DatasetSpec::tiny(40, 4, 2026));
     let refs: Vec<&Segment> = set.segments.iter().collect();
-    let backend = NativeBackend::new();
+    let backend = backend();
+    let backend = backend.as_ref();
     let (xs, ys) = (&refs[..15], &refs[10..40]);
-    let want = build_cross(xs, ys, &backend, 1).unwrap();
+    let want = build_cross(xs, ys, backend, 1).unwrap();
     for budget in [1usize, 1 << 20] {
         let cache = PairCache::with_capacity_bytes(budget);
-        for threads in [1usize, 3] {
+        for threads in thread_matrix(&[1, 3]) {
             for _ in 0..2 {
-                let got = build_cross_cached(xs, ys, &backend, threads, Some(&cache)).unwrap();
+                let got = build_cross_cached(xs, ys, backend, threads, Some(&cache)).unwrap();
                 assert_eq!(got, want, "budget={budget} threads={threads}");
             }
         }
@@ -82,15 +97,17 @@ fn full_mahc_m_run_is_unchanged_by_the_cache() {
     // occupancy/split telemetry are identical with the cache off, amply
     // budgeted, or starved into constant eviction.
     let set = generate(&DatasetSpec::tiny(150, 8, 2027));
-    let backend = NativeBackend::new();
+    let backend = backend();
+    let backend = backend.as_ref();
     let base = AlgoConfig {
         p0: 4,
         beta: Some(50),
         convergence: Convergence::FixedIters(4),
+        threads: *thread_matrix(&[2]).last().unwrap(),
         ..Default::default()
     };
 
-    let off = MahcDriver::new(&set, base.clone(), &backend)
+    let off = MahcDriver::new(&set, base.clone(), backend)
         .unwrap()
         .run()
         .unwrap();
@@ -99,7 +116,7 @@ fn full_mahc_m_run_is_unchanged_by_the_cache() {
             cache_bytes: budget,
             ..base.clone()
         };
-        let on = MahcDriver::new(&set, cfg, &backend).unwrap().run().unwrap();
+        let on = MahcDriver::new(&set, cfg, backend).unwrap().run().unwrap();
         assert_eq!(on.labels, off.labels, "budget={budget}");
         assert_eq!(on.k, off.k, "budget={budget}");
         assert_eq!(
@@ -127,7 +144,8 @@ fn ample_cache_reaches_high_hit_rate_by_iteration_three() {
     // subsets settle, most pair distances recur, so from iteration 3 on
     // a comfortably-budgeted cache serves a large share of lookups.
     let set = generate(&DatasetSpec::tiny(160, 8, 2028));
-    let backend = NativeBackend::new();
+    let backend = backend();
+    let backend = backend.as_ref();
     let cfg = AlgoConfig {
         p0: 4,
         beta: Some(55),
@@ -135,7 +153,7 @@ fn ample_cache_reaches_high_hit_rate_by_iteration_three() {
         cache_bytes: 16 << 20,
         ..Default::default()
     };
-    let res = MahcDriver::new(&set, cfg, &backend).unwrap().run().unwrap();
+    let res = MahcDriver::new(&set, cfg, backend).unwrap().run().unwrap();
     assert!(res.history.records.len() >= 3);
     let rates: Vec<f64> = res
         .history

@@ -1,0 +1,56 @@
+//! Shared plumbing for the CI backend-matrix test crates
+//! (`backend_parity.rs`, `cache_determinism.rs`): one definition of how
+//! a matrix cell is read from the environment, so the suites can never
+//! silently test different matrices.
+//!
+//! Not a test target itself — Cargo only builds the `[[test]]` paths
+//! spelled out in Cargo.toml, and each suite pulls this in with
+//! `mod common;`.
+
+// Each consumer uses the subset it needs; unused items in the other
+// crate's compilation must not fail `clippy -D warnings`.
+#![allow(dead_code)]
+
+use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
+
+/// Backend under test for this matrix cell: `MAHC_TEST_BACKEND`
+/// (`scalar`|`native`|`blocked`), or `default` when unset.
+pub fn backend_under_test(default: BackendKind) -> Box<dyn DtwBackend> {
+    let kind = match std::env::var("MAHC_TEST_BACKEND").ok() {
+        None => default,
+        Some(s) => BackendKind::parse(&s).expect("MAHC_TEST_BACKEND"),
+    };
+    match kind {
+        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Blocked => Box::new(BlockedBackend::new()),
+        BackendKind::Xla => panic!("the backend matrix covers native|blocked only"),
+    }
+}
+
+/// The suite's built-in thread sweep plus this matrix cell's
+/// `MAHC_TEST_THREADS`, if any.
+pub fn thread_matrix(base: &[usize]) -> Vec<usize> {
+    let mut t = base.to_vec();
+    if let Some(extra) = std::env::var("MAHC_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if !t.contains(&extra) {
+            t.push(extra);
+        }
+    }
+    t
+}
+
+/// Bitwise f32 comparison with an identifying context (equality of
+/// floats would also pass on -0.0 vs +0.0; parity means the *bits*).
+pub fn assert_bitwise(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: entry {i} differs: {x} vs {y}"
+        );
+    }
+}
