@@ -1,0 +1,132 @@
+//! Stage-0 aggregation cost/benefit: leader-pass wall, compression
+//! ratio, and end-to-end quality across the ε sweep.
+//!
+//! ε is data-dependent, so the harness derives the sweep from the
+//! corpus itself: it builds the full condensed matrix once, takes pair-
+//! distance quantiles as radii, and for each one reports the number of
+//! representatives, the compression ratio m/N, and the aggregated run's
+//! F-measure against the unaggregated reference.  Two pins are
+//! *provable* and asserted on every run: ε = 0 reproduces the
+//! unaggregated run bitwise, and ε beyond the largest pair distance
+//! collapses the corpus onto a single representative (every segment is
+//! within ε of the first leader).
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shrinks the corpus for the perf-smoke
+//! job, and `MAHC_BENCH_JSON=path` writes the sweep (compression ratio
+//! per ε, F deltas, leader wall) as a JSON fragment for `BENCH_ci.json`.
+
+use std::time::Instant;
+
+use mahc::aggregate::aggregate;
+use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec};
+use mahc::corpus::{generate, Segment};
+use mahc::distance::{build_condensed, NativeBackend};
+use mahc::mahc::MahcDriver;
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
+
+fn main() {
+    let n = if quick_mode() { 120 } else { 240 };
+    let set = generate(&DatasetSpec::tiny(n, 12, 13));
+    let backend = NativeBackend::new();
+    println!("== bench_aggregate: tiny corpus at N={n} ==");
+
+    // Pair-distance quantiles → the ε sweep.
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, &backend, 4).unwrap();
+    let mut dists: Vec<f32> = cond.as_slice().to_vec();
+    dists.sort_unstable_by(f32::total_cmp);
+    let quantile = |q: f64| dists[((dists.len() - 1) as f64 * q) as usize];
+    let d_max = *dists.last().unwrap();
+
+    let algo = AlgoConfig {
+        p0: 4,
+        beta: Some((n as f64 / 4.0 * 1.25).ceil() as usize),
+        convergence: Convergence::FixedIters(3),
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let plain = MahcDriver::new(&set, algo.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let plain_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "unaggregated: K={} F={:.4} wall={plain_wall:.2}s",
+        plain.k, plain.f_measure
+    );
+
+    // Pin 1: ε = 0 is the unaggregated run, bit for bit.
+    let zero = MahcDriver::new(
+        &set,
+        AlgoConfig {
+            aggregate: AggregateConfig::new(0.0),
+            ..algo.clone()
+        },
+        &backend,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(zero.labels, plain.labels, "ε=0 must be bitwise the plain run");
+    assert_eq!(zero.k, plain.k);
+    assert_eq!(zero.f_measure.to_bits(), plain.f_measure.to_bits());
+    println!("ε=0 reproduces the unaggregated run: MATCH");
+
+    println!("\n     ε        reps   m/N     K      F      ΔF%    wall_s");
+    let mut rows: Vec<json::Json> = Vec::new();
+    for (tag, eps) in [
+        ("p05", quantile(0.05)),
+        ("p25", quantile(0.25)),
+        ("p50", quantile(0.50)),
+    ] {
+        let cfg = AlgoConfig {
+            aggregate: AggregateConfig::new(eps),
+            ..algo.clone()
+        };
+        let t0 = Instant::now();
+        let res = MahcDriver::new(&set, cfg, &backend).unwrap().run().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let r0 = &res.history.records[0];
+        let delta = (res.f_measure - plain.f_measure) / plain.f_measure * 100.0;
+        println!(
+            "{tag} {eps:>9.3} {:>5} {:.3} {:>5} {:.4} {delta:>6.1} {wall:>8.2}",
+            r0.representatives, r0.compression_ratio, res.k, res.f_measure
+        );
+        assert_eq!(res.labels.len(), n, "aggregated labels must cover all N");
+        rows.push(json::obj(vec![
+            ("tag", json::s(tag)),
+            ("epsilon", json::num(eps as f64)),
+            ("representatives", json::num(r0.representatives as f64)),
+            ("compression_ratio", json::num(r0.compression_ratio)),
+            ("k", json::num(res.k as f64)),
+            ("f_measure", json::num(res.f_measure)),
+            ("f_delta_pct", json::num(delta)),
+            ("wall_secs", json::num(wall)),
+        ]));
+    }
+
+    // Pin 2: a radius past the largest pair distance leaves exactly one
+    // representative (every segment is within ε of the first leader).
+    let top = aggregate(&set, &AggregateConfig::new(d_max * 1.01), &backend, None).unwrap();
+    assert_eq!(top.reps(), 1, "ε > max pair distance must collapse to one");
+    assert!(top.compression_ratio() < 1.0);
+    println!("\nε past max distance collapses to 1 representative: OK");
+
+    // Leader-pass wall at the p25 radius (the sweet-spot shape).
+    let cfg25 = AggregateConfig::new(quantile(0.25));
+    let leader = Bench::new("aggregate/leader@p25")
+        .quick()
+        .run(|| aggregate(&set, &cfg25, &backend, None).unwrap());
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("n", json::num(n as f64)),
+        ("plain_f", json::num(plain.f_measure)),
+        ("plain_wall_secs", json::num(plain_wall)),
+        ("sweep", json::arr(rows)),
+        ("leader_wall", leader.to_json()),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
+}

@@ -8,11 +8,26 @@
 //! pairs/sec floor recorded in EXPERIMENTS.md §Backends.  Banded
 //! alignments share the scalar kernel, so only the full-band path is
 //! raced.
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shortens the sampling windows for the
+//! perf-smoke job, and `MAHC_BENCH_JSON=path` writes the measurements
+//! (pairs/sec per backend, ratios, the enforced floor) as a JSON
+//! fragment for the `BENCH_ci.json` artifact.
 
 use mahc::config::DatasetSpec;
 use mahc::corpus::{generate, Segment};
 use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend};
-use mahc::util::bench::Bench;
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
+
+fn bench(name: &str, pairs: u64) -> Bench {
+    let b = Bench::new(name).throughput(pairs);
+    if quick_mode() {
+        b.quick()
+    } else {
+        b
+    }
+}
 
 fn main() {
     // The default generator corpus shape: 39-dim MFCC-like features,
@@ -37,22 +52,16 @@ fn main() {
     }
 
     println!("== bench_backends: 32x64 pair tile, T in 6..60, D=39 ==");
-    let rn = Bench::new("native/tile32x64")
-        .throughput(pairs)
-        .run(|| native.pairwise(xs, ys).unwrap());
-    let rb = Bench::new("blocked/tile32x64")
-        .throughput(pairs)
-        .run(|| blocked.pairwise(xs, ys).unwrap());
+    let rn = bench("native/tile32x64", pairs).run(|| native.pairwise(xs, ys).unwrap());
+    let rb = bench("blocked/tile32x64", pairs).run(|| blocked.pairwise(xs, ys).unwrap());
     let tile_ratio = rb.throughput.unwrap() / rn.throughput.unwrap();
 
     // The production shape: a full condensed build through the parallel
     // builder (same 16-row blocking for both backends).
     let cond_pairs = (refs.len() * (refs.len() - 1) / 2) as u64;
-    let cn = Bench::new("native/condensed96")
-        .throughput(cond_pairs)
-        .run(|| build_condensed(&refs, &native, 4).unwrap());
-    let cb = Bench::new("blocked/condensed96")
-        .throughput(cond_pairs)
+    let cn =
+        bench("native/condensed96", cond_pairs).run(|| build_condensed(&refs, &native, 4).unwrap());
+    let cb = bench("blocked/condensed96", cond_pairs)
         .run(|| build_condensed(&refs, &blocked, 4).unwrap());
     let cond_ratio = cb.throughput.unwrap() / cn.throughput.unwrap();
 
@@ -69,6 +78,19 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1.5);
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("floor", json::num(floor)),
+        ("tile_ratio", json::num(tile_ratio)),
+        ("condensed_ratio", json::num(cond_ratio)),
+        (
+            "series",
+            json::arr(vec![rn.to_json(), rb.to_json(), cn.to_json(), cb.to_json()]),
+        ),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
+
     assert!(
         tile_ratio >= floor,
         "blocked backend must deliver >= {floor}x pairs/sec on the default \

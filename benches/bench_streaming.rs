@@ -5,15 +5,22 @@
 //! harness prints the memory story — peak condensed-matrix bytes per
 //! configuration — which is the quantity the β bound (and therefore
 //! the shard size) controls.
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shrinks the corpus and sampling
+//! windows for the perf-smoke job, and `MAHC_BENCH_JSON=path` writes
+//! the per-phase walls, peak bytes and quality table as a JSON fragment
+//! for the `BENCH_ci.json` artifact.
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec, NamedDataset, StreamConfig};
 use mahc::corpus::generate;
 use mahc::distance::NativeBackend;
 use mahc::mahc::{MahcDriver, StreamingDriver};
-use mahc::util::bench::Bench;
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
 
 fn main() {
-    let set = generate(&DatasetSpec::named(NamedDataset::SmallA, 0.02));
+    let scale = if quick_mode() { 0.01 } else { 0.02 };
+    let set = generate(&DatasetSpec::named(NamedDataset::SmallA, scale));
     let n = set.len();
     println!("== bench_streaming: small_a at N={n} ==");
     let backend = NativeBackend::new();
@@ -27,22 +34,25 @@ fn main() {
         ..Default::default()
     };
 
-    Bench::new("batch/3iters").quick().run(|| {
+    let mut walls: Vec<json::Json> = Vec::new();
+    let rb = Bench::new("batch/3iters").quick().run(|| {
         MahcDriver::new(&set, algo.clone(), &backend)
             .unwrap()
             .run()
             .unwrap()
     });
+    walls.push(rb.to_json());
 
     for shard_size in [n, n.div_ceil(2), n.div_ceil(4)] {
         let cfg = StreamConfig::new(algo.clone(), shard_size);
         let name = format!("stream/shard={shard_size}");
-        Bench::new(&name).quick().run(|| {
+        let r = Bench::new(&name).quick().run(|| {
             StreamingDriver::new(&set, cfg.clone(), &backend)
                 .unwrap()
                 .run()
                 .unwrap()
         });
+        walls.push(r.to_json());
     }
 
     // Memory + quality story at each shard size (one run each).
@@ -50,7 +60,13 @@ fn main() {
         .unwrap()
         .run()
         .unwrap();
-    println!("\nβ={beta}  batch: K={} F={:.4} peak_B={}", batch.k, batch.f_measure, batch.history.peak_bytes());
+    println!(
+        "\nβ={beta}  batch: K={} F={:.4} peak_B={}",
+        batch.k,
+        batch.f_measure,
+        batch.history.peak_bytes()
+    );
+    let mut table: Vec<json::Json> = Vec::new();
     println!("shard_size shards  K     F      peak_B  cache_hit%  assign_hit%");
     for shard_size in [n, n.div_ceil(2), n.div_ceil(4), n.div_ceil(8)] {
         let cfg = StreamConfig::new(algo.clone(), shard_size);
@@ -75,6 +91,18 @@ fn main() {
             res.history.cache_total().hit_rate() * 100.0,
             res.assign_cache.hit_rate() * 100.0
         );
+        table.push(json::obj(vec![
+            ("shard_size", json::num(shard_size as f64)),
+            ("shards", json::num(res.shards as f64)),
+            ("k", json::num(res.k as f64)),
+            ("f_measure", json::num(res.f_measure)),
+            ("peak_bytes", json::num(res.history.peak_bytes() as f64)),
+            (
+                "cache_hit_rate",
+                json::num(res.history.cache_total().hit_rate()),
+            ),
+            ("assign_hit_rate", json::num(res.assign_cache.hit_rate())),
+        ]));
     }
 
     // The single-shard stream must be the batch run, bit for bit.
@@ -85,4 +113,18 @@ fn main() {
     assert_eq!(one.labels, batch.labels, "single-shard stream diverged");
     assert_eq!(one.k, batch.k);
     println!("\nsingle-shard stream reproduces the batch run: MATCH");
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("n", json::num(n as f64)),
+        ("beta", json::num(beta as f64)),
+        ("batch_f", json::num(batch.f_measure)),
+        (
+            "batch_peak_bytes",
+            json::num(batch.history.peak_bytes() as f64),
+        ),
+        ("walls", json::arr(walls)),
+        ("shard_table", json::arr(table)),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
 }

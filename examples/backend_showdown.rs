@@ -16,10 +16,15 @@ use mahc::corpus::generate;
 use mahc::distance::{BlockedBackend, DtwBackend, NativeBackend};
 use mahc::mahc::{MahcDriver, MahcResult};
 
+fn quick() -> bool {
+    // The CI examples-smoke job sets this to keep the demo minutes low.
+    mahc::util::bench::env_flag("MAHC_EXAMPLE_QUICK")
+}
+
 fn run(set: &mahc::corpus::SegmentSet, backend: &dyn DtwBackend) -> anyhow::Result<MahcResult> {
     let cfg = AlgoConfig {
         p0: 4,
-        beta: Some(150),
+        beta: Some(if quick() { 60 } else { 150 }),
         convergence: Convergence::FixedIters(4),
         ..Default::default()
     };
@@ -27,7 +32,7 @@ fn run(set: &mahc::corpus::SegmentSet, backend: &dyn DtwBackend) -> anyhow::Resu
 }
 
 fn main() -> anyhow::Result<()> {
-    let mut spec = DatasetSpec::tiny(400, 16, 77);
+    let mut spec = DatasetSpec::tiny(if quick() { 140 } else { 400 }, 16, 77);
     spec.feat_dim = 39;
     let set = generate(&spec);
 

@@ -18,8 +18,13 @@ use mahc::corpus::generate;
 use mahc::distance::NativeBackend;
 use mahc::mahc::MahcDriver;
 
+fn quick() -> bool {
+    // The CI examples-smoke job sets this to keep the demo minutes low.
+    mahc::util::bench::env_flag("MAHC_EXAMPLE_QUICK")
+}
+
 fn main() -> anyhow::Result<()> {
-    let spec = DatasetSpec::tiny(700, 24, 77);
+    let spec = DatasetSpec::tiny(if quick() { 180 } else { 700 }, 24, 77);
     let set = generate(&spec);
     let p0 = 4;
     let beta = ((set.len() as f64 / p0 as f64) * 1.25).ceil() as usize;

@@ -18,11 +18,17 @@ use mahc::corpus::generate;
 use mahc::distance::NativeBackend;
 use mahc::mahc::{MahcDriver, StreamingDriver};
 
+fn quick() -> bool {
+    // The CI examples-smoke job sets this to keep the demo minutes low.
+    mahc::util::bench::env_flag("MAHC_EXAMPLE_QUICK")
+}
+
 fn main() -> anyhow::Result<()> {
-    let spec = DatasetSpec::tiny(600, 20, 88);
+    let n = if quick() { 160 } else { 600 };
+    let spec = DatasetSpec::tiny(n, 20, 88);
     let set = generate(&spec);
     let backend = NativeBackend::new();
-    let beta = 120;
+    let beta = if quick() { 40 } else { 120 };
     let algo = AlgoConfig {
         p0: 3,
         beta: Some(beta),
@@ -41,7 +47,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nshard-size ablation (β={beta}):");
     println!("shard_size shards  K     F      peak_B  assign_hit%");
-    for shard_size in [600, 300, 150, 75] {
+    let quarter = n.div_ceil(4);
+    for shard_size in [n, n.div_ceil(2), quarter, n.div_ceil(8)] {
         let cfg = StreamConfig::new(algo.clone(), shard_size);
         let res = StreamingDriver::new(&set, cfg, &backend)?.run()?;
         println!(
@@ -53,8 +60,8 @@ fn main() -> anyhow::Result<()> {
             res.history.peak_bytes(),
             res.assign_cache.hit_rate() * 100.0
         );
-        if shard_size == 150 {
-            println!("  per-shard telemetry at shard_size=150:");
+        if shard_size == quarter {
+            println!("  per-shard telemetry at shard_size={quarter}:");
             println!("  shard carried  P_f maxOcc  K_tot   F");
             for r in &res.history.records {
                 println!(

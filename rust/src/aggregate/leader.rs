@@ -1,0 +1,313 @@
+//! The deterministic leader (canopy) pass over a segment corpus.
+//!
+//! Segments are visited in id order.  Each segment probes the DTW
+//! distance to every representative whose group still has room under
+//! the occupancy cap (through [`build_cross_cached`], so probes land in
+//! the cross-iteration [`PairCache`] and stage 1 never recomputes
+//! them — full groups are not probed at all, since their distances
+//! could never be used) and joins the *nearest* such representative
+//! with distance ≤ ε; otherwise it becomes a new representative itself.
+//! Visit order, the strict `<` nearest rule and the single-row probe
+//! shape make the result independent of thread count and — because the
+//! scalar and blocked backends are bitwise equal — of backend choice.
+
+use crate::config::AggregateConfig;
+use crate::corpus::{Segment, SegmentSet};
+use crate::distance::{build_cross_cached, DtwBackend, PairCache};
+
+/// Result of the leader pass: `m` representatives plus the membership
+/// lists that map them back onto the full corpus.
+#[derive(Debug, Clone)]
+pub struct Aggregation {
+    /// Global segment id of each representative, in discovery (= id)
+    /// order.
+    pub rep_ids: Vec<usize>,
+    /// Member ids (global, leader first) per representative, parallel
+    /// to `rep_ids`.
+    pub members: Vec<Vec<usize>>,
+    /// Representative index (into `rep_ids`) per segment id.
+    pub rep_of: Vec<usize>,
+    /// DTW pair probes the pass performed (Σ per segment of the
+    /// representatives whose groups still had room when it arrived).
+    pub probe_pairs: usize,
+    /// Corpus size N the pass ran over.
+    pub total: usize,
+}
+
+impl Aggregation {
+    /// The no-op aggregation (ε = 0): every segment represents itself.
+    pub fn identity(n: usize) -> Aggregation {
+        Aggregation {
+            rep_ids: (0..n).collect(),
+            members: (0..n).map(|i| vec![i]).collect(),
+            rep_of: (0..n).collect(),
+            probe_pairs: 0,
+            total: n,
+        }
+    }
+
+    /// Number of representatives m.
+    pub fn reps(&self) -> usize {
+        self.rep_ids.len()
+    }
+
+    /// m / N — 1.0 means no compression, smaller is better.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.reps() as f64 / self.total as f64
+        }
+    }
+
+    /// Whether every segment is its own representative.
+    pub fn is_identity(&self) -> bool {
+        self.reps() == self.total
+    }
+}
+
+/// Run the leader pass over the whole corpus.
+///
+/// `cache` is the same [`PairCache`] the drivers hand to stage 1: every
+/// probe distance is published to it, so the (rep, rep) pairs a new
+/// representative was probed against are already warm when stage 1
+/// builds its condensed matrices over representatives.  With
+/// `cfg.epsilon == 0` the pass is skipped and [`Aggregation::identity`]
+/// is returned without touching the backend.
+pub fn aggregate(
+    set: &SegmentSet,
+    cfg: &AggregateConfig,
+    backend: &dyn DtwBackend,
+    cache: Option<&PairCache>,
+) -> anyhow::Result<Aggregation> {
+    cfg.validate()?;
+    let n = set.len();
+    if !cfg.is_active() || n == 0 {
+        return Ok(Aggregation::identity(n));
+    }
+
+    let mut rep_ids: Vec<usize> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    let mut rep_of = vec![usize::MAX; n];
+    let mut probe_pairs = 0usize;
+
+    for id in 0..n {
+        let mut best: Option<(usize, f32)> = None;
+        // Only groups with room are candidates: a distance to a full
+        // group could never be used (the β idea at stage 0), so probing
+        // it would be pure waste — quadratic waste in the saturated
+        // regime the cap exists for.  The trade: a new rep admitted
+        // after saturation never probes full groups, so those (rep,
+        // full-rep) pairs are not pre-warmed in the cache (see
+        // EXPERIMENTS.md §Aggregation).
+        let candidates: Vec<usize> = match cfg.cap {
+            Some(cap) => (0..rep_ids.len())
+                .filter(|&r| members[r].len() < cap)
+                .collect(),
+            None => (0..rep_ids.len()).collect(),
+        };
+        if !candidates.is_empty() {
+            let xs = [&set.segments[id]];
+            let ys: Vec<&Segment> = candidates
+                .iter()
+                .map(|&r| &set.segments[rep_ids[r]])
+                .collect();
+            // One probe row per segment: a single-row cross build is one
+            // block whatever the thread count, so the pass is serial and
+            // scheduling-invariant by construction.
+            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
+            anyhow::ensure!(
+                d.len() == ys.len(),
+                "backend returned {} probe distances for {} representatives",
+                d.len(),
+                ys.len()
+            );
+            probe_pairs += ys.len();
+            for (&r, &dist) in candidates.iter().zip(&d) {
+                if dist > cfg.epsilon {
+                    continue;
+                }
+                // Strict < keeps ties on the earliest representative:
+                // deterministic under any backend or thread count.
+                let closer = match best {
+                    Some((_, b)) => dist < b,
+                    None => true,
+                };
+                if closer {
+                    best = Some((r, dist));
+                }
+            }
+        }
+        match best {
+            Some((r, _)) => {
+                members[r].push(id);
+                rep_of[id] = r;
+            }
+            None => {
+                rep_of[id] = rep_ids.len();
+                rep_ids.push(id);
+                members.push(vec![id]);
+            }
+        }
+    }
+
+    debug_assert_eq!(members.iter().map(|m| m.len()).sum::<usize>(), n);
+    Ok(Aggregation {
+        rep_ids,
+        members,
+        rep_of,
+        probe_pairs,
+        total: n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::NativeBackend;
+
+    /// One-frame one-dim segments: DTW distance is exactly |a − b| / 2
+    /// (the kernel normalises by lx + ly), so group structure can be
+    /// computed by hand.
+    fn scalar_set(vals: &[f32]) -> SegmentSet {
+        SegmentSet {
+            name: "scalar".into(),
+            dim: 1,
+            segments: vals
+                .iter()
+                .enumerate()
+                .map(|(id, &v)| Segment {
+                    id,
+                    class_id: 0,
+                    len: 1,
+                    dim: 1,
+                    feats: vec![v],
+                })
+                .collect(),
+            num_classes: 1,
+        }
+    }
+
+    #[test]
+    fn groups_by_nearest_leader_within_epsilon() {
+        let set = scalar_set(&[0.0, 0.1, 0.9, 1.0, 0.05]);
+        let cfg = AggregateConfig::new(0.2);
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        assert_eq!(agg.rep_ids, vec![0, 2]);
+        assert_eq!(agg.members, vec![vec![0, 1, 4], vec![2, 3]]);
+        assert_eq!(agg.rep_of, vec![0, 0, 1, 1, 0]);
+        // Probes: 0 + 1 + 1 + 2 + 2.
+        assert_eq!(agg.probe_pairs, 6);
+        assert_eq!(agg.reps(), 2);
+        assert!((agg.compression_ratio() - 0.4).abs() < 1e-12);
+        assert!(!agg.is_identity());
+    }
+
+    #[test]
+    fn ties_go_to_the_earliest_representative() {
+        // 0.5 is exactly 0.25 (= 0.5/2 normalised) from both
+        // representatives; strict < keeps the first.
+        let set = scalar_set(&[0.0, 1.0, 0.5]);
+        let cfg = AggregateConfig::new(0.3);
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        assert_eq!(agg.rep_ids, vec![0, 1]);
+        assert_eq!(agg.members, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn cap_saturated_groups_spill_into_new_representatives() {
+        // Five identical segments, cap 2: groups fill to the cap and
+        // the overflow elects fresh leaders.
+        let set = scalar_set(&[0.0; 5]);
+        let cfg = AggregateConfig::new(0.5).with_cap(2);
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        assert_eq!(agg.rep_ids, vec![0, 2, 4]);
+        assert_eq!(agg.members, vec![vec![0, 1], vec![2, 3], vec![4]]);
+        for m in &agg.members {
+            assert!(m.len() <= 2, "cap violated: {m:?}");
+        }
+    }
+
+    #[test]
+    fn all_identical_segments_collapse_to_one_group_without_cap() {
+        let set = scalar_set(&[2.5; 7]);
+        let cfg = AggregateConfig::new(0.01);
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        assert_eq!(agg.rep_ids, vec![0]);
+        assert_eq!(agg.members, vec![vec![0, 1, 2, 3, 4, 5, 6]]);
+        assert!((agg.compression_ratio() - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_segment_and_empty_corpus() {
+        let one = scalar_set(&[1.0]);
+        let agg = aggregate(
+            &one,
+            &AggregateConfig::new(5.0),
+            &NativeBackend::new(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(agg.rep_ids, vec![0]);
+        assert_eq!(agg.members, vec![vec![0]]);
+        assert_eq!(agg.probe_pairs, 0);
+        assert!(agg.is_identity());
+
+        let empty = scalar_set(&[]);
+        let agg = aggregate(
+            &empty,
+            &AggregateConfig::new(5.0),
+            &NativeBackend::new(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(agg.reps(), 0);
+        assert_eq!(agg.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn epsilon_zero_is_identity_and_never_probes() {
+        let set = scalar_set(&[0.0, 0.0, 0.0]);
+        let agg = aggregate(
+            &set,
+            &AggregateConfig::default(),
+            &NativeBackend::new(),
+            None,
+        )
+        .unwrap();
+        assert!(agg.is_identity());
+        assert_eq!(agg.rep_ids, vec![0, 1, 2]);
+        assert_eq!(agg.rep_of, vec![0, 1, 2]);
+        assert_eq!(agg.probe_pairs, 0);
+    }
+
+    #[test]
+    fn probes_warm_the_shared_pair_cache() {
+        let set = scalar_set(&[0.0, 0.1, 0.9, 1.0, 0.05]);
+        let cfg = AggregateConfig::new(0.2);
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        let backend = NativeBackend::new();
+        let a = aggregate(&set, &cfg, &backend, Some(&cache)).unwrap();
+        let cold = cache.stats();
+        assert_eq!(cold.hits, 0, "first pass sees only misses");
+        assert_eq!(cold.misses as usize, a.probe_pairs);
+        // A second pass re-probes the same pairs fully from cache, and
+        // the cache cannot change the grouping.
+        let b = aggregate(&set, &cfg, &backend, Some(&cache)).unwrap();
+        assert_eq!(a.rep_ids, b.rep_ids);
+        assert_eq!(a.members, b.members);
+        assert_eq!(cache.stats().hits as usize, a.probe_pairs);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let set = scalar_set(&[0.0]);
+        assert!(aggregate(
+            &set,
+            &AggregateConfig::new(-1.0),
+            &NativeBackend::new(),
+            None
+        )
+        .is_err());
+    }
+}

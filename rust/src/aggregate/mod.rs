@@ -1,0 +1,25 @@
+//! Stage-0 distance-space aggregation: shrink N segments to m ≪ N
+//! representatives *before* the MAHC pipeline runs.
+//!
+//! The paper bounds MAHC's space cost by managing subset sizes, but
+//! every segment still enters the pipeline individually, so wall-clock
+//! cost is driven by raw N.  Following the data-aggregation-for-HAC
+//! idea (Schubert & Lang 2023) adapted to the paper's DTW-only setting
+//! — there is no vector space to average in, so representatives must be
+//! *actual segments* — a deterministic leader pass ([`leader`]) groups
+//! segments whose DTW distance to an already-chosen representative is
+//! at most ε, with an optional hard per-group occupancy cap (the β idea
+//! applied to stage 0).  The batch and streaming drivers then cluster
+//! only the representatives; aggregated members are resolved to final
+//! clusters through the same forwarding-pointer mechanism the streaming
+//! driver uses to retire objects, so labels cover the full corpus and
+//! the final F-measure is computed over all N.
+//!
+//! Opt-in is zero-risk: `epsilon = 0` skips the pass entirely and the
+//! pipeline is bitwise the unaggregated run (pinned in
+//! `rust/tests/aggregation.rs`), exactly the story the blocked backend
+//! established for kernels.
+
+pub mod leader;
+
+pub use leader::{aggregate, Aggregation};

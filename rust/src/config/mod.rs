@@ -140,6 +140,66 @@ impl DatasetSpec {
     }
 }
 
+/// Stage-0 distance-space aggregation knobs ([`crate::aggregate`]).
+///
+/// A deterministic leader pass groups segments whose DTW distance to an
+/// already-chosen representative is at most `epsilon`, so the drivers
+/// cluster `m ≪ N` representatives instead of raw segments.  `epsilon =
+/// 0` disables the pass entirely (identity — the pipeline is bitwise
+/// the unaggregated run), giving the same zero-risk opt-in story as the
+/// blocked backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AggregateConfig {
+    /// Leader radius ε in DTW distance units.  A segment joins the
+    /// nearest representative with distance ≤ ε; 0.0 = aggregation off.
+    pub epsilon: f32,
+    /// Hard per-group occupancy cap (None = unbounded) — the β idea
+    /// applied to stage 0: a full group accepts no more members, so no
+    /// representative's member list can grow without bound.
+    pub cap: Option<usize>,
+}
+
+impl Default for AggregateConfig {
+    fn default() -> Self {
+        AggregateConfig {
+            epsilon: 0.0,
+            cap: None,
+        }
+    }
+}
+
+impl AggregateConfig {
+    pub fn new(epsilon: f32) -> Self {
+        AggregateConfig {
+            epsilon,
+            cap: None,
+        }
+    }
+
+    pub fn with_cap(mut self, cap: usize) -> Self {
+        self.cap = Some(cap);
+        self
+    }
+
+    /// Whether the leader pass runs at all (ε > 0).
+    pub fn is_active(&self) -> bool {
+        self.epsilon > 0.0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.epsilon.is_finite() || self.epsilon < 0.0 {
+            anyhow::bail!(
+                "aggregate epsilon must be finite and >= 0 (got {})",
+                self.epsilon
+            );
+        }
+        if self.cap == Some(0) {
+            anyhow::bail!("aggregate cap must be >= 1 (a group holds at least its leader)");
+        }
+        Ok(())
+    }
+}
+
 /// How the final number of clusters K is chosen (paper §5: K = ΣKⱼ from
 /// the first stage is empirically a good approximation).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -196,6 +256,10 @@ pub struct AlgoConfig {
     /// either way.  Results are identical with the cache on or off
     /// (`distance::build_condensed_cached`); only wall-clock changes.
     pub cache_bytes: usize,
+    /// Stage-0 aggregation front-end ([`crate::aggregate`]): with
+    /// `epsilon > 0` the drivers cluster leader-pass representatives
+    /// instead of raw segments.  Off (ε = 0) by default.
+    pub aggregate: AggregateConfig,
 }
 
 impl Default for AlgoConfig {
@@ -212,6 +276,7 @@ impl Default for AlgoConfig {
             seed: 1234,
             max_clusters_frac: 0.25,
             cache_bytes: 0,
+            aggregate: AggregateConfig::default(),
         }
     }
 }
@@ -233,6 +298,12 @@ impl AlgoConfig {
         self
     }
 
+    /// Enable stage-0 aggregation with leader radius `epsilon`.
+    pub fn with_aggregate(mut self, aggregate: AggregateConfig) -> Self {
+        self.aggregate = aggregate;
+        self
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.p0 == 0 {
             anyhow::bail!("p0 must be >= 1");
@@ -250,6 +321,7 @@ impl AlgoConfig {
         if !(0.0..=1.0).contains(&self.max_clusters_frac) {
             anyhow::bail!("max_clusters_frac must be in [0,1]");
         }
+        self.aggregate.validate()?;
         Ok(())
     }
 }
@@ -345,6 +417,14 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
             "max_clusters_frac" => cfg.max_clusters_frac = v.parse()?,
             "cache_bytes" => cfg.cache_bytes = v.parse()?,
             "cache_mb" => cfg.cache_bytes = v.parse::<usize>()? << 20,
+            "aggregate_eps" => cfg.aggregate.epsilon = v.parse()?,
+            "aggregate_cap" => {
+                cfg.aggregate.cap = if v == "none" {
+                    None
+                } else {
+                    Some(v.parse()?)
+                }
+            }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -438,6 +518,58 @@ mod tests {
             &[("backend".to_string(), "gpu".to_string())]
         )
         .is_err());
+    }
+
+    #[test]
+    fn aggregate_config_defaults_and_validation() {
+        let off = AggregateConfig::default();
+        assert_eq!(off.epsilon, 0.0);
+        assert_eq!(off.cap, None);
+        assert!(!off.is_active(), "epsilon 0 means aggregation off");
+        assert!(off.validate().is_ok());
+
+        let on = AggregateConfig::new(1.5).with_cap(32);
+        assert!(on.is_active());
+        assert_eq!(on.cap, Some(32));
+        assert!(on.validate().is_ok());
+
+        assert!(AggregateConfig::new(-0.1).validate().is_err());
+        assert!(AggregateConfig::new(f32::NAN).validate().is_err());
+        assert!(AggregateConfig::new(f32::INFINITY).validate().is_err());
+        assert!(AggregateConfig::new(1.0).with_cap(0).validate().is_err());
+
+        // AlgoConfig validation surfaces aggregate errors too.
+        let mut cfg = AlgoConfig::default();
+        cfg.aggregate.epsilon = -1.0;
+        assert!(cfg.validate().is_err());
+        assert_eq!(
+            AlgoConfig::default()
+                .with_aggregate(AggregateConfig::new(2.0))
+                .aggregate
+                .epsilon,
+            2.0
+        );
+    }
+
+    #[test]
+    fn aggregate_keys_parse() {
+        let mut cfg = AlgoConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &[
+                ("aggregate_eps".to_string(), "3.25".to_string()),
+                ("aggregate_cap".to_string(), "40".to_string()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregate.epsilon, 3.25);
+        assert_eq!(cfg.aggregate.cap, Some(40));
+        apply_overrides(
+            &mut cfg,
+            &[("aggregate_cap".to_string(), "none".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregate.cap, None);
     }
 
     #[test]

@@ -351,11 +351,13 @@ pub fn build_cross(
 /// are always computed, so the symmetric `(min, max)` key stays
 /// well-defined.
 ///
-/// The streaming driver's retirement step is the production consumer:
-/// each shard's medoid × batch assignment rectangle
-/// (`mahc::streaming`) probes this cache first, so medoid–member pairs
-/// the episode's condensed builds just computed never reach the DTW
-/// backend a second time.
+/// Two production consumers: the streaming driver's retirement step —
+/// each shard's medoid × batch assignment rectangle (`mahc::streaming`)
+/// probes this cache first, so medoid–member pairs the episode's
+/// condensed builds just computed never reach the DTW backend a second
+/// time — and the stage-0 leader pass (`crate::aggregate`), whose
+/// single-row probe rectangles publish every (segment, rep) distance
+/// here so stage 1's condensed builds over representatives start warm.
 pub fn build_cross_cached(
     xs: &[&Segment],
     ys: &[&Segment],

@@ -24,6 +24,7 @@
 //! |---|---|
 //! | [`util`] | from-scratch substrates: PRNG, JSON, CSV, thread pool, CLI |
 //! | [`config`] | typed experiment/algorithm configuration |
+//! | [`aggregate`] | stage-0 distance-space aggregation: leader pass → m ≪ N representatives |
 //! | [`dsp`] | HTK-style MFCC front-end (FFT, mel filterbank, DCT, deltas) |
 //! | [`corpus`] | synthetic TIMIT-like triphone segment corpus (see DESIGN.md §5) |
 //! | [`dtw`] | native DTW reference backend (classic + Sakoe-Chiba band) |
@@ -47,6 +48,7 @@
     clippy::type_complexity
 )]
 
+pub mod aggregate;
 pub mod ahc;
 pub mod baselines;
 pub mod config;
@@ -61,5 +63,6 @@ pub mod runtime;
 pub mod telemetry;
 pub mod util;
 
-pub use config::{AlgoConfig, DatasetSpec, StreamConfig};
+pub use aggregate::Aggregation;
+pub use config::{AggregateConfig, AlgoConfig, DatasetSpec, StreamConfig};
 pub use mahc::{MahcDriver, MahcResult, StreamResult, StreamingDriver};

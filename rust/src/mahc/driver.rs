@@ -12,6 +12,7 @@ use std::time::Instant;
 use super::partition::partition_ids;
 use super::split::{merge_small, split_oversized};
 use super::stage::{run_stage1, SubsetOutcome};
+use crate::aggregate;
 use crate::ahc;
 use crate::config::{AlgoConfig, Convergence, FinalK};
 use crate::corpus::{Segment, SegmentSet};
@@ -60,8 +61,13 @@ impl<'a> MahcDriver<'a> {
     /// Run the full algorithm; returns the final clustering + history.
     pub fn run(&self) -> anyhow::Result<MahcResult> {
         let cfg = &self.cfg;
-        let algo_name = if cfg.beta.is_some() { "mahc+m" } else { "mahc" };
-        let mut history = RunHistory::new(&self.set.name, algo_name);
+        let base_name = if cfg.beta.is_some() { "mahc+m" } else { "mahc" };
+        let algo_name = if cfg.aggregate.is_active() {
+            format!("{base_name}+agg")
+        } else {
+            base_name.to_string()
+        };
+        let mut history = RunHistory::new(&self.set.name, &algo_name);
 
         // Cross-iteration DTW pair cache (the time-side dual of β's
         // space bound — see `distance::cache`).  One cache per run:
@@ -71,8 +77,27 @@ impl<'a> MahcDriver<'a> {
         let cache = (cfg.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(cfg.cache_bytes));
         let cache = cache.as_ref();
 
+        // Stage 0: leader-pass aggregation (identity when ε = 0, in
+        // which case this block is skipped and the run is bitwise the
+        // historical unaggregated pipeline).  Probes share the run's
+        // pair cache, so stage 1 never recomputes a probed (rep, rep)
+        // distance; the probes' counter movement is folded into the
+        // first record below so the run's hit rate stays honest.
+        let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let agg = cfg
+            .aggregate
+            .is_active()
+            .then(|| aggregate::aggregate(self.set, &cfg.aggregate, self.backend, cache))
+            .transpose()?;
+        let agg_cache = cache
+            .map(|c| c.stats().delta(&agg_snapshot))
+            .unwrap_or_default();
+
         let mut rng = Rng::seed_from(cfg.seed);
-        let ids: Vec<usize> = (0..self.set.len()).collect();
+        let ids: Vec<usize> = match &agg {
+            Some(a) => a.rep_ids.clone(),
+            None => (0..self.set.len()).collect(),
+        };
         let ep = run_episode(
             self.set,
             &ids,
@@ -83,13 +108,52 @@ impl<'a> MahcDriver<'a> {
             Some(&mut history),
         )?;
 
-        // `ep.labels` is parallel to `ids` == indexed by segment id, and
-        // the episode's truth slice was the full ground truth, so its
-        // F-measure is the run's F-measure.
+        let Some(a) = agg else {
+            // `ep.labels` is parallel to `ids` == indexed by segment
+            // id, and the episode's truth slice was the full ground
+            // truth, so its F-measure is the run's F-measure.
+            return Ok(MahcResult {
+                labels: ep.labels,
+                k: ep.k,
+                f_measure: ep.f_measure,
+                history,
+            });
+        };
+
+        // Resolve members to final clusters: each aggregated member
+        // follows its representative — the same forwarding idea the
+        // streaming driver uses for retired objects, with one-hop
+        // chains because every leader stayed active to the end.
+        let n = self.set.len();
+        let mut labels = vec![usize::MAX; n];
+        for (pos, &rep) in a.rep_ids.iter().enumerate() {
+            for &id in &a.members[pos] {
+                labels[id] = ep.labels[pos];
+            }
+            debug_assert_eq!(labels[rep], ep.labels[pos]);
+        }
+        debug_assert!(labels.iter().all(|&l| l != usize::MAX));
+        // The per-iteration records scored representatives only; the
+        // run's F-measure covers all N resolved labels.
+        let f_measure = metrics::f_measure(&labels, &self.set.labels());
+
+        for (idx, r) in history.records.iter_mut().enumerate() {
+            r.representatives = a.reps();
+            r.compression_ratio = a.compression_ratio();
+            r.assignment_pairs = if idx == 0 { a.probe_pairs } else { 0 };
+            if idx == 0 {
+                // The leader pass ran before the episode's first cache
+                // snapshot; without this, its misses would be invisible
+                // and cache_total() would overstate the hit rate.
+                r.cache.hits += agg_cache.hits;
+                r.cache.misses += agg_cache.misses;
+                r.cache.evictions += agg_cache.evictions;
+            }
+        }
         Ok(MahcResult {
-            labels: ep.labels,
+            labels,
             k: ep.k,
-            f_measure: ep.f_measure,
+            f_measure,
             history,
         })
     }
@@ -272,6 +336,9 @@ pub(crate) fn run_episode(
                     peak_matrix_bytes: iter_bytes,
                     cache: cache_iter,
                     carried_medoids: 0,
+                    representatives: 0,
+                    compression_ratio: 1.0,
+                    assignment_pairs: 0,
                     backend: backend.name().to_string(),
                     pairs_per_sec: pairs_rate(iter_pairs, wall),
                 });
@@ -322,6 +389,9 @@ pub(crate) fn run_episode(
                 peak_matrix_bytes: iter_bytes,
                 cache: cache_iter,
                 carried_medoids: 0,
+                representatives: 0,
+                compression_ratio: 1.0,
+                assignment_pairs: 0,
                 backend: backend.name().to_string(),
                 pairs_per_sec: pairs_rate(iter_pairs, wall),
             });
@@ -582,6 +652,77 @@ mod tests {
                 .any(|r| r.cache.hits > 0),
             "later iterations see warm pairs"
         );
+    }
+
+    #[test]
+    fn aggregate_epsilon_zero_is_bitwise_the_plain_run() {
+        // The zero-risk opt-in pin: ε = 0 must take the identical code
+        // path, so labels, K, F bits and telemetry all match the run
+        // that never heard of aggregation.
+        let plain_cfg = AlgoConfig {
+            p0: 3,
+            beta: Some(30),
+            convergence: Convergence::FixedIters(3),
+            ..Default::default()
+        };
+        let agg_cfg = AlgoConfig {
+            aggregate: crate::config::AggregateConfig {
+                epsilon: 0.0,
+                cap: Some(5),
+            },
+            ..plain_cfg.clone()
+        };
+        let plain = run(plain_cfg, 80, 5, 29);
+        let agg = run(agg_cfg, 80, 5, 29);
+        assert_eq!(plain.labels, agg.labels);
+        assert_eq!(plain.k, agg.k);
+        assert_eq!(plain.f_measure.to_bits(), agg.f_measure.to_bits());
+        assert_eq!(plain.history.algo, agg.history.algo, "no +agg suffix at ε=0");
+        assert_eq!(
+            plain.history.records.len(),
+            agg.history.records.len()
+        );
+        for (a, b) in plain.history.records.iter().zip(&agg.history.records) {
+            assert_eq!(a.subsets, b.subsets);
+            assert_eq!(a.max_occupancy, b.max_occupancy);
+            assert_eq!(a.splits, b.splits);
+            assert_eq!(a.total_clusters, b.total_clusters);
+            assert_eq!(a.f_measure.to_bits(), b.f_measure.to_bits());
+            assert_eq!(a.representatives, 0);
+            assert_eq!(b.representatives, 0);
+            assert_eq!(b.compression_ratio, 1.0);
+            assert_eq!(b.assignment_pairs, 0);
+        }
+    }
+
+    #[test]
+    fn aggregated_run_covers_the_corpus_and_stamps_telemetry() {
+        // A radius past every pair distance collapses the corpus onto
+        // one representative — the most degenerate active aggregation —
+        // and the run must still label all N and record the stage-0
+        // series.
+        let cfg = AlgoConfig {
+            p0: 3,
+            convergence: Convergence::FixedIters(2),
+            aggregate: crate::config::AggregateConfig::new(1e30),
+            ..Default::default()
+        };
+        let res = run(cfg, 40, 3, 30);
+        assert_eq!(res.labels.len(), 40);
+        assert_eq!(res.k, 1, "one representative yields one cluster");
+        assert!(res.labels.iter().all(|&l| l == 0));
+        assert_eq!(res.history.algo, "mahc+agg");
+        for (idx, r) in res.history.records.iter().enumerate() {
+            assert_eq!(r.representatives, 1);
+            assert!((r.compression_ratio - 1.0 / 40.0).abs() < 1e-12);
+            if idx == 0 {
+                assert_eq!(r.assignment_pairs, 39, "one probe per later segment");
+            } else {
+                assert_eq!(r.assignment_pairs, 0);
+            }
+        }
+        assert_eq!(res.history.assignment_pairs_total(), 39);
+        assert_eq!(res.history.compression_ratio(), 1.0 / 40.0);
     }
 
     #[test]

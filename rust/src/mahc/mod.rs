@@ -15,6 +15,12 @@
 //! * [`streaming`] — the online form: one episode of the same loop per
 //!   arriving shard, carrying medoids forward so peak memory stays
 //!   bounded by β for streams of any length.
+//!
+//! Both drivers accept a stage-0 aggregation front-end
+//! ([`crate::aggregate`]): with `AlgoConfig::aggregate` active they
+//! cluster leader-pass representatives instead of raw segments and
+//! resolve members through forwarding pointers, so labels still cover
+//! the full corpus.  ε = 0 is bitwise the unaggregated pipeline.
 
 pub mod driver;
 pub mod partition;

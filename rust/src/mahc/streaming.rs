@@ -16,6 +16,12 @@
 //!    subset's clusters at `max_clusters_frac`·n, the carried set
 //!    reaches a bounded fixed point (≈ frac/(1−frac) · shard_size)
 //!    instead of growing with the stream.
+//! 0. **Aggregate (optional)** — with `AlgoConfig::aggregate` active,
+//!    the stage-0 leader pass ([`crate::aggregate`]) runs once up
+//!    front and the *stream consists of representatives*: shards are
+//!    drawn from the m leaders instead of the N raw segments, and every
+//!    member attaches to its leader through the same forwarding pointer
+//!    retirement uses.  ε = 0 skips the pass, bitwise.
 //! 3. **Retire** — every active object that is *not* carried forward is
 //!    assigned to its nearest surviving medoid via the medoid × batch
 //!    rectangle ([`build_cross_cached`]): with the pair cache enabled,
@@ -35,6 +41,7 @@
 use std::time::Instant;
 
 use super::driver::run_episode;
+use crate::aggregate;
 use crate::config::StreamConfig;
 use crate::corpus::{Segment, SegmentSet, Shards};
 use crate::distance::{build_cross_cached, DtwBackend, PairCache};
@@ -92,12 +99,17 @@ impl<'a> StreamingDriver<'a> {
     pub fn run(&self) -> anyhow::Result<StreamResult> {
         let algo = &self.cfg.algo;
         let n = self.set.len();
-        let algo_name = if algo.beta.is_some() {
+        let base_name = if algo.beta.is_some() {
             "mahc+m-stream"
         } else {
             "mahc-stream"
         };
-        let mut history = RunHistory::new(&self.set.name, algo_name);
+        let algo_name = if algo.aggregate.is_active() {
+            format!("{base_name}+agg")
+        } else {
+            base_name.to_string()
+        };
+        let mut history = RunHistory::new(&self.set.name, &algo_name);
 
         // One cache for the whole stream: episodes warm it with subset
         // and medoid pairs, retirement rectangles and later episodes
@@ -107,24 +119,60 @@ impl<'a> StreamingDriver<'a> {
         let cache = cache.as_ref();
         let mut assign_cache = CacheStats::default();
 
+        // Stage 0: leader-pass aggregation over the whole corpus, so
+        // the *stream consists of representatives* (ε = 0 skips this
+        // and the stream is bitwise the historical one).  Members
+        // attach to their leader up front — the same forwarding-pointer
+        // mechanism retirement uses — and resolve transitively with the
+        // retired objects once the stream ends.
+        let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let agg = algo
+            .aggregate
+            .is_active()
+            .then(|| aggregate::aggregate(self.set, &algo.aggregate, self.backend, cache))
+            .transpose()?;
+        // Leader-probe counter movement, folded into shard 0's record
+        // below so the stream's cache totals include the pass that
+        // warmed it.
+        let agg_cache = cache
+            .map(|c| c.stats().delta(&agg_snapshot))
+            .unwrap_or_default();
+        let m = agg.as_ref().map_or(n, |a| a.reps());
+        anyhow::ensure!(m > 0 || n == 0, "aggregation produced no representatives");
+
         let mut rng = Rng::seed_from(algo.seed);
-        let plan = Shards::new(n, self.cfg.shard_size, self.cfg.shard_seed);
+        let plan = Shards::new(m, self.cfg.shard_size, self.cfg.shard_seed);
         let total_shards = plan.total();
 
         // Forwarding pointer per segment id: the medoid a retired
-        // object was assigned to (usize::MAX while unset / still
-        // active).  Resolved transitively once the stream ends.
+        // object was assigned to, or the leader an aggregated member
+        // follows (usize::MAX while unset / still active).  Resolved
+        // transitively once the stream ends.
         let mut attach: Vec<usize> = vec![usize::MAX; n];
+        if let Some(a) = &agg {
+            for (pos, &rep) in a.rep_ids.iter().enumerate() {
+                for &id in &a.members[pos] {
+                    if id != rep {
+                        attach[id] = rep;
+                    }
+                }
+            }
+        }
         let mut carried: Vec<usize> = Vec::new();
         let mut last_episode = None;
 
         for (t, shard) in plan.enumerate() {
             let t0 = Instant::now();
             let carried_in = carried.len();
+            // Shard entries are stream positions 0..m; map them to
+            // global segment ids (identity when aggregation is off).
             let active: Vec<usize> = carried
                 .iter()
                 .copied()
-                .chain(shard.iter().copied())
+                .chain(shard.iter().map(|&p| match &agg {
+                    Some(a) => a.rep_ids[p],
+                    None => p,
+                }))
                 .collect();
 
             let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
@@ -191,10 +239,15 @@ impl<'a> StreamingDriver<'a> {
             assign_cache.misses += rect_delta.misses;
             assign_cache.evictions += rect_delta.evictions;
 
-            let shard_delta = match cache {
+            let mut shard_delta = match cache {
                 Some(c) => c.stats().delta(&shard_snapshot),
                 None => CacheStats::default(),
             };
+            if t == 0 {
+                shard_delta.hits += agg_cache.hits;
+                shard_delta.misses += agg_cache.misses;
+                shard_delta.evictions += agg_cache.evictions;
+            }
             let wall = t0.elapsed();
             history.push(IterationRecord {
                 iteration: t,
@@ -209,6 +262,12 @@ impl<'a> StreamingDriver<'a> {
                 peak_matrix_bytes: ep.summary.peak_matrix_bytes.max(rect_bytes),
                 cache: shard_delta,
                 carried_medoids: carried_in,
+                representatives: agg.as_ref().map_or(0, |a| a.reps()),
+                compression_ratio: agg.as_ref().map_or(1.0, |a| a.compression_ratio()),
+                assignment_pairs: match (&agg, t) {
+                    (Some(a), 0) => a.probe_pairs,
+                    _ => 0,
+                },
                 backend: self.backend.name().to_string(),
                 // Shard throughput counts the episode's pairs plus the
                 // retirement rectangle's.
@@ -228,6 +287,9 @@ impl<'a> StreamingDriver<'a> {
         // Retired objects follow their forwarding chain: each hop lands
         // on a medoid that stayed active at least one more shard, so
         // every chain terminates at a finally-labelled object.
+        // Aggregated members prepend one hop (member → leader) to their
+        // leader's chain, hence the +1 on the bound.
+        let max_hops = total_shards + usize::from(agg.is_some());
         for id in 0..n {
             if labels[id] != usize::MAX {
                 continue;
@@ -242,7 +304,7 @@ impl<'a> StreamingDriver<'a> {
                 cur = attach[cur];
                 hops += 1;
                 anyhow::ensure!(
-                    hops <= total_shards,
+                    hops <= max_hops,
                     "forwarding chain longer than the stream"
                 );
             }
@@ -487,6 +549,62 @@ mod tests {
         for (t, &c) in carried.iter().enumerate() {
             assert!(c <= cap, "shard {t} carried {c} > {cap}");
         }
+    }
+
+    #[test]
+    fn aggregate_epsilon_zero_stream_is_bitwise_the_plain_stream() {
+        let set = generate(&DatasetSpec::tiny(100, 5, 49));
+        let backend = NativeBackend::new();
+        let plain_cfg = StreamConfig::new(algo(2, Some(30), 3), 35);
+        let mut agg_algo = algo(2, Some(30), 3);
+        agg_algo.aggregate = crate::config::AggregateConfig {
+            epsilon: 0.0,
+            cap: Some(9),
+        };
+        let agg_cfg = StreamConfig::new(agg_algo, 35);
+        let plain = StreamingDriver::new(&set, plain_cfg, &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let agg = StreamingDriver::new(&set, agg_cfg, &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(plain.labels, agg.labels);
+        assert_eq!(plain.k, agg.k);
+        assert_eq!(plain.f_measure.to_bits(), agg.f_measure.to_bits());
+        assert_eq!(plain.shards, agg.shards);
+        assert_eq!(plain.history.algo, agg.history.algo);
+        for r in &agg.history.records {
+            assert_eq!(r.representatives, 0);
+            assert_eq!(r.compression_ratio, 1.0);
+            assert_eq!(r.assignment_pairs, 0);
+        }
+    }
+
+    #[test]
+    fn aggregated_stream_shards_representatives_and_labels_everyone() {
+        // A radius past every pair distance collapses the corpus onto
+        // one leader: the stream then has exactly one single-rep shard
+        // and the members resolve through their attach pointers.
+        let set = generate(&DatasetSpec::tiny(60, 4, 50));
+        let backend = NativeBackend::new();
+        let mut a = algo(2, Some(20), 2);
+        a.aggregate = crate::config::AggregateConfig::new(1e30);
+        let res = StreamingDriver::new(&set, StreamConfig::new(a, 25), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(res.shards, 1, "one representative fills one shard");
+        assert_eq!(res.labels.len(), 60);
+        assert_eq!(res.k, 1);
+        assert!(res.labels.iter().all(|&l| l == 0));
+        assert_eq!(res.history.records.len(), 1);
+        let r = &res.history.records[0];
+        assert_eq!(r.representatives, 1);
+        assert!((r.compression_ratio - 1.0 / 60.0).abs() < 1e-12);
+        assert_eq!(r.assignment_pairs, 59);
+        assert_eq!(res.history.algo, "mahc+m-stream+agg");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!
 //! ```text
 //! mahc cluster --dataset small_a --scale 0.05 --p0 6 --beta 200 --iters 5
+//! mahc cluster --dataset small_a --scale 0.05 --aggregate-eps 12.5 --aggregate-cap 64
 //! mahc cluster --dataset small_b --scale 0.05 --algo ahc
 //! mahc stream --dataset small_a --scale 0.05 --shard-size 300 --beta 150 --cache-mb 64
 //! mahc datagen --dataset medium --scale 0.1
@@ -34,6 +35,7 @@ use mahc::util::cli::Args;
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
+    "aggregate-eps", "aggregate-cap",
 ];
 
 fn main() {
@@ -59,9 +61,11 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|blocked|xla] [--threads N] [--seed N] [--out FILE]");
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
+            eprintln!("          [--aggregate-eps F  stage-0 leader radius (0 = off)]");
+            eprintln!("          [--aggregate-cap N  stage-0 per-group occupancy cap]");
             eprintln!("  stream  --dataset <name> [--scale F] --shard-size N [--shard-seed N]");
             eprintln!("          [--p0 N] [--beta N] [--iters N] [--backend native|blocked|xla]");
-            eprintln!("          [--cache-mb N] [--out FILE]");
+            eprintln!("          [--cache-mb N] [--aggregate-eps F] [--aggregate-cap N] [--out FILE]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -100,6 +104,12 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     }
     if let Some(mb) = args.get_parsed::<usize>("cache-mb")? {
         cfg.cache_bytes = mb << 20;
+    }
+    if let Some(eps) = args.get_parsed::<f32>("aggregate-eps")? {
+        cfg.aggregate.epsilon = eps;
+    }
+    if let Some(cap) = args.get_parsed::<usize>("aggregate-cap")? {
+        cfg.aggregate.cap = Some(cap);
     }
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
@@ -196,6 +206,18 @@ fn cluster_with(
                 res.history.peak_bytes() as f64 / (1 << 20) as f64,
                 backend.name()
             );
+            if let Some(r0) = res.history.records.first() {
+                if r0.representatives > 0 {
+                    println!(
+                        "stage-0 aggregation: {} representatives over N={} \
+                         (compression {:.3}, {} probe pairs)",
+                        r0.representatives,
+                        set.len(),
+                        r0.compression_ratio,
+                        res.history.assignment_pairs_total()
+                    );
+                }
+            }
             if cache_on {
                 let t = res.history.cache_total();
                 println!(
@@ -294,6 +316,18 @@ fn stream_with(
         beta.map_or("off".to_string(), |b| b.to_string()),
         backend.name()
     );
+    if let Some(r0) = res.history.records.first() {
+        if r0.representatives > 0 {
+            println!(
+                "stage-0 aggregation: {} representatives over N={} \
+                 (compression {:.3}, {} probe pairs)",
+                r0.representatives,
+                set.len(),
+                r0.compression_ratio,
+                res.history.assignment_pairs_total()
+            );
+        }
+    }
     if cache_on {
         let t = res.history.cache_total();
         println!(

@@ -84,6 +84,17 @@ pub struct IterationRecord {
     /// the batch driver; the streaming driver records the size of the
     /// carried-forward medoid set entering each shard's episode here.
     pub carried_medoids: usize,
+    /// Stage-0 representatives the step's pipeline ran over
+    /// ([`crate::aggregate`]).  0 when aggregation is off — the
+    /// pipeline then clusters raw segments.
+    pub representatives: usize,
+    /// Representatives / total segments (m / N).  1.0 when aggregation
+    /// is off; smaller means more stage-0 compression.
+    pub compression_ratio: f64,
+    /// DTW pair probes the stage-0 leader pass performed, attributed to
+    /// the record that follows it (the first iteration / shard); 0
+    /// elsewhere and whenever aggregation is off.
+    pub assignment_pairs: usize,
     /// Name of the DTW backend that served this step's distances
     /// ([`crate::distance::DtwBackend::name`]).
     pub backend: String,
@@ -114,6 +125,9 @@ impl IterationRecord {
             ),
             ("cache", self.cache.to_json()),
             ("carried_medoids", json::num(self.carried_medoids as f64)),
+            ("representatives", json::num(self.representatives as f64)),
+            ("compression_ratio", json::num(self.compression_ratio)),
+            ("assignment_pairs", json::num(self.assignment_pairs as f64)),
             ("backend", json::s(&self.backend)),
             ("pairs_per_sec", json::num(self.pairs_per_sec)),
         ])
@@ -200,6 +214,23 @@ impl RunHistory {
         self.records.iter().map(|r| r.pairs_per_sec).collect()
     }
 
+    /// Stage-0 representative counts per record (all zero when
+    /// aggregation is off).
+    pub fn representatives_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.representatives).collect()
+    }
+
+    /// Stage-0 compression ratio of the run (m / N; 1.0 when
+    /// aggregation is off or the history is empty).
+    pub fn compression_ratio(&self) -> f64 {
+        self.records.first().map_or(1.0, |r| r.compression_ratio)
+    }
+
+    /// Total stage-0 probe pairs over the run.
+    pub fn assignment_pairs_total(&self) -> usize {
+        self.records.iter().map(|r| r.assignment_pairs).sum()
+    }
+
     /// Whole-run cache counters (sum of per-iteration deltas).
     pub fn cache_total(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -244,6 +275,9 @@ mod tests {
                 evictions: 1,
             },
             carried_medoids: subsets * 2,
+            representatives: maxo * 2,
+            compression_ratio: 0.5,
+            assignment_pairs: if i == 0 { 42 } else { 0 },
             backend: "native".to_string(),
             pairs_per_sec: 1000.0 * (i + 1) as f64,
         }
@@ -258,6 +292,9 @@ mod tests {
         assert_eq!(h.max_occupancy_series(), vec![100, 80]);
         assert_eq!(h.carried_series(), vec![8, 12]);
         assert_eq!(h.pairs_per_sec_series(), vec![1000.0, 2000.0]);
+        assert_eq!(h.representatives_series(), vec![200, 160]);
+        assert_eq!(h.compression_ratio(), 0.5);
+        assert_eq!(h.assignment_pairs_total(), 42);
         assert_eq!(h.peak_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
@@ -316,6 +353,18 @@ mod tests {
             iters[0].get("pairs_per_sec").unwrap().as_usize().unwrap(),
             1000
         );
+        assert_eq!(
+            iters[0].get("representatives").unwrap().as_usize().unwrap(),
+            20
+        );
+        assert_eq!(
+            iters[0].get("compression_ratio").unwrap().as_f64().unwrap(),
+            0.5
+        );
+        assert_eq!(
+            iters[0].get("assignment_pairs").unwrap().as_usize().unwrap(),
+            42
+        );
     }
 
     #[test]
@@ -323,5 +372,41 @@ mod tests {
         assert_eq!(pairs_rate(500, Duration::from_secs(2)), 250.0);
         assert_eq!(pairs_rate(500, Duration::ZERO), 0.0);
         assert_eq!(pairs_rate(0, Duration::from_secs(1)), 0.0);
+    }
+
+    #[test]
+    fn pairs_rate_is_finite_and_json_safe_for_all_degenerate_inputs() {
+        // Pin: zero-duration and zero-pair iterations must never leak a
+        // NaN or infinity into the run JSON — `util::json` writes f64s
+        // with `{}` formatting, so a non-finite value would emit the
+        // literal `NaN`/`inf` and corrupt the document.
+        for (pairs, wall) in [
+            (0usize, Duration::ZERO),
+            (0, Duration::from_secs(1)),
+            (usize::MAX >> 12, Duration::ZERO),
+            (1, Duration::from_nanos(1)),
+        ] {
+            let rate = pairs_rate(pairs, wall);
+            assert!(
+                rate.is_finite(),
+                "pairs_rate({pairs}, {wall:?}) = {rate} not finite"
+            );
+        }
+        // End to end: a record from a degenerate (instantaneous, empty)
+        // iteration serialises to parseable JSON.
+        let mut r = rec(0, 1, 1);
+        r.wall = Duration::ZERO;
+        r.pairs_per_sec = pairs_rate(0, Duration::ZERO);
+        let mut h = RunHistory::new("degenerate", "mahc");
+        h.push(r);
+        let text = h.to_json().to_string();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let iters = parsed.get("iterations").unwrap().as_arr().unwrap();
+        assert_eq!(
+            iters[0].get("pairs_per_sec").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert_eq!(iters[0].get("wall_secs").unwrap().as_f64().unwrap(), 0.0);
     }
 }

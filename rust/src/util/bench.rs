@@ -6,7 +6,35 @@
 //! clock via `Instant`; each sample is one closure invocation (callers
 //! batch internally when an iteration is very short).
 
+use crate::util::json::{self, Json};
 use std::time::{Duration, Instant};
+
+/// True when env var `name` holds a truthy flag (set, non-empty, not
+/// `0`).  One definition of flag truthiness for every harness knob
+/// (`MAHC_BENCH_QUICK`, `MAHC_EXAMPLE_QUICK`, ...).
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// True when the CI perf-smoke quick mode is requested via
+/// `MAHC_BENCH_QUICK`.  Harnesses shrink corpora / sampling windows
+/// under it so the whole bench suite fits in a smoke job.
+pub fn quick_mode() -> bool {
+    env_flag("MAHC_BENCH_QUICK")
+}
+
+/// Write a harness's JSON report to the path named by
+/// `MAHC_BENCH_JSON` (no-op when the variable is unset or empty).  The
+/// CI perf-smoke job points each harness at its own fragment file and
+/// assembles them into the `BENCH_ci.json` artifact.
+pub fn write_json_report(report: &Json) -> std::io::Result<()> {
+    if let Ok(path) = std::env::var("MAHC_BENCH_JSON") {
+        if !path.is_empty() {
+            std::fs::write(path, report.to_string())?;
+        }
+    }
+    Ok(())
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -22,6 +50,25 @@ pub struct BenchReport {
 }
 
 impl BenchReport {
+    /// Machine-readable form for the `BENCH_ci.json` trajectory:
+    /// wall-clock stats in seconds plus throughput when declared.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("samples", json::num(self.samples as f64)),
+            ("mean_secs", json::num(self.mean.as_secs_f64())),
+            ("median_secs", json::num(self.median.as_secs_f64())),
+            ("p95_secs", json::num(self.p95.as_secs_f64())),
+            (
+                "throughput",
+                match self.throughput {
+                    Some(t) => json::num(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
     pub fn print(&self) {
         let tput = match self.throughput {
             Some(t) if t >= 1e6 => format!("  {:>10.2} Melem/s", t / 1e6),
@@ -159,6 +206,27 @@ mod tests {
             .run(|| 1 + 1);
         assert!(r.samples >= 1);
         assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn report_serialises_for_the_bench_trajectory() {
+        let r = Bench::new("json")
+            .warmup_time(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(10))
+            .throughput(100)
+            .run(|| 2 + 2);
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "json");
+        assert!(j.get("mean_secs").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(j.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+        // A throughput-less report serialises its slot as null.
+        let r2 = Bench::new("nothroughput")
+            .warmup_time(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(5))
+            .run(|| ());
+        assert!(r2.to_json().get("throughput").unwrap().is_null());
+        // And the whole thing parses back.
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

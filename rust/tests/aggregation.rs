@@ -1,0 +1,362 @@
+//! Stage-0 aggregation conformance: determinism across threads and
+//! backends, the ε = 0 bitwise pin, degenerate corpora, and the
+//! full-corpus label guarantee.
+//!
+//! The fixture of choice is a *duplicated* corpus — every segment
+//! appears twice — because it makes the leader pass provable: exact
+//! duplicates sit at DTW distance 0, every distinct pair sits at ≥ the
+//! corpus's smallest nonzero distance, so with ε strictly between the
+//! two each duplicate must join its original's group and nothing else
+//! merges.
+
+mod common;
+
+use mahc::aggregate::aggregate;
+use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, StreamConfig};
+use mahc::corpus::{generate, Segment, SegmentSet};
+use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::mahc::{MahcDriver, StreamingDriver};
+
+/// A corpus where segment `n + i` is an exact copy of segment `i`.
+fn duplicated_corpus(n: usize, classes: usize, seed: u64) -> SegmentSet {
+    let base = generate(&DatasetSpec::tiny(n, classes, seed));
+    let mut segments = base.segments.clone();
+    for i in 0..n {
+        let mut dup = base.segments[i].clone();
+        dup.id = n + i;
+        segments.push(dup);
+    }
+    let set = SegmentSet {
+        name: format!("{}_doubled", base.name),
+        dim: base.dim,
+        segments,
+        num_classes: base.num_classes,
+    };
+    set.validate().expect("duplicated corpus is well-formed");
+    set
+}
+
+/// Half the smallest nonzero pair distance: duplicates (distance 0)
+/// merge, distinct segments (distance ≥ 2ε) never do.
+fn below_min_nonzero_distance(set: &SegmentSet) -> f32 {
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, &NativeBackend::new(), 4).unwrap();
+    let min_nonzero = cond
+        .as_slice()
+        .iter()
+        .copied()
+        .filter(|&d| d > 0.0)
+        .fold(f32::INFINITY, f32::min);
+    assert!(min_nonzero.is_finite() && min_nonzero > 0.0);
+    min_nonzero * 0.5
+}
+
+fn cfg(eps: f32) -> AlgoConfig {
+    AlgoConfig {
+        p0: 3,
+        beta: Some(40),
+        convergence: Convergence::FixedIters(3),
+        aggregate: AggregateConfig::new(eps),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn duplicates_collapse_onto_their_originals() {
+    let n = 60;
+    let set = duplicated_corpus(n, 5, 201);
+    let eps = below_min_nonzero_distance(&set);
+    let agg = aggregate(
+        &set,
+        &AggregateConfig::new(eps),
+        &NativeBackend::new(),
+        None,
+    )
+    .unwrap();
+    // Every duplicate shares its original's representative; only
+    // zero-distance pairs merged, so at most the originals remain.
+    assert!(agg.reps() <= n, "{} reps > {n} originals", agg.reps());
+    assert!(agg.compression_ratio() <= 0.5);
+    for i in 0..n {
+        assert_eq!(
+            agg.rep_of[i],
+            agg.rep_of[n + i],
+            "duplicate {i} strayed from its original's group"
+        );
+    }
+
+    // End to end: the aggregated run labels all 2n segments, gives
+    // duplicate pairs identical labels, and stays close to the
+    // unaggregated run's quality.
+    let plain = MahcDriver::new(&set, cfg(0.0), &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    let res = MahcDriver::new(&set, cfg(eps), &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(res.labels.len(), 2 * n);
+    assert!(res.labels.iter().all(|&l| l < res.k));
+    for i in 0..n {
+        assert_eq!(
+            res.labels[i],
+            res.labels[n + i],
+            "duplicate {i} labelled apart from its original"
+        );
+    }
+    assert!(
+        res.f_measure > plain.f_measure - 0.1,
+        "aggregated F {:.3} fell too far under plain {:.3}",
+        res.f_measure,
+        plain.f_measure
+    );
+    let r0 = &res.history.records[0];
+    assert_eq!(r0.representatives, agg.reps());
+    assert!(r0.compression_ratio <= 0.5);
+    assert_eq!(r0.assignment_pairs, agg.probe_pairs);
+}
+
+#[test]
+fn aggregation_is_invariant_to_threads_and_backend() {
+    let set = duplicated_corpus(40, 4, 202);
+    let eps = below_min_nonzero_distance(&set);
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    let backends: [(&str, &dyn DtwBackend); 2] = [("native", &native), ("blocked", &blocked)];
+
+    let reference = aggregate(&set, &AggregateConfig::new(eps), &native, None).unwrap();
+    let mut runs = Vec::new();
+    for (bname, backend) in backends {
+        let a = aggregate(&set, &AggregateConfig::new(eps), backend, None).unwrap();
+        assert_eq!(a.rep_ids, reference.rep_ids, "{bname}: rep set diverged");
+        assert_eq!(a.members, reference.members, "{bname}: memberships diverged");
+        assert_eq!(a.rep_of, reference.rep_of, "{bname}");
+        assert_eq!(a.probe_pairs, reference.probe_pairs, "{bname}");
+        // Built-in sweep plus this CI matrix cell's MAHC_TEST_THREADS.
+        for threads in common::thread_matrix(&[1, 8]) {
+            let mut c = cfg(eps);
+            c.threads = threads;
+            let res = MahcDriver::new(&set, c, backend).unwrap().run().unwrap();
+            runs.push((format!("{bname}/t{threads}"), res));
+        }
+    }
+    let (ref_name, ref_run) = &runs[0];
+    for (name, run) in &runs[1..] {
+        assert_eq!(
+            run.labels, ref_run.labels,
+            "{name} labels diverged from {ref_name}"
+        );
+        assert_eq!(run.k, ref_run.k, "{name}");
+        assert_eq!(
+            run.f_measure.to_bits(),
+            ref_run.f_measure.to_bits(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn epsilon_zero_batch_run_is_bitwise_the_unaggregated_run() {
+    let set = generate(&DatasetSpec::tiny(90, 6, 203));
+    let backend = NativeBackend::new();
+    let mut plain_cfg = cfg(0.0);
+    plain_cfg.aggregate = AggregateConfig::default();
+    let mut zero_cfg = cfg(0.0);
+    zero_cfg.aggregate.cap = Some(7); // cap without ε is inert
+    let plain = MahcDriver::new(&set, plain_cfg, &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let zero = MahcDriver::new(&set, zero_cfg, &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(plain.labels, zero.labels);
+    assert_eq!(plain.k, zero.k);
+    assert_eq!(plain.f_measure.to_bits(), zero.f_measure.to_bits());
+    assert_eq!(plain.history.algo, zero.history.algo);
+    assert_eq!(plain.history.records.len(), zero.history.records.len());
+    for (a, b) in plain.history.records.iter().zip(&zero.history.records) {
+        assert_eq!(a.subsets, b.subsets);
+        assert_eq!(a.max_occupancy, b.max_occupancy);
+        assert_eq!(a.min_occupancy, b.min_occupancy);
+        assert_eq!(a.max_occupancy_pre_split, b.max_occupancy_pre_split);
+        assert_eq!(a.splits, b.splits);
+        assert_eq!(a.total_clusters, b.total_clusters);
+        assert_eq!(a.f_measure.to_bits(), b.f_measure.to_bits());
+        assert_eq!(a.peak_matrix_bytes, b.peak_matrix_bytes);
+        assert_eq!(a.cache, b.cache, "pair counters must match");
+        assert_eq!(b.representatives, 0);
+        assert_eq!(b.compression_ratio, 1.0);
+        assert_eq!(b.assignment_pairs, 0);
+    }
+}
+
+#[test]
+fn aggregated_stream_labels_everyone_and_matches_plain_at_epsilon_zero() {
+    let set = duplicated_corpus(45, 4, 204);
+    let eps = below_min_nonzero_distance(&set);
+    let backend = NativeBackend::new();
+
+    // ε = 0, bitwise against the never-aggregated stream.
+    let plain = StreamingDriver::new(
+        &set,
+        StreamConfig::new(
+            AlgoConfig {
+                aggregate: AggregateConfig::default(),
+                ..cfg(0.0)
+            },
+            30,
+        ),
+        &backend,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let zero = StreamingDriver::new(&set, StreamConfig::new(cfg(0.0), 30), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(plain.labels, zero.labels);
+    assert_eq!(plain.k, zero.k);
+    assert_eq!(plain.f_measure.to_bits(), zero.f_measure.to_bits());
+
+    // ε > 0: the stream runs over representatives (duplicates halve
+    // it), still labels all 90 segments, duplicates together.
+    let agg = StreamingDriver::new(&set, StreamConfig::new(cfg(eps), 30), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(agg.labels.len(), 90);
+    assert!(agg.labels.iter().all(|&l| l < agg.k));
+    for i in 0..45 {
+        assert_eq!(agg.labels[i], agg.labels[45 + i], "duplicate {i}");
+    }
+    let r0 = &agg.history.records[0];
+    assert!(r0.representatives <= 45);
+    assert!(r0.compression_ratio <= 0.5);
+    assert!(r0.assignment_pairs > 0);
+    // Fewer representatives than segments means fewer shards than the
+    // plain stream of the same shard size.
+    assert!(agg.shards <= plain.shards);
+}
+
+#[test]
+fn cache_is_shared_between_leader_pass_and_stage1() {
+    let set = duplicated_corpus(50, 4, 205);
+    let eps = below_min_nonzero_distance(&set);
+    let backend = NativeBackend::new();
+    let plain = MahcDriver::new(&set, cfg(eps), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut cached_cfg = cfg(eps);
+    cached_cfg.cache_bytes = 8 << 20;
+    let cached = MahcDriver::new(&set, cached_cfg, &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    // The cache must not change a bit of the aggregated pipeline...
+    assert_eq!(plain.labels, cached.labels);
+    assert_eq!(plain.k, cached.k);
+    assert_eq!(plain.f_measure.to_bits(), cached.f_measure.to_bits());
+    // ...and stage 1 must reuse leader-pass probes: every (rep, rep)
+    // pair was probed when the newer rep was admitted, so iteration 1's
+    // condensed builds see warm pairs immediately.
+    assert!(
+        cached.history.records[0].cache.hits > 0,
+        "stage 1 found no warm leader-pass pairs: {:?}",
+        cached.history.records[0].cache
+    );
+}
+
+#[test]
+fn degenerate_corpora_are_pinned() {
+    // All-identical segments: one group without a cap, ⌈n/cap⌉ groups
+    // with one, and the driver runs cleanly on the collapsed corpus.
+    let base = generate(&DatasetSpec::tiny(12, 2, 206));
+    let proto = base.segments[0].clone();
+    let n = 9;
+    let identical = SegmentSet {
+        name: "identical".into(),
+        dim: base.dim,
+        segments: (0..n)
+            .map(|id| Segment {
+                id,
+                class_id: 0,
+                len: proto.len,
+                dim: proto.dim,
+                feats: proto.feats.clone(),
+            })
+            .collect(),
+        num_classes: 1,
+    };
+    identical.validate().unwrap();
+
+    let free = aggregate(
+        &identical,
+        &AggregateConfig::new(0.5),
+        &NativeBackend::new(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(free.reps(), 1);
+    assert_eq!(free.members[0].len(), n);
+
+    let capped = aggregate(
+        &identical,
+        &AggregateConfig::new(0.5).with_cap(4),
+        &NativeBackend::new(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(capped.reps(), 3, "⌈9/4⌉ saturated groups");
+    assert_eq!(
+        capped.members.iter().map(Vec::len).collect::<Vec<_>>(),
+        vec![4, 4, 1]
+    );
+
+    let mut c = cfg(0.5);
+    c.p0 = 1;
+    c.beta = None;
+    let res = MahcDriver::new(&identical, c, &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(res.labels, vec![0; n], "identical corpus is one cluster");
+    assert_eq!(res.k, 1);
+    assert_eq!(res.f_measure, 1.0, "single class, single cluster");
+
+    // Single-segment corpus: aggregation is the identity and the run
+    // still works.
+    let single = SegmentSet {
+        name: "single".into(),
+        dim: proto.dim,
+        segments: vec![Segment {
+            id: 0,
+            class_id: 0,
+            len: proto.len,
+            dim: proto.dim,
+            feats: proto.feats.clone(),
+        }],
+        num_classes: 1,
+    };
+    let agg = aggregate(
+        &single,
+        &AggregateConfig::new(1.0),
+        &NativeBackend::new(),
+        None,
+    )
+    .unwrap();
+    assert!(agg.is_identity());
+    let mut c1 = cfg(1.0);
+    c1.p0 = 1;
+    c1.beta = None;
+    let res = MahcDriver::new(&single, c1, &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(res.labels, vec![0]);
+    assert_eq!(res.k, 1);
+}

@@ -169,6 +169,51 @@ fn streaming_multi_shard_obeys_beta_and_warms_the_cross_cache() {
 }
 
 #[test]
+fn aggregated_pipeline_compresses_and_stays_close_in_quality() {
+    // Stage-0 aggregation end to end: a data-derived radius must
+    // actually shrink the pipeline input (compression ratio < 1), the
+    // resolved labels must cover all N, and quality must stay in the
+    // unaggregated run's neighbourhood.  ε is the corpus's 10th
+    // pair-distance percentile, so only near-duplicates merge.
+    use mahc::config::AggregateConfig;
+    use mahc::corpus::Segment;
+    use mahc::distance::build_condensed;
+
+    let set = generate(&DatasetSpec::tiny(140, 7, 108));
+    let backend = NativeBackend::new();
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, &backend, 4).unwrap();
+    let mut dists: Vec<f32> = cond.as_slice().to_vec();
+    dists.sort_unstable_by(f32::total_cmp);
+    let eps = dists[(dists.len() - 1) / 10];
+
+    let plain = MahcDriver::new(&set, cfg(3, Some(50), 3), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut aggregated_cfg = cfg(3, Some(50), 3);
+    aggregated_cfg.aggregate = AggregateConfig::new(eps);
+    let agg = MahcDriver::new(&set, aggregated_cfg, &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert_eq!(agg.labels.len(), set.len());
+    assert!(agg.labels.iter().all(|&l| l < agg.k));
+    let r0 = &agg.history.records[0];
+    assert!(r0.representatives >= 1 && r0.representatives <= set.len());
+    assert!(r0.compression_ratio <= 1.0);
+    assert!(r0.assignment_pairs > 0, "leader pass must have probed");
+    assert!(
+        agg.f_measure > plain.f_measure - 0.15,
+        "aggregated F {:.3} too far below plain {:.3} (ratio {:.3})",
+        agg.f_measure,
+        plain.f_measure,
+        r0.compression_ratio
+    );
+}
+
+#[test]
 fn full_pipeline_on_xla_backend() {
     // The request path the architecture is about: MAHC+M with every DTW
     // going through the AOT Pallas kernel via PJRT.
