@@ -1,29 +1,52 @@
 //! Stage-0 aggregation cost/benefit: leader-pass wall, compression
-//! ratio, and end-to-end quality across the ε sweep.
+//! ratio, end-to-end quality across the ε sweep, and the probe-engine
+//! showdown (flat-serial vs rectangle-batched vs batched+tree).
 //!
 //! ε is data-dependent, so the harness derives the sweep from the
 //! corpus itself: it builds the full condensed matrix once, takes pair-
 //! distance quantiles as radii, and for each one reports the number of
 //! representatives, the compression ratio m/N, and the aggregated run's
-//! F-measure against the unaggregated reference.  Two pins are
-//! *provable* and asserted on every run: ε = 0 reproduces the
-//! unaggregated run bitwise, and ε beyond the largest pair distance
-//! collapses the corpus onto a single representative (every segment is
-//! within ε of the first leader).
+//! F-measure against the unaggregated reference.  Pins asserted on
+//! every run: ε = 0 reproduces the unaggregated run bitwise, ε beyond
+//! the largest pair distance collapses the corpus onto a single
+//! representative, the rectangle-batched pass groups bitwise like the
+//! per-row reference, the quantile-derived radius equals the harness's
+//! own quantile bit for bit, and the batched+tree pass issues fewer
+//! probe DTWs than the leaders × segments ceiling.
 //!
 //! CI hooks: `MAHC_BENCH_QUICK=1` shrinks the corpus for the perf-smoke
-//! job, and `MAHC_BENCH_JSON=path` writes the sweep (compression ratio
-//! per ε, F deltas, leader wall) as a JSON fragment for `BENCH_ci.json`.
+//! job, and `MAHC_BENCH_JSON=path` writes the sweep and the probe-mode
+//! counts as a JSON fragment for `BENCH_ci.json` (diffed against the
+//! committed `BENCH_baseline.json`).
 
 use std::time::Instant;
 
-use mahc::aggregate::aggregate;
+use mahc::aggregate::{aggregate, derive_epsilon, quantile_of_sorted, Aggregation};
 use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec};
 use mahc::corpus::{generate, Segment};
 use mahc::distance::{build_condensed, NativeBackend};
 use mahc::mahc::MahcDriver;
 use mahc::util::bench::{quick_mode, write_json_report, Bench};
 use mahc::util::json;
+
+fn probe_mode_row(tag: &str, agg: &Aggregation, wall_secs: f64, n: usize) -> json::Json {
+    let full = agg.reps() * n;
+    json::obj(vec![
+        ("tag", json::s(tag)),
+        ("reps", json::num(agg.reps() as f64)),
+        ("probe_pairs", json::num(agg.probe_pairs as f64)),
+        ("probe_rounds", json::num(agg.probe_rounds as f64)),
+        ("rect_rows", json::num(agg.rect_rows as f64)),
+        ("rect_cols", json::num(agg.rect_cols as f64)),
+        ("super_leaders", json::num(agg.super_leaders as f64)),
+        ("full_pairs", json::num(full as f64)),
+        (
+            "probe_vs_full",
+            json::num(agg.probe_pairs as f64 / full.max(1) as f64),
+        ),
+        ("wall_secs", json::num(wall_secs)),
+    ])
+}
 
 fn main() {
     let n = if quick_mode() { 120 } else { 240 };
@@ -36,7 +59,7 @@ fn main() {
     let cond = build_condensed(&refs, &backend, 4).unwrap();
     let mut dists: Vec<f32> = cond.as_slice().to_vec();
     dists.sort_unstable_by(f32::total_cmp);
-    let quantile = |q: f64| dists[((dists.len() - 1) as f64 * q) as usize];
+    let quantile = |q: f64| quantile_of_sorted(&dists, q);
     let d_max = *dists.last().unwrap();
 
     let algo = AlgoConfig {
@@ -109,16 +132,84 @@ fn main() {
 
     // Pin 2: a radius past the largest pair distance leaves exactly one
     // representative (every segment is within ε of the first leader).
-    let top = aggregate(&set, &AggregateConfig::new(d_max * 1.01), &backend, None).unwrap();
+    let top = aggregate(
+        &set,
+        &AggregateConfig::new(d_max * 1.01),
+        &backend,
+        4,
+        None,
+    )
+    .unwrap();
     assert_eq!(top.reps(), 1, "ε > max pair distance must collapse to one");
     assert!(top.compression_ratio() < 1.0);
     println!("\nε past max distance collapses to 1 representative: OK");
 
-    // Leader-pass wall at the p25 radius (the sweet-spot shape).
-    let cfg25 = AggregateConfig::new(quantile(0.25));
+    // Pin 3: the quantile-derived radius (full sample) equals this
+    // harness's own p25 bit for bit — the documented estimator rule.
+    let seed = AggregateConfig::default().quantile_seed;
+    let (eps_q, sample_pairs) = derive_epsilon(&set, 0.25, n, seed, &backend, 4, None).unwrap();
+    assert_eq!(
+        eps_q.to_bits(),
+        quantile(0.25).to_bits(),
+        "full-sample quantile estimate must be exact"
+    );
+    assert_eq!(sample_pairs, dists.len());
+    println!("quantile-derived ε (q=0.25, full sample) is exact: MATCH");
+
+    // Probe-engine showdown at the p25 radius: flat-serial (per-row
+    // reference) vs rectangle-batched vs batched + two-level tree.
+    let eps25 = quantile(0.25);
+    let serial_cfg = AggregateConfig::new(eps25).with_batch_rows(1);
+    let batched_cfg = AggregateConfig::new(eps25).with_batch_rows(64);
+    let tree_cfg = batched_cfg.with_tree(3.0, 2);
+
+    let t0 = Instant::now();
+    let serial = aggregate(&set, &serial_cfg, &backend, 4, None).unwrap();
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let batched = aggregate(&set, &batched_cfg, &backend, 4, None).unwrap();
+    let batched_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let tree = aggregate(&set, &tree_cfg, &backend, 4, None).unwrap();
+    let tree_wall = t0.elapsed().as_secs_f64();
+
+    // Pin 4: batching is a dispatch-shape change only.
+    assert_eq!(batched.rep_ids, serial.rep_ids, "batched rep set diverged");
+    assert_eq!(batched.members, serial.members, "batched memberships diverged");
+
+    // Pin 5: the batched+tree pass must issue measurably fewer probe
+    // DTWs than the leaders × segments ceiling the flat pass is bounded
+    // by (the acceptance floor; the committed baseline tracks the
+    // actual ratio).
+    let full = tree.reps() * n;
+    assert!(
+        tree.probe_pairs < full,
+        "tree probes {} did not beat leaders × segments = {full}",
+        tree.probe_pairs
+    );
+
+    println!("\nprobe engine at p25 (m={} leaders):", serial.reps());
+    println!("  mode          probes   rounds  rect        supers  wall_s");
+    for (tag, a, w) in [
+        ("flat-serial", &serial, serial_wall),
+        ("batched", &batched, batched_wall),
+        ("batched+tree", &tree, tree_wall),
+    ] {
+        println!(
+            "  {tag:<13} {:>6} {:>8}  {:>4}x{:<5} {:>6} {w:>7.3}",
+            a.probe_pairs, a.probe_rounds, a.rect_rows, a.rect_cols, a.super_leaders
+        );
+    }
+    println!(
+        "  leaders × segments ceiling: {full} (tree issues {:.1}%)",
+        tree.probe_pairs as f64 / full as f64 * 100.0
+    );
+
+    // Leader-pass wall at the p25 radius (the sweet-spot shape),
+    // batched dispatch as the drivers run it.
     let leader = Bench::new("aggregate/leader@p25")
         .quick()
-        .run(|| aggregate(&set, &cfg25, &backend, None).unwrap());
+        .run(|| aggregate(&set, &batched_cfg, &backend, 4, None).unwrap());
 
     write_json_report(&json::obj(vec![
         ("quick", json::Json::Bool(quick_mode())),
@@ -126,6 +217,22 @@ fn main() {
         ("plain_f", json::num(plain.f_measure)),
         ("plain_wall_secs", json::num(plain_wall)),
         ("sweep", json::arr(rows)),
+        (
+            "quantile",
+            json::obj(vec![
+                ("q", json::num(0.25)),
+                ("derived_eps", json::num(eps_q as f64)),
+                ("sample_pairs", json::num(sample_pairs as f64)),
+            ]),
+        ),
+        (
+            "probe_modes",
+            json::obj(vec![
+                ("serial", probe_mode_row("flat-serial", &serial, serial_wall, n)),
+                ("batched", probe_mode_row("batched", &batched, batched_wall, n)),
+                ("tree", probe_mode_row("batched+tree", &tree, tree_wall, n)),
+            ]),
+        ),
         ("leader_wall", leader.to_json()),
     ]))
     .expect("writing MAHC_BENCH_JSON fragment");

@@ -1,5 +1,6 @@
 //! Stage-0 aggregation, demonstrated: compression ratio vs quality
-//! across a data-derived ε sweep.
+//! across a data-derived ε sweep, the quantile-derived radius, and the
+//! probe-engine modes (per-row, rectangle-batched, batched + tree).
 //!
 //! The leader pass groups segments within DTW radius ε of an earlier-
 //! seen representative, the drivers cluster only the m representatives,
@@ -9,6 +10,9 @@
 //! and ε beyond the largest pair distance collapses the corpus onto a
 //! single representative.  In between, small radii merge near-
 //! duplicates and barely move F while already shrinking the input.
+//! Instead of guessing an absolute ε, `--aggregate-quantile q` derives
+//! it from the corpus itself — shown here to match the sweep's own
+//! quantile bit for bit.
 //!
 //! ```text
 //! cargo run --release --example aggregation_sweep
@@ -17,7 +21,7 @@
 //! Set `MAHC_EXAMPLE_QUICK=1` (the CI examples-smoke job does) to run
 //! on a smaller corpus.
 
-use mahc::aggregate::aggregate;
+use mahc::aggregate::{aggregate, derive_epsilon, quantile_of_sorted};
 use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::{generate, Segment};
 use mahc::distance::{build_condensed, NativeBackend};
@@ -37,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let cond = build_condensed(&refs, &backend, 4)?;
     let mut dists: Vec<f32> = cond.as_slice().to_vec();
     dists.sort_unstable_by(f32::total_cmp);
-    let quantile = |q: f64| dists[((dists.len() - 1) as f64 * q) as usize];
+    let quantile = |q: f64| quantile_of_sorted(&dists, q);
 
     let algo = AlgoConfig {
         p0: 3,
@@ -85,13 +89,54 @@ fn main() -> anyhow::Result<()> {
     // The other exact end: a radius past every pair distance leaves a
     // single representative, whatever the corpus.
     let d_max = *dists.last().unwrap();
-    let top = aggregate(&set, &AggregateConfig::new(d_max * 1.01), &backend, None)?;
+    let top = aggregate(
+        &set,
+        &AggregateConfig::new(d_max * 1.01),
+        &backend,
+        4,
+        None,
+    )?;
     anyhow::ensure!(top.reps() == 1, "ε past max distance must collapse to 1");
     println!(
         "\nε={:.3} (past max pair distance): 1 representative, ratio {:.4}",
         d_max * 1.01,
         top.compression_ratio()
     );
+
+    // Quantile-derived ε: with a sample covering the corpus, the
+    // product estimator reproduces this harness's own p25 bit for bit.
+    let seed = AggregateConfig::default().quantile_seed;
+    let (eps_q, _) = derive_epsilon(&set, 0.25, n, seed, &backend, 4, None)?;
+    anyhow::ensure!(
+        eps_q.to_bits() == quantile(0.25).to_bits(),
+        "full-sample quantile estimate must be exact"
+    );
+    println!("quantile-derived ε (q=0.25): {eps_q:.3} — matches the sweep's p25 bitwise");
+
+    // Probe-engine modes at p25: per-row reference, rectangle-batched,
+    // batched + two-level tree.  Identical groups for the first two —
+    // the rectangle only changes dispatch shape — and fewer probe DTWs
+    // than leaders × segments for the tree.
+    let eps25 = quantile(0.25);
+    let serial_cfg = AggregateConfig::new(eps25).with_batch_rows(1);
+    let batched_cfg = AggregateConfig::new(eps25).with_batch_rows(64);
+    let tree_cfg = batched_cfg.with_tree(3.0, 2);
+    let serial = aggregate(&set, &serial_cfg, &backend, 4, None)?;
+    let batched = aggregate(&set, &batched_cfg, &backend, 4, None)?;
+    let tree = aggregate(&set, &tree_cfg, &backend, 4, None)?;
+    anyhow::ensure!(batched.rep_ids == serial.rep_ids, "batched parity broke");
+    anyhow::ensure!(batched.members == serial.members, "batched parity broke");
+    anyhow::ensure!(
+        tree.probe_pairs < tree.reps() * n,
+        "tree must probe fewer pairs than leaders × segments"
+    );
+    println!("\nprobe engine at p25 (m={} leaders):", serial.reps());
+    for (tag, a) in [("per-row", &serial), ("batched", &batched), ("tree", &tree)] {
+        println!(
+            "  {tag:<8} probes={:<6} rounds={:<4} rect={}x{} supers={}",
+            a.probe_pairs, a.probe_rounds, a.rect_rows, a.rect_cols, a.super_leaders
+        );
+    }
 
     // Aggregation composes with the streaming driver: the stream is a
     // stream of representatives, members follow their leader.
@@ -105,7 +150,7 @@ fn main() -> anyhow::Result<()> {
     let stream = StreamingDriver::new(&set, stream_cfg, &backend)?.run()?;
     anyhow::ensure!(stream.labels.len() == n);
     println!(
-        "streamed over representatives: {} shards, K={} F={:.4}",
+        "\nstreamed over representatives: {} shards, K={} F={:.4}",
         stream.shards, stream.k, stream.f_measure
     );
     println!("\nε=0 reproduces the unaggregated run bitwise: MATCH");

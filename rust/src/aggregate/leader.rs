@@ -1,22 +1,45 @@
-//! The deterministic leader (canopy) pass over a segment corpus.
+//! The deterministic leader (canopy) pass over a segment corpus, with a
+//! rectangle-batched probe engine and an optional two-level leader tree.
 //!
 //! Segments are visited in id order.  Each segment probes the DTW
-//! distance to every representative whose group still has room under
-//! the occupancy cap (through [`build_cross_cached`], so probes land in
-//! the cross-iteration [`PairCache`] and stage 1 never recomputes
-//! them — full groups are not probed at all, since their distances
-//! could never be used) and joins the *nearest* such representative
-//! with distance ≤ ε; otherwise it becomes a new representative itself.
-//! Visit order, the strict `<` nearest rule and the single-row probe
-//! shape make the result independent of thread count and — because the
-//! scalar and blocked backends are bitwise equal — of backend choice.
+//! distance to candidate representatives (through [`build_cross_cached`],
+//! so probes land in the cross-iteration [`PairCache`] and stage 1 never
+//! recomputes them) and joins the *nearest* candidate with distance ≤ ε
+//! under the occupancy cap; otherwise it becomes a new representative.
+//! Visit order and the strict `<` nearest rule (ties to the earliest
+//! representative) make the grouping independent of thread count and —
+//! because the scalar and blocked backends are bitwise equal — of
+//! backend choice.
+//!
+//! Probe engine.  Pending segments are grouped into rounds of
+//! `batch_rows` and dispatched against the candidate set as *one cross
+//! rectangle*, so the blocked backend's 8-lane kernel engages instead
+//! of degenerating to one serial row per segment.  Leaders born inside
+//! a round are probed by the round's later segments as short incremental
+//! rows, which keeps the decision sequence — and therefore the groups —
+//! bitwise identical to the historical per-row path (`batch_rows = 1`
+//! *is* that path, kept reachable as the parity suite's reference).
+//!
+//! Two-level tree.  With `tree_factor > 0`, every leader is attached to
+//! its nearest *super-leader* within radius `tree_factor`·ε (or founds a
+//! new one), and a segment only probes the leaders under its
+//! `tree_probe` nearest super-groups — probe cost scales with the tree
+//! fan-out instead of m.  DTW is not a metric, so the tree may prune a
+//! would-be leader out of sight; degenerate configurations where it
+//! cannot prune (one covering super-group, singleton super-groups with
+//! an unambiguous nearest, cap-saturated groups) reproduce the flat
+//! pass exactly and are pinned in `rust/tests/aggregation.rs`.
+//!
+//! ε itself is either given absolutely or derived from a pair-distance
+//! quantile of a seeded corpus sample ([`super::quantile`]).
 
 use crate::config::AggregateConfig;
 use crate::corpus::{Segment, SegmentSet};
 use crate::distance::{build_cross_cached, DtwBackend, PairCache};
 
 /// Result of the leader pass: `m` representatives plus the membership
-/// lists that map them back onto the full corpus.
+/// lists that map them back onto the full corpus, and the probe-engine
+/// telemetry the drivers surface per run.
 #[derive(Debug, Clone)]
 pub struct Aggregation {
     /// Global segment id of each representative, in discovery (= id)
@@ -27,9 +50,22 @@ pub struct Aggregation {
     pub members: Vec<Vec<usize>>,
     /// Representative index (into `rep_ids`) per segment id.
     pub rep_of: Vec<usize>,
-    /// DTW pair probes the pass performed (Σ per segment of the
-    /// representatives whose groups still had room when it arrived).
+    /// DTW pair probes the pass issued (rectangle cells plus incremental
+    /// rows; a cache-served probe still counts — it was issued).
     pub probe_pairs: usize,
+    /// Pair distances consumed by the quantile-ε estimate (0 when ε was
+    /// given absolutely).
+    pub sample_pairs: usize,
+    /// Probe rounds the pass ran (= N on the per-row reference path).
+    pub probe_rounds: usize,
+    /// Rows of the largest probe rectangle dispatched.
+    pub rect_rows: usize,
+    /// Columns of the largest probe rectangle dispatched.
+    pub rect_cols: usize,
+    /// Super-leaders of the two-level tree (0 = flat probing).
+    pub super_leaders: usize,
+    /// Effective leader radius ε (quantile-derived when configured).
+    pub epsilon: f32,
     /// Corpus size N the pass ran over.
     pub total: usize,
 }
@@ -42,6 +78,12 @@ impl Aggregation {
             members: (0..n).map(|i| vec![i]).collect(),
             rep_of: (0..n).collect(),
             probe_pairs: 0,
+            sample_pairs: 0,
+            probe_rounds: 0,
+            rect_rows: 0,
+            rect_cols: 0,
+            super_leaders: 0,
+            epsilon: 0.0,
             total: n,
         }
     }
@@ -66,18 +108,352 @@ impl Aggregation {
     }
 }
 
+/// Super-leader state of the two-level tree.
+struct Tree {
+    /// Coarse radius `tree_factor`·ε.
+    coarse: f32,
+    /// Super-groups a segment descends into (the fan-out).
+    probe: usize,
+    /// Leader index of each super-leader, in founding order.
+    supers: Vec<usize>,
+    /// Leader indices under each super-leader, parallel to `supers`.
+    groups: Vec<Vec<usize>>,
+}
+
+/// Mutable state of one pass, shared by the flat and tree resolvers.
+struct Pass<'a> {
+    set: &'a SegmentSet,
+    epsilon: f32,
+    cap: Option<usize>,
+    rep_ids: Vec<usize>,
+    members: Vec<Vec<usize>>,
+    rep_of: Vec<usize>,
+    probe_pairs: usize,
+    rect_rows: usize,
+    rect_cols: usize,
+    tree: Option<Tree>,
+}
+
+/// Indices of the `k` nearest entries (strict `<`, earliest wins ties),
+/// in pick order.  O(k·n) — k is the tree fan-out, a small constant.
+fn nearest_indices(dists: &[f32], k: usize) -> Vec<usize> {
+    let take = k.min(dists.len());
+    let mut picked: Vec<usize> = Vec::with_capacity(take);
+    while picked.len() < take {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, &v) in dists.iter().enumerate() {
+            if picked.contains(&i) {
+                continue;
+            }
+            let closer = match best {
+                Some((_, b)) => v < b,
+                None => true,
+            };
+            if closer {
+                best = Some((i, v));
+            }
+        }
+        picked.push(best.expect("take <= dists.len()").0);
+    }
+    picked
+}
+
+impl Pass<'_> {
+    fn has_room(&self, r: usize) -> bool {
+        match self.cap {
+            Some(cap) => self.members[r].len() < cap,
+            None => true,
+        }
+    }
+
+    /// Consider `(r, dist)` as a join target: within ε, strictly closer
+    /// than the incumbent (ties keep the earliest representative).
+    fn consider(&self, best: &mut Option<(usize, f32)>, r: usize, dist: f32) {
+        if dist > self.epsilon {
+            return;
+        }
+        let closer = match *best {
+            Some((_, b)) => dist < b,
+            None => true,
+        };
+        if closer {
+            *best = Some((r, dist));
+        }
+    }
+
+    /// Register segment `id` as a fresh leader; returns its index.
+    fn push_leader(&mut self, id: usize) -> usize {
+        let r = self.rep_ids.len();
+        self.rep_of[id] = r;
+        self.rep_ids.push(id);
+        self.members.push(vec![id]);
+        r
+    }
+
+    /// Attach leader `r` to the tree: nearest super-leader within the
+    /// coarse radius (strict `<`, earliest wins), else found a new
+    /// super-group.  `sdist` holds `r`'s distance to every current
+    /// super-leader — already probed while `r` was still a pending
+    /// segment, so attachment issues no DTW of its own.
+    fn attach_leader(&mut self, r: usize, sdist: &[f32]) {
+        let Some(tree) = self.tree.as_mut() else {
+            return;
+        };
+        debug_assert_eq!(sdist.len(), tree.supers.len());
+        let mut best: Option<(usize, f32)> = None;
+        for (g, &dist) in sdist.iter().enumerate() {
+            if dist > tree.coarse {
+                continue;
+            }
+            let closer = match best {
+                Some((_, b)) => dist < b,
+                None => true,
+            };
+            if closer {
+                best = Some((g, dist));
+            }
+        }
+        match best {
+            Some((g, _)) => tree.groups[g].push(r),
+            None => {
+                tree.supers.push(r);
+                tree.groups.push(vec![r]);
+            }
+        }
+    }
+
+    /// One probe round over segments `lo..hi`: a single cross rectangle
+    /// against the candidate columns as of round start, then an in-order
+    /// resolution sweep with short incremental rows for mid-round
+    /// arrivals.
+    fn round(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        backend: &dyn DtwBackend,
+        threads: usize,
+        cache: Option<&PairCache>,
+    ) -> anyhow::Result<()> {
+        let base_leaders = self.rep_ids.len();
+        // Rectangle columns: open leaders (flat; kept as indices for
+        // the resolver) or every super-leader (tree) as of round start,
+        // ascending, mapped to global ids.
+        let (flat_cols, col_ids): (Vec<usize>, Vec<usize>) = match &self.tree {
+            Some(t) => {
+                let ids = t.supers.iter().map(|&s| self.rep_ids[s]).collect();
+                (Vec::new(), ids)
+            }
+            None => {
+                let c: Vec<usize> = (0..base_leaders).filter(|&r| self.has_room(r)).collect();
+                let ids = c.iter().map(|&r| self.rep_ids[r]).collect();
+                (c, ids)
+            }
+        };
+        let ncols = col_ids.len();
+        let rect: Vec<f32> = if ncols == 0 {
+            Vec::new()
+        } else {
+            let xs: Vec<&Segment> = self.set.segments[lo..hi].iter().collect();
+            let ys: Vec<&Segment> = col_ids.iter().map(|&g| &self.set.segments[g]).collect();
+            let d = build_cross_cached(&xs, &ys, backend, threads, cache)?;
+            anyhow::ensure!(
+                d.len() == (hi - lo) * ncols,
+                "backend returned {} probe distances for a {}x{} rectangle",
+                d.len(),
+                hi - lo,
+                ncols
+            );
+            self.probe_pairs += d.len();
+            if (hi - lo) * ncols > self.rect_rows * self.rect_cols {
+                self.rect_rows = hi - lo;
+                self.rect_cols = ncols;
+            }
+            d
+        };
+        for id in lo..hi {
+            let row = &rect[(id - lo) * ncols..(id - lo) * ncols + ncols];
+            if self.tree.is_some() {
+                self.resolve_tree(id, row, ncols, backend, cache)?;
+            } else {
+                self.resolve_flat(id, row, &flat_cols, base_leaders, backend, cache)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flat resolution of segment `id`: every open leader is a
+    /// candidate.  Round-start leaders come from the rectangle `row`
+    /// (skipping groups that filled mid-round); leaders born earlier in
+    /// this round are probed as one incremental row.  Candidates are
+    /// visited in ascending leader index — rectangle columns first, then
+    /// the strictly-younger arrivals — so the strict-`<` rule resolves
+    /// ties exactly as the per-row reference does.
+    fn resolve_flat(
+        &mut self,
+        id: usize,
+        row: &[f32],
+        cols: &[usize],
+        base_leaders: usize,
+        backend: &dyn DtwBackend,
+        cache: Option<&PairCache>,
+    ) -> anyhow::Result<()> {
+        let mut best: Option<(usize, f32)> = None;
+        for (j, &r) in cols.iter().enumerate() {
+            if !self.has_room(r) {
+                continue;
+            }
+            self.consider(&mut best, r, row[j]);
+        }
+        let fresh: Vec<usize> = (base_leaders..self.rep_ids.len())
+            .filter(|&r| self.has_room(r))
+            .collect();
+        if !fresh.is_empty() {
+            let xs = [&self.set.segments[id]];
+            let ys: Vec<&Segment> = fresh
+                .iter()
+                .map(|&r| &self.set.segments[self.rep_ids[r]])
+                .collect();
+            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
+            anyhow::ensure!(
+                d.len() == ys.len(),
+                "backend returned {} probe distances for {} fresh leaders",
+                d.len(),
+                ys.len()
+            );
+            self.probe_pairs += d.len();
+            for (&r, &dist) in fresh.iter().zip(&d) {
+                self.consider(&mut best, r, dist);
+            }
+        }
+        match best {
+            Some((r, _)) => {
+                self.members[r].push(id);
+                self.rep_of[id] = r;
+            }
+            None => {
+                self.push_leader(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Tree resolution of segment `id`: complete the super-leader
+    /// distance vector (rectangle `row` covers the `base_supers` known
+    /// at round start, mid-round foundings get one incremental row),
+    /// descend into the `probe` nearest super-groups, and probe only
+    /// their open leaders — reusing the super distances already in hand.
+    fn resolve_tree(
+        &mut self,
+        id: usize,
+        row: &[f32],
+        base_supers: usize,
+        backend: &dyn DtwBackend,
+        cache: Option<&PairCache>,
+    ) -> anyhow::Result<()> {
+        let mut sdist: Vec<f32> = row.to_vec();
+        let nsupers = self.tree.as_ref().map_or(0, |t| t.supers.len());
+        if nsupers > base_supers {
+            let fresh_ids: Vec<usize> = {
+                let t = self.tree.as_ref().expect("tree mode");
+                t.supers[base_supers..].iter().map(|&s| self.rep_ids[s]).collect()
+            };
+            let xs = [&self.set.segments[id]];
+            let ys: Vec<&Segment> = fresh_ids.iter().map(|&g| &self.set.segments[g]).collect();
+            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
+            anyhow::ensure!(
+                d.len() == ys.len(),
+                "backend returned {} probe distances for {} fresh super-leaders",
+                d.len(),
+                ys.len()
+            );
+            self.probe_pairs += d.len();
+            sdist.extend_from_slice(&d);
+        }
+        let fan = self.tree.as_ref().map_or(1, |t| t.probe);
+        let picked = nearest_indices(&sdist, fan);
+        // Open leaders under the picked groups, ascending; super-leader
+        // distances are already known.
+        let mut cand: Vec<usize> = Vec::new();
+        let mut known: Vec<(usize, f32)> = Vec::new();
+        {
+            let t = self.tree.as_ref().expect("tree mode");
+            for &g in &picked {
+                known.push((t.supers[g], sdist[g]));
+                for &r in &t.groups[g] {
+                    if self.has_room(r) {
+                        cand.push(r);
+                    }
+                }
+            }
+        }
+        cand.sort_unstable();
+        let mut dist: Vec<Option<f32>> = Vec::with_capacity(cand.len());
+        for &r in &cand {
+            let mut known_d = None;
+            for &(kr, kd) in &known {
+                if kr == r {
+                    known_d = Some(kd);
+                    break;
+                }
+            }
+            dist.push(known_d);
+        }
+        let need: Vec<usize> = (0..cand.len()).filter(|&i| dist[i].is_none()).collect();
+        if !need.is_empty() {
+            let xs = [&self.set.segments[id]];
+            let ys: Vec<&Segment> = need
+                .iter()
+                .map(|&i| &self.set.segments[self.rep_ids[cand[i]]])
+                .collect();
+            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
+            anyhow::ensure!(
+                d.len() == ys.len(),
+                "backend returned {} probe distances for {} group leaders",
+                d.len(),
+                ys.len()
+            );
+            self.probe_pairs += d.len();
+            for (&i, &v) in need.iter().zip(&d) {
+                dist[i] = Some(v);
+            }
+        }
+        let mut best: Option<(usize, f32)> = None;
+        for (i, &r) in cand.iter().enumerate() {
+            let dv = dist[i].expect("all candidate distances resolved");
+            self.consider(&mut best, r, dv);
+        }
+        match best {
+            Some((r, _)) => {
+                self.members[r].push(id);
+                self.rep_of[id] = r;
+            }
+            None => {
+                let r = self.push_leader(id);
+                // `sdist` covers every current super-leader, so the new
+                // leader attaches without another probe.
+                self.attach_leader(r, &sdist);
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Run the leader pass over the whole corpus.
 ///
 /// `cache` is the same [`PairCache`] the drivers hand to stage 1: every
 /// probe distance is published to it, so the (rep, rep) pairs a new
 /// representative was probed against are already warm when stage 1
-/// builds its condensed matrices over representatives.  With
-/// `cfg.epsilon == 0` the pass is skipped and [`Aggregation::identity`]
-/// is returned without touching the backend.
+/// builds its condensed matrices over representatives.  `threads`
+/// splits each probe rectangle's rows exactly as the distance builders
+/// do — the assembled rectangle is thread-count invariant, so the
+/// grouping is too.  With `cfg.epsilon == 0` and no quantile the pass
+/// is skipped and [`Aggregation::identity`] is returned without
+/// touching the backend.
 pub fn aggregate(
     set: &SegmentSet,
     cfg: &AggregateConfig,
     backend: &dyn DtwBackend,
+    threads: usize,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<Aggregation> {
     cfg.validate()?;
@@ -85,78 +461,59 @@ pub fn aggregate(
     if !cfg.is_active() || n == 0 {
         return Ok(Aggregation::identity(n));
     }
+    let (epsilon, sample_pairs) = match cfg.quantile {
+        Some(q) => super::quantile::derive_epsilon(
+            set,
+            q,
+            cfg.quantile_sample,
+            cfg.quantile_seed,
+            backend,
+            threads,
+            cache,
+        )?,
+        None => (cfg.epsilon, 0),
+    };
 
-    let mut rep_ids: Vec<usize> = Vec::new();
-    let mut members: Vec<Vec<usize>> = Vec::new();
-    let mut rep_of = vec![usize::MAX; n];
-    let mut probe_pairs = 0usize;
+    let mut pass = Pass {
+        set,
+        epsilon,
+        cap: cfg.cap,
+        rep_ids: Vec::new(),
+        members: Vec::new(),
+        rep_of: vec![usize::MAX; n],
+        probe_pairs: 0,
+        rect_rows: 0,
+        rect_cols: 0,
+        tree: (cfg.tree_factor > 0.0).then(|| Tree {
+            coarse: cfg.tree_factor * epsilon,
+            probe: cfg.tree_probe.max(1),
+            supers: Vec::new(),
+            groups: Vec::new(),
+        }),
+    };
 
-    for id in 0..n {
-        let mut best: Option<(usize, f32)> = None;
-        // Only groups with room are candidates: a distance to a full
-        // group could never be used (the β idea at stage 0), so probing
-        // it would be pure waste — quadratic waste in the saturated
-        // regime the cap exists for.  The trade: a new rep admitted
-        // after saturation never probes full groups, so those (rep,
-        // full-rep) pairs are not pre-warmed in the cache (see
-        // EXPERIMENTS.md §Aggregation).
-        let candidates: Vec<usize> = match cfg.cap {
-            Some(cap) => (0..rep_ids.len())
-                .filter(|&r| members[r].len() < cap)
-                .collect(),
-            None => (0..rep_ids.len()).collect(),
-        };
-        if !candidates.is_empty() {
-            let xs = [&set.segments[id]];
-            let ys: Vec<&Segment> = candidates
-                .iter()
-                .map(|&r| &set.segments[rep_ids[r]])
-                .collect();
-            // One probe row per segment: a single-row cross build is one
-            // block whatever the thread count, so the pass is serial and
-            // scheduling-invariant by construction.
-            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
-            anyhow::ensure!(
-                d.len() == ys.len(),
-                "backend returned {} probe distances for {} representatives",
-                d.len(),
-                ys.len()
-            );
-            probe_pairs += ys.len();
-            for (&r, &dist) in candidates.iter().zip(&d) {
-                if dist > cfg.epsilon {
-                    continue;
-                }
-                // Strict < keeps ties on the earliest representative:
-                // deterministic under any backend or thread count.
-                let closer = match best {
-                    Some((_, b)) => dist < b,
-                    None => true,
-                };
-                if closer {
-                    best = Some((r, dist));
-                }
-            }
-        }
-        match best {
-            Some((r, _)) => {
-                members[r].push(id);
-                rep_of[id] = r;
-            }
-            None => {
-                rep_of[id] = rep_ids.len();
-                rep_ids.push(id);
-                members.push(vec![id]);
-            }
-        }
+    let batch = cfg.batch_rows.max(1);
+    let mut probe_rounds = 0usize;
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + batch).min(n);
+        pass.round(lo, hi, backend, threads, cache)?;
+        probe_rounds += 1;
+        lo = hi;
     }
 
-    debug_assert_eq!(members.iter().map(|m| m.len()).sum::<usize>(), n);
+    debug_assert_eq!(pass.members.iter().map(|m| m.len()).sum::<usize>(), n);
     Ok(Aggregation {
-        rep_ids,
-        members,
-        rep_of,
-        probe_pairs,
+        rep_ids: pass.rep_ids,
+        members: pass.members,
+        rep_of: pass.rep_of,
+        probe_pairs: pass.probe_pairs,
+        sample_pairs,
+        probe_rounds,
+        rect_rows: pass.rect_rows,
+        rect_cols: pass.rect_cols,
+        super_leaders: pass.tree.as_ref().map_or(0, |t| t.supers.len()),
+        epsilon,
         total: n,
     })
 }
@@ -192,15 +549,71 @@ mod tests {
     fn groups_by_nearest_leader_within_epsilon() {
         let set = scalar_set(&[0.0, 0.1, 0.9, 1.0, 0.05]);
         let cfg = AggregateConfig::new(0.2);
-        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
         assert_eq!(agg.rep_ids, vec![0, 2]);
         assert_eq!(agg.members, vec![vec![0, 1, 4], vec![2, 3]]);
         assert_eq!(agg.rep_of, vec![0, 0, 1, 1, 0]);
-        // Probes: 0 + 1 + 1 + 2 + 2.
+        // Probes: 0 + 1 + 1 + 2 + 2 (one round, all leaders mid-round).
         assert_eq!(agg.probe_pairs, 6);
+        assert_eq!(agg.probe_rounds, 1);
+        assert_eq!(agg.sample_pairs, 0);
+        assert_eq!(agg.super_leaders, 0);
+        assert_eq!(agg.epsilon, 0.2);
         assert_eq!(agg.reps(), 2);
         assert!((agg.compression_ratio() - 0.4).abs() < 1e-12);
         assert!(!agg.is_identity());
+    }
+
+    #[test]
+    fn batched_rounds_match_the_per_row_reference() {
+        let set = scalar_set(&[0.0, 0.1, 0.9, 1.0, 0.05]);
+        let reference = aggregate(
+            &set,
+            &AggregateConfig::new(0.2).with_batch_rows(1),
+            &NativeBackend::new(),
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(reference.probe_rounds, 5, "per-row = one round per segment");
+        assert_eq!(reference.probe_pairs, 6);
+        for batch in [2usize, 3, 64] {
+            let agg = aggregate(
+                &set,
+                &AggregateConfig::new(0.2).with_batch_rows(batch),
+                &NativeBackend::new(),
+                4,
+                None,
+            )
+            .unwrap();
+            assert_eq!(agg.rep_ids, reference.rep_ids, "batch = {batch}");
+            assert_eq!(agg.members, reference.members, "batch = {batch}");
+            assert_eq!(agg.rep_of, reference.rep_of, "batch = {batch}");
+            assert_eq!(agg.probe_rounds, 5usize.div_ceil(batch));
+        }
+        // batch = 2 dispatches the rectangles 2x1 (round 1) and 1x2
+        // (round 2); the earliest largest-area one is recorded.
+        let two = aggregate(
+            &set,
+            &AggregateConfig::new(0.2).with_batch_rows(2),
+            &NativeBackend::new(),
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!((two.rect_rows, two.rect_cols), (2, 1));
+    }
+
+    #[test]
+    fn two_level_tree_groups_far_clusters_under_separate_supers() {
+        // Three well-separated pairs: ε groups each pair, the coarse
+        // radius 10ε spans the first two pair-leaders but not the third.
+        let set = scalar_set(&[0.0, 0.05, 1.0, 1.05, 5.0, 5.05]);
+        let cfg = AggregateConfig::new(0.2).with_tree(10.0, 1);
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
+        assert_eq!(agg.rep_ids, vec![0, 2, 4]);
+        assert_eq!(agg.members, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+        assert_eq!(agg.super_leaders, 2, "leaders 0,2 share a super; 4 founds one");
     }
 
     #[test]
@@ -209,7 +622,7 @@ mod tests {
         // representatives; strict < keeps the first.
         let set = scalar_set(&[0.0, 1.0, 0.5]);
         let cfg = AggregateConfig::new(0.3);
-        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
         assert_eq!(agg.rep_ids, vec![0, 1]);
         assert_eq!(agg.members, vec![vec![0, 2], vec![1]]);
     }
@@ -220,7 +633,7 @@ mod tests {
         // the overflow elects fresh leaders.
         let set = scalar_set(&[0.0; 5]);
         let cfg = AggregateConfig::new(0.5).with_cap(2);
-        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
         assert_eq!(agg.rep_ids, vec![0, 2, 4]);
         assert_eq!(agg.members, vec![vec![0, 1], vec![2, 3], vec![4]]);
         for m in &agg.members {
@@ -232,7 +645,7 @@ mod tests {
     fn all_identical_segments_collapse_to_one_group_without_cap() {
         let set = scalar_set(&[2.5; 7]);
         let cfg = AggregateConfig::new(0.01);
-        let agg = aggregate(&set, &cfg, &NativeBackend::new(), None).unwrap();
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
         assert_eq!(agg.rep_ids, vec![0]);
         assert_eq!(agg.members, vec![vec![0, 1, 2, 3, 4, 5, 6]]);
         assert!((agg.compression_ratio() - 1.0 / 7.0).abs() < 1e-12);
@@ -245,6 +658,7 @@ mod tests {
             &one,
             &AggregateConfig::new(5.0),
             &NativeBackend::new(),
+            1,
             None,
         )
         .unwrap();
@@ -258,6 +672,7 @@ mod tests {
             &empty,
             &AggregateConfig::new(5.0),
             &NativeBackend::new(),
+            1,
             None,
         )
         .unwrap();
@@ -272,6 +687,7 @@ mod tests {
             &set,
             &AggregateConfig::default(),
             &NativeBackend::new(),
+            1,
             None,
         )
         .unwrap();
@@ -279,6 +695,7 @@ mod tests {
         assert_eq!(agg.rep_ids, vec![0, 1, 2]);
         assert_eq!(agg.rep_of, vec![0, 1, 2]);
         assert_eq!(agg.probe_pairs, 0);
+        assert_eq!(agg.probe_rounds, 0);
     }
 
     #[test]
@@ -287,16 +704,24 @@ mod tests {
         let cfg = AggregateConfig::new(0.2);
         let cache = PairCache::with_capacity_bytes(1 << 20);
         let backend = NativeBackend::new();
-        let a = aggregate(&set, &cfg, &backend, Some(&cache)).unwrap();
+        let a = aggregate(&set, &cfg, &backend, 1, Some(&cache)).unwrap();
         let cold = cache.stats();
         assert_eq!(cold.hits, 0, "first pass sees only misses");
         assert_eq!(cold.misses as usize, a.probe_pairs);
         // A second pass re-probes the same pairs fully from cache, and
         // the cache cannot change the grouping.
-        let b = aggregate(&set, &cfg, &backend, Some(&cache)).unwrap();
+        let b = aggregate(&set, &cfg, &backend, 1, Some(&cache)).unwrap();
         assert_eq!(a.rep_ids, b.rep_ids);
         assert_eq!(a.members, b.members);
         assert_eq!(cache.stats().hits as usize, a.probe_pairs);
+    }
+
+    #[test]
+    fn nearest_indices_orders_and_breaks_ties_deterministically() {
+        assert_eq!(nearest_indices(&[0.5, 0.1, 0.3], 2), vec![1, 2]);
+        assert_eq!(nearest_indices(&[0.2, 0.2, 0.1], 3), vec![2, 0, 1]);
+        assert_eq!(nearest_indices(&[0.4], 5), vec![0]);
+        assert!(nearest_indices(&[], 2).is_empty());
     }
 
     #[test]
@@ -306,6 +731,7 @@ mod tests {
             &set,
             &AggregateConfig::new(-1.0),
             &NativeBackend::new(),
+            1,
             None
         )
         .is_err());

@@ -19,7 +19,16 @@
 //! pipeline is bitwise the unaggregated run (pinned in
 //! `rust/tests/aggregation.rs`), exactly the story the blocked backend
 //! established for kernels.
+//!
+//! The probe engine ([`leader`]) batches pending segments into cross
+//! rectangles so the blocked backend's lane-parallel kernel engages,
+//! optionally prunes the candidate set through a two-level leader tree
+//! (super-leaders at radius `tree_factor`·ε), and can derive ε itself
+//! from a pair-distance quantile of a seeded corpus sample
+//! ([`quantile`]) instead of asking the user for an absolute radius.
 
 pub mod leader;
+pub mod quantile;
 
 pub use leader::{aggregate, Aggregation};
+pub use quantile::{derive_epsilon, quantile_of_sorted};

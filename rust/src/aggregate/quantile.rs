@@ -1,0 +1,143 @@
+//! Quantile-derived leader radius: estimate ε from the data instead of
+//! asking the user for an absolute DTW distance.
+//!
+//! ε is corpus-dependent — the sweep harnesses have always derived
+//! their radii from pair-distance quantiles of the corpus itself — so
+//! `--aggregate-quantile q` moves that derivation into the product: a
+//! seeded sample of segments is drawn, the condensed distance matrix
+//! over the sample is built (through the run's backend and cache, so
+//! the estimate is backend-invariant and its pairs pre-warm stage 1),
+//! and ε is read off the sorted pair distances at the empirical
+//! quantile rank.
+//!
+//! The estimator is exact when the sample covers the corpus and
+//! deterministic for any (seed, sample size, corpus) triple — pinned in
+//! `rust/tests/aggregation.rs` together with the sampling tolerance.
+
+use crate::corpus::{Segment, SegmentSet};
+use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
+use crate::util::rng::Rng;
+
+/// Empirical quantile of a sorted slice: the value at the lower rank
+/// ⌊(P−1)·q⌋ — the same rule the sweep example and bench use, so a
+/// quantile-configured run reproduces their radii bit for bit.  Total
+/// over its whole domain: an empty slice yields 0.0 and q is clamped
+/// to [0, 1], so the public export cannot index out of bounds.
+pub fn quantile_of_sorted(sorted: &[f32], q: f64) -> f32 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)) as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Estimate the leader radius ε as the `q` pair-distance quantile of a
+/// seeded corpus sample.
+///
+/// Draws `sample` distinct segments with the repo RNG seeded from
+/// `seed` (the whole corpus when `sample >= n`), builds the condensed
+/// matrix over the sample, and returns `(ε, pairs)` where `pairs` is
+/// the number of pair distances the estimate consumed.  A corpus with
+/// fewer than two segments has no pairs; the estimate degrades to 0.
+pub fn derive_epsilon(
+    set: &SegmentSet,
+    q: f64,
+    sample: usize,
+    seed: u64,
+    backend: &dyn DtwBackend,
+    threads: usize,
+    cache: Option<&PairCache>,
+) -> anyhow::Result<(f32, usize)> {
+    anyhow::ensure!(
+        q.is_finite() && q > 0.0 && q < 1.0,
+        "aggregate quantile must lie strictly inside (0, 1) (got {q})"
+    );
+    let n = set.len();
+    if n < 2 {
+        return Ok((0.0, 0));
+    }
+    let s = sample.clamp(2, n);
+    // Sorted sample ids: the multiset of pair distances is order-free,
+    // sorting just keeps the condensed build's probe order canonical.
+    let mut ids = Rng::seed_from(seed).sample_indices(n, s);
+    ids.sort_unstable();
+    let segs: Vec<&Segment> = ids.iter().map(|&i| &set.segments[i]).collect();
+    let cond = build_condensed_cached(&segs, backend, threads, cache)?;
+    let mut dists: Vec<f32> = cond.as_slice().to_vec();
+    dists.sort_unstable_by(f32::total_cmp);
+    Ok((quantile_of_sorted(&dists, q), dists.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+    use crate::distance::{build_condensed, NativeBackend};
+
+    #[test]
+    fn full_sample_is_the_exact_corpus_quantile() {
+        let set = generate(&DatasetSpec::tiny(30, 3, 301));
+        let backend = NativeBackend::new();
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let cond = build_condensed(&refs, &backend, 4).unwrap();
+        let mut exact: Vec<f32> = cond.as_slice().to_vec();
+        exact.sort_unstable_by(f32::total_cmp);
+        for q in [0.05, 0.25, 0.5, 0.9] {
+            let (eps, pairs) = derive_epsilon(&set, q, set.len(), 7, &backend, 4, None).unwrap();
+            assert_eq!(pairs, exact.len());
+            assert_eq!(
+                eps.to_bits(),
+                quantile_of_sorted(&exact, q).to_bits(),
+                "q = {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_is_seed_and_thread_deterministic() {
+        let set = generate(&DatasetSpec::tiny(40, 4, 302));
+        let backend = NativeBackend::new();
+        let (a, pa) = derive_epsilon(&set, 0.5, 16, 11, &backend, 1, None).unwrap();
+        for threads in [1usize, 4, 8] {
+            let (b, pb) = derive_epsilon(&set, 0.5, 16, 11, &backend, threads, None).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "threads = {threads}");
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(pa, 16 * 15 / 2, "sample of 16 has C(16,2) pairs");
+    }
+
+    #[test]
+    fn rejects_degenerate_quantiles() {
+        let set = generate(&DatasetSpec::tiny(10, 2, 303));
+        let backend = NativeBackend::new();
+        for q in [0.0, 1.0, -0.5, 2.0, f64::NAN] {
+            assert!(
+                derive_epsilon(&set, q, 10, 1, &backend, 1, None).is_err(),
+                "q = {q} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_of_sorted_is_total() {
+        assert_eq!(quantile_of_sorted(&[], 0.5), 0.0);
+        let one = [2.5f32];
+        assert_eq!(quantile_of_sorted(&one, 0.0), 2.5);
+        assert_eq!(quantile_of_sorted(&one, 2.0), 2.5, "q is clamped");
+        let four = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_of_sorted(&four, 0.5), 2.0, "lower rank ⌊(P−1)q⌋");
+        assert_eq!(quantile_of_sorted(&four, -1.0), 1.0);
+        assert_eq!(quantile_of_sorted(&four, 1.0), 4.0);
+    }
+
+    #[test]
+    fn tiny_corpora_degrade_to_zero() {
+        let mut set = generate(&DatasetSpec::tiny(8, 2, 304));
+        set.segments.truncate(1);
+        let (eps, pairs) =
+            derive_epsilon(&set, 0.5, 64, 1, &NativeBackend::new(), 1, None).unwrap();
+        assert_eq!(eps, 0.0);
+        assert_eq!(pairs, 0);
+    }
+}

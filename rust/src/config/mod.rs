@@ -145,18 +145,49 @@ impl DatasetSpec {
 /// A deterministic leader pass groups segments whose DTW distance to an
 /// already-chosen representative is at most `epsilon`, so the drivers
 /// cluster `m ≪ N` representatives instead of raw segments.  `epsilon =
-/// 0` disables the pass entirely (identity — the pipeline is bitwise
-/// the unaggregated run), giving the same zero-risk opt-in story as the
-/// blocked backend.
+/// 0` (with no quantile) disables the pass entirely (identity — the
+/// pipeline is bitwise the unaggregated run), giving the same zero-risk
+/// opt-in story as the blocked backend.
+///
+/// Probe-engine knobs: `batch_rows` groups pending segments into probe
+/// rounds dispatched as one cross rectangle (1 = the serial per-row
+/// reference path, bitwise-identical groups either way); `tree_factor`
+/// enables the two-level leader tree (super-leaders at radius
+/// `tree_factor`·ε, each segment descending into its `tree_probe`
+/// nearest super-groups); `quantile` derives ε from the pair-distance
+/// quantile of a seeded corpus sample instead of an absolute radius.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AggregateConfig {
     /// Leader radius ε in DTW distance units.  A segment joins the
-    /// nearest representative with distance ≤ ε; 0.0 = aggregation off.
+    /// nearest representative with distance ≤ ε; 0.0 = aggregation off
+    /// (unless `quantile` derives a radius instead).
     pub epsilon: f32,
     /// Hard per-group occupancy cap (None = unbounded) — the β idea
     /// applied to stage 0: a full group accepts no more members, so no
     /// representative's member list can grow without bound.
     pub cap: Option<usize>,
+    /// Pending segments probed per round as one cross rectangle through
+    /// the blocked backend's lane-parallel kernel.  1 degenerates to
+    /// the historical serial per-row path — the bitwise reference the
+    /// parity suite compares against.
+    pub batch_rows: usize,
+    /// Super-leader coarse radius as a multiple of ε (the two-level
+    /// leader tree).  0.0 = flat probing: every segment considers every
+    /// open leader.
+    pub tree_factor: f32,
+    /// Nearest super-groups each segment descends into when the tree is
+    /// active (the probe fan-out).
+    pub tree_probe: usize,
+    /// Derive ε as this quantile of the pair distances of a seeded
+    /// corpus sample (overrides `epsilon`; None = absolute radius).
+    /// Must lie strictly inside (0, 1).
+    pub quantile: Option<f64>,
+    /// Segments drawn for the quantile estimate (clamped to N; the
+    /// estimate is exact when the sample covers the corpus).
+    pub quantile_sample: usize,
+    /// Seed of the quantile sampler (the estimate is deterministic
+    /// given seed, sample size and corpus).
+    pub quantile_seed: u64,
 }
 
 impl Default for AggregateConfig {
@@ -164,6 +195,12 @@ impl Default for AggregateConfig {
         AggregateConfig {
             epsilon: 0.0,
             cap: None,
+            batch_rows: 64,
+            tree_factor: 0.0,
+            tree_probe: 2,
+            quantile: None,
+            quantile_sample: 256,
+            quantile_seed: 0xE5,
         }
     }
 }
@@ -172,7 +209,7 @@ impl AggregateConfig {
     pub fn new(epsilon: f32) -> Self {
         AggregateConfig {
             epsilon,
-            cap: None,
+            ..Default::default()
         }
     }
 
@@ -181,9 +218,37 @@ impl AggregateConfig {
         self
     }
 
-    /// Whether the leader pass runs at all (ε > 0).
+    /// Set the probe-round rectangle height (1 = per-row reference).
+    pub fn with_batch_rows(mut self, rows: usize) -> Self {
+        self.batch_rows = rows;
+        self
+    }
+
+    /// Enable the two-level leader tree: super-leaders at radius
+    /// `factor`·ε, each segment probing its `probe` nearest super-groups.
+    pub fn with_tree(mut self, factor: f32, probe: usize) -> Self {
+        self.tree_factor = factor;
+        self.tree_probe = probe;
+        self
+    }
+
+    /// Derive ε from the pair-distance quantile `q` of a seeded corpus
+    /// sample instead of an absolute radius.
+    pub fn with_quantile(mut self, q: f64) -> Self {
+        self.quantile = Some(q);
+        self
+    }
+
+    /// Sample size for the quantile estimate.
+    pub fn with_quantile_sample(mut self, sample: usize) -> Self {
+        self.quantile_sample = sample;
+        self
+    }
+
+    /// Whether the leader pass runs at all (ε > 0 or a quantile-derived
+    /// radius is requested).
     pub fn is_active(&self) -> bool {
-        self.epsilon > 0.0
+        self.epsilon > 0.0 || self.quantile.is_some()
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -195,6 +260,26 @@ impl AggregateConfig {
         }
         if self.cap == Some(0) {
             anyhow::bail!("aggregate cap must be >= 1 (a group holds at least its leader)");
+        }
+        if self.batch_rows == 0 {
+            anyhow::bail!("aggregate batch_rows must be >= 1 (1 = per-row reference path)");
+        }
+        if !self.tree_factor.is_finite() || self.tree_factor < 0.0 {
+            anyhow::bail!(
+                "aggregate tree_factor must be finite and >= 0 (got {})",
+                self.tree_factor
+            );
+        }
+        if self.tree_probe == 0 {
+            anyhow::bail!("aggregate tree_probe must be >= 1 (descend into at least one group)");
+        }
+        if let Some(q) = self.quantile {
+            if !q.is_finite() || q <= 0.0 || q >= 1.0 {
+                anyhow::bail!("aggregate quantile must lie strictly inside (0, 1) (got {q})");
+            }
+            if self.quantile_sample < 2 {
+                anyhow::bail!("aggregate quantile_sample must be >= 2 (need at least one pair)");
+            }
         }
         Ok(())
     }
@@ -425,6 +510,18 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
                     Some(v.parse()?)
                 }
             }
+            "aggregate_batch" => cfg.aggregate.batch_rows = v.parse()?,
+            "aggregate_tree" => cfg.aggregate.tree_factor = v.parse()?,
+            "aggregate_probe" => cfg.aggregate.tree_probe = v.parse()?,
+            "aggregate_quantile" => {
+                cfg.aggregate.quantile = if v == "none" {
+                    None
+                } else {
+                    Some(v.parse()?)
+                }
+            }
+            "aggregate_sample" => cfg.aggregate.quantile_sample = v.parse()?,
+            "aggregate_quantile_seed" => cfg.aggregate.quantile_seed = v.parse()?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -525,6 +622,10 @@ mod tests {
         let off = AggregateConfig::default();
         assert_eq!(off.epsilon, 0.0);
         assert_eq!(off.cap, None);
+        assert_eq!(off.batch_rows, 64, "rectangle probing is the default");
+        assert_eq!(off.tree_factor, 0.0, "flat probing is the default");
+        assert_eq!(off.tree_probe, 2);
+        assert_eq!(off.quantile, None);
         assert!(!off.is_active(), "epsilon 0 means aggregation off");
         assert!(off.validate().is_ok());
 
@@ -537,6 +638,26 @@ mod tests {
         assert!(AggregateConfig::new(f32::NAN).validate().is_err());
         assert!(AggregateConfig::new(f32::INFINITY).validate().is_err());
         assert!(AggregateConfig::new(1.0).with_cap(0).validate().is_err());
+        let bad_batch = AggregateConfig::new(1.0).with_batch_rows(0);
+        assert!(bad_batch.validate().is_err());
+        for (factor, probe) in [(-1.0, 2), (f32::NAN, 2), (3.0, 0)] {
+            let bad_tree = AggregateConfig::new(1.0).with_tree(factor, probe);
+            assert!(bad_tree.validate().is_err(), "factor {factor} probe {probe}");
+        }
+        let ok_tree = AggregateConfig::new(1.0).with_tree(3.0, 2);
+        assert!(ok_tree.validate().is_ok());
+
+        // Quantile mode: q must lie strictly inside (0, 1), the sample
+        // must contain at least one pair, and any in-range q activates
+        // the pass even at ε = 0.
+        for q in [0.0, 1.0, -0.25, 1.5, f64::NAN] {
+            let bad = AggregateConfig::default().with_quantile(q);
+            assert!(bad.validate().is_err(), "q = {q} must be rejected");
+        }
+        let quant = AggregateConfig::default().with_quantile(0.25);
+        assert!(quant.validate().is_ok());
+        assert!(quant.is_active(), "a quantile radius activates the pass");
+        assert!(quant.with_quantile_sample(1).validate().is_err());
 
         // AlgoConfig validation surfaces aggregate errors too.
         let mut cfg = AlgoConfig::default();
@@ -570,6 +691,46 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.aggregate.cap, None);
+    }
+
+    #[test]
+    fn aggregate_probe_engine_keys_parse() {
+        let mut cfg = AlgoConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &[
+                ("aggregate_batch".to_string(), "1".to_string()),
+                ("aggregate_tree".to_string(), "3.0".to_string()),
+                ("aggregate_probe".to_string(), "4".to_string()),
+                ("aggregate_quantile".to_string(), "0.25".to_string()),
+                ("aggregate_sample".to_string(), "128".to_string()),
+                ("aggregate_quantile_seed".to_string(), "99".to_string()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregate.batch_rows, 1);
+        assert_eq!(cfg.aggregate.tree_factor, 3.0);
+        assert_eq!(cfg.aggregate.tree_probe, 4);
+        assert_eq!(cfg.aggregate.quantile, Some(0.25));
+        assert_eq!(cfg.aggregate.quantile_sample, 128);
+        assert_eq!(cfg.aggregate.quantile_seed, 99);
+        apply_overrides(
+            &mut cfg,
+            &[("aggregate_quantile".to_string(), "none".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregate.quantile, None);
+        // Builder forms mirror the keys.
+        let b = AggregateConfig::new(1.0)
+            .with_batch_rows(8)
+            .with_tree(2.5, 3)
+            .with_quantile(0.5)
+            .with_quantile_sample(64);
+        assert_eq!(b.batch_rows, 8);
+        assert_eq!(b.tree_factor, 2.5);
+        assert_eq!(b.tree_probe, 3);
+        assert_eq!(b.quantile, Some(0.5));
+        assert_eq!(b.quantile_sample, 64);
     }
 
     #[test]

@@ -87,7 +87,9 @@ impl<'a> MahcDriver<'a> {
         let agg = cfg
             .aggregate
             .is_active()
-            .then(|| aggregate::aggregate(self.set, &cfg.aggregate, self.backend, cache))
+            .then(|| {
+                aggregate::aggregate(self.set, &cfg.aggregate, self.backend, cfg.threads, cache)
+            })
             .transpose()?;
         let agg_cache = cache
             .map(|c| c.stats().delta(&agg_snapshot))
@@ -142,9 +144,17 @@ impl<'a> MahcDriver<'a> {
             r.compression_ratio = a.compression_ratio();
             r.assignment_pairs = if idx == 0 { a.probe_pairs } else { 0 };
             if idx == 0 {
+                // Stage-0 probe-engine shape, stamped once.
+                r.sample_pairs = a.sample_pairs;
+                r.probe_rounds = a.probe_rounds;
+                r.probe_rect_rows = a.rect_rows;
+                r.probe_rect_cols = a.rect_cols;
+                r.super_leaders = a.super_leaders;
+                r.aggregate_epsilon = a.epsilon as f64;
                 // The leader pass ran before the episode's first cache
-                // snapshot; without this, its misses would be invisible
-                // and cache_total() would overstate the hit rate.
+                // snapshot; without this, its misses — single-row probes
+                // and batched rectangles alike — would be invisible and
+                // cache_total() would overstate the hit rate.
                 r.cache.hits += agg_cache.hits;
                 r.cache.misses += agg_cache.misses;
                 r.cache.evictions += agg_cache.evictions;
@@ -339,6 +349,12 @@ pub(crate) fn run_episode(
                     representatives: 0,
                     compression_ratio: 1.0,
                     assignment_pairs: 0,
+                    sample_pairs: 0,
+                    probe_rounds: 0,
+                    probe_rect_rows: 0,
+                    probe_rect_cols: 0,
+                    super_leaders: 0,
+                    aggregate_epsilon: 0.0,
                     backend: backend.name().to_string(),
                     pairs_per_sec: pairs_rate(iter_pairs, wall),
                 });
@@ -392,6 +408,12 @@ pub(crate) fn run_episode(
                 representatives: 0,
                 compression_ratio: 1.0,
                 assignment_pairs: 0,
+                sample_pairs: 0,
+                probe_rounds: 0,
+                probe_rect_rows: 0,
+                probe_rect_cols: 0,
+                super_leaders: 0,
+                aggregate_epsilon: 0.0,
                 backend: backend.name().to_string(),
                 pairs_per_sec: pairs_rate(iter_pairs, wall),
             });
@@ -669,6 +691,7 @@ mod tests {
             aggregate: crate::config::AggregateConfig {
                 epsilon: 0.0,
                 cap: Some(5),
+                ..Default::default()
             },
             ..plain_cfg.clone()
         };

@@ -129,7 +129,9 @@ impl<'a> StreamingDriver<'a> {
         let agg = algo
             .aggregate
             .is_active()
-            .then(|| aggregate::aggregate(self.set, &algo.aggregate, self.backend, cache))
+            .then(|| {
+                aggregate::aggregate(self.set, &algo.aggregate, self.backend, algo.threads, cache)
+            })
             .transpose()?;
         // Leader-probe counter movement, folded into shard 0's record
         // below so the stream's cache totals include the pass that
@@ -248,6 +250,18 @@ impl<'a> StreamingDriver<'a> {
                 shard_delta.misses += agg_cache.misses;
                 shard_delta.evictions += agg_cache.evictions;
             }
+            // Stage-0 probe-engine stamps, carried by the first shard's
+            // record only (the pass runs once, before the stream).
+            let (probe_rounds, rect_rows, rect_cols, supers, eps_eff) = match (&agg, t) {
+                (Some(a), 0) => (
+                    a.probe_rounds,
+                    a.rect_rows,
+                    a.rect_cols,
+                    a.super_leaders,
+                    a.epsilon as f64,
+                ),
+                _ => (0, 0, 0, 0, 0.0),
+            };
             let wall = t0.elapsed();
             history.push(IterationRecord {
                 iteration: t,
@@ -268,6 +282,15 @@ impl<'a> StreamingDriver<'a> {
                     (Some(a), 0) => a.probe_pairs,
                     _ => 0,
                 },
+                sample_pairs: match (&agg, t) {
+                    (Some(a), 0) => a.sample_pairs,
+                    _ => 0,
+                },
+                probe_rounds,
+                probe_rect_rows: rect_rows,
+                probe_rect_cols: rect_cols,
+                super_leaders: supers,
+                aggregate_epsilon: eps_eff,
                 backend: self.backend.name().to_string(),
                 // Shard throughput counts the episode's pairs plus the
                 // retirement rectangle's.
@@ -560,6 +583,7 @@ mod tests {
         agg_algo.aggregate = crate::config::AggregateConfig {
             epsilon: 0.0,
             cap: Some(9),
+            ..Default::default()
         };
         let agg_cfg = StreamConfig::new(agg_algo, 35);
         let plain = StreamingDriver::new(&set, plain_cfg, &backend)

@@ -35,7 +35,8 @@ use mahc::util::cli::Args;
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
-    "aggregate-eps", "aggregate-cap",
+    "aggregate-eps", "aggregate-cap", "aggregate-batch", "aggregate-tree", "aggregate-probe",
+    "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed",
 ];
 
 fn main() {
@@ -63,9 +64,18 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
             eprintln!("          [--aggregate-eps F  stage-0 leader radius (0 = off)]");
             eprintln!("          [--aggregate-cap N  stage-0 per-group occupancy cap]");
+            eprintln!("          [--aggregate-quantile Q  derive the radius from the pair-distance");
+            eprintln!("                     quantile Q in (0,1) of a seeded corpus sample]");
+            eprintln!("          [--aggregate-sample N  segments sampled for the quantile estimate]");
+            eprintln!("          [--aggregate-quantile-seed N  seed of the quantile sampler]");
+            eprintln!("          [--aggregate-batch N  segments probed per rectangle round (1 = serial)]");
+            eprintln!("          [--aggregate-tree K  two-level leader tree, super-radius K*eps (0 = flat)]");
+            eprintln!("          [--aggregate-probe N  nearest super-groups each segment descends into]");
             eprintln!("  stream  --dataset <name> [--scale F] --shard-size N [--shard-seed N]");
             eprintln!("          [--p0 N] [--beta N] [--iters N] [--backend native|blocked|xla]");
             eprintln!("          [--cache-mb N] [--aggregate-eps F] [--aggregate-cap N] [--out FILE]");
+            eprintln!("          [--aggregate-quantile Q] [--aggregate-sample N] [--aggregate-batch N]");
+            eprintln!("          [--aggregate-tree K] [--aggregate-probe N]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -110,6 +120,24 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     }
     if let Some(cap) = args.get_parsed::<usize>("aggregate-cap")? {
         cfg.aggregate.cap = Some(cap);
+    }
+    if let Some(q) = args.get_parsed::<f64>("aggregate-quantile")? {
+        cfg.aggregate.quantile = Some(q);
+    }
+    if let Some(s) = args.get_parsed::<usize>("aggregate-sample")? {
+        cfg.aggregate.quantile_sample = s;
+    }
+    if let Some(s) = args.get_parsed::<u64>("aggregate-quantile-seed")? {
+        cfg.aggregate.quantile_seed = s;
+    }
+    if let Some(b) = args.get_parsed::<usize>("aggregate-batch")? {
+        cfg.aggregate.batch_rows = b;
+    }
+    if let Some(k) = args.get_parsed::<f32>("aggregate-tree")? {
+        cfg.aggregate.tree_factor = k;
+    }
+    if let Some(p) = args.get_parsed::<usize>("aggregate-probe")? {
+        cfg.aggregate.tree_probe = p;
     }
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
@@ -210,11 +238,21 @@ fn cluster_with(
                 if r0.representatives > 0 {
                     println!(
                         "stage-0 aggregation: {} representatives over N={} \
-                         (compression {:.3}, {} probe pairs)",
+                         (eps={:.4}, compression {:.3}, {} probe pairs)",
                         r0.representatives,
                         set.len(),
+                        r0.aggregate_epsilon,
                         r0.compression_ratio,
                         res.history.assignment_pairs_total()
+                    );
+                    println!(
+                        "  probe engine: {} rounds, largest rectangle {}x{}, \
+                         {} super-leaders, {} quantile sample pairs",
+                        r0.probe_rounds,
+                        r0.probe_rect_rows,
+                        r0.probe_rect_cols,
+                        r0.super_leaders,
+                        r0.sample_pairs
                     );
                 }
             }
@@ -320,11 +358,21 @@ fn stream_with(
         if r0.representatives > 0 {
             println!(
                 "stage-0 aggregation: {} representatives over N={} \
-                 (compression {:.3}, {} probe pairs)",
+                 (eps={:.4}, compression {:.3}, {} probe pairs)",
                 r0.representatives,
                 set.len(),
+                r0.aggregate_epsilon,
                 r0.compression_ratio,
                 res.history.assignment_pairs_total()
+            );
+            println!(
+                "  probe engine: {} rounds, largest rectangle {}x{}, \
+                 {} super-leaders, {} quantile sample pairs",
+                r0.probe_rounds,
+                r0.probe_rect_rows,
+                r0.probe_rect_cols,
+                r0.super_leaders,
+                r0.sample_pairs
             );
         }
     }

@@ -95,6 +95,28 @@ pub struct IterationRecord {
     /// the record that follows it (the first iteration / shard); 0
     /// elsewhere and whenever aggregation is off.
     pub assignment_pairs: usize,
+    /// Pair distances the stage-0 quantile-ε estimate consumed (first
+    /// record only; 0 when ε was given absolutely or aggregation is
+    /// off).
+    pub sample_pairs: usize,
+    /// Probe rounds the stage-0 pass ran — rectangle dispatches, N on
+    /// the per-row reference path.  Stamped on the first record of an
+    /// aggregated run; 0 elsewhere.
+    pub probe_rounds: usize,
+    /// Rows of the largest probe rectangle the pass dispatched (first
+    /// record only; 0 when aggregation is off or probing never met a
+    /// candidate column).
+    pub probe_rect_rows: usize,
+    /// Columns of the largest probe rectangle (companion to
+    /// `probe_rect_rows`).
+    pub probe_rect_cols: usize,
+    /// Super-leaders of the stage-0 two-level leader tree (first record
+    /// only; 0 = flat probing or aggregation off).
+    pub super_leaders: usize,
+    /// Effective stage-0 leader radius ε — quantile-derived when
+    /// `aggregate_quantile` is configured (first record only; 0.0 when
+    /// aggregation is off).
+    pub aggregate_epsilon: f64,
     /// Name of the DTW backend that served this step's distances
     /// ([`crate::distance::DtwBackend::name`]).
     pub backend: String,
@@ -128,6 +150,12 @@ impl IterationRecord {
             ("representatives", json::num(self.representatives as f64)),
             ("compression_ratio", json::num(self.compression_ratio)),
             ("assignment_pairs", json::num(self.assignment_pairs as f64)),
+            ("sample_pairs", json::num(self.sample_pairs as f64)),
+            ("probe_rounds", json::num(self.probe_rounds as f64)),
+            ("probe_rect_rows", json::num(self.probe_rect_rows as f64)),
+            ("probe_rect_cols", json::num(self.probe_rect_cols as f64)),
+            ("super_leaders", json::num(self.super_leaders as f64)),
+            ("aggregate_epsilon", json::num(self.aggregate_epsilon)),
             ("backend", json::s(&self.backend)),
             ("pairs_per_sec", json::num(self.pairs_per_sec)),
         ])
@@ -231,6 +259,35 @@ impl RunHistory {
         self.records.iter().map(|r| r.assignment_pairs).sum()
     }
 
+    /// Pair distances the run's stage-0 quantile-ε estimate consumed
+    /// (0 when ε was absolute or aggregation is off).
+    pub fn sample_pairs(&self) -> usize {
+        self.records.first().map_or(0, |r| r.sample_pairs)
+    }
+
+    /// Probe rounds of the run's stage-0 pass (0 when aggregation is
+    /// off; the pass runs once, so this is the first record's stamp).
+    pub fn probe_rounds(&self) -> usize {
+        self.records.first().map_or(0, |r| r.probe_rounds)
+    }
+
+    /// Largest stage-0 probe rectangle of the run, rows then columns.
+    pub fn probe_rect(&self) -> (usize, usize) {
+        self.records
+            .first()
+            .map_or((0, 0), |r| (r.probe_rect_rows, r.probe_rect_cols))
+    }
+
+    /// Super-leaders of the run's stage-0 leader tree (0 = flat/off).
+    pub fn super_leaders(&self) -> usize {
+        self.records.first().map_or(0, |r| r.super_leaders)
+    }
+
+    /// Effective stage-0 leader radius of the run (0.0 when off).
+    pub fn aggregate_epsilon(&self) -> f64 {
+        self.records.first().map_or(0.0, |r| r.aggregate_epsilon)
+    }
+
     /// Whole-run cache counters (sum of per-iteration deltas).
     pub fn cache_total(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -278,6 +335,12 @@ mod tests {
             representatives: maxo * 2,
             compression_ratio: 0.5,
             assignment_pairs: if i == 0 { 42 } else { 0 },
+            sample_pairs: if i == 0 { 11 } else { 0 },
+            probe_rounds: if i == 0 { 6 } else { 0 },
+            probe_rect_rows: if i == 0 { 16 } else { 0 },
+            probe_rect_cols: if i == 0 { 9 } else { 0 },
+            super_leaders: if i == 0 { 3 } else { 0 },
+            aggregate_epsilon: if i == 0 { 1.25 } else { 0.0 },
             backend: "native".to_string(),
             pairs_per_sec: 1000.0 * (i + 1) as f64,
         }
@@ -295,6 +358,11 @@ mod tests {
         assert_eq!(h.representatives_series(), vec![200, 160]);
         assert_eq!(h.compression_ratio(), 0.5);
         assert_eq!(h.assignment_pairs_total(), 42);
+        assert_eq!(h.sample_pairs(), 11);
+        assert_eq!(h.probe_rounds(), 6);
+        assert_eq!(h.probe_rect(), (16, 9));
+        assert_eq!(h.super_leaders(), 3);
+        assert_eq!(h.aggregate_epsilon(), 1.25);
         assert_eq!(h.peak_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
@@ -364,6 +432,30 @@ mod tests {
         assert_eq!(
             iters[0].get("assignment_pairs").unwrap().as_usize().unwrap(),
             42
+        );
+        assert_eq!(
+            iters[0].get("sample_pairs").unwrap().as_usize().unwrap(),
+            11
+        );
+        assert_eq!(
+            iters[0].get("probe_rounds").unwrap().as_usize().unwrap(),
+            6
+        );
+        assert_eq!(
+            iters[0].get("probe_rect_rows").unwrap().as_usize().unwrap(),
+            16
+        );
+        assert_eq!(
+            iters[0].get("probe_rect_cols").unwrap().as_usize().unwrap(),
+            9
+        );
+        assert_eq!(
+            iters[0].get("super_leaders").unwrap().as_usize().unwrap(),
+            3
+        );
+        assert_eq!(
+            iters[0].get("aggregate_epsilon").unwrap().as_f64().unwrap(),
+            1.25
         );
     }
 

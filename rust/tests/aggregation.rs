@@ -1,6 +1,8 @@
 //! Stage-0 aggregation conformance: determinism across threads and
-//! backends, the ε = 0 bitwise pin, degenerate corpora, and the
-//! full-corpus label guarantee.
+//! backends, the ε = 0 bitwise pin, batched-probe parity against the
+//! per-row reference path, the quantile-ε oracle, the two-level-tree
+//! degenerate pins, degenerate corpora, and the full-corpus label
+//! guarantee.
 //!
 //! The fixture of choice is a *duplicated* corpus — every segment
 //! appears twice — because it makes the leader pass provable: exact
@@ -11,11 +13,21 @@
 
 mod common;
 
-use mahc::aggregate::aggregate;
+use mahc::aggregate::{aggregate, derive_epsilon, quantile_of_sorted};
 use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::{generate, Segment, SegmentSet};
-use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend, PairCache};
 use mahc::mahc::{MahcDriver, StreamingDriver};
+
+/// All pair distances of a corpus, sorted ascending — the exact
+/// population the quantile estimator samples from.
+fn sorted_pair_distances(set: &SegmentSet) -> Vec<f32> {
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, &NativeBackend::new(), 4).unwrap();
+    let mut dists: Vec<f32> = cond.as_slice().to_vec();
+    dists.sort_unstable_by(f32::total_cmp);
+    dists
+}
 
 /// A corpus where segment `n + i` is an exact copy of segment `i`.
 fn duplicated_corpus(n: usize, classes: usize, seed: u64) -> SegmentSet {
@@ -70,6 +82,7 @@ fn duplicates_collapse_onto_their_originals() {
         &set,
         &AggregateConfig::new(eps),
         &NativeBackend::new(),
+        4,
         None,
     )
     .unwrap();
@@ -125,10 +138,10 @@ fn aggregation_is_invariant_to_threads_and_backend() {
     let blocked = BlockedBackend::new();
     let backends: [(&str, &dyn DtwBackend); 2] = [("native", &native), ("blocked", &blocked)];
 
-    let reference = aggregate(&set, &AggregateConfig::new(eps), &native, None).unwrap();
+    let reference = aggregate(&set, &AggregateConfig::new(eps), &native, 1, None).unwrap();
     let mut runs = Vec::new();
     for (bname, backend) in backends {
-        let a = aggregate(&set, &AggregateConfig::new(eps), backend, None).unwrap();
+        let a = aggregate(&set, &AggregateConfig::new(eps), backend, 4, None).unwrap();
         assert_eq!(a.rep_ids, reference.rep_ids, "{bname}: rep set diverged");
         assert_eq!(a.members, reference.members, "{bname}: memberships diverged");
         assert_eq!(a.rep_of, reference.rep_of, "{bname}");
@@ -164,6 +177,9 @@ fn epsilon_zero_batch_run_is_bitwise_the_unaggregated_run() {
     plain_cfg.aggregate = AggregateConfig::default();
     let mut zero_cfg = cfg(0.0);
     zero_cfg.aggregate.cap = Some(7); // cap without ε is inert
+    zero_cfg.aggregate.batch_rows = 5; // probe-engine knobs too
+    zero_cfg.aggregate.tree_factor = 3.0;
+    zero_cfg.aggregate.tree_probe = 1;
     let plain = MahcDriver::new(&set, plain_cfg, &backend)
         .unwrap()
         .run()
@@ -190,6 +206,9 @@ fn epsilon_zero_batch_run_is_bitwise_the_unaggregated_run() {
         assert_eq!(b.representatives, 0);
         assert_eq!(b.compression_ratio, 1.0);
         assert_eq!(b.assignment_pairs, 0);
+        assert_eq!(b.probe_rounds, 0);
+        assert_eq!(b.super_leaders, 0);
+        assert_eq!(b.aggregate_epsilon, 0.0);
     }
 }
 
@@ -298,6 +317,7 @@ fn degenerate_corpora_are_pinned() {
         &identical,
         &AggregateConfig::new(0.5),
         &NativeBackend::new(),
+        1,
         None,
     )
     .unwrap();
@@ -308,6 +328,7 @@ fn degenerate_corpora_are_pinned() {
         &identical,
         &AggregateConfig::new(0.5).with_cap(4),
         &NativeBackend::new(),
+        1,
         None,
     )
     .unwrap();
@@ -346,6 +367,7 @@ fn degenerate_corpora_are_pinned() {
         &single,
         &AggregateConfig::new(1.0),
         &NativeBackend::new(),
+        1,
         None,
     )
     .unwrap();
@@ -359,4 +381,261 @@ fn degenerate_corpora_are_pinned() {
         .unwrap();
     assert_eq!(res.labels, vec![0]);
     assert_eq!(res.k, 1);
+}
+
+#[test]
+fn batched_probing_is_bitwise_the_per_row_reference() {
+    // The rectangle-batched probe engine reorders *when* distances are
+    // computed, never *which decision* is taken: representatives,
+    // memberships and end-to-end labels must be bitwise identical to
+    // the serial per-row path (batch_rows = 1) across the full parity
+    // matrix — threads x backends x batch sizes, with and without a
+    // mid-round-saturating cap.
+    let set = generate(&DatasetSpec::tiny(70, 6, 210));
+    let eps = quantile_of_sorted(&sorted_pair_distances(&set), 0.25);
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    let backends: [(&str, &dyn DtwBackend); 2] = [("scalar", &native), ("blocked", &blocked)];
+
+    for cap in [None, Some(4)] {
+        let mut per_row = AggregateConfig::new(eps).with_batch_rows(1);
+        per_row.cap = cap;
+        let reference = aggregate(&set, &per_row, &native, 1, None).unwrap();
+        assert_eq!(
+            reference.probe_rounds,
+            set.len(),
+            "per-row reference runs one round per segment"
+        );
+        for (bname, backend) in backends {
+            for threads in common::thread_matrix(&[1, 8]) {
+                for batch in [2usize, 16, 64] {
+                    let mut cfg = per_row;
+                    cfg.batch_rows = batch;
+                    let got = aggregate(&set, &cfg, backend, threads, None).unwrap();
+                    let ctx = format!("{bname}/t{threads}/batch{batch}/cap{cap:?}");
+                    assert_eq!(got.rep_ids, reference.rep_ids, "{ctx}: rep set");
+                    assert_eq!(got.members, reference.members, "{ctx}: memberships");
+                    assert_eq!(got.rep_of, reference.rep_of, "{ctx}: rep_of");
+                    assert_eq!(got.probe_rounds, set.len().div_ceil(batch), "{ctx}");
+                    if cap.is_none() {
+                        // Without a cap every round past the first has
+                        // open columns, so a rectangle must have gone out.
+                        assert!(got.rect_cols > 0, "{ctx}: rectangles must dispatch");
+                        assert_eq!(
+                            got.probe_pairs, reference.probe_pairs,
+                            "{ctx}: uncapped probe counts are dispatch-shape free"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // End to end: the full pipeline's labels ride on the grouping, so
+    // they inherit the parity.
+    let mk = |batch: usize| {
+        let mut c = cfg(eps);
+        c.aggregate.batch_rows = batch;
+        c
+    };
+    let ref_run = MahcDriver::new(&set, mk(1), &native)
+        .unwrap()
+        .run()
+        .unwrap();
+    for (bname, backend) in backends {
+        for threads in common::thread_matrix(&[1, 8]) {
+            let mut c = mk(64);
+            c.threads = threads;
+            let run = MahcDriver::new(&set, c, backend).unwrap().run().unwrap();
+            assert_eq!(run.labels, ref_run.labels, "{bname}/t{threads}: labels");
+            assert_eq!(run.k, ref_run.k, "{bname}/t{threads}");
+            assert_eq!(
+                run.f_measure.to_bits(),
+                ref_run.f_measure.to_bits(),
+                "{bname}/t{threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantile_epsilon_oracle() {
+    let set = generate(&DatasetSpec::tiny(40, 4, 211));
+    let native = NativeBackend::new();
+    let exact = sorted_pair_distances(&set);
+
+    // A sample covering the corpus IS the exact quantile, bit for bit,
+    // whatever the seed.
+    for q in [0.1, 0.5, 0.75] {
+        let (eps, pairs) = derive_epsilon(&set, q, set.len(), 5, &native, 4, None).unwrap();
+        assert_eq!(pairs, exact.len());
+        assert_eq!(
+            eps.to_bits(),
+            quantile_of_sorted(&exact, q).to_bits(),
+            "full-sample estimate must be exact at q = {q}"
+        );
+    }
+
+    // A strict sample is seed-deterministic and thread-invariant, and
+    // lands within the documented tolerance: between the exact
+    // quantiles at q - 0.25 and q + 0.25.
+    let q = 0.5;
+    let (a, pa) = derive_epsilon(&set, q, 20, 9, &native, 4, None).unwrap();
+    let (b, pb) = derive_epsilon(&set, q, 20, 9, &native, 1, None).unwrap();
+    assert_eq!(a.to_bits(), b.to_bits(), "same seed, same estimate");
+    assert_eq!(pa, pb);
+    assert_eq!(pa, 20 * 19 / 2, "sample of 20 segments has C(20,2) pairs");
+    let lo = quantile_of_sorted(&exact, q - 0.25);
+    let hi = quantile_of_sorted(&exact, q + 0.25);
+    assert!(
+        lo <= a && a <= hi,
+        "sampled estimate {a} outside the tolerance window [{lo}, {hi}]"
+    );
+
+    // q outside (0, 1) is rejected by config validation and by the
+    // pass itself.
+    for q in [0.0, 1.0, -1.0, 2.0, f64::NAN] {
+        let mut c = AlgoConfig::default();
+        c.aggregate = AggregateConfig::default().with_quantile(q);
+        assert!(c.validate().is_err(), "config must reject q = {q}");
+        assert!(
+            aggregate(&set, &c.aggregate, &native, 1, None).is_err(),
+            "aggregate must reject q = {q}"
+        );
+    }
+
+    // End to end: a quantile-configured run is bitwise the absolute-ε
+    // run at the derived radius, and stamps that radius in telemetry.
+    let seed = AggregateConfig::default().quantile_seed;
+    let (eps25, _) = derive_epsilon(&set, 0.25, 256, seed, &native, 4, None).unwrap();
+    assert!(eps25 > 0.0, "p25 of distinct random segments is nonzero");
+    let mut qcfg = cfg(0.0);
+    qcfg.aggregate = AggregateConfig::default().with_quantile(0.25);
+    let arun = MahcDriver::new(&set, cfg(eps25), &native)
+        .unwrap()
+        .run()
+        .unwrap();
+    let qrun = MahcDriver::new(&set, qcfg, &native).unwrap().run().unwrap();
+    assert_eq!(qrun.labels, arun.labels);
+    assert_eq!(qrun.k, arun.k);
+    assert_eq!(qrun.f_measure.to_bits(), arun.f_measure.to_bits());
+    assert_eq!(qrun.history.aggregate_epsilon(), eps25 as f64);
+    assert_eq!(arun.history.aggregate_epsilon(), eps25 as f64);
+    // The estimate's cost is visible: C(40,2) sampled pairs on the
+    // quantile run, none on the absolute-ε run.
+    assert_eq!(qrun.history.sample_pairs(), 40 * 39 / 2);
+    assert_eq!(arun.history.sample_pairs(), 0);
+}
+
+#[test]
+fn tree_degenerate_pins_match_the_flat_pass() {
+    let native = NativeBackend::new();
+
+    // Pin 1: one covering super-group.  A coarse radius beyond every
+    // pair distance puts all leaders under super 0, so each segment
+    // descends into the full open-leader set — exactly the flat pass.
+    let set = generate(&DatasetSpec::tiny(50, 5, 212));
+    let dists = sorted_pair_distances(&set);
+    let eps = quantile_of_sorted(&dists, 0.25);
+    let d_max = *dists.last().unwrap();
+    let flat = aggregate(&set, &AggregateConfig::new(eps), &native, 4, None).unwrap();
+    for fan in [1usize, 2, 4] {
+        let covering = AggregateConfig::new(eps).with_tree(d_max * 2.0 / eps, fan);
+        let tree = aggregate(&set, &covering, &native, 4, None).unwrap();
+        assert_eq!(tree.rep_ids, flat.rep_ids, "fan = {fan}: rep set");
+        assert_eq!(tree.members, flat.members, "fan = {fan}: memberships");
+        assert_eq!(tree.rep_of, flat.rep_of, "fan = {fan}");
+        assert_eq!(tree.super_leaders, 1, "one covering super-group");
+    }
+
+    // Pin 2: fan-out 1 over singleton super-groups.  A coarse radius
+    // below the smallest leader-to-leader distance makes every leader
+    // its own super-leader; on the duplicated corpus the nearest super
+    // is the duplicate's original at distance 0, so descending into a
+    // single group cannot prune the join target away.
+    let dup = duplicated_corpus(30, 4, 213);
+    let eps_dup = below_min_nonzero_distance(&dup);
+    let flat_dup = aggregate(&dup, &AggregateConfig::new(eps_dup), &native, 4, None).unwrap();
+    let pinned = AggregateConfig::new(eps_dup).with_tree(1e-3, 1);
+    let tree_dup = aggregate(&dup, &pinned, &native, 4, None).unwrap();
+    assert_eq!(tree_dup.rep_ids, flat_dup.rep_ids);
+    assert_eq!(tree_dup.members, flat_dup.members);
+    assert_eq!(tree_dup.rep_of, flat_dup.rep_of);
+    assert_eq!(
+        tree_dup.super_leaders,
+        tree_dup.reps(),
+        "every leader its own super-leader"
+    );
+
+    // Pin 3: cap-saturated super-groups.  On an all-identical corpus
+    // every group under the single super fills to the cap and the
+    // overflow founds fresh leaders — same ⌈n/cap⌉ groups as flat.
+    let base = generate(&DatasetSpec::tiny(12, 2, 214));
+    let proto = base.segments[0].clone();
+    let n = 9;
+    let identical = SegmentSet {
+        name: "identical".into(),
+        dim: base.dim,
+        segments: (0..n)
+            .map(|id| Segment {
+                id,
+                class_id: 0,
+                len: proto.len,
+                dim: proto.dim,
+                feats: proto.feats.clone(),
+            })
+            .collect(),
+        num_classes: 1,
+    };
+    identical.validate().unwrap();
+    let flat_cap = AggregateConfig::new(0.5).with_cap(4);
+    let flat_id = aggregate(&identical, &flat_cap, &native, 1, None).unwrap();
+    assert_eq!(flat_id.reps(), 3, "⌈9/4⌉ saturated groups");
+    for factor in [0.5f32, 1e6] {
+        let tree_cap = flat_cap.with_tree(factor, 1);
+        let tree_id = aggregate(&identical, &tree_cap, &native, 1, None).unwrap();
+        assert_eq!(tree_id.rep_ids, flat_id.rep_ids, "factor = {factor}");
+        assert_eq!(tree_id.members, flat_id.members, "factor = {factor}");
+        assert_eq!(tree_id.super_leaders, 1, "all-zero distances share one super");
+    }
+}
+
+#[test]
+fn batched_and_tree_probes_move_the_shared_cache_honestly() {
+    // Every issued probe — rectangle cell, fresh-leader row, tree
+    // descent — passes through the shared PairCache exactly once, and
+    // a cold pass probes only distinct pairs: hits + misses must equal
+    // the issued probe count.
+    let set = generate(&DatasetSpec::tiny(50, 5, 215));
+    let eps = quantile_of_sorted(&sorted_pair_distances(&set), 0.25);
+    let native = NativeBackend::new();
+    let flat16 = AggregateConfig::new(eps).with_batch_rows(16);
+    let tree16 = flat16.with_tree(4.0, 2);
+    for probe_cfg in [flat16, tree16] {
+        let cache = PairCache::with_capacity_bytes(8 << 20);
+        let agg = aggregate(&set, &probe_cfg, &native, 4, Some(&cache)).unwrap();
+        let s = cache.stats();
+        assert_eq!(
+            (s.hits + s.misses) as usize,
+            agg.probe_pairs,
+            "issued probes must all pass through the cache"
+        );
+        assert_eq!(s.hits, 0, "a cold pass probes only distinct pairs");
+    }
+
+    // Driver level: the leader pass runs before the first episode
+    // snapshot, so its counter movement — batched rectangles included —
+    // is folded into record 0 the way single-row probes always were.
+    let mut dcfg = cfg(eps);
+    dcfg.cache_bytes = 8 << 20;
+    let res = MahcDriver::new(&set, dcfg, &native).unwrap().run().unwrap();
+    let r0 = &res.history.records[0];
+    assert!(r0.assignment_pairs > 0, "aggregation must have probed");
+    assert!(
+        (r0.cache.hits + r0.cache.misses) as usize >= r0.assignment_pairs,
+        "leader-pass probes folded into the first record: {:?}",
+        r0.cache
+    );
+    assert!(r0.probe_rounds > 0, "probe telemetry stamped on record 0");
+    assert_eq!(r0.aggregate_epsilon, eps as f64);
 }
