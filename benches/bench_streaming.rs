@@ -64,7 +64,7 @@ fn main() {
         "\nβ={beta}  batch: K={} F={:.4} peak_B={}",
         batch.k,
         batch.f_measure,
-        batch.history.peak_bytes()
+        batch.history.peak_matrix_bytes()
     );
     let mut table: Vec<json::Json> = Vec::new();
     println!("shard_size shards  K     F      peak_B  cache_hit%  assign_hit%");
@@ -87,7 +87,7 @@ fn main() {
             res.shards,
             res.k,
             res.f_measure,
-            res.history.peak_bytes(),
+            res.history.peak_matrix_bytes(),
             res.history.cache_total().hit_rate() * 100.0,
             res.assign_cache.hit_rate() * 100.0
         );
@@ -96,7 +96,7 @@ fn main() {
             ("shards", json::num(res.shards as f64)),
             ("k", json::num(res.k as f64)),
             ("f_measure", json::num(res.f_measure)),
-            ("peak_bytes", json::num(res.history.peak_bytes() as f64)),
+            ("peak_bytes", json::num(res.history.peak_matrix_bytes() as f64)),
             (
                 "cache_hit_rate",
                 json::num(res.history.cache_total().hit_rate()),
@@ -121,7 +121,7 @@ fn main() {
         ("batch_f", json::num(batch.f_measure)),
         (
             "batch_peak_bytes",
-            json::num(batch.history.peak_bytes() as f64),
+            json::num(batch.history.peak_matrix_bytes() as f64),
         ),
         ("walls", json::arr(walls)),
         ("shard_table", json::arr(table)),

@@ -74,10 +74,10 @@ fn main() -> anyhow::Result<()> {
             "  peak occupancy {} ({}x even share), peak matrix {:.2} MiB, final F={:.4}\n",
             peak_occ,
             (peak_occ as f64 / even as f64 * 100.0).round() / 100.0,
-            mib(res.history.peak_bytes()),
+            mib(res.history.peak_matrix_bytes()),
             res.f_measure
         );
-        rows.push((name, peak_occ, res.history.peak_bytes(), res.f_measure));
+        rows.push((name, peak_occ, res.history.peak_matrix_bytes(), res.f_measure));
     }
 
     let (_, occ_plain, bytes_plain, f_plain) = rows[0];

@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "peak distance-matrix memory: {:.2} MiB (β bound: {:.2} MiB)",
-        result.history.peak_bytes() as f64 / (1 << 20) as f64,
+        result.history.peak_matrix_bytes() as f64 / (1 << 20) as f64,
         (200 * 199 / 2 * 4) as f64 / (1 << 20) as f64
     );
     Ok(())

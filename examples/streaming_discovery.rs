@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         "batch:  K={:<4} F={:.4} peak_matrix={:>8} B",
         batch.k,
         batch.f_measure,
-        batch.history.peak_bytes()
+        batch.history.peak_matrix_bytes()
     );
 
     println!("\nshard-size ablation (β={beta}):");
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             res.shards,
             res.k,
             res.f_measure,
-            res.history.peak_bytes(),
+            res.history.peak_matrix_bytes(),
             res.assign_cache.hit_rate() * 100.0
         );
         if shard_size == quarter {

@@ -153,7 +153,10 @@ fn nearest_indices(dists: &[f32], k: usize) -> Vec<usize> {
                 best = Some((i, v));
             }
         }
-        picked.push(best.expect("take <= dists.len()").0);
+        match best {
+            Some((i, _)) => picked.push(i),
+            None => break, // picked.len() == take; loop guard re-proves this
+        }
     }
     picked
 }
@@ -354,7 +357,10 @@ impl Pass<'_> {
         let nsupers = self.tree.as_ref().map_or(0, |t| t.supers.len());
         if nsupers > base_supers {
             let fresh_ids: Vec<usize> = {
-                let t = self.tree.as_ref().expect("tree mode");
+                let t = self
+                    .tree
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
                 t.supers[base_supers..].iter().map(|&s| self.rep_ids[s]).collect()
             };
             let xs = [&self.set.segments[id]];
@@ -376,7 +382,10 @@ impl Pass<'_> {
         let mut cand: Vec<usize> = Vec::new();
         let mut known: Vec<(usize, f32)> = Vec::new();
         {
-            let t = self.tree.as_ref().expect("tree mode");
+            let t = self
+                .tree
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
             for &g in &picked {
                 known.push((t.supers[g], sdist[g]));
                 for &r in &t.groups[g] {
@@ -419,7 +428,9 @@ impl Pass<'_> {
         }
         let mut best: Option<(usize, f32)> = None;
         for (i, &r) in cand.iter().enumerate() {
-            let dv = dist[i].expect("all candidate distances resolved");
+            let dv = dist[i].ok_or_else(|| {
+                anyhow::anyhow!("candidate distance {i} unresolved after probe round")
+            })?;
             self.consider(&mut best, r, dv);
         }
         match best {

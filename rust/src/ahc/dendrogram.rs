@@ -58,7 +58,7 @@ impl Dendrogram {
     /// with union-find yields the canonical merge sequence (reducible
     /// linkages guarantee this is consistent).
     pub fn from_raw_merges(n: usize, mut raw: Vec<(usize, usize, f32)>) -> Self {
-        raw.sort_by(|x, y| x.2.partial_cmp(&y.2).unwrap());
+        raw.sort_by(|x, y| x.2.total_cmp(&y.2));
         let mut dsu = Dsu::new(n);
         let mut sizes = vec![1usize; n];
         let merges = raw
@@ -101,15 +101,21 @@ impl Dendrogram {
         for m in self.merges.iter().take(self.n - k) {
             dsu.union(m.a, m.b);
         }
-        let mut label_of_root = std::collections::HashMap::new();
+        // Dense root→label table indexed by object id: first-appearance
+        // order is a structural property of the scan (no hash involved),
+        // so labels are reproducible by construction.
+        let mut label_of_root = vec![usize::MAX; self.n];
+        let mut next = 0usize;
         let mut labels = Vec::with_capacity(self.n);
         for i in 0..self.n {
             let r = dsu.find(i);
-            let next = label_of_root.len();
-            let l = *label_of_root.entry(r).or_insert(next);
-            labels.push(l);
+            if label_of_root[r] == usize::MAX {
+                label_of_root[r] = next;
+                next += 1;
+            }
+            labels.push(label_of_root[r]);
         }
-        debug_assert_eq!(label_of_root.len(), k.min(self.n));
+        debug_assert_eq!(next, k.min(self.n));
         labels
     }
 }

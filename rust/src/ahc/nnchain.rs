@@ -36,16 +36,22 @@ pub fn ward_linkage(cond: &Condensed) -> Dendrogram {
     let mut chain: Vec<usize> = Vec::with_capacity(n);
 
     for _ in 0..n - 1 {
-        // (Re)start the chain from any living cluster.
+        // (Re)start the chain from any living cluster.  The outer loop
+        // runs exactly n-1 merges, so a living cluster always exists;
+        // breaking covers the impossible empty case without a panic.
         if chain.is_empty() {
-            let start = alive.iter().position(|&a| a).expect("no clusters left");
+            let Some(start) = alive.iter().position(|&a| a) else {
+                break;
+            };
             chain.push(start);
         }
 
         // Grow the chain until two clusters are mutual nearest
         // neighbours.
         loop {
-            let c = *chain.last().unwrap();
+            let Some(&c) = chain.last() else {
+                break; // chain was (re)seeded above; never empty here
+            };
             // Nearest living neighbour of c, preferring the previous
             // chain element on ties (guarantees termination).
             let prev = if chain.len() >= 2 {

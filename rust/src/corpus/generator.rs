@@ -180,7 +180,7 @@ fn warp_positions(len: usize, rng: &mut Rng) -> Vec<f64> {
             (u + jitter).clamp(0.0, 1.0)
         })
         .collect();
-    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.sort_by(|a, b| a.total_cmp(b));
     pos
 }
 

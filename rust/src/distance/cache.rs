@@ -106,7 +106,12 @@ impl PairCache {
     /// counting the probe as a hit or miss.
     pub fn get(&self, a: usize, b: usize) -> Option<f32> {
         let key = Self::key(a, b);
-        let shard = self.shards[Self::shard_of(key)].lock().unwrap();
+        // Lock poisoning only means another worker panicked mid-access;
+        // shard state is a plain map + FIFO with no torn invariants, so
+        // recovering the guard is safe and keeps the cache panic-free.
+        let shard = self.shards[Self::shard_of(key)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
         let found = shard.map.get(&key).copied();
         drop(shard);
         match found {
@@ -122,7 +127,9 @@ impl PairCache {
     /// differ, so this is a no-op in practice).
     pub fn insert(&self, a: usize, b: usize, v: f32) {
         let key = Self::key(a, b);
-        let mut shard = self.shards[Self::shard_of(key)].lock().unwrap();
+        let mut shard = self.shards[Self::shard_of(key)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
         if shard.map.insert(key, v).is_none() {
             shard.fifo.push_back(key);
             let mut evicted = 0u64;
@@ -143,7 +150,7 @@ impl PairCache {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().map.len())
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).map.len())
             .sum()
     }
 
@@ -173,7 +180,7 @@ impl PairCache {
     /// Drop every entry (counters are preserved).
     pub fn clear(&self) {
         for s in &self.shards {
-            let mut s = s.lock().unwrap();
+            let mut s = s.lock().unwrap_or_else(|p| p.into_inner());
             s.map.clear();
             s.fifo.clear();
         }

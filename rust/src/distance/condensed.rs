@@ -99,7 +99,7 @@ impl Condensed {
         if self.data.is_empty() {
             0.0
         } else {
-            self.data.iter().sum::<f32>() / self.data.len() as f32
+            super::fixed_order_sum(&self.data) / self.data.len() as f32
         }
     }
 }

@@ -21,6 +21,20 @@ pub use condensed::Condensed;
 use crate::corpus::Segment;
 use crate::util::pool::parallel_map;
 
+/// Strict left-to-right f32 accumulation — the fixed-order reduction
+/// kernel lint rule R003 requires for float sums in `distance/` and
+/// `ahc/`.  The explicit loop pins the association order, so the result
+/// is bitwise-identical across backends, thread counts, and batch
+/// shapes (`Iterator::sum` happens to do the same today, but nothing in
+/// its contract promises it; this kernel does).
+pub fn fixed_order_sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
 /// Which DTW implementation computes pair distances.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {

@@ -427,14 +427,14 @@ pub fn ablation(ctx: &ExpCtx) -> anyhow::Result<()> {
             res.f_measure,
             res.k,
             peak_occ,
-            res.history.peak_bytes() as f64 / (1 << 20) as f64
+            res.history.peak_matrix_bytes() as f64 / (1 << 20) as f64
         );
         csv.rowf(&[
             &name,
             &res.f_measure,
             &res.k,
             &peak_occ,
-            &res.history.peak_bytes(),
+            &res.history.peak_matrix_bytes(),
         ]);
         Ok(())
     };

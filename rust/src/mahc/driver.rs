@@ -7,8 +7,6 @@
 //! execute bit-identical arithmetic — a single-shard stream reproduces
 //! [`MahcDriver::run`] exactly.
 
-use std::time::Instant;
-
 use super::partition::partition_ids;
 use super::split::{merge_small, split_oversized};
 use super::stage::{run_stage1, SubsetOutcome};
@@ -18,7 +16,7 @@ use crate::config::{AlgoConfig, Convergence, FinalK};
 use crate::corpus::{Segment, SegmentSet};
 use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory};
+use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory, Stopwatch};
 use crate::util::rng::Rng;
 
 /// Final output of a clustering run.
@@ -259,7 +257,7 @@ pub(crate) fn run_episode(
     };
 
     for i in 0..max_iters {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let p_i = subsets.len();
         let occ_max = subsets.iter().map(|s| s.len()).max().unwrap_or(0);
         let occ_min = subsets.iter().map(|s| s.len()).min().unwrap_or(0);
@@ -423,7 +421,7 @@ pub(crate) fn run_episode(
         subsets = new_subsets;
     }
 
-    unreachable!("loop always returns on its last iteration");
+    anyhow::bail!("mahc episode loop ended without converging (max_iters = {max_iters})");
 }
 
 /// Stage 2 state shared by refine / evaluation / finalisation: the

@@ -38,15 +38,13 @@
 //!
 //! [`MahcDriver::run`]: super::MahcDriver::run
 
-use std::time::Instant;
-
 use super::driver::run_episode;
 use crate::aggregate;
 use crate::config::StreamConfig;
 use crate::corpus::{Segment, SegmentSet, Shards};
 use crate::distance::{build_cross_cached, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory};
+use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory, Stopwatch};
 use crate::util::rng::Rng;
 
 /// Final output of a streaming clustering run.
@@ -164,7 +162,7 @@ impl<'a> StreamingDriver<'a> {
         let mut last_episode = None;
 
         for (t, shard) in plan.enumerate() {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let carried_in = carried.len();
             // Shard entries are stream positions 0..m; map them to
             // global segment ids (identity when aggregation is off).

@@ -190,7 +190,7 @@ fn cluster_with(
 ) -> anyhow::Result<()> {
     match algo {
         "ahc" => {
-            let t0 = std::time::Instant::now();
+            let t0 = mahc::telemetry::Stopwatch::start();
             let out = baselines::full_ahc(set, backend, cfg.threads, None, cfg.max_clusters_frac)?;
             println!(
                 "AHC: K={} F={:.4} matrix={:.1} MiB wall={:.2}s",
@@ -212,14 +212,17 @@ fn cluster_with(
             }
             let driver = MahcDriver::new(set, cfg, backend)?;
             let res = driver.run()?;
-            println!("iter  P_i   maxOcc minOcc splits   K_tot   F       wall_s   pairs/s");
+            println!(
+                "iter  P_i   maxOcc minOcc preOcc splits   K_tot   F       wall_s   pairs/s"
+            );
             for r in &res.history.records {
                 println!(
-                    "{:>4} {:>4} {:>8} {:>6} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
+                    "{:>4} {:>4} {:>8} {:>6} {:>6} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
                     r.iteration,
                     r.subsets,
                     r.max_occupancy,
                     r.min_occupancy,
+                    r.max_occupancy_pre_split,
                     r.splits,
                     r.total_clusters,
                     r.f_measure,
@@ -231,7 +234,7 @@ fn cluster_with(
                 "final: K={} F={:.4} peak_matrix={:.1} MiB backend={}",
                 res.k,
                 res.f_measure,
-                res.history.peak_bytes() as f64 / (1 << 20) as f64,
+                res.history.peak_matrix_bytes() as f64 / (1 << 20) as f64,
                 backend.name()
             );
             if let Some(r0) = res.history.records.first() {
@@ -330,14 +333,15 @@ fn stream_with(
     let beta = cfg.algo.beta;
     let driver = StreamingDriver::new(set, cfg, backend)?;
     let res = driver.run()?;
-    println!("shard carried  P_f  maxOcc splits   K_tot   F       wall_s   pairs/s");
+    println!("shard carried  P_f  maxOcc preOcc splits   K_tot   F       wall_s   pairs/s");
     for r in &res.history.records {
         println!(
-            "{:>5} {:>7} {:>4} {:>7} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
+            "{:>5} {:>7} {:>4} {:>7} {:>6} {:>6} {:>7} {:.4} {:>8.2} {:>9.0}",
             r.iteration,
             r.carried_medoids,
             r.subsets,
             r.max_occupancy,
+            r.max_occupancy_pre_split,
             r.splits,
             r.total_clusters,
             r.f_measure,
@@ -349,7 +353,7 @@ fn stream_with(
         "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={}) backend={}",
         res.k,
         res.f_measure,
-        res.history.peak_bytes() as f64 / (1 << 20) as f64,
+        res.history.peak_matrix_bytes() as f64 / (1 << 20) as f64,
         res.shards,
         beta.map_or("off".to_string(), |b| b.to_string()),
         backend.name()

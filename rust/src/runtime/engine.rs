@@ -120,7 +120,7 @@ impl Runtime {
     pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> anyhow::Result<Vec<f32>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
-            let guard = self.tx.lock().unwrap();
+            let guard = self.tx.lock().unwrap_or_else(|p| p.into_inner());
             let tx = guard
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("runtime already shut down"))?;
@@ -139,9 +139,11 @@ impl Runtime {
 
 impl Drop for Runtime {
     fn drop(&mut self) {
-        // Close the queue, then join the engine thread.
-        *self.tx.lock().unwrap() = None;
-        if let Some(j) = self.join.lock().unwrap().take() {
+        // Close the queue, then join the engine thread.  Poison just
+        // means a sender panicked; shutdown must still complete.
+        *self.tx.lock().unwrap_or_else(|p| p.into_inner()) = None;
+        let join = self.join.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(j) = join {
             let _ = j.join();
         }
     }
@@ -194,7 +196,9 @@ fn serve_one(
             .map_err(|e| anyhow::anyhow!("compile {}: {e}", req.name))?;
         cache.insert(req.name.clone(), exe);
     }
-    let exe = cache.get(&req.name).unwrap();
+    let exe = cache
+        .get(&req.name)
+        .ok_or_else(|| anyhow::anyhow!("executable cache lost '{}'", req.name))?;
 
     let literals: Vec<xla::Literal> = req
         .inputs

@@ -7,7 +7,31 @@
 //! for EXPERIMENTS.md bookkeeping.
 
 use crate::util::json::{self, Json};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Monotonic wall-clock stopwatch for driver timing.
+///
+/// Telemetry is the one sanctioned home for wall-clock reads (lint rule
+/// R004): the drivers measure elapsed time only through this type, so
+/// the nondeterministic `Instant::now` source stays confined to the
+/// module whose output is explicitly excluded from bitwise-parity
+/// comparisons (`wall_secs`, `pairs_per_sec`).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Time elapsed since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+}
 
 /// Counters of the cross-iteration DTW pair cache
 /// ([`crate::distance::PairCache`]).  A value is either a cumulative
@@ -301,7 +325,7 @@ impl RunHistory {
 
     /// Peak matrix bytes over the whole run — the memory-guarantee
     /// number the β threshold must bound.
-    pub fn peak_bytes(&self) -> usize {
+    pub fn peak_matrix_bytes(&self) -> usize {
         self.records
             .iter()
             .map(|r| r.peak_matrix_bytes)
@@ -363,7 +387,7 @@ mod tests {
         assert_eq!(h.probe_rect(), (16, 9));
         assert_eq!(h.super_leaders(), 3);
         assert_eq!(h.aggregate_epsilon(), 1.25);
-        assert_eq!(h.peak_bytes(), 100 * 100 * 2);
+        assert_eq!(h.peak_matrix_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
         assert_eq!(total.misses, 14);

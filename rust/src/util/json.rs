@@ -179,7 +179,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+    fn expect_byte(&mut self, b: u8) -> anyhow::Result<()> {
         let got = self.bump()?;
         if got != b {
             anyhow::bail!(
@@ -194,7 +194,7 @@ impl<'a> Parser<'a> {
 
     fn lit(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
         for &b in word.as_bytes() {
-            self.expect(b)?;
+            self.expect_byte(b)?;
         }
         Ok(v)
     }
@@ -215,7 +215,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> anyhow::Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -226,7 +226,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();
@@ -239,7 +239,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> anyhow::Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -258,7 +258,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> anyhow::Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump()? {
@@ -312,7 +312,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 in number at byte {start}"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|e| anyhow::anyhow!("bad number '{text}': {e}"))

@@ -55,7 +55,7 @@ where
                     }
                     local.push((i, f(i)));
                 }
-                let mut guard = slots.lock().unwrap();
+                let mut guard = slots.lock().unwrap_or_else(|p| p.into_inner());
                 for (i, v) in local {
                     guard[i] = Some(v);
                 }
@@ -92,7 +92,7 @@ impl WorkerPool {
                     .name(format!("mahc-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
                             guard.recv()
                         };
                         match job {

@@ -157,7 +157,7 @@ impl Zipf {
             acc += 1.0 / (k as f64).powf(s);
             cdf.push(acc);
         }
-        let total = *cdf.last().unwrap();
+        let total = *cdf.last().unwrap_or(&1.0); // n >= 1 asserted above
         for v in &mut cdf {
             *v /= total;
         }
@@ -167,7 +167,7 @@ impl Zipf {
     /// Draw a rank in [1, n].
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) | Err(i) => (i + 1).min(self.cdf.len()),
         }
     }

@@ -152,3 +152,40 @@ fn merge_sizes_agree_with_reference() {
         assert_eq!(a, b, "seed={seed}");
     }
 }
+
+#[test]
+fn cut_labels_are_dense_first_appearance() {
+    // Regression pin for the R001 audit (PR 6): `Dendrogram::cut` used
+    // to label components through a HashMap keyed by DSU roots.  The
+    // labels it produced were already first-appearance dense — but only
+    // because of how entry() was being driven, not by construction, and
+    // a hasher-order iteration slipping in would have silently permuted
+    // label ids everywhere downstream (memberships, F-measure tables,
+    // carried-medoid sets).  The table is now a flat Vec indexed by
+    // object id; this pin makes the contract explicit: label 0 appears
+    // first, and every new label is exactly prev_max + 1 at its first
+    // appearance, for every cut size.
+    for seed in [11u64, 12, 13] {
+        let mut rng = Rng::seed_from(seed);
+        let n = 41;
+        let cond = random_condensed(n, &mut rng);
+        let dendro = ward_linkage(&cond);
+        for k in 1..=n {
+            let labels = dendro.cut(k);
+            assert_eq!(labels.len(), n, "seed={seed} k={k}");
+            assert_eq!(labels[0], 0, "seed={seed} k={k}: first label not 0");
+            let mut max_seen = 0usize;
+            for (i, &l) in labels.iter().enumerate() {
+                assert!(
+                    l <= max_seen + 1,
+                    "seed={seed} k={k}: label {l} at position {i} skips ids"
+                );
+                if l > max_seen {
+                    assert_eq!(l, max_seen + 1, "seed={seed} k={k}");
+                    max_seen = l;
+                }
+            }
+            assert_eq!(max_seen + 1, k, "seed={seed} k={k}: wrong label count");
+        }
+    }
+}

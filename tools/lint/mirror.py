@@ -1,0 +1,651 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of tools/lint/src/lib.rs (mahc-lint).
+
+An exact Python transliteration of the analyzer, for environments
+without a Rust toolchain (the Rust crate and its fixture tests remain
+the source of truth — if the two disagree, the mirror is wrong).
+Every helper mirrors the Rust function of the same name, operating on
+bytes; keep them in lockstep when editing lib.rs.
+
+Usage:
+  python3 tools/lint/mirror.py ROOT                  # list findings
+  python3 tools/lint/mirror.py ROOT --apply          # apply ROOT/tools/lint/allowlist.toml, exit 0/1
+  python3 tools/lint/mirror.py ROOT --emit-allowlist # print grouped TOML skeleton
+"""
+import os
+import sys
+
+R001_DIRS = ["ahc", "mahc", "aggregate", "distance", "corpus"]
+ITER_CALLS = [b"iter()", b"iter_mut()", b"into_iter()", b"keys()",
+              b"values()", b"values_mut()", b"drain(", b"retain("]
+R004_PATTERNS = [b"Instant::now", b"SystemTime", b"thread_rng", b"rand::random"]
+RULES = ["R001", "R002", "R003", "R004", "R005"]
+ALIASES = {"R001": b"order-insensitive", "R002": b"in-bounds", "R003": b"fixed-order"}
+PANIC_MACROS = ["panic", "unreachable", "todo", "unimplemented"]
+
+
+def is_ident(b):
+    return (48 <= b <= 57) or (65 <= b <= 90) or (97 <= b <= 122) or b == 95
+
+
+def find_from(hay, needle, start):
+    if not needle or start > len(hay):
+        return None
+    p = hay.find(needle, start)
+    return None if p < 0 else p
+
+
+def contains(hay, needle):
+    return find_from(hay, needle, 0) is not None
+
+
+def trim_end(b):
+    end = len(b)
+    while end > 0 and chr(b[end - 1]).isspace() and b[end - 1] < 128:
+        end -= 1
+    return b[:end]
+
+
+def trim(b):
+    t = trim_end(b)
+    start = 0
+    while start < len(t) and t[start] < 128 and chr(t[start]).isspace():
+        start += 1
+    return t[start:]
+
+
+def trailing_ident(b):
+    start = len(b)
+    while start > 0 and is_ident(b[start - 1]):
+        start -= 1
+    return b[start:]
+
+
+def strip_literals(text):
+    out = bytearray()
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if c == ord('r') and (i == 0 or not is_ident(text[i - 1])):
+            j = i + 1
+            hashes = 0
+            while j < n and text[j] == ord('#'):
+                hashes += 1
+                j += 1
+            if j < n and text[j] == ord('"'):
+                k = j + 1
+                end = None
+                while True:
+                    q = find_from(text, b'"', k)
+                    if q is None:
+                        end = n
+                        break
+                    if len(text) - (q + 1) >= hashes and all(
+                            b == ord('#') for b in text[q + 1:q + 1 + hashes]):
+                        end = q + 1 + hashes
+                        break
+                    k = q + 1
+                out += text[i:j + 1]
+                for b in text[j + 1:min(end, n)]:
+                    if b == ord('\n'):
+                        out.append(b)
+                out.append(ord('"'))
+                out += b'#' * hashes
+                i = end
+                continue
+            out.append(c)
+            i += 1
+        elif c == ord('"'):
+            j = i + 1
+            while j < n:
+                if text[j] == ord('\\'):
+                    j += 2
+                    continue
+                if text[j] == ord('"'):
+                    break
+                j += 1
+            out.append(ord('"'))
+            for b in text[i + 1:min(j, n)]:
+                if b == ord('\n'):
+                    out.append(b)
+            out.append(ord('"'))
+            i = j + 1
+        elif c == ord("'"):
+            if i + 3 < n and text[i + 1] == ord('\\') and text[i + 3] == ord("'"):
+                out += b"''"
+                i += 4
+            elif i + 2 < n and text[i + 2] == ord("'"):
+                out += b"''"
+                i += 3
+            else:
+                out.append(c)
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return bytes(out)
+
+
+def split_comment(line):
+    idx = find_from(line, b"//", 0)
+    if idx is None:
+        return line, b""
+    return line[:idx], line[idx:]
+
+
+def suppressions(comment):
+    pos = find_from(comment, b"lint:", 0)
+    if pos is None:
+        return []
+    text = comment[pos + 5:]
+    out = []
+    start = 0
+    while True:
+        p = find_from(text, b"allow(", start)
+        if p is None:
+            break
+        rest = text[p + 6:]
+        if (len(rest) >= 5 and rest[0] == ord('R')
+                and all(48 <= b <= 57 for b in rest[1:4]) and rest[4] == ord(')')):
+            rid = rest[:4].decode()
+            if rid in RULES and rid not in out:
+                out.append(rid)
+        start = p + 6
+    for rule in RULES:
+        alias = ALIASES.get(rule)
+        if alias is None:
+            continue
+        start = 0
+        while True:
+            p = find_from(text, alias, start)
+            if p is None:
+                break
+            before_ok = p == 0 or (not is_ident(text[p - 1]) and text[p - 1] != ord('-'))
+            end = p + len(alias)
+            after_ok = end >= len(text) or (not is_ident(text[end]) and text[end] != ord('-'))
+            if before_ok and after_ok:
+                if rule not in out:
+                    out.append(rule)
+                break
+            start = p + 1
+    return out
+
+
+def ident_occurrences(code, name):
+    out = []
+    start = 0
+    while True:
+        p = find_from(code, name, start)
+        if p is None:
+            break
+        before_ok = p == 0 or not is_ident(code[p - 1])
+        end = p + len(name)
+        after_ok = end >= len(code) or not is_ident(code[end])
+        if before_ok and after_ok:
+            out.append(p)
+        start = p + 1
+    return out
+
+
+def skip_spaces(code, i):
+    while i < len(code) and code[i] == ord(' '):
+        i += 1
+    return i
+
+
+def brace_balance(code):
+    return code.count(b'{') - code.count(b'}')
+
+
+def ident_tokens(text):
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        if is_ident(text[i]):
+            start = i
+            while i < n and is_ident(text[i]):
+                i += 1
+            run = text[start:i]
+            while run and 48 <= run[0] <= 57:
+                run = run[1:]
+            if run:
+                out.append(run)
+        else:
+            i += 1
+    return out
+
+
+class Classified:
+    def __init__(self, text):
+        raw = strip_literals(text).split(b"\n")
+        self.codes, self.sups = [], []
+        for line in raw:
+            code, comment = split_comment(line)
+            self.sups.append(suppressions(comment))
+            self.codes.append(code)
+        self.exempt = [False] * len(self.codes)
+        i = 0
+        while i < len(self.codes):
+            t = trim(self.codes[i])
+            if t.startswith(b"#[cfg(test)]") or t.startswith(b"#[test]"):
+                j = i
+                bal = 0
+                seen_open = False
+                while j < len(self.codes):
+                    self.exempt[j] = True
+                    bal += brace_balance(self.codes[j])
+                    if contains(self.codes[j], b"{"):
+                        seen_open = True
+                    if seen_open and bal <= 0:
+                        break
+                    j += 1
+                i = j + 1
+                continue
+            i += 1
+
+    def suppressed(self, i, rule):
+        if rule in self.sups[i]:
+            return True
+        return i > 0 and rule in self.sups[i - 1] and not trim(self.codes[i - 1])
+
+
+def hash_decl_names(code):
+    out = []
+    for kw in (b"HashMap", b"HashSet"):
+        start = 0
+        while True:
+            p = find_from(code, kw, start)
+            if p is None:
+                break
+            start = p + len(kw)
+            k = p
+            if code[:k].endswith(b"std::collections::"):
+                k -= len(b"std::collections::")
+            before = trim_end(code[:k])
+            if not before:
+                continue
+            sep = before[-1]
+            if sep != ord(':') and sep != ord('='):
+                continue
+            lhs = before[:-1]
+            if sep == ord(':') and lhs.endswith(b":"):
+                continue
+            name = trailing_ident(trim_end(lhs))
+            if not name:
+                continue
+            if not (97 <= name[0] <= 122 or name[0] == ord('_')):
+                continue
+            if name not in out:
+                out.append(name)
+    return out
+
+
+def iterating_call(code, var):
+    for p in ident_occurrences(code, var):
+        i = skip_spaces(code, p + len(var))
+        if i >= len(code) or code[i] != ord('.'):
+            continue
+        i = skip_spaces(code, i + 1)
+        for call in ITER_CALLS:
+            if code[i:].startswith(call):
+                return call.decode()
+    return None
+
+
+def for_in_var(code, var):
+    if not ident_occurrences(code, b"for"):
+        return False
+    for p in ident_occurrences(code, var):
+        pre = trim_end(code[:p])
+        if pre.endswith(b"mut"):
+            pre = trim_end(pre[:-3])
+        if pre.endswith(b"&"):
+            pre = trim_end(pre[:-1])
+        if pre.endswith(b"in") and (len(pre) == 2 or not is_ident(pre[-3])):
+            return True
+    return False
+
+
+def collects_then_iterates(code):
+    c0 = find_from(code, b"collect::<", 0)
+    if c0 is None:
+        return False
+    rest = code[c0:]
+    g = find_from(rest, b">>()", 0)
+    if g is None:
+        return False
+    generic = rest[:g]
+    if not contains(generic, b"HashMap") and not contains(generic, b"HashSet"):
+        return False
+    i = skip_spaces(rest, g + 4)
+    if i >= len(rest) or rest[i] != ord('.'):
+        return False
+    i = skip_spaces(rest, i + 1)
+    return any(rest[i:].startswith(c) for c in (b"iter()", b"into_iter()", b"keys()", b"values()"))
+
+
+def macro_invoked(code, name):
+    for p in ident_occurrences(code, name.encode()):
+        i = p + len(name)
+        if i < len(code) and code[i] == ord('!'):
+            j = skip_spaces(code, i + 1)
+            if j < len(code) and code[j] == ord('('):
+                return True
+    return False
+
+
+def strip_assert_macros(code):
+    cut = len(code)
+    for name in ("assert", "debug_assert"):
+        nb = name.encode()
+        start = 0
+        while True:
+            p = find_from(code, nb, start)
+            if p is None:
+                break
+            start = p + 1
+            if p > 0 and is_ident(code[p - 1]):
+                continue
+            i = p + len(nb)
+            while i < len(code) and (97 <= code[i] <= 122 or code[i] == ord('_')):
+                i += 1
+            if i < len(code) and code[i] == ord('!'):
+                cut = min(cut, p)
+    return code[:cut]
+
+
+def indexing_sites(code):
+    stripped = strip_assert_macros(code)
+    out = []
+    for i, b in enumerate(stripped):
+        if b != ord('['):
+            continue
+        before = trim_end(stripped[:i])
+        if not before:
+            continue
+        prev = before[-1]
+        if not (is_ident(prev) or prev == ord(')') or prev == ord(']')):
+            continue
+        word = trailing_ident(before)
+        if word == b"vec":
+            continue
+        word_start = len(before) - len(word)
+        if word_start > 0 and before[word_start - 1] == ord("'"):
+            continue
+        out.append(word)
+    return out
+
+
+def in_dirs(rel, dirs):
+    return any(rel.startswith("rust/src/" + d + "/") for d in dirs)
+
+
+def scan_file(rel, text):
+    lines = Classified(text)
+    findings = []
+
+    def emit(i, rule, message):
+        if not lines.exempt[i] and not lines.suppressed(i, rule):
+            findings.append((rule, rel, i + 1, message))
+
+    if in_dirs(rel, R001_DIRS):
+        hash_vars = []
+        for code in lines.codes:
+            for name in hash_decl_names(code):
+                if name not in hash_vars:
+                    hash_vars.append(name)
+        for i, code in enumerate(lines.codes):
+            for var in hash_vars:
+                v = var.decode("utf-8", "replace")
+                call = iterating_call(code, var)
+                if call is not None:
+                    emit(i, "R001", f"`{v}.{call}` iterates a hash collection in hasher order")
+                if for_in_var(code, var):
+                    emit(i, "R001", f"`for .. in {v}` iterates a hash collection in hasher order")
+            if collects_then_iterates(code):
+                emit(i, "R001", "iterating a freshly collected hash container")
+
+    r002_exempt = rel == "rust/src/main.rs" or rel.startswith("rust/src/bin/")
+    if not r002_exempt:
+        for i, code in enumerate(lines.codes):
+            t = trim(code)
+            if t.startswith(b"debug_assert") or t.startswith(b"assert"):
+                continue
+            if contains(code, b".unwrap()"):
+                emit(i, "R002", "panicking call `.unwrap()` in library code")
+            if contains(code, b".expect("):
+                emit(i, "R002", "panicking call `.expect(..)` in library code")
+            for name in PANIC_MACROS:
+                if macro_invoked(code, name):
+                    emit(i, "R002", f"panicking macro `{name}!` in library code")
+            for word in indexing_sites(code):
+                w = word.decode("utf-8", "replace")
+                emit(i, "R002", f"unchecked indexing `{w}[..]` without a bound justification")
+
+    if in_dirs(rel, ["distance", "ahc"]):
+        for i, code in enumerate(lines.codes):
+            if contains(code, b".sum::<f32>()"):
+                emit(i, "R003", "f32 `.sum()` outside the fixed-order kernels")
+            elif contains(code, b".sum()") or contains(code, b".fold("):
+                ctx = bytearray()
+                if i > 0:
+                    ctx += lines.codes[i - 1]
+                    ctx += b" "
+                ctx += code
+                if contains(bytes(ctx), b"f32") and not contains(bytes(ctx), b"f64"):
+                    emit(i, "R003", "possible f32 reduction outside the fixed-order kernels")
+
+    r004_exempt = (in_dirs(rel, ["telemetry"]) or rel == "rust/src/util/bench.rs"
+                   or rel == "rust/src/util/rng.rs")
+    if not r004_exempt:
+        for i, code in enumerate(lines.codes):
+            for pat in R004_PATTERNS:
+                if contains(code, pat):
+                    emit(i, "R004",
+                         f"nondeterministic source `{pat.decode()}` outside telemetry/bench/rng")
+
+    return findings
+
+
+def pub_field_name(code):
+    t = trim(code)
+    if not t.startswith(b"pub "):
+        return None
+    rest = trim(t[4:])
+    end = 0
+    while end < len(rest) and is_ident(rest[end]):
+        end += 1
+    if end == 0:
+        return None
+    after = skip_spaces(rest, end)
+    if after < len(rest) and rest[after] == ord(':'):
+        return rest[:end]
+    return None
+
+
+def scan_telemetry(root):
+    tpath = os.path.join(root, "rust/src/telemetry/mod.rs")
+    mpath = os.path.join(root, "rust/src/main.rs")
+    if not os.path.isfile(tpath) or not os.path.isfile(mpath):
+        return []
+    with open(tpath, "rb") as f:
+        ttext = f.read()
+    codes = [split_comment(l)[0] for l in strip_literals(ttext).split(b"\n")]
+
+    fields = []
+    struct_line = None
+    in_struct = False
+    depth = 0
+    for i, code in enumerate(codes):
+        if struct_line is None and contains(code, b"struct IterationRecord"):
+            struct_line = i
+            in_struct = True
+            depth = 0
+        if in_struct:
+            name = pub_field_name(code)
+            if name is not None:
+                fields.append((name, i + 1))
+            depth += brace_balance(code)
+            if depth <= 0 and struct_line is not None and i > struct_line:
+                in_struct = False
+
+    to_json_body = bytearray()
+    if struct_line is not None:
+        j = None
+        for i in range(struct_line, len(codes)):
+            if contains(codes[i], b"fn to_json"):
+                j = i
+                break
+        if j is not None:
+            for code in codes[j:j + 60]:
+                to_json_body += code
+                to_json_body += b"\n"
+    to_json_body = bytes(to_json_body)
+
+    with open(mpath, "rb") as f:
+        mtext = f.read()
+    tokens = ident_tokens(mtext)
+
+    findings = []
+    for name, line in fields:
+        n = name.decode()
+        if not contains(to_json_body, b"self." + name):
+            findings.append(("R005", "rust/src/telemetry/mod.rs", line,
+                             f"IterationRecord field `{n}` missing from the JSON writer"))
+        prefix = name + b"_"
+        in_cli = any(t == name or t.startswith(prefix) for t in tokens)
+        if not in_cli:
+            findings.append(("R005", "rust/src/telemetry/mod.rs", line,
+                             f"IterationRecord field `{n}` missing from the CLI summaries"))
+    return findings
+
+
+def walk_sorted(d, out):
+    entries = sorted(os.path.join(d, e) for e in os.listdir(d))
+    for path in entries:
+        if os.path.isdir(path):
+            walk_sorted(path, out)
+        elif path.endswith(".rs"):
+            out.append(path)
+
+
+def scan_root(root):
+    src = os.path.join(root, "rust/src")
+    files = []
+    walk_sorted(src, files)
+    findings = []
+    for path in files:
+        rel = os.path.relpath(path, root).replace("\\", "/")
+        with open(path, "rb") as f:
+            findings.extend(scan_file(rel, f.read()))
+    findings.extend(scan_telemetry(root))
+    findings.sort(key=lambda f: (f[1], f[2], f[0]))
+    return findings
+
+
+def parse_allowlist(text):
+    entries = []
+    cur = None
+
+    def finish(p):
+        if p["rule"] is None or p["path"] is None or p["reason"] is None:
+            raise SystemExit(f"allowlist entry at line {p['line']} incomplete")
+        c = p["count"] if p["count"] is not None else 1
+        if c < 1 or not p["reason"].strip():
+            raise SystemExit(f"allowlist entry at line {p['line']} invalid")
+        entries.append((p["rule"], p["path"], c, p["reason"]))
+
+    for idx, raw in enumerate(text.split("\n")):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[allow]]":
+            if cur is not None:
+                finish(cur)
+            cur = {"rule": None, "path": None, "count": None, "reason": None, "line": idx + 1}
+            continue
+        key, _, value = line.partition("=")
+        key, value = key.strip(), value.strip()
+        if cur is None:
+            raise SystemExit(f"allowlist line {idx + 1}: key before [[allow]]")
+        if key == "count":
+            cur["count"] = int(value)
+        else:
+            assert value.startswith('"') and value.endswith('"'), (idx + 1, value)
+            cur[key] = value[1:-1].replace('\\"', '"')
+    if cur is not None:
+        finish(cur)
+    return entries
+
+
+def apply_allowlist(findings, entries):
+    errors = []
+    seen = set()
+    for rule, path, count, _ in entries:
+        if (rule, path) in seen:
+            errors.append(f"duplicate allowlist entry for {rule} {path}")
+        seen.add((rule, path))
+    actual = {}
+    for f in findings:
+        actual[(f[0], f[1])] = actual.get((f[0], f[1]), 0) + 1
+    covered = set()
+    for rule, path, count, _ in entries:
+        n = actual.get((rule, path), 0)
+        if n == 0:
+            errors.append(f"stale allowlist entry: no {rule} finding remains in {path}")
+        elif n > count:
+            errors.append(f"allowlist exceeded: {path} has {n} {rule} findings, entry allows {count}")
+        else:
+            covered.add((rule, path))
+    remaining = [f for f in findings if (f[0], f[1]) not in covered]
+    allowlisted = len(findings) - len(remaining)
+    return remaining, allowlisted, errors
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "/root/repo"
+    mode = sys.argv[2] if len(sys.argv) > 2 else ""
+    findings = scan_root(root)
+    if mode == "--emit-allowlist":
+        groups = {}
+        for rule, path, line, msg in findings:
+            groups.setdefault((rule, path), []).append((line, msg))
+        for (rule, path), items in sorted(groups.items()):
+            print("[[allow]]")
+            print(f'rule = "{rule}"')
+            print(f'path = "{path}"')
+            print(f"count = {len(items)}")
+            print('reason = "TODO"')
+            print()
+        return
+    if mode == "--apply":
+        al = os.path.join(root, "tools/lint/allowlist.toml")
+        entries = parse_allowlist(open(al).read()) if os.path.isfile(al) else []
+        remaining, allowlisted, errors = apply_allowlist(findings, entries)
+        for rule, path, line, msg in remaining:
+            print(f"{path}:{line}: {rule} {msg}")
+        for e in errors:
+            print(f"allowlist: {e}")
+        print(f"mahc-lint(mirror): {len(remaining)} violation(s), "
+              f"{allowlisted} allowlisted, {len(errors)} allowlist error(s)")
+        sys.exit(0 if not remaining and not errors else 1)
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f[0], []).append(f)
+    for rule in sorted(by_rule):
+        print(f"== {rule}: {len(by_rule[rule])} findings")
+        if rule != "R002" or os.environ.get("VERBOSE"):
+            for _, path, line, msg in by_rule[rule]:
+                print(f"  {path}:{line}: {msg}")
+        else:
+            byfile = {}
+            for _, path, line, msg in by_rule[rule]:
+                kind = "index" if "indexing" in msg else "panic"
+                byfile.setdefault((path, kind), []).append(line)
+            for (path, kind), ls in sorted(byfile.items()):
+                print(f"  {path} [{kind}] x{len(ls)}: lines {ls[:25]}{'...' if len(ls) > 25 else ''}")
+    print(f"total: {len(findings)}")
+
+
+if __name__ == "__main__":
+    main()

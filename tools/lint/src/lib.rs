@@ -1,0 +1,1306 @@
+//! mahc-lint: the repo-specific determinism/soundness static-analysis
+//! pass over `rust/src/**`.
+//!
+//! Every bitwise-parity guarantee the conformance suites check
+//! dynamically (threads, backends, batch shapes, shard sizes) rests on
+//! source-level invariants that nothing used to enforce: no
+//! order-nondeterministic iteration on result paths, no panicking calls
+//! in library code, no reassociated float reductions, no wall-clock or
+//! entropy reads outside the sanctioned modules, and a telemetry schema
+//! that the JSON writer and the CLI tables present in full.  This crate
+//! checks those invariants statically, before any test runs.
+//!
+//! The rule catalogue (see also EXPERIMENTS.md §Static-analysis):
+//!
+//! * **R001** — `HashMap`/`HashSet` iteration (`.iter()`, `.keys()`,
+//!   `.values()`, `.drain()`, `.retain()`, `for .. in`) is denied in
+//!   `ahc/`, `mahc/`, `aggregate/`, `distance/` and `corpus/`: iteration
+//!   order depends on the hasher, so anything it feeds can differ run to
+//!   run.  Telemetry and figure modules are exempt by path.
+//! * **R002** — panicking calls (`unwrap`/`expect`/`panic!`/
+//!   `unreachable!`/`todo!`/`unimplemented!`) and unchecked indexing are
+//!   denied in library code (everywhere except `main.rs`, `rust/src/bin/`,
+//!   tests, benches and examples).  `assert!`/`debug_assert!` lines are
+//!   contract checks and are not flagged.
+//! * **R003** — f32 `sum()`/`fold` reductions in `distance/` and `ahc/`
+//!   must route through the fixed-order kernels
+//!   ([`fixed_order_sum`](../../../rust/src/distance/mod.rs)):
+//!   reassociation is exactly what the ≤16-ulp linkage caveat guards.
+//! * **R004** — `Instant::now`/`SystemTime`/`thread_rng`/`rand::random`
+//!   are denied outside `telemetry/`, `util/bench.rs` and the seeded
+//!   `util/rng.rs`.
+//! * **R005** — every `IterationRecord` field must appear in both the
+//!   JSON writer (`self.<field>` inside `to_json`) and the CLI summary
+//!   (an identifier token in `main.rs` equal to the field name or
+//!   starting with `<field>_`).
+//!
+//! Suppression syntax: `// lint: allow(RXXX) <reason>` on the violating
+//! line or on a comment-only line immediately above it.  Aliases:
+//! `order-insensitive` (R001), `in-bounds` (R002), `fixed-order` (R003).
+//! Justified legacy sites live in `tools/lint/allowlist.toml`
+//! ([`parse_allowlist`] / [`apply_allowlist`]), a burn-down file: an
+//! entry whose site no longer exists fails the run.
+//!
+//! The scanner is a hand-rolled lexer-level pass (string/char-literal
+//! stripping, comment splitting, brace-tracked `#[cfg(test)]`/`#[test]`
+//! exemption) rather than a `syn` AST walk: the container builds fully
+//! offline against the vendored crate set, which has no `syn`.  The
+//! module layout mirrors a visitor architecture — each rule is an
+//! independent per-line visitor over classified lines — so a `syn`
+//! backend can replace the lexer without touching the rule logic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Directories (under `rust/src/`) where R001 applies.
+const R001_DIRS: &[&str] = &["ahc", "mahc", "aggregate", "distance", "corpus"];
+
+/// Method calls that iterate a hash collection in nondeterministic order.
+const ITER_CALLS: &[&str] = &[
+    "iter()",
+    "iter_mut()",
+    "into_iter()",
+    "keys()",
+    "values()",
+    "values_mut()",
+    "drain(",
+    "retain(",
+];
+
+/// Source patterns R004 denies outside the sanctioned modules.
+const R004_PATTERNS: &[&str] = &["Instant::now", "SystemTime", "thread_rng", "rand::random"];
+
+/// Identifiers of the five lint rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// Order-nondeterministic hash iteration on a result path.
+    R001,
+    /// Panicking call / unchecked indexing in library code.
+    R002,
+    /// f32 reduction outside the fixed-order kernels.
+    R003,
+    /// Wall-clock / entropy read outside telemetry, bench, rng.
+    R004,
+    /// Telemetry schema drift between JSON writer and CLI summary.
+    R005,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [Rule::R001, Rule::R002, Rule::R003, Rule::R004, Rule::R005];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R001 => "R001",
+            Rule::R002 => "R002",
+            Rule::R003 => "R003",
+            Rule::R004 => "R004",
+            Rule::R005 => "R005",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.id() == s)
+    }
+
+    /// The inline suppression alias, if the rule has one.
+    pub fn alias(self) -> Option<&'static str> {
+        match self {
+            Rule::R001 => Some("order-insensitive"),
+            Rule::R002 => Some("in-bounds"),
+            Rule::R003 => Some("fixed-order"),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One span-accurate diagnostic: rule, repo-relative path, 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer-level primitives.  All scanning is byte-oriented so multi-byte
+// UTF-8 in comments or literals can never split a match.
+// ---------------------------------------------------------------------
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from > hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+fn contains(hay: &[u8], needle: &[u8]) -> bool {
+    find_from(hay, needle, 0).is_some()
+}
+
+fn trim_end(b: &[u8]) -> &[u8] {
+    let mut end = b.len();
+    while end > 0 && b[end - 1].is_ascii_whitespace() {
+        end -= 1;
+    }
+    &b[..end]
+}
+
+fn trim(b: &[u8]) -> &[u8] {
+    let mut start = 0;
+    let t = trim_end(b);
+    while start < t.len() && t[start].is_ascii_whitespace() {
+        start += 1;
+    }
+    &t[start..]
+}
+
+/// Trailing identifier run of `b` (possibly empty).
+fn trailing_ident(b: &[u8]) -> &[u8] {
+    let mut start = b.len();
+    while start > 0 && is_ident(b[start - 1]) {
+        start -= 1;
+    }
+    &b[start..]
+}
+
+/// Replace string and char literal contents with empty literals so no
+/// pattern can match inside them.  Operates on the whole file so
+/// multi-line literals (plain or `r#".."#` raw strings) cannot leak
+/// braces or panic-lookalike text into the per-line code view; newlines
+/// inside literals are preserved to keep line numbers aligned.
+/// Lifetimes (`'a`) pass through.
+fn strip_literals(text: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(text.len());
+    let mut i = 0;
+    while i < text.len() {
+        let c = text[i];
+        if c == b'r' && (i == 0 || !is_ident(text[i - 1])) {
+            // Possible raw string r"..." / r#"..."# / r##"..."## ...
+            let mut j = i + 1;
+            let mut hashes = 0;
+            while j < text.len() && text[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < text.len() && text[j] == b'"' {
+                let mut k = j + 1;
+                let end = loop {
+                    match find_from(text, b"\"", k) {
+                        Some(q) if text[q + 1..].len() >= hashes
+                            && text[q + 1..q + 1 + hashes].iter().all(|&b| b == b'#') =>
+                        {
+                            break q + 1 + hashes;
+                        }
+                        Some(q) => k = q + 1,
+                        None => break text.len(),
+                    }
+                };
+                out.extend_from_slice(&text[i..=j]);
+                for &b in &text[j + 1..end.min(text.len())] {
+                    if b == b'\n' {
+                        out.push(b'\n');
+                    }
+                }
+                out.push(b'"');
+                out.resize(out.len() + hashes, b'#');
+                i = end;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < text.len() {
+                if text[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if text[j] == b'"' {
+                    break;
+                }
+                j += 1;
+            }
+            out.push(b'"');
+            for &b in &text[i + 1..j.min(text.len())] {
+                if b == b'\n' {
+                    out.push(b'\n');
+                }
+            }
+            out.push(b'"');
+            i = j + 1;
+        } else if c == b'\'' {
+            if i + 3 < text.len() && text[i + 1] == b'\\' && text[i + 3] == b'\'' {
+                out.extend_from_slice(b"''");
+                i += 4;
+            } else if i + 2 < text.len() && text[i + 2] == b'\'' {
+                out.extend_from_slice(b"''");
+                i += 3;
+            } else {
+                // A lifetime (or an exotic literal the cheap lexer does
+                // not model) — pass the quote through.
+                out.push(c);
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Split a literal-stripped line at its first `//`.  Returns
+/// (code, comment).
+fn split_comment(line: &[u8]) -> (Vec<u8>, Vec<u8>) {
+    match find_from(line, b"//", 0) {
+        Some(idx) => (line[..idx].to_vec(), line[idx..].to_vec()),
+        None => (line.to_vec(), Vec::new()),
+    }
+}
+
+/// Rules a `// lint: ...` comment suppresses: `allow(RXXX)` plus the
+/// per-rule aliases, each matched as a standalone word.
+fn suppressions(comment: &[u8]) -> Vec<Rule> {
+    let Some(pos) = find_from(comment, b"lint:", 0) else {
+        return Vec::new();
+    };
+    let text = &comment[pos + 5..];
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_from(text, b"allow(", from) {
+        let rest = &text[p + 6..];
+        if rest.len() >= 5
+            && rest[0] == b'R'
+            && rest[1..4].iter().all(u8::is_ascii_digit)
+            && rest[4] == b')'
+        {
+            if let Some(id) = std::str::from_utf8(&rest[..4]).ok().and_then(Rule::from_id) {
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+        }
+        from = p + 6;
+    }
+    for rule in Rule::ALL {
+        let Some(alias) = rule.alias() else { continue };
+        let a = alias.as_bytes();
+        let mut from = 0;
+        while let Some(p) = find_from(text, a, from) {
+            let before_ok = p == 0 || (!is_ident(text[p - 1]) && text[p - 1] != b'-');
+            let end = p + a.len();
+            let after_ok = end >= text.len() || (!is_ident(text[end]) && text[end] != b'-');
+            if before_ok && after_ok {
+                if !out.contains(&rule) {
+                    out.push(rule);
+                }
+                break;
+            }
+            from = p + 1;
+        }
+    }
+    out
+}
+
+/// Byte-position occurrences of identifier `name` with non-ident
+/// boundaries on both sides.
+fn ident_occurrences(code: &[u8], name: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_from(code, name, from) {
+        let before_ok = p == 0 || !is_ident(code[p - 1]);
+        let end = p + name.len();
+        let after_ok = end >= code.len() || !is_ident(code[end]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        from = p + 1;
+    }
+    out
+}
+
+fn skip_spaces(code: &[u8], mut i: usize) -> usize {
+    while i < code.len() && code[i] == b' ' {
+        i += 1;
+    }
+    i
+}
+
+fn brace_balance(code: &[u8]) -> i64 {
+    let open = code.iter().filter(|&&b| b == b'{').count() as i64;
+    let close = code.iter().filter(|&&b| b == b'}').count() as i64;
+    open - close
+}
+
+/// Identifier tokens of `text`, as the R005 CLI cross-check consumes
+/// them (leading digits of a run are dropped, mirroring `[A-Za-z_]\w*`).
+fn ident_tokens(text: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < text.len() {
+        if is_ident(text[i]) {
+            let start = i;
+            while i < text.len() && is_ident(text[i]) {
+                i += 1;
+            }
+            let mut run = &text[start..i];
+            while !run.is_empty() && run[0].is_ascii_digit() {
+                run = &run[1..];
+            }
+            if !run.is_empty() {
+                out.push(run.to_vec());
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Per-file line classification.
+// ---------------------------------------------------------------------
+
+struct Classified {
+    codes: Vec<Vec<u8>>,
+    sups: Vec<Vec<Rule>>,
+    exempt: Vec<bool>,
+}
+
+fn classify(text: &[u8]) -> Classified {
+    let stripped = strip_literals(text);
+    let raw: Vec<&[u8]> = stripped.split(|&b| b == b'\n').collect();
+    let mut codes = Vec::with_capacity(raw.len());
+    let mut sups = Vec::with_capacity(raw.len());
+    for line in &raw {
+        let (code, comment) = split_comment(line);
+        sups.push(suppressions(&comment));
+        codes.push(code);
+    }
+    // `#[cfg(test)]` / `#[test]` exempt the brace-balanced item that
+    // follows (the attribute line through the matching close brace).
+    let mut exempt = vec![false; codes.len()];
+    let mut i = 0;
+    while i < codes.len() {
+        let t = trim(&codes[i]);
+        if t.starts_with(b"#[cfg(test)]") || t.starts_with(b"#[test]") {
+            let mut j = i;
+            let mut bal = 0i64;
+            let mut seen_open = false;
+            while j < codes.len() {
+                exempt[j] = true;
+                bal += brace_balance(&codes[j]);
+                if contains(&codes[j], b"{") {
+                    seen_open = true;
+                }
+                if seen_open && bal <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    Classified { codes, sups, exempt }
+}
+
+impl Classified {
+    /// Whether `rule` is suppressed at line index `i`: a `lint:` comment
+    /// on the line itself, or on a comment-only line directly above.
+    fn suppressed(&self, i: usize, rule: Rule) -> bool {
+        if self.sups[i].contains(&rule) {
+            return true;
+        }
+        i > 0 && self.sups[i - 1].contains(&rule) && trim(&self.codes[i - 1]).is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// R001: hash-collection iteration.
+// ---------------------------------------------------------------------
+
+/// Names bound to a `HashMap`/`HashSet` on this line: `name: HashMap<..>`
+/// (let bindings, struct fields) and `name = HashMap::new()` forms, with
+/// an optional `std::collections::` path prefix.
+fn hash_decl_names(code: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for kw in [&b"HashMap"[..], &b"HashSet"[..]] {
+        let mut from = 0;
+        while let Some(p) = find_from(code, kw, from) {
+            from = p + kw.len();
+            let mut k = p;
+            if code[..k].ends_with(b"std::collections::") {
+                k -= b"std::collections::".len();
+            }
+            let before = trim_end(&code[..k]);
+            let Some(&sep) = before.last() else { continue };
+            if sep != b':' && sep != b'=' {
+                continue;
+            }
+            let lhs = &before[..before.len() - 1];
+            if sep == b':' && lhs.ends_with(b":") {
+                continue; // a `::` path, not a type ascription
+            }
+            let name = trailing_ident(trim_end(lhs));
+            if name.is_empty() {
+                continue;
+            }
+            if !(name[0].is_ascii_lowercase() || name[0] == b'_') {
+                continue;
+            }
+            if !out.contains(&name.to_vec()) {
+                out.push(name.to_vec());
+            }
+        }
+    }
+    out
+}
+
+/// The iterating call chained onto `var` on this line, if any.
+fn iterating_call(code: &[u8], var: &[u8]) -> Option<&'static str> {
+    for p in ident_occurrences(code, var) {
+        let mut i = skip_spaces(code, p + var.len());
+        if i >= code.len() || code[i] != b'.' {
+            continue;
+        }
+        i = skip_spaces(code, i + 1);
+        for call in ITER_CALLS {
+            if code[i..].starts_with(call.as_bytes()) {
+                return Some(call);
+            }
+        }
+    }
+    None
+}
+
+/// Whether this line iterates `var` via `for .. in [&[mut ]]var`.
+fn for_in_var(code: &[u8], var: &[u8]) -> bool {
+    if ident_occurrences(code, b"for").is_empty() {
+        return false;
+    }
+    for p in ident_occurrences(code, var) {
+        let mut pre = trim_end(&code[..p]);
+        if pre.ends_with(b"mut") {
+            pre = trim_end(&pre[..pre.len() - 3]);
+        }
+        if pre.ends_with(b"&") {
+            pre = trim_end(&pre[..pre.len() - 1]);
+        }
+        if pre.ends_with(b"in") && (pre.len() == 2 || !is_ident(pre[pre.len() - 3])) {
+            return true;
+        }
+    }
+    false
+}
+
+/// `..collect::<HashMap<..>>().iter()`-style immediate iteration over a
+/// freshly collected hash container.
+fn collects_then_iterates(code: &[u8]) -> bool {
+    let Some(c0) = find_from(code, b"collect::<", 0) else {
+        return false;
+    };
+    let rest = &code[c0..];
+    let Some(g) = find_from(rest, b">>()", 0) else {
+        return false;
+    };
+    let generic = &rest[..g];
+    if !contains(generic, b"HashMap") && !contains(generic, b"HashSet") {
+        return false;
+    }
+    let mut i = skip_spaces(rest, g + 4);
+    if i >= rest.len() || rest[i] != b'.' {
+        return false;
+    }
+    i = skip_spaces(rest, i + 1);
+    ["iter()", "into_iter()", "keys()", "values()"]
+        .iter()
+        .any(|call| rest[i..].starts_with(call.as_bytes()))
+}
+
+// ---------------------------------------------------------------------
+// R002: panic-free library code.
+// ---------------------------------------------------------------------
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn macro_invoked(code: &[u8], name: &str) -> bool {
+    for p in ident_occurrences(code, name.as_bytes()) {
+        let i = p + name.len();
+        if i < code.len() && code[i] == b'!' {
+            let j = skip_spaces(code, i + 1);
+            if j < code.len() && code[j] == b'(' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Truncate `code` at the first `assert*!`/`debug_assert*!` invocation:
+/// indexing inside a contract check is part of the check.
+fn strip_assert_macros(code: &[u8]) -> Vec<u8> {
+    let mut cut = code.len();
+    for name in ["assert", "debug_assert"] {
+        let mut from = 0;
+        while let Some(p) = find_from(code, name.as_bytes(), from) {
+            from = p + 1;
+            if p > 0 && is_ident(code[p - 1]) {
+                continue;
+            }
+            let mut i = p + name.len();
+            while i < code.len() && (code[i].is_ascii_lowercase() || code[i] == b'_') {
+                i += 1;
+            }
+            if i < code.len() && code[i] == b'!' {
+                cut = cut.min(p);
+            }
+        }
+    }
+    code[..cut].to_vec()
+}
+
+/// Unchecked-indexing sites: `[` directly preceded (modulo spaces) by an
+/// identifier character, `)` or `]`.  Returns the indexed word per site.
+fn indexing_sites(code: &[u8]) -> Vec<Vec<u8>> {
+    let stripped = strip_assert_macros(code);
+    let mut out = Vec::new();
+    for (i, &b) in stripped.iter().enumerate() {
+        if b != b'[' {
+            continue;
+        }
+        let before = trim_end(&stripped[..i]);
+        let Some(&prev) = before.last() else { continue };
+        if !(is_ident(prev) || prev == b')' || prev == b']') {
+            continue;
+        }
+        let word = trailing_ident(before);
+        if word == b"vec" {
+            continue; // `vec![..]` literal
+        }
+        let word_start = before.len() - word.len();
+        if word_start > 0 && before[word_start - 1] == b'\'' {
+            continue; // lifetime before a slice type: `&'a [T]`
+        }
+        out.push(word.to_vec());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// File scanning.
+// ---------------------------------------------------------------------
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(&format!("rust/src/{d}/")))
+}
+
+fn scan_file(rel: &str, text: &[u8]) -> Vec<Finding> {
+    let lines = classify(text);
+    let mut findings = Vec::new();
+    let mut emit = |i: usize, rule: Rule, message: String, lines: &Classified| {
+        if !lines.exempt[i] && !lines.suppressed(i, rule) {
+            findings.push(Finding {
+                rule,
+                path: rel.to_string(),
+                line: i + 1,
+                message,
+            });
+        }
+    };
+
+    // R001 — order-nondeterministic iteration.
+    if in_dirs(rel, R001_DIRS) {
+        let mut hash_vars: Vec<Vec<u8>> = Vec::new();
+        for code in &lines.codes {
+            for name in hash_decl_names(code) {
+                if !hash_vars.contains(&name) {
+                    hash_vars.push(name);
+                }
+            }
+        }
+        for (i, code) in lines.codes.iter().enumerate() {
+            for var in &hash_vars {
+                let v = String::from_utf8_lossy(var);
+                if let Some(call) = iterating_call(code, var) {
+                    emit(
+                        i,
+                        Rule::R001,
+                        format!("`{v}.{call}` iterates a hash collection in hasher order"),
+                        &lines,
+                    );
+                }
+                if for_in_var(code, var) {
+                    emit(
+                        i,
+                        Rule::R001,
+                        format!("`for .. in {v}` iterates a hash collection in hasher order"),
+                        &lines,
+                    );
+                }
+            }
+            if collects_then_iterates(code) {
+                emit(
+                    i,
+                    Rule::R001,
+                    "iterating a freshly collected hash container".to_string(),
+                    &lines,
+                );
+            }
+        }
+    }
+
+    // R002 — panic-free library code.
+    let r002_exempt = rel == "rust/src/main.rs" || rel.starts_with("rust/src/bin/");
+    if !r002_exempt {
+        for (i, code) in lines.codes.iter().enumerate() {
+            let t = trim(code);
+            if t.starts_with(b"debug_assert") || t.starts_with(b"assert") {
+                continue;
+            }
+            if contains(code, b".unwrap()") {
+                emit(
+                    i,
+                    Rule::R002,
+                    "panicking call `.unwrap()` in library code".to_string(),
+                    &lines,
+                );
+            }
+            if contains(code, b".expect(") {
+                emit(
+                    i,
+                    Rule::R002,
+                    "panicking call `.expect(..)` in library code".to_string(),
+                    &lines,
+                );
+            }
+            for name in PANIC_MACROS {
+                if macro_invoked(code, name) {
+                    emit(
+                        i,
+                        Rule::R002,
+                        format!("panicking macro `{name}!` in library code"),
+                        &lines,
+                    );
+                }
+            }
+            for word in indexing_sites(code) {
+                let w = String::from_utf8_lossy(&word);
+                emit(
+                    i,
+                    Rule::R002,
+                    format!("unchecked indexing `{w}[..]` without a bound justification"),
+                    &lines,
+                );
+            }
+        }
+    }
+
+    // R003 — float-reduction discipline.
+    if in_dirs(rel, &["distance", "ahc"]) {
+        for (i, code) in lines.codes.iter().enumerate() {
+            if contains(code, b".sum::<f32>()") {
+                emit(
+                    i,
+                    Rule::R003,
+                    "f32 `.sum()` outside the fixed-order kernels".to_string(),
+                    &lines,
+                );
+            } else if contains(code, b".sum()") || contains(code, b".fold(") {
+                let mut ctx = Vec::new();
+                if i > 0 {
+                    ctx.extend_from_slice(&lines.codes[i - 1]);
+                    ctx.push(b' ');
+                }
+                ctx.extend_from_slice(code);
+                if contains(&ctx, b"f32") && !contains(&ctx, b"f64") {
+                    emit(
+                        i,
+                        Rule::R003,
+                        "possible f32 reduction outside the fixed-order kernels".to_string(),
+                        &lines,
+                    );
+                }
+            }
+        }
+    }
+
+    // R004 — wall-clock / entropy hygiene.
+    let r004_exempt = in_dirs(rel, &["telemetry"])
+        || rel == "rust/src/util/bench.rs"
+        || rel == "rust/src/util/rng.rs";
+    if !r004_exempt {
+        for (i, code) in lines.codes.iter().enumerate() {
+            for pat in R004_PATTERNS {
+                if contains(code, pat.as_bytes()) {
+                    emit(
+                        i,
+                        Rule::R004,
+                        format!("nondeterministic source `{pat}` outside telemetry/bench/rng"),
+                        &lines,
+                    );
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+// ---------------------------------------------------------------------
+// R005: telemetry schema parity.
+// ---------------------------------------------------------------------
+
+fn pub_field_name(code: &[u8]) -> Option<Vec<u8>> {
+    let t = trim(code);
+    let rest = t.strip_prefix(b"pub ")?;
+    let rest = trim(rest);
+    let mut end = 0;
+    while end < rest.len() && is_ident(rest[end]) {
+        end += 1;
+    }
+    if end == 0 {
+        return None;
+    }
+    let after = skip_spaces(rest, end);
+    if after < rest.len() && rest[after] == b':' {
+        Some(rest[..end].to_vec())
+    } else {
+        None
+    }
+}
+
+fn scan_telemetry(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let tpath = root.join("rust/src/telemetry/mod.rs");
+    let mpath = root.join("rust/src/main.rs");
+    if !tpath.is_file() || !mpath.is_file() {
+        return Ok(Vec::new());
+    }
+    let ttext = std::fs::read(&tpath)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", tpath.display()))?;
+    let codes: Vec<Vec<u8>> = strip_literals(&ttext)
+        .split(|&b| b == b'\n')
+        .map(|l| split_comment(l).0)
+        .collect();
+
+    let mut fields: Vec<(Vec<u8>, usize)> = Vec::new();
+    let mut struct_line: Option<usize> = None;
+    let mut in_struct = false;
+    let mut depth = 0i64;
+    for (i, code) in codes.iter().enumerate() {
+        if struct_line.is_none() && contains(code, b"struct IterationRecord") {
+            struct_line = Some(i);
+            in_struct = true;
+            depth = 0;
+        }
+        if in_struct {
+            if let Some(name) = pub_field_name(code) {
+                fields.push((name, i + 1));
+            }
+            depth += brace_balance(code);
+            if depth <= 0 && struct_line.is_some_and(|s| i > s) {
+                in_struct = false;
+            }
+        }
+    }
+
+    let mut to_json_body = Vec::new();
+    if let Some(s) = struct_line {
+        if let Some(j) = (s..codes.len()).find(|&i| contains(&codes[i], b"fn to_json")) {
+            for code in codes.iter().skip(j).take(60) {
+                to_json_body.extend_from_slice(code);
+                to_json_body.push(b'\n');
+            }
+        }
+    }
+
+    let mtext = std::fs::read(&mpath)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", mpath.display()))?;
+    let tokens = ident_tokens(&mtext);
+
+    let mut findings = Vec::new();
+    for (name, line) in &fields {
+        let n = String::from_utf8_lossy(name);
+        let mut probe = b"self.".to_vec();
+        probe.extend_from_slice(name);
+        if !contains(&to_json_body, &probe) {
+            findings.push(Finding {
+                rule: Rule::R005,
+                path: "rust/src/telemetry/mod.rs".to_string(),
+                line: *line,
+                message: format!("IterationRecord field `{n}` missing from the JSON writer"),
+            });
+        }
+        let mut prefix = name.clone();
+        prefix.push(b'_');
+        let in_cli = tokens
+            .iter()
+            .any(|t| t == name || t.starts_with(prefix.as_slice()));
+        if !in_cli {
+            findings.push(Finding {
+                rule: Rule::R005,
+                path: "rust/src/telemetry/mod.rs".to_string(),
+                line: *line,
+                message: format!("IterationRecord field `{n}` missing from the CLI summaries"),
+            });
+        }
+    }
+    Ok(findings)
+}
+
+// ---------------------------------------------------------------------
+// Tree walking.
+// ---------------------------------------------------------------------
+
+fn walk_sorted(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(std::fs::DirEntry::path);
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            walk_sorted(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan `<root>/rust/src/**` with rules R001–R004 and run the R005
+/// schema cross-check; findings are ordered by path then line.
+pub fn scan_root(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let src = root.join("rust/src");
+    anyhow::ensure!(src.is_dir(), "no rust/src directory under {}", root.display());
+    let mut files = Vec::new();
+    walk_sorted(&src, &mut files)?;
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| anyhow::anyhow!("path {} escapes root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            std::fs::read(&path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        findings.extend(scan_file(&rel, &text));
+    }
+    findings.extend(scan_telemetry(root)?);
+    findings.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+// ---------------------------------------------------------------------
+// Allowlist (burn-down file).
+// ---------------------------------------------------------------------
+
+/// One justified suppression: up to `count` findings of `rule` in `path`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: Rule,
+    pub path: String,
+    pub count: usize,
+    pub reason: String,
+}
+
+/// Parse `allowlist.toml` (the `[[allow]]` table-array subset of TOML
+/// the burn-down file uses; the container has no `toml` crate).
+pub fn parse_allowlist(text: &str) -> anyhow::Result<Vec<AllowEntry>> {
+    struct Partial {
+        rule: Option<Rule>,
+        path: Option<String>,
+        count: Option<usize>,
+        reason: Option<String>,
+        line: usize,
+    }
+    let mut entries = Vec::new();
+    let mut cur: Option<Partial> = None;
+    let finish = |p: Partial, entries: &mut Vec<AllowEntry>| -> anyhow::Result<()> {
+        let entry = AllowEntry {
+            rule: p
+                .rule
+                .ok_or_else(|| anyhow::anyhow!("allowlist entry at line {} has no rule", p.line))?,
+            path: p
+                .path
+                .ok_or_else(|| anyhow::anyhow!("allowlist entry at line {} has no path", p.line))?,
+            count: p.count.unwrap_or(1),
+            reason: p
+                .reason
+                .ok_or_else(|| anyhow::anyhow!("allowlist entry at line {} has no reason", p.line))?,
+        };
+        anyhow::ensure!(
+            entry.count > 0,
+            "allowlist entry at line {}: count must be >= 1",
+            p.line
+        );
+        anyhow::ensure!(
+            !entry.reason.trim().is_empty(),
+            "allowlist entry at line {}: empty reason",
+            p.line
+        );
+        entries.push(entry);
+        Ok(())
+    };
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(p) = cur.take() {
+                finish(p, &mut entries)?;
+            }
+            cur = Some(Partial {
+                rule: None,
+                path: None,
+                count: None,
+                reason: None,
+                line: idx + 1,
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            anyhow::bail!("allowlist line {}: expected `key = value`, got `{line}`", idx + 1);
+        };
+        let p = cur
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("allowlist line {}: key before [[allow]]", idx + 1))?;
+        let key = key.trim();
+        let value = value.trim();
+        let unquote = |v: &str| -> anyhow::Result<String> {
+            let inner = v
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("allowlist line {}: expected a quoted string", idx + 1))?;
+            Ok(inner.replace("\\\"", "\""))
+        };
+        match key {
+            "rule" => {
+                let id = unquote(value)?;
+                p.rule = Some(Rule::from_id(&id).ok_or_else(|| {
+                    anyhow::anyhow!("allowlist line {}: unknown rule `{id}`", idx + 1)
+                })?);
+            }
+            "path" => p.path = Some(unquote(value)?),
+            "reason" => p.reason = Some(unquote(value)?),
+            "count" => {
+                p.count = Some(value.parse().map_err(|_| {
+                    anyhow::anyhow!("allowlist line {}: bad count `{value}`", idx + 1)
+                })?);
+            }
+            other => anyhow::bail!("allowlist line {}: unknown key `{other}`", idx + 1),
+        }
+    }
+    if let Some(p) = cur.take() {
+        finish(p, &mut entries)?;
+    }
+    Ok(entries)
+}
+
+/// Result of subtracting the allowlist from a finding set.
+#[derive(Debug)]
+pub struct AllowOutcome {
+    /// Findings not covered by any entry — real violations.
+    pub remaining: Vec<Finding>,
+    /// Findings absorbed by allowlist entries.
+    pub allowlisted: usize,
+    /// Burn-down integrity errors: stale entries (site no longer
+    /// exists), exceeded counts, duplicates.  Any error fails the run.
+    pub errors: Vec<String>,
+}
+
+/// Apply the burn-down allowlist: an entry absorbs up to `count`
+/// findings of its `(rule, path)`; a stale entry (zero findings) or an
+/// exceeded one (more findings than `count`) is an error, so the file
+/// can only ever shrink.
+pub fn apply_allowlist(findings: Vec<Finding>, entries: &[AllowEntry]) -> AllowOutcome {
+    let mut errors = Vec::new();
+    let mut by_key: BTreeMap<(Rule, &str), usize> = BTreeMap::new();
+    for e in entries {
+        if by_key.insert((e.rule, e.path.as_str()), e.count).is_some() {
+            errors.push(format!(
+                "duplicate allowlist entry for {} {}",
+                e.rule.id(),
+                e.path
+            ));
+        }
+    }
+    let mut actual: BTreeMap<(Rule, &str), usize> = BTreeMap::new();
+    for f in &findings {
+        *actual.entry((f.rule, f.path.as_str())).or_insert(0) += 1;
+    }
+    let mut covered: Vec<(Rule, String)> = Vec::new();
+    for e in entries {
+        let n = actual.get(&(e.rule, e.path.as_str())).copied().unwrap_or(0);
+        if n == 0 {
+            errors.push(format!(
+                "stale allowlist entry: no {} finding remains in {} — delete the entry",
+                e.rule.id(),
+                e.path
+            ));
+        } else if n > e.count {
+            errors.push(format!(
+                "allowlist exceeded: {} has {} {} findings, entry allows {} — fix the new sites",
+                e.path,
+                n,
+                e.rule.id(),
+                e.count
+            ));
+        } else {
+            covered.push((e.rule, e.path.clone()));
+        }
+    }
+    let mut remaining = Vec::new();
+    let mut allowlisted = 0usize;
+    for f in findings {
+        if covered.iter().any(|(r, p)| *r == f.rule && *p == f.path) {
+            allowlisted += 1;
+        } else {
+            remaining.push(f);
+        }
+    }
+    AllowOutcome {
+        remaining,
+        allowlisted,
+        errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_str(rel: &str, text: &str) -> Vec<Finding> {
+        scan_file(rel, text.as_bytes())
+    }
+
+    #[test]
+    fn strings_and_chars_are_opaque() {
+        let s = strip_literals(br#"let x = "a.unwrap() // not code"; y"#);
+        assert_eq!(s, br#"let x = ""; y"#.to_vec());
+        let s = strip_literals(br"match c { b'\\' => 1, 'x' => 2, _ => 3 }");
+        assert!(!contains(&s, b"'x'"));
+        // Lifetimes survive.
+        let s = strip_literals(b"fn f<'a>(x: &'a str) {}");
+        assert_eq!(s, b"fn f<'a>(x: &'a str) {}".to_vec());
+    }
+
+    #[test]
+    fn raw_and_multiline_strings_are_opaque() {
+        // Raw string with inner quotes and braces.
+        let s = strip_literals(br##"let t = r#"{"a": 1}"#; z"##);
+        assert_eq!(s, br##"let t = r#""#; z"##.to_vec());
+        // Multi-line literal: newlines survive, braces do not.
+        let s = strip_literals(b"let t = r#\"{\n}\"#;\nnext()");
+        assert_eq!(s, b"let t = r#\"\n\"#;\nnext()".to_vec());
+        assert!(!contains(&s, b"{"));
+        // Multi-line plain string.
+        let s = strip_literals(b"let t = \"a\nb.unwrap()\";\nok()");
+        assert_eq!(s, b"let t = \"\n\";\nok()".to_vec());
+    }
+
+    #[test]
+    fn comment_split_ignores_string_slashes() {
+        let stripped = strip_literals(br#"let url = "https://x"; // real comment"#);
+        let (code, comment) = split_comment(&stripped);
+        assert!(contains(&code, b"let url"));
+        assert!(!contains(&code, b"real comment"));
+        assert!(contains(&comment, b"real comment"));
+    }
+
+    #[test]
+    fn lifetime_slice_is_not_indexing() {
+        let src = "struct P<'a> {\n\x20   bytes: &'a [u8],\n}\n";
+        assert!(scan_str("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_parsing() {
+        assert_eq!(suppressions(b"// lint: allow(R001) reason"), vec![Rule::R001]);
+        assert_eq!(
+            suppressions(b"// lint: allow(R001) allow(R003)"),
+            vec![Rule::R001, Rule::R003]
+        );
+        assert_eq!(suppressions(b"// lint: order-insensitive"), vec![Rule::R001]);
+        assert_eq!(suppressions(b"// lint: in-bounds by loop guard"), vec![Rule::R002]);
+        assert_eq!(suppressions(b"// lint: fixed-order"), vec![Rule::R003]);
+        assert!(suppressions(b"// plain comment").is_empty());
+        assert!(suppressions(b"// lint: allow(R999)").is_empty());
+        // Alias must be a standalone word.
+        assert!(suppressions(b"// lint: non-order-insensitive-ish").is_empty());
+    }
+
+    #[test]
+    fn r001_flags_iteration_not_membership() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn f() -> usize {\n\
+                   \x20   let mut m: HashMap<u32, u32> = HashMap::new();\n\
+                   \x20   m.insert(1, 2);\n\
+                   \x20   let mut t = 0;\n\
+                   \x20   for (k, v) in &m {\n\
+                   \x20       t += (k + v) as usize;\n\
+                   \x20   }\n\
+                   \x20   t + m.len() + m.keys().count()\n\
+                   }\n";
+        let f = scan_str("rust/src/ahc/x.rs", src);
+        let r001: Vec<_> = f.iter().filter(|f| f.rule == Rule::R001).collect();
+        assert_eq!(r001.len(), 2, "{r001:?}");
+        assert_eq!(r001[0].line, 6);
+        assert_eq!(r001[1].line, 9);
+        // Same file outside the result-affecting dirs: clean.
+        assert!(scan_str("rust/src/figures/x.rs", src)
+            .iter()
+            .all(|f| f.rule != Rule::R001));
+    }
+
+    #[test]
+    fn r002_panics_and_indexing() {
+        let src = "pub fn f(xs: &[u32]) -> u32 {\n\
+                   \x20   let a = xs.first().unwrap();\n\
+                   \x20   let b = xs.get(0).expect(\"x\");\n\
+                   \x20   assert!(xs[0] > 0);\n\
+                   \x20   if xs.is_empty() { panic!(\"empty\") }\n\
+                   \x20   a + b + xs[1]\n\
+                   }\n";
+        let f = scan_str("rust/src/util/x.rs", src);
+        let lines: Vec<usize> = f.iter().filter(|f| f.rule == Rule::R002).map(|f| f.line).collect();
+        assert_eq!(lines, vec![2, 3, 5, 6], "{f:?}");
+        // main.rs is exempt.
+        assert!(scan_str("rust/src/main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r002_ignores_result_returning_expect_method() {
+        // A parser method named `expect_byte` is not Option::expect.
+        let src = "fn lit(&mut self) -> anyhow::Result<()> {\n\
+                   \x20   self.expect_byte(b'{')?;\n\
+                   \x20   Ok(())\n\
+                   }\n";
+        assert!(scan_str("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r002_test_blocks_exempt() {
+        let src = "pub fn ok() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   #[test]\n\
+                   \x20   fn t() { Some(1).unwrap(); }\n\
+                   }\n";
+        assert!(scan_str("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r003_flags_f32_reductions_in_scope() {
+        let src = "pub fn m(d: &[f32]) -> f32 {\n\
+                   \x20   d.iter().sum::<f32>() / d.len() as f32\n\
+                   }\n";
+        let f = scan_str("rust/src/distance/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == Rule::R003).count(), 1);
+        assert!(scan_str("rust/src/corpus/x.rs", src)
+            .iter()
+            .all(|f| f.rule != Rule::R003));
+        // f64 reductions are fine.
+        let src64 = "pub fn m(d: &[f64]) -> f64 {\n\x20   d.iter().sum()\n}\n";
+        assert!(scan_str("rust/src/distance/x.rs", src64)
+            .iter()
+            .all(|f| f.rule != Rule::R003));
+    }
+
+    #[test]
+    fn r004_denies_clock_outside_sanctioned_modules() {
+        let src = "pub fn t() { let _ = std::time::Instant::now(); }\n";
+        assert_eq!(scan_str("rust/src/mahc/x.rs", src).len(), 1);
+        assert!(scan_str("rust/src/telemetry/x.rs", src).is_empty());
+        assert!(scan_str("rust/src/util/bench.rs", src).is_empty());
+        assert!(scan_str("rust/src/util/rng.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_silences_exactly_its_rule() {
+        let src = "use std::collections::HashSet;\n\
+                   pub fn f(xs: &[usize]) -> usize {\n\
+                   \x20   let tags: HashSet<usize> = HashSet::new();\n\
+                   \x20   tags.iter().count() + xs[0] // lint: allow(R001) commutative count\n\
+                   }\n";
+        let f = scan_str("rust/src/ahc/x.rs", src);
+        assert!(f.iter().all(|f| f.rule != Rule::R001), "{f:?}");
+        assert_eq!(f.iter().filter(|f| f.rule == Rule::R002).count(), 1);
+        // Preceding comment-only line also suppresses.
+        let src2 = "use std::collections::HashSet;\n\
+                    pub fn f() -> usize {\n\
+                    \x20   let tags: HashSet<usize> = HashSet::new();\n\
+                    \x20   // lint: order-insensitive — count commutes\n\
+                    \x20   tags.iter().count()\n\
+                    }\n";
+        assert!(scan_str("rust/src/ahc/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn allowlist_round_trip_and_burn_down() {
+        let text = "# burn-down\n\n[[allow]]\nrule = \"R002\"\npath = \"rust/src/a.rs\"\ncount = 2\nreason = \"legacy\"\n\n[[allow]]\nrule = \"R004\"\npath = \"rust/src/b.rs\"\nreason = \"gated\"\n";
+        let entries = parse_allowlist(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].count, 2);
+        assert_eq!(entries[1].count, 1);
+
+        let mk = |rule, path: &str, line| Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            message: String::new(),
+        };
+        // Exact coverage: both a.rs findings absorbed; b.rs entry stale.
+        let out = apply_allowlist(
+            vec![mk(Rule::R002, "rust/src/a.rs", 1), mk(Rule::R002, "rust/src/a.rs", 9)],
+            &entries,
+        );
+        assert_eq!(out.allowlisted, 2);
+        assert!(out.remaining.is_empty());
+        assert_eq!(out.errors.len(), 1, "{:?}", out.errors);
+        assert!(out.errors[0].contains("stale"));
+
+        // Exceeded count keeps every finding and reports the overflow.
+        let out = apply_allowlist(
+            vec![
+                mk(Rule::R002, "rust/src/a.rs", 1),
+                mk(Rule::R002, "rust/src/a.rs", 2),
+                mk(Rule::R002, "rust/src/a.rs", 3),
+                mk(Rule::R004, "rust/src/b.rs", 4),
+            ],
+            &entries,
+        );
+        assert_eq!(out.allowlisted, 1);
+        assert_eq!(out.remaining.len(), 3);
+        assert!(out.errors.iter().any(|e| e.contains("exceeded")));
+
+        assert!(parse_allowlist("[[allow]]\nrule = \"R002\"\npath = \"x\"\ncount = 0\nreason = \"r\"\n").is_err());
+        assert!(parse_allowlist("[[allow]]\npath = \"x\"\nreason = \"r\"\n").is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! `mahc-lint` CLI: run the determinism/soundness rule catalogue over a
+//! repo checkout and exit nonzero on any unallowlisted violation or any
+//! allowlist integrity error (stale / exceeded / duplicate entries).
+//!
+//! Usage:
+//!   cargo run -p mahc-lint                  # lint the current checkout
+//!   cargo xtask lint                        # alias (see .cargo/config.toml)
+//!   cargo run -p mahc-lint -- --root DIR    # lint another tree
+//!   cargo run -p mahc-lint -- --no-allowlist  # show every finding
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+mahc-lint: determinism/soundness static analysis over rust/src/**
+
+USAGE:
+    cargo run -p mahc-lint -- [lint] [OPTIONS]
+
+OPTIONS:
+    --root <DIR>        repo root to scan (default: .)
+    --allowlist <FILE>  burn-down file (default: <root>/tools/lint/allowlist.toml)
+    --no-allowlist      report every finding, ignoring the burn-down file
+    -h, --help          print this help
+
+RULES:
+    R001  hash-collection iteration in result-affecting code
+    R002  panicking call / unchecked indexing in library code
+    R003  f32 reduction outside the fixed-order kernels
+    R004  wall-clock / entropy source outside telemetry, bench, rng
+    R005  IterationRecord schema drift (JSON writer vs CLI summary)
+
+Suppress inline with `// lint: allow(RXXX) <reason>` on the violating
+line or the comment line directly above it.";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("mahc-lint: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<bool> {
+    let mut root = PathBuf::from(".");
+    let mut allowlist_path: Option<PathBuf> = None;
+    let mut use_allowlist = true;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            // Tolerate the subcommand word injected by `cargo xtask lint`.
+            "lint" if i == 0 => {}
+            "--root" => {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--root needs a directory argument"))?;
+                root = PathBuf::from(v);
+            }
+            "--allowlist" => {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--allowlist needs a file argument"))?;
+                allowlist_path = Some(PathBuf::from(v));
+            }
+            "--no-allowlist" => use_allowlist = false,
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return Ok(true);
+            }
+            other => anyhow::bail!("unknown argument `{other}` (try --help)"),
+        }
+        i += 1;
+    }
+
+    let findings = mahc_lint::scan_root(&root)?;
+    let entries = if use_allowlist {
+        let path = allowlist_path.unwrap_or_else(|| root.join("tools/lint/allowlist.toml"));
+        if path.is_file() {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+            mahc_lint::parse_allowlist(&text)?
+        } else {
+            Vec::new()
+        }
+    } else {
+        Vec::new()
+    };
+
+    let out = mahc_lint::apply_allowlist(findings, &entries);
+    for f in &out.remaining {
+        println!("{f}");
+    }
+    for e in &out.errors {
+        println!("allowlist: {e}");
+    }
+    let clean = out.remaining.is_empty() && out.errors.is_empty();
+    eprintln!(
+        "mahc-lint: {} violation(s), {} allowlisted, {} allowlist error(s)",
+        out.remaining.len(),
+        out.allowlisted,
+        out.errors.len()
+    );
+    Ok(clean)
+}

@@ -1,0 +1,170 @@
+//! Integration tests: the analyzer against the fixture corpus (one
+//! failing and one passing snippet per rule), and the binary's exit
+//! codes with and without the burn-down allowlist.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use mahc_lint::{apply_allowlist, parse_allowlist, scan_root, Finding, Rule};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn keys(findings: &[Finding]) -> Vec<(Rule, String, usize)> {
+    findings
+        .iter()
+        .map(|f| (f.rule, f.path.clone(), f.line))
+        .collect()
+}
+
+#[test]
+fn fail_tree_reports_every_rule_span_accurately() {
+    let findings = scan_root(&fixture("fail")).unwrap();
+    let expected: Vec<(Rule, String, usize)> = vec![
+        (Rule::R001, "rust/src/ahc/r001_fail.rs".into(), 7),
+        (Rule::R002, "rust/src/ahc/r001_suppressed_mixed.rs".into(), 5),
+        (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 2),
+        (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 3),
+        (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 5),
+        (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 7),
+        (Rule::R003, "rust/src/distance/r003_fail.rs".into(), 2),
+        (Rule::R004, "rust/src/corpus/r004_fail.rs".into(), 2),
+        (Rule::R005, "rust/src/telemetry/mod.rs".into(), 4),
+        (Rule::R005, "rust/src/telemetry/mod.rs".into(), 4),
+    ];
+    assert_eq!(keys(&findings), expected, "{findings:#?}");
+}
+
+#[test]
+fn pass_tree_is_clean() {
+    let findings = scan_root(&fixture("pass")).unwrap();
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn suppression_silences_exactly_its_own_rule() {
+    // The mixed fixture carries `// lint: allow(R001)` on a line with
+    // both a hash iteration (suppressed) and an unchecked index (not).
+    let findings = scan_root(&fixture("fail")).unwrap();
+    let mixed: Vec<&Finding> = findings
+        .iter()
+        .filter(|f| f.path.ends_with("r001_suppressed_mixed.rs"))
+        .collect();
+    assert_eq!(mixed.len(), 1, "{mixed:#?}");
+    assert_eq!(mixed[0].rule, Rule::R002);
+    assert_eq!(mixed[0].line, 5);
+    // The pass tree exercises the alias form (`order-insensitive`) on a
+    // preceding comment-only line; pass_tree_is_clean pins that it
+    // silences the R001 hit.  Both trees together prove the suppression
+    // is rule-specific, not line-wide.
+}
+
+#[test]
+fn allowlist_covers_exactly_and_flags_stale_and_exceeded() {
+    let findings = scan_root(&fixture("fail")).unwrap();
+
+    let ok = parse_allowlist(&std::fs::read_to_string(fixture("allowlists/ok.toml")).unwrap())
+        .unwrap();
+    let out = apply_allowlist(findings.clone(), &ok);
+    assert!(out.remaining.is_empty(), "{:#?}", out.remaining);
+    assert_eq!(out.allowlisted, 10);
+    assert!(out.errors.is_empty(), "{:?}", out.errors);
+
+    let stale =
+        parse_allowlist(&std::fs::read_to_string(fixture("allowlists/stale.toml")).unwrap())
+            .unwrap();
+    let out = apply_allowlist(findings.clone(), &stale);
+    assert_eq!(out.errors.len(), 1, "{:?}", out.errors);
+    assert!(out.errors[0].contains("stale"), "{:?}", out.errors);
+
+    let exceeded =
+        parse_allowlist(&std::fs::read_to_string(fixture("allowlists/exceeded.toml")).unwrap())
+            .unwrap();
+    let out = apply_allowlist(findings, &exceeded);
+    assert!(
+        out.errors.iter().any(|e| e.contains("exceeded")),
+        "{:?}",
+        out.errors
+    );
+    // The undercounted entry absorbs nothing: all four stay visible.
+    assert_eq!(out.remaining.len(), 4, "{:#?}", out.remaining);
+}
+
+fn run_binary(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mahc-lint"))
+        .args(args)
+        .output()
+        .expect("spawn mahc-lint");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+    )
+}
+
+#[test]
+fn binary_exits_nonzero_on_fail_tree_with_every_rule_reported() {
+    let root = fixture("fail");
+    let (ok, stdout) = run_binary(&["--root", root.to_str().unwrap()]);
+    assert!(!ok, "fail tree must exit nonzero\n{stdout}");
+    for rule in Rule::ALL {
+        assert!(
+            stdout.contains(rule.id()),
+            "missing {} in:\n{stdout}",
+            rule.id()
+        );
+    }
+    // Diagnostics are span-accurate `path:line: RXXX message` lines.
+    assert!(
+        stdout.contains("rust/src/mahc/r002_fail.rs:7: R002"),
+        "{stdout}"
+    );
+}
+
+#[test]
+fn binary_exits_zero_on_pass_tree_and_accepts_xtask_word() {
+    let root = fixture("pass");
+    let (ok, stdout) = run_binary(&["--root", root.to_str().unwrap()]);
+    assert!(ok, "pass tree must exit zero\n{stdout}");
+    // `cargo xtask lint` prepends the literal word `lint`.
+    let (ok, stdout) = run_binary(&["lint", "--root", root.to_str().unwrap()]);
+    assert!(ok, "xtask form must exit zero\n{stdout}");
+}
+
+#[test]
+fn binary_allowlist_modes() {
+    let root = fixture("fail");
+    let root = root.to_str().unwrap();
+    let ok_list = fixture("allowlists/ok.toml");
+    let (ok, stdout) = run_binary(&["--root", root, "--allowlist", ok_list.to_str().unwrap()]);
+    assert!(ok, "fully allowlisted tree must exit zero\n{stdout}");
+
+    let stale = fixture("allowlists/stale.toml");
+    let (ok, stdout) = run_binary(&["--root", root, "--allowlist", stale.to_str().unwrap()]);
+    assert!(!ok, "stale allowlist must exit nonzero\n{stdout}");
+    assert!(stdout.contains("stale"), "{stdout}");
+
+    let exceeded = fixture("allowlists/exceeded.toml");
+    let (ok, stdout) = run_binary(&["--root", root, "--allowlist", exceeded.to_str().unwrap()]);
+    assert!(!ok, "exceeded allowlist must exit nonzero\n{stdout}");
+    assert!(stdout.contains("exceeded"), "{stdout}");
+
+    // --no-allowlist surfaces everything even with a covering file present.
+    let (ok, stdout) = run_binary(&["--root", root, "--no-allowlist"]);
+    assert!(!ok);
+    assert!(stdout.lines().filter(|l| l.contains(": R")).count() >= 10, "{stdout}");
+}
+
+#[test]
+fn real_repo_is_clean_under_its_allowlist() {
+    // The repo root is two levels up from tools/lint.  This is the same
+    // invocation CI's static-analysis job runs; it must stay green.
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../..")
+        .canonicalize()
+        .unwrap();
+    let (ok, stdout) = run_binary(&["--root", repo.to_str().unwrap()]);
+    assert!(ok, "repo must lint clean under its allowlist\n{stdout}");
+}

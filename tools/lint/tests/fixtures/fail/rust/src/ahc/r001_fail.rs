@@ -1,0 +1,11 @@
+use std::collections::HashMap;
+
+pub fn collapse() -> usize {
+    let mut label_of: HashMap<usize, usize> = HashMap::new();
+    label_of.insert(1, 2);
+    let mut total = 0;
+    for (k, v) in &label_of {
+        total += k + v;
+    }
+    total
+}

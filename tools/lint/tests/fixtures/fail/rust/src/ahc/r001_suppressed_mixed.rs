@@ -1,0 +1,6 @@
+use std::collections::HashSet;
+
+pub fn count_plus_head(xs: &[usize]) -> usize {
+    let tags: HashSet<usize> = HashSet::new();
+    tags.iter().count() + xs[0] // lint: allow(R001) fixture: count is order-free
+}

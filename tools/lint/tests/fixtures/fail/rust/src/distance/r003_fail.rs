@@ -1,0 +1,3 @@
+pub fn mean(data: &[f32]) -> f32 {
+    data.iter().sum::<f32>() / data.len() as f32
+}

@@ -1,0 +1,8 @@
+pub fn broken(xs: &[u32]) -> u32 {
+    let a = *xs.first().unwrap();
+    let b: u32 = xs.last().copied().expect("nonempty");
+    if a > 10 {
+        panic!("too big");
+    }
+    a + b + xs[1]
+}

@@ -1,0 +1,11 @@
+pub struct IterationRecord {
+    pub iteration: usize,
+    pub wall_secs: f64,
+    pub ghost_metric: f64,
+}
+
+impl IterationRecord {
+    pub fn to_json(&self) -> String {
+        format!("{{\"iteration\":{},\"wall_secs\":{}}}", self.iteration, self.wall_secs)
+    }
+}

@@ -1,0 +1,7 @@
+use std::collections::HashMap;
+
+pub fn total(pairs: &[(usize, usize)]) -> usize {
+    let map: HashMap<usize, usize> = pairs.iter().copied().collect();
+    // lint: order-insensitive — commutative integer sum
+    map.values().sum()
+}

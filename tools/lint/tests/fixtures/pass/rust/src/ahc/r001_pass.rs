@@ -1,0 +1,7 @@
+use std::collections::BTreeMap;
+
+pub fn collapse() -> usize {
+    let mut label_of: BTreeMap<usize, usize> = BTreeMap::new();
+    label_of.insert(1, 2);
+    label_of.iter().map(|(k, v)| k + v).sum()
+}

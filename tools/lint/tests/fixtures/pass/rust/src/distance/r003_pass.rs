@@ -1,0 +1,7 @@
+pub fn mean(data: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in data {
+        acc += x;
+    }
+    acc / data.len().max(1) as f32
+}

@@ -1,0 +1,5 @@
+pub fn safe(xs: &[u32]) -> anyhow::Result<u32> {
+    let a = *xs.first().ok_or_else(|| anyhow::anyhow!("empty input"))?;
+    let b = xs.get(1).copied().unwrap_or(0);
+    Ok(a + b)
+}

@@ -1,0 +1,10 @@
+pub struct IterationRecord {
+    pub iteration: usize,
+    pub wall_secs: f64,
+}
+
+impl IterationRecord {
+    pub fn to_json(&self) -> String {
+        format!("{{\"iteration\":{},\"wall_secs\":{}}}", self.iteration, self.wall_secs)
+    }
+}
