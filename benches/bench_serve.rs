@@ -1,0 +1,125 @@
+//! Fleet throughput: N concurrent streaming sessions vs the same
+//! sessions run back to back.
+//!
+//! One sample = one complete serve run (admission through the last
+//! session's resolve), so the serve walls are directly comparable to
+//! the summed sequential walls.  Alongside wall-clock the harness
+//! reports the fleet counters the serve telemetry layer samples:
+//! aggregate pairs/sec, scheduler stalls (backpressure), and peak
+//! shared-cache residency against the per-session budgets.
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shrinks corpora and sampling windows
+//! for the perf-smoke job, and `MAHC_BENCH_JSON=path` writes the
+//! fleet-throughput table as a JSON fragment for `BENCH_ci.json`.
+
+use std::sync::Arc;
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
+use mahc::corpus::{generate, SegmentSet};
+use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
+
+fn main() {
+    let sessions = 4usize;
+    let n = if quick_mode() { 70 } else { 220 };
+    let budget = 64 << 10;
+    println!("== bench_serve: {sessions} sessions over tiny corpora of ~{n} segments ==");
+
+    let sets: Vec<Arc<SegmentSet>> = (0..sessions)
+        .map(|i| Arc::new(generate(&DatasetSpec::tiny(n + 10 * i, 5, 7000 + i as u64))))
+        .collect();
+    let cfg = StreamConfig::new(
+        AlgoConfig {
+            p0: 2,
+            beta: Some(if quick_mode() { 28 } else { 64 }),
+            convergence: Convergence::FixedIters(2),
+            cache_bytes: budget,
+            ..Default::default()
+        },
+        if quick_mode() { 28 } else { 72 },
+    );
+    let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+    let specs = || -> Vec<SessionSpec> {
+        sets.iter()
+            .enumerate()
+            .map(|(i, set)| SessionSpec::new(&format!("s{i}"), Arc::clone(set), cfg.clone()))
+            .collect()
+    };
+
+    let mut walls: Vec<json::Json> = Vec::new();
+
+    // Baseline: the same sessions one after another on this thread.
+    let rs = Bench::new("sequential/4sessions").quick().run(|| {
+        sets.iter()
+            .map(|set| {
+                StreamingDriver::new(set, cfg.clone(), &NativeBackend::new())
+                    .unwrap()
+                    .run()
+                    .unwrap()
+            })
+            .collect::<Vec<_>>()
+    });
+    walls.push(rs.to_json());
+
+    // The fleet at increasing pool sizes.
+    let mut fleet_rows: Vec<json::Json> = Vec::new();
+    println!("workers  peak_active  stalls  peak_cache_B  pairs/s");
+    for workers in [1usize, 2, 4] {
+        let serve_cfg = ServeConfig {
+            workers,
+            fleet_cap: sessions,
+            queue_cap: 0,
+            cache_bytes: 8 << 20,
+        };
+        let name = format!("serve/workers={workers}");
+        let r = Bench::new(&name).quick().run(|| {
+            ServeDriver::new(serve_cfg.clone(), Arc::clone(&backend))
+                .unwrap()
+                .run(specs())
+                .unwrap()
+        });
+        walls.push(r.to_json());
+
+        let report = ServeDriver::new(serve_cfg, Arc::clone(&backend))
+            .unwrap()
+            .run(specs())
+            .unwrap();
+        assert_eq!(report.completed(), sessions, "a session failed");
+        let peak_cache = report.fleet.peak_cache_bytes();
+        assert!(
+            peak_cache <= sessions * budget,
+            "residency {peak_cache} exceeds session budgets"
+        );
+        let stalls = report.fleet.records.last().map_or(0, |rec| rec.stalls);
+        println!(
+            "{:>7} {:>12} {:>7} {:>13} {:>8.0}",
+            workers,
+            report.fleet.peak_active(),
+            stalls,
+            peak_cache,
+            report.fleet.final_pairs_per_sec()
+        );
+        fleet_rows.push(json::obj(vec![
+            ("workers", json::num(workers as f64)),
+            ("peak_active", json::num(report.fleet.peak_active() as f64)),
+            ("stalls", json::num(stalls as f64)),
+            ("peak_cache_bytes", json::num(peak_cache as f64)),
+            (
+                "fleet_pairs_per_sec",
+                json::num(report.fleet.final_pairs_per_sec()),
+            ),
+        ]));
+    }
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("sessions", json::num(sessions as f64)),
+        ("n_base", json::num(n as f64)),
+        ("session_budget_bytes", json::num(budget as f64)),
+        ("walls", json::arr(walls)),
+        ("fleet", json::arr(fleet_rows)),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
+}

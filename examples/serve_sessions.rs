@@ -1,0 +1,187 @@
+//! Concurrent multi-stream serve mode, demonstrated.
+//!
+//! Several streaming-discovery sessions run at once over one worker
+//! pool and one shared, budgeted pair cache.  The demo pins the three
+//! serve-mode guarantees end to end:
+//!
+//! 1. **Bitwise isolation** — every session's labels, K and F-measure
+//!    are identical to a sequential run of that session alone;
+//! 2. **Budget enforcement** — the fleet cache's resident bytes never
+//!    exceed the sum of the per-session budgets;
+//! 3. **Panic robustness** — a session whose step job panics fails
+//!    alone; the pool survives and the other sessions' outputs do not
+//!    move a bit.
+//!
+//! CI hooks: the serve-smoke job runs this under `MAHC_EXAMPLE_QUICK=1`
+//! and collects the fleet-throughput JSON fragment via
+//! `MAHC_BENCH_JSON=path` into `BENCH_ci.json`.
+//!
+//! ```text
+//! cargo run --release --example serve_sessions
+//! ```
+
+use std::sync::Arc;
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
+use mahc::corpus::{generate, SegmentSet};
+use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
+use mahc::telemetry::Stopwatch;
+use mahc::util::bench::{env_flag, write_json_report};
+use mahc::util::json;
+
+fn quick() -> bool {
+    env_flag("MAHC_EXAMPLE_QUICK")
+}
+
+fn main() -> anyhow::Result<()> {
+    let sessions = if quick() { 4 } else { 6 };
+    let base_n = if quick() { 60 } else { 160 };
+    let budget = 32 << 10;
+    let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+
+    // Distinct corpora: session i discovers subwords in its own stream.
+    let sets: Vec<Arc<SegmentSet>> = (0..sessions)
+        .map(|i| Arc::new(generate(&DatasetSpec::tiny(base_n + 12 * i, 5, 500 + i as u64))))
+        .collect();
+    let cfg_for = |_i: usize| {
+        StreamConfig::new(
+            AlgoConfig {
+                p0: 2,
+                beta: Some(if quick() { 24 } else { 48 }),
+                convergence: Convergence::FixedIters(2),
+                cache_bytes: budget,
+                ..Default::default()
+            },
+            if quick() { 24 } else { 60 },
+        )
+    };
+    let specs = |fault: Option<usize>| -> Vec<SessionSpec> {
+        sets.iter()
+            .enumerate()
+            .map(|(i, set)| {
+                let mut s = SessionSpec::new(&format!("s{i}"), Arc::clone(set), cfg_for(i));
+                if fault == Some(i) {
+                    s.panic_after_shards = Some(1);
+                }
+                s
+            })
+            .collect()
+    };
+
+    // Sequential baseline: each session alone, private caches.
+    let t_seq = Stopwatch::start();
+    let expected: Vec<_> = sets
+        .iter()
+        .enumerate()
+        .map(|(i, set)| StreamingDriver::new(set, cfg_for(i), &NativeBackend::new())?.run())
+        .collect::<anyhow::Result<_>>()?;
+    let seq_wall = t_seq.elapsed().as_secs_f64();
+
+    // The fleet: all sessions at once, one pool, one budgeted cache.
+    let serve_cfg = ServeConfig {
+        workers: 4,
+        fleet_cap: sessions,
+        queue_cap: 0,
+        cache_bytes: 8 << 20,
+    };
+    let t_srv = Stopwatch::start();
+    let report = ServeDriver::new(serve_cfg, Arc::clone(&backend))?.run(specs(None))?;
+    let srv_wall = t_srv.elapsed().as_secs_f64();
+
+    println!("session  status      K        F  shards       pairs");
+    for s in &report.sessions {
+        match &s.result {
+            Ok(r) => println!(
+                "{:<8} {:<7} {:>5} {:>8.4} {:>7} {:>11}",
+                s.name, "ok", r.k, r.f_measure, r.shards, r.pairs
+            ),
+            Err(e) => println!("{:<8} {:<7} {e}", s.name, "failed"),
+        }
+    }
+    anyhow::ensure!(report.completed() == sessions, "a session failed");
+    for (out, exp) in report.sessions.iter().zip(&expected) {
+        let got = out.result.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            got.labels == exp.labels
+                && got.k == exp.k
+                && got.f_measure.to_bits() == exp.f_measure.to_bits(),
+            "{} diverged from its sequential run under concurrency",
+            out.name
+        );
+    }
+    println!("every session bitwise matches its sequential run: MATCH");
+
+    let peak_cache = report.fleet.peak_cache_bytes();
+    anyhow::ensure!(
+        peak_cache <= sessions * budget,
+        "fleet cache residency {peak_cache} B exceeds the {sessions} session budgets of {budget} B"
+    );
+    println!(
+        "fleet cache: peak {peak_cache} B resident <= {} B budgeted across sessions",
+        sessions * budget
+    );
+    let stalls = report.fleet.records.last().map_or(0, |r| r.stalls);
+    println!(
+        "fleet: peak active {}, {} stalls, {:.0} pairs/s; wall {:.2}s vs {:.2}s sequential",
+        report.fleet.peak_active(),
+        stalls,
+        report.fleet.final_pairs_per_sec(),
+        srv_wall,
+        seq_wall
+    );
+
+    // Robustness: session 1's second step panics inside its pool job.
+    // Its outcome is a captured failure; everyone else is untouched.
+    let faulted = ServeDriver::new(
+        ServeConfig {
+            workers: 2,
+            fleet_cap: sessions,
+            queue_cap: 0,
+            cache_bytes: 8 << 20,
+        },
+        backend,
+    )?
+    .run(specs(Some(1)))?;
+    anyhow::ensure!(faulted.failed() == 1, "exactly one session must fail");
+    for (i, (out, exp)) in faulted.sessions.iter().zip(&expected).enumerate() {
+        if i == 1 {
+            let msg = out.result.as_ref().err().map(String::as_str).unwrap_or("");
+            anyhow::ensure!(
+                msg.contains("injected session fault"),
+                "unexpected failure: {msg}"
+            );
+            continue;
+        }
+        let got = out.result.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            got.labels == exp.labels && got.f_measure.to_bits() == exp.f_measure.to_bits(),
+            "bystander {} perturbed by the faulted session",
+            out.name
+        );
+    }
+    println!("injected panic confined to its own session: MATCH");
+
+    let pairs_total = report.fleet.records.last().map_or(0, |r| r.pairs_total);
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick())),
+        ("sessions", json::num(sessions as f64)),
+        ("completed", json::num(report.completed() as f64)),
+        ("peak_active", json::num(report.fleet.peak_active() as f64)),
+        ("peak_cache_bytes", json::num(peak_cache as f64)),
+        ("stalls", json::num(stalls as f64)),
+        ("pairs_total", json::num(pairs_total as f64)),
+        (
+            "fleet_pairs_per_sec",
+            json::num(report.fleet.final_pairs_per_sec()),
+        ),
+        ("serve_wall_s", json::num(srv_wall)),
+        ("sequential_wall_s", json::num(seq_wall)),
+        (
+            "faulted_run_bystanders_ok",
+            json::Json::Bool(faulted.failed() == 1),
+        ),
+    ]))
+    .map_err(|e| anyhow::anyhow!("writing MAHC_BENCH_JSON fragment: {e}"))?;
+    Ok(())
+}

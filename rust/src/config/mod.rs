@@ -453,6 +453,73 @@ impl StreamConfig {
     }
 }
 
+/// Knobs of the serve multiplexer ([`crate::mahc::serve`]): fleet-wide
+/// resource bounds over many concurrent streaming sessions.  Each
+/// session keeps its own [`StreamConfig`] — β and `cache_bytes` there
+/// are *per-session* budgets; the fields here bound the fleet.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads in the shared pool all sessions step on.
+    pub workers: usize,
+    /// Maximum concurrently-active sessions (admission control): the
+    /// per-session space guarantee β(β−1)/2·4 B composes into a fleet
+    /// bound of `fleet_cap` times the largest admitted session's.
+    pub fleet_cap: usize,
+    /// Sessions allowed to queue behind the cap before admission
+    /// rejects outright.
+    pub queue_cap: usize,
+    /// Capacity of the shared fleet [`crate::distance::PairCache`]
+    /// (0 disables it; sessions then run their private caches).  Each
+    /// session's `algo.cache_bytes` becomes its residency budget
+    /// *within* this shared capacity.
+    pub cache_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: crate::util::pool::default_threads(),
+            fleet_cap: 4,
+            queue_cap: 16,
+            cache_bytes: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.workers == 0 {
+            anyhow::bail!("serve workers must be >= 1");
+        }
+        if self.fleet_cap == 0 {
+            anyhow::bail!("fleet_cap must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Apply `key=value` overrides onto a [`ServeConfig`] (the `serve_*`
+/// namespace, so serve and algo sections can share a config file).
+/// Unknown keys are left for [`apply_overrides`] — the two appliers
+/// partition the namespace.
+pub fn apply_serve_overrides(
+    cfg: &mut ServeConfig,
+    kv: &[(String, String)],
+) -> anyhow::Result<Vec<(String, String)>> {
+    let mut rest = Vec::new();
+    for (k, v) in kv {
+        match k.as_str() {
+            "serve_workers" => cfg.workers = v.parse()?,
+            "serve_fleet_cap" => cfg.fleet_cap = v.parse()?,
+            "serve_queue_cap" => cfg.queue_cap = v.parse()?,
+            "serve_cache_bytes" => cfg.cache_bytes = v.parse()?,
+            "serve_cache_mb" => cfg.cache_bytes = v.parse::<usize>()? << 20,
+            _ => rest.push((k.clone(), v.clone())),
+        }
+    }
+    Ok(rest)
+}
+
 /// Parse a minimal `key = value` config file (TOML subset: comments with
 /// `#`, bare scalars, no tables).  Returns key/value pairs for the
 /// caller to interpret; unknown keys are the caller's concern so that
@@ -760,5 +827,44 @@ mod tests {
         assert_eq!(NamedDataset::parse("a").unwrap(), NamedDataset::SmallA);
         assert_eq!(NamedDataset::parse("medium").unwrap(), NamedDataset::Medium);
         assert!(NamedDataset::parse("nope").is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_validation_and_overrides() {
+        let d = ServeConfig::default();
+        assert!(d.workers >= 1);
+        assert_eq!(d.fleet_cap, 4);
+        assert_eq!(d.cache_bytes, 0, "fleet cache off by default");
+        assert!(d.validate().is_ok());
+
+        let mut bad = ServeConfig::default();
+        bad.workers = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.fleet_cap = 0;
+        assert!(bad.validate().is_err());
+
+        // The serve applier consumes its namespace and hands the rest
+        // to the algo applier untouched.
+        let mut cfg = ServeConfig::default();
+        let kv = parse_kv(
+            "serve_workers = 3\nserve_fleet_cap = 8\nserve_queue_cap = 2\n\
+             serve_cache_mb = 16\nbeta = 64\n",
+        )
+        .unwrap();
+        let rest = apply_serve_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.fleet_cap, 8);
+        assert_eq!(cfg.queue_cap, 2);
+        assert_eq!(cfg.cache_bytes, 16 << 20);
+        assert_eq!(rest, vec![("beta".to_string(), "64".to_string())]);
+        let mut algo = AlgoConfig::default();
+        apply_overrides(&mut algo, &rest).unwrap();
+        assert_eq!(algo.beta, Some(64));
+
+        let mut cfg = ServeConfig::default();
+        let kv = vec![("serve_cache_bytes".to_string(), "4096".to_string())];
+        apply_serve_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.cache_bytes, 4096);
     }
 }

@@ -21,10 +21,34 @@
 //! pattern* (asserted by `rust/tests/cache_determinism.rs` for the
 //! native backend, whose per-pair results are independent of call
 //! batching).
+//!
+//! # Scoped handles (multi-tenant serve mode)
+//!
+//! One physical cache can be shared by many concurrent streaming
+//! sessions: [`PairCache::scoped`] returns a lightweight handle onto
+//! the *same* shard array with
+//!
+//! * an **id offset** — session-local segment ids are namespaced by the
+//!   handle's offset before keying, so sessions over different corpora
+//!   never collide even though each corpus numbers its segments from 0;
+//! * **fresh counters** — hits/misses/evictions accumulate per handle,
+//!   giving per-session cache telemetry over shared storage;
+//! * an optional **residency budget** — a per-handle FIFO of the keys
+//!   this handle inserted; once more than `budget / ENTRY_BYTES` are
+//!   resident, the handle evicts its *own* oldest entries from the
+//!   shared map.  Budget-evicted keys leave their slot in the shard
+//!   FIFO behind (removing from the middle would be linear); stale
+//!   slots are skipped and pruned lazily, and a 2× FIFO length bound
+//!   keeps queue memory proportional to the byte budget regardless of
+//!   churn.
+//!
+//! Because cache contents never change results (the determinism pin
+//! above), neither the per-session budget nor cross-session eviction
+//! interference can perturb any session's output — only its hit rate.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::telemetry::CacheStats;
 
@@ -43,16 +67,29 @@ struct Shard {
     fifo: VecDeque<u64>,
 }
 
+/// Per-handle residency ledger for budgeted scoped handles: the keys
+/// this handle inserted, oldest first.
+struct SessionFifo {
+    fifo: VecDeque<u64>,
+    budget_entries: usize,
+}
+
 /// Sharded, capacity-bounded map `(min_id, max_id) → distance`.
 ///
 /// `Sync`: lookups and inserts take a per-shard mutex; counters are
 /// relaxed atomics.  Shared by reference across the distance builder's
-/// worker threads and across MAHC iterations.
+/// worker threads and across MAHC iterations — and, via
+/// [`PairCache::scoped`], across concurrent serve-mode sessions.
 pub struct PairCache {
-    shards: Vec<Mutex<Shard>>,
+    shards: Arc<Vec<Mutex<Shard>>>,
     /// Maximum entries per shard (capacity_bytes / ENTRY_BYTES, split
     /// evenly; at least one so the cache is never pathological).
     per_shard: usize,
+    /// Added to both segment ids before keying: the id namespace of a
+    /// scoped handle (0 for the root cache).
+    offset: usize,
+    /// Present only on budgeted scoped handles.
+    session: Option<Mutex<SessionFifo>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -69,28 +106,69 @@ impl PairCache {
         // budget up front even for runs that never fill it.
         let seed_capacity = per_shard.min(1024);
         PairCache {
-            shards: (0..SHARDS)
-                .map(|_| {
-                    Mutex::new(Shard {
-                        map: HashMap::with_capacity(seed_capacity),
-                        fifo: VecDeque::with_capacity(seed_capacity),
+            shards: Arc::new(
+                (0..SHARDS)
+                    .map(|_| {
+                        Mutex::new(Shard {
+                            map: HashMap::with_capacity(seed_capacity),
+                            fifo: VecDeque::with_capacity(seed_capacity),
+                        })
                     })
-                })
-                .collect(),
+                    .collect(),
+            ),
             per_shard,
+            offset: 0,
+            session: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
     }
 
-    /// Symmetric pair key: order-free, unique for ids < 2³².
+    /// A handle onto the same physical shards, keying ids through
+    /// `offset` and (when `budget_bytes` is `Some`) holding this
+    /// handle's resident entries to roughly that many bytes.  Counters
+    /// start at zero, so `stats()` on the handle is per-session.
+    ///
+    /// Callers pick offsets so that session id ranges are disjoint
+    /// (session *i* gets the running sum of earlier corpus sizes);
+    /// `offset + local_id` must stay below 2³².
+    pub fn scoped(&self, offset: usize, budget_bytes: Option<usize>) -> PairCache {
+        PairCache {
+            shards: Arc::clone(&self.shards),
+            per_shard: self.per_shard,
+            offset,
+            session: budget_bytes.map(|b| {
+                Mutex::new(SessionFifo {
+                    fifo: VecDeque::new(),
+                    budget_entries: (b / ENTRY_BYTES).max(1),
+                })
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// This handle's id-namespace offset.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Symmetric pair key under an id offset: order-free, unique while
+    /// offset ids stay below 2³².
     #[inline]
-    fn key(a: usize, b: usize) -> u64 {
+    fn key_at(offset: usize, a: usize, b: usize) -> u64 {
         debug_assert!(a != b, "diagonal pairs are implicitly zero");
-        debug_assert!(a < (1 << 32) && b < (1 << 32), "segment id exceeds u32");
+        let (a, b) = (a + offset, b + offset);
+        debug_assert!(a < (1 << 32) && b < (1 << 32), "offset segment id exceeds u32");
         let (lo, hi) = if a < b { (a, b) } else { (b, a) };
         ((lo as u64) << 32) | hi as u64
+    }
+
+    #[inline]
+    fn key(&self, a: usize, b: usize) -> u64 {
+        Self::key_at(self.offset, a, b)
     }
 
     #[inline]
@@ -102,16 +180,19 @@ impl PairCache {
         (z >> 59) as usize % SHARDS
     }
 
-    /// Look up the distance between global segment ids `a` and `b`,
-    /// counting the probe as a hit or miss.
+    #[inline]
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[Self::shard_of(key)] // lint: allow(R002) shard_of is a residue mod SHARDS == shards.len()
+    }
+
+    /// Look up the distance between segment ids `a` and `b` (in this
+    /// handle's namespace), counting the probe as a hit or miss.
     pub fn get(&self, a: usize, b: usize) -> Option<f32> {
-        let key = Self::key(a, b);
+        let key = self.key(a, b);
         // Lock poisoning only means another worker panicked mid-access;
         // shard state is a plain map + FIFO with no torn invariants, so
         // recovering the guard is safe and keeps the cache panic-free.
-        let shard = self.shards[Self::shard_of(key)]
-            .lock()
-            .unwrap_or_else(|p| p.into_inner());
+        let shard = self.shard(key).lock().unwrap_or_else(|p| p.into_inner());
         let found = shard.map.get(&key).copied();
         drop(shard);
         match found {
@@ -122,31 +203,84 @@ impl PairCache {
     }
 
     /// Insert the distance for `(a, b)`, evicting FIFO-oldest entries
-    /// of the shard when its capacity share is exhausted.  Re-inserting
-    /// an existing key overwrites in place (values for a pair never
-    /// differ, so this is a no-op in practice).
+    /// of the shard when its capacity share is exhausted — and, on a
+    /// budgeted handle, this handle's own oldest entries when its
+    /// session budget is exhausted.  Re-inserting an existing key
+    /// overwrites in place (values for a pair never differ, so this is
+    /// a no-op in practice).
     pub fn insert(&self, a: usize, b: usize, v: f32) {
-        let key = Self::key(a, b);
-        let mut shard = self.shards[Self::shard_of(key)]
-            .lock()
-            .unwrap_or_else(|p| p.into_inner());
-        if shard.map.insert(key, v).is_none() {
-            shard.fifo.push_back(key);
-            let mut evicted = 0u64;
-            while shard.fifo.len() > self.per_shard {
-                if let Some(old) = shard.fifo.pop_front() {
-                    shard.map.remove(&old);
-                    evicted += 1;
+        let key = self.key(a, b);
+        let mut newly_inserted = false;
+        {
+            let mut shard = self.shard(key).lock().unwrap_or_else(|p| p.into_inner());
+            if shard.map.insert(key, v).is_none() {
+                newly_inserted = true;
+                shard.fifo.push_back(key);
+                // Session-budget evictions leave their FIFO slot behind
+                // (removing from the middle of the queue would be
+                // linear); drop any stale prefix so the queue tracks
+                // the resident map.
+                while let Some(&front) = shard.fifo.front() {
+                    if shard.map.contains_key(&front) {
+                        break;
+                    }
+                    shard.fifo.pop_front();
+                }
+                let mut evicted = 0u64;
+                // Two bounds: the resident map obeys the byte budget,
+                // and the FIFO (which may still carry stale slots in
+                // the middle) stays within 2× so queue memory is
+                // bounded even under heavy session churn.  Without
+                // scoped handles the FIFO never goes stale and this is
+                // exactly the classic `len > per_shard` FIFO eviction.
+                while shard.map.len() > self.per_shard
+                    || shard.fifo.len() > self.per_shard.saturating_mul(2)
+                {
+                    match shard.fifo.pop_front() {
+                        Some(old) => {
+                            if shard.map.remove(&old).is_some() {
+                                evicted += 1;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                drop(shard);
+                if evicted > 0 {
+                    self.evictions.fetch_add(evicted, Ordering::Relaxed);
                 }
             }
-            drop(shard);
+        }
+        if !newly_inserted {
+            return;
+        }
+        if let Some(session) = &self.session {
+            // Lock order is always session → shard (the insert above
+            // released its shard guard), so budget eviction cannot
+            // deadlock against concurrent get/insert on any handle.
+            let mut own = session.lock().unwrap_or_else(|p| p.into_inner());
+            own.fifo.push_back(key);
+            let mut evicted = 0u64;
+            while own.fifo.len() > own.budget_entries {
+                match own.fifo.pop_front() {
+                    Some(old) => {
+                        let mut s = self.shard(old).lock().unwrap_or_else(|p| p.into_inner());
+                        if s.map.remove(&old).is_some() {
+                            evicted += 1;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            drop(own);
             if evicted > 0 {
                 self.evictions.fetch_add(evicted, Ordering::Relaxed);
             }
         }
     }
 
-    /// Number of resident pairs.
+    /// Number of resident pairs across the whole shared cache (all
+    /// handles' entries).
     pub fn len(&self) -> usize {
         self.shards
             .iter()
@@ -163,12 +297,50 @@ impl PairCache {
         self.per_shard * SHARDS
     }
 
-    /// Approximate resident bytes ([`ENTRY_BYTES`] accounting).
+    /// Approximate resident bytes across the whole shared cache
+    /// ([`ENTRY_BYTES`] accounting).
     pub fn bytes(&self) -> usize {
         self.len() * ENTRY_BYTES
     }
 
-    /// Cumulative counters since construction.
+    /// Pairs inserted by *this handle* that are still resident.  On the
+    /// root (unbudgeted) handle this is just [`PairCache::len`].
+    /// Prunes the handle's ledger of entries that global FIFO pressure
+    /// or shard churn already displaced.
+    pub fn session_resident(&self) -> usize {
+        match &self.session {
+            None => self.len(),
+            Some(session) => {
+                let mut own = session.lock().unwrap_or_else(|p| p.into_inner());
+                let mut seen = std::collections::HashSet::new();
+                own.fifo.retain(|k| {
+                    let resident = self
+                        .shard(*k)
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .map
+                        .contains_key(k);
+                    resident && seen.insert(*k)
+                });
+                own.fifo.len()
+            }
+        }
+    }
+
+    /// Approximate resident bytes attributable to this handle.
+    pub fn session_bytes(&self) -> usize {
+        self.session_resident() * ENTRY_BYTES
+    }
+
+    /// This handle's residency budget in entries, if budgeted.
+    pub fn session_budget_entries(&self) -> Option<usize> {
+        self.session
+            .as_ref()
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).budget_entries)
+    }
+
+    /// Cumulative counters since this handle was created (per-handle:
+    /// a scoped handle starts from zero even though storage is shared).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -177,12 +349,20 @@ impl PairCache {
         }
     }
 
-    /// Drop every entry (counters are preserved).
+    /// Drop every entry in the shared storage (counters are preserved;
+    /// other handles' ledgers are pruned lazily on their next use).
     pub fn clear(&self) {
-        for s in &self.shards {
+        for s in self.shards.iter() {
             let mut s = s.lock().unwrap_or_else(|p| p.into_inner());
             s.map.clear();
             s.fifo.clear();
+        }
+        if let Some(session) = &self.session {
+            session
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .fifo
+                .clear();
         }
     }
 }
@@ -222,11 +402,11 @@ mod tests {
         let c = PairCache::with_capacity_bytes(1);
         // Find two keys landing in the same shard; inserting per_shard+1
         // of them must evict the oldest.
-        let base = PairCache::shard_of(PairCache::key(0, 1_000_000));
+        let base = PairCache::shard_of(PairCache::key_at(0, 0, 1_000_000));
         let mut same: Vec<usize> = Vec::new();
         let mut i = 0usize;
         while same.len() < 2 {
-            if PairCache::shard_of(PairCache::key(i, i + 1_000_000)) == base {
+            if PairCache::shard_of(PairCache::key_at(0, i, i + 1_000_000)) == base {
                 same.push(i);
             }
             i += 1;
@@ -277,5 +457,101 @@ mod tests {
         assert_eq!(c.get(1, 2), None);
         assert_eq!(c.stats().hits, 1);
         assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn scoped_handles_namespace_local_ids() {
+        let root = PairCache::with_capacity_bytes(1 << 20);
+        let a = root.scoped(0, None);
+        let b = root.scoped(100, None);
+        // Same local pair, different namespaces, different corpora.
+        a.insert(0, 1, 1.0);
+        b.insert(0, 1, 2.0);
+        assert_eq!(a.get(0, 1), Some(1.0));
+        assert_eq!(b.get(0, 1), Some(2.0));
+        assert_eq!(root.len(), 2, "two distinct shared entries");
+        // A same-offset handle sees the other's entries (shared shards).
+        assert_eq!(root.get(0, 1), Some(1.0));
+    }
+
+    #[test]
+    fn scoped_counters_are_per_handle() {
+        let root = PairCache::with_capacity_bytes(1 << 20);
+        root.insert(1, 2, 0.5);
+        let _ = root.get(1, 2);
+        let before = root.stats();
+        let s = root.scoped(0, None);
+        assert_eq!(s.get(1, 2), Some(0.5));
+        assert_eq!(s.get(7, 8), None);
+        let ss = s.stats();
+        assert_eq!((ss.hits, ss.misses), (1, 1), "handle counts its own probes");
+        let after = root.stats();
+        assert_eq!(after.hits, before.hits, "root counters untouched by handle");
+        assert_eq!(after.misses, before.misses);
+    }
+
+    #[test]
+    fn session_budget_bounds_handle_residency() {
+        let root = PairCache::with_capacity_bytes(1 << 20);
+        let s = root.scoped(0, Some(2 * ENTRY_BYTES));
+        assert_eq!(s.session_budget_entries(), Some(2));
+        for i in 0..10usize {
+            s.insert(i, i + 100, i as f32);
+        }
+        assert!(s.session_resident() <= 2, "budget caps resident entries");
+        assert_eq!(root.len(), s.session_resident(), "only inserter is the handle");
+        assert!(s.stats().evictions >= 8, "oldest entries were displaced");
+        // The newest insert is still resident.
+        assert_eq!(s.get(9, 109), Some(9.0));
+    }
+
+    #[test]
+    fn budget_churn_keeps_shared_fifo_bounded() {
+        // A tiny shared cache plus a heavily churning budgeted session:
+        // stale FIFO slots from session evictions must not break the
+        // global bound or leak queue memory.
+        let root = PairCache::with_capacity_bytes(1);
+        let s = root.scoped(0, Some(ENTRY_BYTES)); // one-entry budget
+        for i in 0..2000usize {
+            s.insert(i, i + 5_000, i as f32);
+        }
+        assert!(root.len() <= root.capacity_entries());
+        assert!(s.session_resident() <= 1);
+        for shard in root.shards.iter() {
+            let g = shard.lock().unwrap();
+            assert!(
+                g.fifo.len() <= root.per_shard * 2,
+                "stale slots pruned: fifo {} > 2*per_shard {}",
+                g.fifo.len(),
+                root.per_shard
+            );
+        }
+        // The shared cache still works for other handles afterwards.
+        root.insert(1, 3, 0.25);
+        assert_eq!(root.get(1, 3), Some(0.25));
+    }
+
+    #[test]
+    fn concurrent_budgeted_sessions_stay_disjoint() {
+        let root = PairCache::with_capacity_bytes(1 << 20);
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let s = root.scoped(t * 10_000, Some(64 * ENTRY_BYTES));
+                scope.spawn(move || {
+                    for i in 0..300usize {
+                        s.insert(i, i + 1_000, (t * 10_000 + i) as f32);
+                    }
+                    // The 64 newest of this session's entries survive;
+                    // every surviving value is this session's own.
+                    assert!(s.session_resident() <= 64);
+                    for i in 0..300usize {
+                        if let Some(v) = s.get(i, i + 1_000) {
+                            assert_eq!(v, (t * 10_000 + i) as f32);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(root.len() <= 4 * 64);
     }
 }

@@ -211,7 +211,7 @@ pub fn build_condensed(
             let ys: Vec<&Segment> = segments[..i1].to_vec();
             let d = backend.pairwise(&xs, &ys)?;
             Ok((i0, i1, d))
-        });
+        })?;
 
     for r in rows {
         let (i0, i1, d) = r?;
@@ -323,7 +323,7 @@ pub fn build_condensed_cached(
             }
         }
         Ok((i0, vals))
-    });
+    })?;
 
     for r in rows {
         let (i0, vals) = r?;
@@ -351,7 +351,7 @@ pub fn build_cross(
         let i0 = b * block;
         let i1 = (i0 + block).min(xs.len());
         backend.pairwise(&xs[i0..i1], ys)
-    });
+    })?;
     let mut out = Vec::with_capacity(xs.len() * ys.len());
     for r in rows {
         out.extend(r?);
@@ -459,7 +459,7 @@ pub fn build_cross_cached(
             }
         }
         Ok(vals)
-    });
+    })?;
     let mut out = Vec::with_capacity(xs.len() * ys.len());
     for r in rows {
         out.extend(r?);

@@ -64,5 +64,8 @@ pub mod telemetry;
 pub mod util;
 
 pub use aggregate::Aggregation;
-pub use config::{AggregateConfig, AlgoConfig, DatasetSpec, StreamConfig};
-pub use mahc::{MahcDriver, MahcResult, StreamResult, StreamingDriver};
+pub use config::{AggregateConfig, AlgoConfig, DatasetSpec, ServeConfig, StreamConfig};
+pub use mahc::{
+    MahcDriver, MahcResult, ServeDriver, ServeReport, SessionOutcome, SessionSpec, StreamResult,
+    StreamSession, StreamingDriver,
+};

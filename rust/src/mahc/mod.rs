@@ -14,7 +14,10 @@
 //!   final clustering (steps 13-15), with telemetry per iteration;
 //! * [`streaming`] — the online form: one episode of the same loop per
 //!   arriving shard, carrying medoids forward so peak memory stays
-//!   bounded by β for streams of any length.
+//!   bounded by β for streams of any length;
+//! * [`serve`] — the multi-tenant form: many streaming sessions
+//!   interleaved over one worker pool and one shared pair cache, with
+//!   admission control and per-session budgets.
 //!
 //! Both drivers accept a stage-0 aggregation front-end
 //! ([`crate::aggregate`]): with `AlgoConfig::aggregate` active they
@@ -24,11 +27,13 @@
 
 pub mod driver;
 pub mod partition;
+pub mod serve;
 pub mod split;
 pub mod stage;
 pub mod streaming;
 
 pub use driver::{MahcDriver, MahcResult};
 pub use partition::{even_partition, initial_partition, partition_ids};
+pub use serve::{ServeDriver, ServeReport, SessionOutcome, SessionSpec};
 pub use split::{merge_small, split_oversized};
-pub use streaming::{StreamResult, StreamingDriver};
+pub use streaming::{StreamResult, StreamSession, StreamingDriver};

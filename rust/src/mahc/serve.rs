@@ -1,0 +1,686 @@
+//! Concurrent multi-stream serve mode: many [`StreamSession`]s
+//! multiplexed over one shared [`WorkerPool`] and (optionally) one
+//! shared fleet [`PairCache`].
+//!
+//! # Scheduling model
+//!
+//! Each admitted session is stepped **one shard at a time** as a job on
+//! the shared pool; between steps the session travels back to the
+//! scheduler through a completion channel.  A session never has more
+//! than one step in flight, so the per-session shard order — and with
+//! it every bitwise determinism pin on [`StreamSession`] — is preserved
+//! no matter how the fleet interleaves.  Concretely:
+//!
+//! - **Admission** — specs are considered in submission order.  The
+//!   first `fleet_cap` become active, the next `queue_cap` wait in a
+//!   FIFO queue (promoted as active sessions finish), and the rest are
+//!   rejected deterministically.  The β guarantee composes: peak fleet
+//!   matrix memory is bounded by `fleet_cap` times the largest admitted
+//!   session's β(β−1)/2·4 B.
+//! - **Backpressure** — at most `pool.size()` steps are in flight; when
+//!   runnable sessions outnumber free workers the scheduler blocks on
+//!   the completion channel and counts a stall.
+//! - **Panic isolation** — each step job catches unwinds itself and
+//!   reports through the channel.  A panicking step loses only its own
+//!   session (the session state unwinds with the job); the pool worker
+//!   survives ([`WorkerPool`] pins that) and every other session is
+//!   unaffected.
+//! - **Cache budgets** — with `ServeConfig::cache_bytes > 0` sessions
+//!   share one fleet cache through scoped handles
+//!   ([`PairCache::scoped`]): disjoint id offsets keep corpora from
+//!   colliding, and each session's `algo.cache_bytes` becomes its
+//!   residency budget within the shared capacity.  Cache contents never
+//!   change results, so sharing is invisible to every session's output.
+//!
+//! Fleet telemetry ([`FleetHistory`]) samples occupancy, queue depth,
+//! cache pressure and aggregate pairs/sec at every scheduler event,
+//! through the same JSON machinery as per-session `RunHistory`s.
+//! Event *timing* (and thus `step` interleaving in the log) is
+//! nondeterministic under concurrency; session outcomes are not —
+//! [`ServeReport::sessions`] is ordered by submission and each entry is
+//! bitwise what a sequential run of that spec produces.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::streaming::{StreamResult, StreamSession};
+use crate::config::{ServeConfig, StreamConfig};
+use crate::corpus::SegmentSet;
+use crate::distance::{DtwBackend, PairCache};
+use crate::telemetry::{pairs_rate, FleetHistory, FleetRecord, Stopwatch};
+use crate::util::json::{self, Json};
+use crate::util::pool::{panic_message, WorkerPool};
+
+/// One session request: a corpus, its stream configuration, and an
+/// optional injected fault for robustness tests.
+#[derive(Clone)]
+pub struct SessionSpec {
+    /// Display name (fleet telemetry and the CLI table key on this).
+    pub name: String,
+    /// The session's corpus, shared so the spec can outlive the caller.
+    pub set: Arc<SegmentSet>,
+    /// Per-session stream knobs.  `algo.cache_bytes` doubles as the
+    /// session's residency budget inside the shared fleet cache.
+    pub cfg: StreamConfig,
+    /// Fault injection: panic inside the step job once this many shards
+    /// have completed.  `None` (the default) never fires; tests and the
+    /// serve-smoke example use it to pin panic isolation.
+    pub panic_after_shards: Option<usize>,
+}
+
+impl SessionSpec {
+    pub fn new(name: &str, set: Arc<SegmentSet>, cfg: StreamConfig) -> Self {
+        SessionSpec {
+            name: name.to_string(),
+            set,
+            cfg,
+            panic_after_shards: None,
+        }
+    }
+
+    /// Arm the injected fault (see `panic_after_shards`).
+    pub fn with_panic_after_shards(mut self, shards: usize) -> Self {
+        self.panic_after_shards = Some(shards);
+        self
+    }
+}
+
+/// Terminal state of one submitted spec.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    /// The spec's name, copied through for reporting.
+    pub name: String,
+    /// The session's result, or why it produced none: rejected at
+    /// admission, failed validation, errored, or panicked (the panic
+    /// payload is captured as the message).
+    pub result: Result<StreamResult, String>,
+}
+
+/// Everything a serve run produced: per-session outcomes in submission
+/// order plus the fleet-wide event log.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sessions: Vec<SessionOutcome>,
+    pub fleet: FleetHistory,
+}
+
+impl ServeReport {
+    /// Sessions that finished with a result.
+    pub fn completed(&self) -> usize {
+        self.sessions.iter().filter(|s| s.result.is_ok()).count()
+    }
+
+    /// Sessions that did not (rejected, errored, or panicked).
+    pub fn failed(&self) -> usize {
+        self.sessions.len() - self.completed()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let sessions = self
+            .sessions
+            .iter()
+            .map(|s| match &s.result {
+                Ok(r) => json::obj(vec![
+                    ("name", json::s(&s.name)),
+                    ("status", json::s("ok")),
+                    ("k", json::num(r.k as f64)),
+                    ("f_measure", json::num(r.f_measure)),
+                    ("shards", json::num(r.shards as f64)),
+                    ("pairs", json::num(r.pairs as f64)),
+                    ("history", r.history.to_json()),
+                ]),
+                Err(e) => json::obj(vec![
+                    ("name", json::s(&s.name)),
+                    ("status", json::s("failed")),
+                    ("error", json::s(e)),
+                ]),
+            })
+            .collect();
+        json::obj(vec![
+            ("sessions", json::arr(sessions)),
+            (
+                "fleet",
+                json::arr(self.fleet.records.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// What a step job sends back through the completion channel.
+enum StepOut {
+    /// The session consumed one shard and has more to go.
+    Progress(Box<StreamSession<'static>>),
+    /// The session drained its stream and resolved its result.
+    Done(Box<StreamResult>),
+}
+
+/// Run one step (or the final resolve) of a session inside a pool job.
+/// Ownership of the session round-trips through the return value; a
+/// panic drops it mid-unwind, which is exactly the isolation contract —
+/// the session is lost, the worker and every other session are not.
+fn step_once(
+    mut session: Box<StreamSession<'static>>,
+    fault: Option<usize>,
+) -> anyhow::Result<StepOut> {
+    if fault.is_some_and(|k| session.shards_done() >= k) {
+        // lint: allow(R002) injected fault; tests pin that it is confined to its own session
+        panic!(
+            "injected session fault after {} shards",
+            session.shards_done()
+        );
+    }
+    match session.step()? {
+        Some(_) => Ok(StepOut::Progress(session)),
+        None => Ok(StepOut::Done(Box::new(session.finish()?))),
+    }
+}
+
+/// Scheduler gauges snapshotted into every [`FleetRecord`].
+#[derive(Default)]
+struct Gauges {
+    active: usize,
+    inflight: usize,
+    completed: usize,
+    failed: usize,
+    rejected: usize,
+    stalls: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sample(
+    seq: usize,
+    event: &str,
+    session: &str,
+    g: &Gauges,
+    waiting: usize,
+    cache_resident_bytes: usize,
+    pairs_total: usize,
+    wall: Duration,
+) -> FleetRecord {
+    FleetRecord {
+        seq,
+        event: event.to_string(),
+        session: session.to_string(),
+        active: g.active,
+        waiting,
+        inflight: g.inflight,
+        completed: g.completed,
+        failed: g.failed,
+        rejected: g.rejected,
+        stalls: g.stalls,
+        cache_resident_bytes,
+        pairs_total,
+        wall_secs: wall.as_secs_f64(),
+        pairs_per_sec: pairs_rate(pairs_total, wall),
+    }
+}
+
+/// Multiplexes [`StreamSession`]s over a shared worker pool — see the
+/// module docs for the scheduling model.
+pub struct ServeDriver {
+    cfg: ServeConfig,
+    backend: Arc<dyn DtwBackend + Send + Sync>,
+}
+
+impl ServeDriver {
+    /// The backend must be `Send + Sync` because session steps hop
+    /// across pool workers; this rules out host-handle backends like
+    /// XLA at compile time rather than at first dispatch.
+    pub fn new(
+        cfg: ServeConfig,
+        backend: Arc<dyn DtwBackend + Send + Sync>,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(ServeDriver { cfg, backend })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Drive every spec to a terminal state and return the report.
+    ///
+    /// Outcomes are in submission order and bitwise independent of the
+    /// interleaving; only the fleet log's event timing varies run to
+    /// run.
+    pub fn run(&self, specs: Vec<SessionSpec>) -> anyhow::Result<ServeReport> {
+        let n_specs = specs.len();
+        let pool = WorkerPool::new(self.cfg.workers)?;
+        let workers = pool.size();
+        let fleet_cache = (self.cfg.cache_bytes > 0)
+            .then(|| PairCache::with_capacity_bytes(self.cfg.cache_bytes));
+        let cache_resident = |c: &Option<PairCache>| c.as_ref().map_or(0, |cache| cache.bytes());
+
+        let t0 = Stopwatch::start();
+        let mut fleet = FleetHistory::new();
+        let mut seq = 0usize;
+        let mut next_seq = move || {
+            let s = seq;
+            seq += 1;
+            s
+        };
+
+        let mut results: Vec<Option<Result<StreamResult, String>>> =
+            (0..n_specs).map(|_| None).collect();
+        let mut names: Vec<String> = Vec::with_capacity(n_specs);
+        let mut faults: Vec<Option<usize>> = Vec::with_capacity(n_specs);
+        let mut pairs_seen: Vec<usize> = vec![0; n_specs];
+        let mut runnable: VecDeque<(usize, Box<StreamSession<'static>>)> = VecDeque::new();
+        let mut waiting: VecDeque<(usize, Box<StreamSession<'static>>)> = VecDeque::new();
+        let mut g = Gauges::default();
+        let mut pairs_total = 0usize;
+
+        // Admission, in submission order.  Id namespaces in the shared
+        // cache are disjoint ranges: session i's offset is the running
+        // sum of all earlier corpora's sizes.
+        let mut offset = 0usize;
+        for (idx, spec) in specs.into_iter().enumerate() {
+            names.push(spec.name.clone());
+            faults.push(spec.panic_after_shards);
+            let my_offset = offset;
+            let n = spec.set.len();
+            offset = offset.saturating_add(n);
+
+            let has_active_slot = g.active < self.cfg.fleet_cap;
+            if !has_active_slot && waiting.len() >= self.cfg.queue_cap {
+                if let Some(slot) = results.get_mut(idx) {
+                    *slot = Some(Err(format!(
+                        "rejected at admission: {} active sessions at the fleet cap and {} \
+                         waiting at the queue cap",
+                        g.active,
+                        waiting.len()
+                    )));
+                }
+                g.rejected += 1;
+                fleet.push(sample(
+                    next_seq(),
+                    "reject",
+                    &spec.name,
+                    &g,
+                    waiting.len(),
+                    cache_resident(&fleet_cache),
+                    pairs_total,
+                    t0.elapsed(),
+                ));
+                continue;
+            }
+
+            let budget = spec.cfg.algo.cache_bytes;
+            let built = (|| -> anyhow::Result<Box<StreamSession<'static>>> {
+                anyhow::ensure!(
+                    my_offset + n < (1usize << 32),
+                    "fleet cache id namespace exhausted: offset {my_offset} + corpus {n} \
+                     overflows the 32-bit pair-key field"
+                );
+                let mut session =
+                    StreamSession::shared(spec.set, spec.cfg, Arc::clone(&self.backend))?;
+                if budget > 0 {
+                    if let Some(fc) = &fleet_cache {
+                        session = session.with_cache(fc.scoped(my_offset, Some(budget)));
+                    }
+                }
+                Ok(Box::new(session))
+            })();
+            match built {
+                Err(e) => {
+                    if let Some(slot) = results.get_mut(idx) {
+                        *slot = Some(Err(format!("{e:#}")));
+                    }
+                    g.failed += 1;
+                    fleet.push(sample(
+                        next_seq(),
+                        "failed",
+                        &spec.name,
+                        &g,
+                        waiting.len(),
+                        cache_resident(&fleet_cache),
+                        pairs_total,
+                        t0.elapsed(),
+                    ));
+                }
+                Ok(session) => {
+                    let event = if has_active_slot {
+                        g.active += 1;
+                        runnable.push_back((idx, session));
+                        "admit"
+                    } else {
+                        waiting.push_back((idx, session));
+                        "queue"
+                    };
+                    fleet.push(sample(
+                        next_seq(),
+                        event,
+                        &spec.name,
+                        &g,
+                        waiting.len(),
+                        cache_resident(&fleet_cache),
+                        pairs_total,
+                        t0.elapsed(),
+                    ));
+                }
+            }
+        }
+
+        // Event loop: keep up to `workers` steps in flight, harvest
+        // completions, promote waiters as active sessions finish.
+        let (tx, rx) = mpsc::channel::<(usize, Result<StepOut, String>)>();
+        while results.iter().any(|r| r.is_none()) {
+            while g.inflight < workers {
+                let Some((idx, session)) = runnable.pop_front() else {
+                    break;
+                };
+                let job_tx = tx.clone();
+                let fault = faults.get(idx).copied().flatten();
+                pool.execute(move || {
+                    let out =
+                        match catch_unwind(AssertUnwindSafe(move || step_once(session, fault))) {
+                            Ok(Ok(v)) => Ok(v),
+                            Ok(Err(e)) => Err(format!("{e:#}")),
+                            Err(p) => Err(panic_message(p)),
+                        };
+                    let _ = job_tx.send((idx, out));
+                })?;
+                g.inflight += 1;
+            }
+            anyhow::ensure!(
+                g.inflight > 0,
+                "serve scheduler stuck: sessions outstanding with nothing in flight"
+            );
+            if !runnable.is_empty() {
+                // Pool saturated with sessions still ready to step:
+                // this blocking recv is the backpressure path.
+                g.stalls += 1;
+            }
+
+            let (idx, out) = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("serve completion channel closed early"))?;
+            g.inflight -= 1;
+            let name = names.get(idx).cloned().unwrap_or_default();
+            let (event, freed_slot) = match out {
+                Ok(StepOut::Progress(session)) => {
+                    if let Some(seen) = pairs_seen.get_mut(idx) {
+                        pairs_total += session.pairs().saturating_sub(*seen);
+                        *seen = session.pairs();
+                    }
+                    runnable.push_back((idx, session));
+                    ("step", false)
+                }
+                Ok(StepOut::Done(result)) => {
+                    if let Some(seen) = pairs_seen.get_mut(idx) {
+                        pairs_total += result.pairs.saturating_sub(*seen);
+                        *seen = result.pairs;
+                    }
+                    if let Some(slot) = results.get_mut(idx) {
+                        *slot = Some(Ok(*result));
+                    }
+                    g.active -= 1;
+                    g.completed += 1;
+                    ("done", true)
+                }
+                Err(msg) => {
+                    if let Some(slot) = results.get_mut(idx) {
+                        *slot = Some(Err(msg));
+                    }
+                    g.active -= 1;
+                    g.failed += 1;
+                    ("failed", true)
+                }
+            };
+            fleet.push(sample(
+                next_seq(),
+                event,
+                &name,
+                &g,
+                waiting.len(),
+                cache_resident(&fleet_cache),
+                pairs_total,
+                t0.elapsed(),
+            ));
+            if freed_slot && g.active < self.cfg.fleet_cap {
+                if let Some((widx, wsession)) = waiting.pop_front() {
+                    g.active += 1;
+                    let wname = names.get(widx).cloned().unwrap_or_default();
+                    runnable.push_back((widx, wsession));
+                    fleet.push(sample(
+                        next_seq(),
+                        "admit",
+                        &wname,
+                        &g,
+                        waiting.len(),
+                        cache_resident(&fleet_cache),
+                        pairs_total,
+                        t0.elapsed(),
+                    ));
+                }
+            }
+        }
+        drop(tx);
+
+        let sessions = names
+            .into_iter()
+            .zip(results)
+            .map(|(name, r)| SessionOutcome {
+                name,
+                result: r
+                    .unwrap_or_else(|| Err("session never reached a terminal state".to_string())),
+            })
+            .collect();
+        Ok(ServeReport { sessions, fleet })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoConfig, Convergence, DatasetSpec};
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+    use crate::mahc::StreamingDriver;
+
+    fn algo(p0: usize, beta: Option<usize>, iters: usize, cache_bytes: usize) -> AlgoConfig {
+        AlgoConfig {
+            p0,
+            beta,
+            convergence: Convergence::FixedIters(iters),
+            cache_bytes,
+            ..Default::default()
+        }
+    }
+
+    fn backend() -> Arc<dyn DtwBackend + Send + Sync> {
+        Arc::new(NativeBackend::new())
+    }
+
+    /// A small multi-shard spec plus the sequential result it must
+    /// reproduce bitwise under serve-mode interleaving.
+    fn spec_and_expected(i: usize, cache_bytes: usize) -> (SessionSpec, StreamResult) {
+        let set = Arc::new(generate(&DatasetSpec::tiny(56 + 8 * i, 4, 90 + i as u64)));
+        let cfg = StreamConfig::new(algo(2, Some(22), 2, cache_bytes), 24);
+        let expected = StreamingDriver::new(&set, cfg.clone(), &NativeBackend::new())
+            .unwrap()
+            .run()
+            .unwrap();
+        (SessionSpec::new(&format!("s{i}"), set, cfg), expected)
+    }
+
+    #[test]
+    fn concurrent_fleet_reproduces_sequential_sessions_bitwise() {
+        let mut specs = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..4 {
+            let (s, e) = spec_and_expected(i, 16 << 10);
+            specs.push(s);
+            expected.push(e);
+        }
+        let driver = ServeDriver::new(
+            ServeConfig {
+                workers: 3,
+                fleet_cap: 4,
+                queue_cap: 0,
+                cache_bytes: 1 << 20,
+            },
+            backend(),
+        )
+        .unwrap();
+        let report = driver.run(specs).unwrap();
+        assert_eq!(report.sessions.len(), 4);
+        assert_eq!(report.completed(), 4);
+        for (out, exp) in report.sessions.iter().zip(&expected) {
+            let got = out.result.as_ref().expect("session should complete");
+            assert_eq!(got.labels, exp.labels, "labels diverged for {}", out.name);
+            assert_eq!(got.k, exp.k);
+            assert_eq!(got.f_measure.to_bits(), exp.f_measure.to_bits());
+            assert_eq!(got.shards, exp.shards);
+        }
+        assert!(report.fleet.peak_active() <= 4);
+        let recs = &report.fleet.records;
+        assert_eq!(recs.iter().filter(|r| r.event == "done").count(), 4);
+        assert!(report.fleet.final_pairs_per_sec() >= 0.0);
+    }
+
+    #[test]
+    fn injected_panic_fails_only_its_own_session() {
+        let mut specs = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..4 {
+            let (s, e) = spec_and_expected(i, 0);
+            specs.push(s);
+            expected.push(e);
+        }
+        // Session 1 blows up inside its second step job.
+        if let Some(s) = specs.get_mut(1) {
+            s.panic_after_shards = Some(1);
+        }
+        let driver = ServeDriver::new(
+            ServeConfig {
+                workers: 2,
+                fleet_cap: 4,
+                queue_cap: 0,
+                cache_bytes: 0,
+            },
+            backend(),
+        )
+        .unwrap();
+        let report = driver.run(specs).unwrap();
+        assert_eq!(report.completed(), 3);
+        assert_eq!(report.failed(), 1);
+        for (i, (out, exp)) in report.sessions.iter().zip(&expected).enumerate() {
+            if i == 1 {
+                let msg = out.result.as_ref().expect_err("session 1 must fail");
+                assert!(
+                    msg.contains("injected session fault"),
+                    "unexpected failure message: {msg}"
+                );
+            } else {
+                let got = out.result.as_ref().expect("other sessions must survive");
+                assert_eq!(got.labels, exp.labels, "bystander {} perturbed", out.name);
+                assert_eq!(got.f_measure.to_bits(), exp.f_measure.to_bits());
+            }
+        }
+        let recs = &report.fleet.records;
+        assert_eq!(recs.iter().filter(|r| r.event == "failed").count(), 1);
+    }
+
+    #[test]
+    fn admission_queues_then_rejects_deterministically() {
+        let mut specs = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..3 {
+            let (s, e) = spec_and_expected(i, 0);
+            specs.push(s);
+            expected.push(e);
+        }
+        let driver = ServeDriver::new(
+            ServeConfig {
+                workers: 2,
+                fleet_cap: 1,
+                queue_cap: 1,
+                cache_bytes: 0,
+            },
+            backend(),
+        )
+        .unwrap();
+        let report = driver.run(specs).unwrap();
+        // Spec 0 admitted, spec 1 queued then promoted, spec 2 rejected.
+        assert_eq!(report.completed(), 2);
+        let msg = report.sessions[2]
+            .result
+            .as_ref()
+            .expect_err("third spec must be rejected");
+        assert!(msg.contains("rejected at admission"), "got: {msg}");
+        for (out, exp) in report.sessions.iter().zip(&expected).take(2) {
+            let got = out.result.as_ref().expect("admitted sessions complete");
+            assert_eq!(got.labels, exp.labels);
+        }
+        assert!(report.fleet.peak_active() <= 1, "fleet cap violated");
+        let recs = &report.fleet.records;
+        let events: Vec<&str> = recs.iter().map(|r| r.event.as_str()).collect();
+        assert!(events.contains(&"queue"));
+        assert!(events.contains(&"reject"));
+        // Two admissions: the initial one and the promotion.
+        assert_eq!(events.iter().filter(|e| **e == "admit").count(), 2);
+    }
+
+    #[test]
+    fn per_session_budgets_bound_fleet_cache_residency() {
+        let budget = 2048usize; // 64 cache entries per session
+        let mut specs = Vec::new();
+        for i in 0..3 {
+            let (s, _) = spec_and_expected(i, budget);
+            specs.push(s);
+        }
+        let driver = ServeDriver::new(
+            ServeConfig {
+                workers: 3,
+                fleet_cap: 3,
+                queue_cap: 0,
+                cache_bytes: 1 << 20,
+            },
+            backend(),
+        )
+        .unwrap();
+        let report = driver.run(specs).unwrap();
+        assert_eq!(report.completed(), 3);
+        let peak = report.fleet.peak_cache_bytes();
+        assert!(peak > 0, "sessions never touched the fleet cache");
+        assert!(
+            peak <= 3 * budget,
+            "fleet residency {peak} exceeds the sum of session budgets {}",
+            3 * budget
+        );
+    }
+
+    #[test]
+    fn invalid_spec_fails_alone_and_empty_fleet_is_ok() {
+        let empty = ServeDriver::new(ServeConfig::default(), backend())
+            .unwrap()
+            .run(Vec::new())
+            .unwrap();
+        assert!(empty.sessions.is_empty());
+
+        let (good, exp) = spec_and_expected(0, 0);
+        let (mut bad, _) = spec_and_expected(1, 0);
+        bad.cfg.shard_size = 0; // rejected by session validation
+        let report = ServeDriver::new(
+            ServeConfig {
+                workers: 2,
+                fleet_cap: 2,
+                queue_cap: 0,
+                cache_bytes: 0,
+            },
+            backend(),
+        )
+        .unwrap()
+        .run(vec![good, bad])
+        .unwrap();
+        assert_eq!(report.completed(), 1);
+        assert_eq!(report.failed(), 1);
+        let got = report.sessions[0].result.as_ref().expect("good spec runs");
+        assert_eq!(got.labels, exp.labels);
+        assert!(report.sessions[1].result.is_err());
+    }
+}

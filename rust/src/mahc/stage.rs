@@ -48,7 +48,7 @@ pub fn run_stage1(
     let results: Vec<anyhow::Result<SubsetOutcome>> =
         parallel_map(subsets.len(), threads, |s| {
             cluster_one_subset(set, &subsets[s], backend, max_clusters_frac, cache)
-        });
+        })?;
     results.into_iter().collect()
 }
 

@@ -1,6 +1,6 @@
 //! Streaming MAHC: shard-at-a-time clustering under the β bound.
 //!
-//! The batch driver needs the whole corpus up front; this driver
+//! The batch driver needs the whole corpus up front; this module
 //! consumes it as a sequence of bounded shards ([`Shards`]) and keeps
 //! clustering state *O(shard) + O(medoids)* no matter how long the
 //! stream runs:
@@ -30,6 +30,20 @@
 //!    The assignment is a forwarding pointer; when later episodes merge
 //!    medoids, retired members follow transitively.
 //!
+//! # Session state machine
+//!
+//! The loop above is factored into a resumable per-session state
+//! machine, [`StreamSession`]: `step()` consumes one shard and returns
+//! that shard's [`IterationRecord`]; carry/retire/attach state lives in
+//! the session; `finish()` drains any remaining shards and resolves the
+//! forwarding chains into the final [`StreamResult`].
+//! [`StreamingDriver::run`] is a thin loop over one session, so every
+//! bitwise pin on the blocking driver holds for stepped execution too —
+//! and the serve multiplexer ([`crate::mahc::serve`]) interleaves many
+//! sessions' steps over one worker pool and one shared [`PairCache`]
+//! without perturbing any of them (cache contents never change
+//! results).
+//!
 //! A single shard containing the whole corpus runs exactly one episode
 //! with an empty carried set and the same RNG stream as the batch
 //! driver, so its labels, K and F-measure are bitwise identical to
@@ -38,7 +52,9 @@
 //!
 //! [`MahcDriver::run`]: super::MahcDriver::run
 
-use super::driver::run_episode;
+use std::sync::Arc;
+
+use super::driver::{run_episode, EpisodeOutcome};
 use crate::aggregate;
 use crate::config::StreamConfig;
 use crate::corpus::{Segment, SegmentSet, Shards};
@@ -66,9 +82,469 @@ pub struct StreamResult {
     /// of the per-shard totals): nonzero hits here mean medoid × batch
     /// assignment was served from pairs the episodes already computed.
     pub assign_cache: CacheStats,
+    /// Total pair distances produced across the stream (episode builds
+    /// plus retirement rectangles; cache hits included) — the numerator
+    /// of fleet-level pairs/sec accounting in serve mode.
+    pub pairs: usize,
 }
 
-/// Shard-at-a-time MAHC over a [`Shards`] stream.
+/// Corpus handle: borrowed for the in-process driver, shared for
+/// sessions that must be `'static + Send` (serve-mode pool jobs).
+enum SetRef<'a> {
+    Borrowed(&'a SegmentSet),
+    Shared(Arc<SegmentSet>),
+}
+
+impl SetRef<'_> {
+    fn get(&self) -> &SegmentSet {
+        match self {
+            SetRef::Borrowed(s) => s,
+            SetRef::Shared(s) => s,
+        }
+    }
+}
+
+/// Backend handle, mirroring [`SetRef`].
+enum BackendRef<'a> {
+    Borrowed(&'a dyn DtwBackend),
+    Shared(Arc<dyn DtwBackend + Send + Sync>),
+}
+
+impl BackendRef<'_> {
+    fn get(&self) -> &dyn DtwBackend {
+        match self {
+            BackendRef::Borrowed(b) => *b,
+            BackendRef::Shared(b) => b.as_ref(),
+        }
+    }
+}
+
+/// Stream-position state built lazily on the first step (stage-0
+/// aggregation runs here, so constructing a session — e.g. while queued
+/// for admission — costs nothing).
+struct Prepared {
+    agg: Option<aggregate::Aggregation>,
+    /// Leader-probe counter movement, folded into shard 0's record so
+    /// the stream's cache totals include the pass that warmed it.
+    agg_cache: CacheStats,
+    rng: Rng,
+    plan: Shards,
+    total_shards: usize,
+    /// Next shard index.
+    t: usize,
+    /// Forwarding pointer per segment id: the medoid a retired object
+    /// was assigned to, or the leader an aggregated member follows
+    /// (usize::MAX while unset / still active).  Resolved transitively
+    /// once the stream ends.
+    attach: Vec<usize>,
+    carried: Vec<usize>,
+    last_episode: Option<(Vec<usize>, EpisodeOutcome)>,
+}
+
+/// Resumable per-session streaming state machine: feed a shard with
+/// [`StreamSession::step`], get back that shard's [`IterationRecord`];
+/// resolve the run with [`StreamSession::finish`].
+///
+/// Constructed over borrowed state by [`StreamSession::new`] (the
+/// [`StreamingDriver`] path) or over `Arc`-shared state by
+/// [`StreamSession::shared`], which yields a `StreamSession<'static>`
+/// that is `Send` — movable into worker-pool jobs by the serve
+/// multiplexer.
+pub struct StreamSession<'a> {
+    set: SetRef<'a>,
+    cfg: StreamConfig,
+    backend: BackendRef<'a>,
+    /// Private per-session cache (from `algo.cache_bytes`), or a scoped
+    /// handle onto a shared fleet cache installed via
+    /// [`StreamSession::with_cache`].
+    cache: Option<PairCache>,
+    history: RunHistory,
+    assign_cache: CacheStats,
+    pairs: usize,
+    state: Option<Prepared>,
+    done: bool,
+}
+
+impl<'a> StreamSession<'a> {
+    /// Session over borrowed corpus + backend (single-tenant use).
+    pub fn new(
+        set: &'a SegmentSet,
+        cfg: StreamConfig,
+        backend: &'a dyn DtwBackend,
+    ) -> anyhow::Result<Self> {
+        Self::from_parts(SetRef::Borrowed(set), cfg, BackendRef::Borrowed(backend))
+    }
+
+    fn from_parts(
+        set: SetRef<'a>,
+        cfg: StreamConfig,
+        backend: BackendRef<'a>,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        if set.get().is_empty() {
+            anyhow::bail!("empty dataset");
+        }
+        let algo = &cfg.algo;
+        let base_name = if algo.beta.is_some() {
+            "mahc+m-stream"
+        } else {
+            "mahc-stream"
+        };
+        let algo_name = if algo.aggregate.is_active() {
+            format!("{base_name}+agg")
+        } else {
+            base_name.to_string()
+        };
+        let history = RunHistory::new(&set.get().name, &algo_name);
+        let cache =
+            (algo.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(algo.cache_bytes));
+        Ok(StreamSession {
+            set,
+            cfg,
+            backend,
+            cache,
+            history,
+            assign_cache: CacheStats::default(),
+            pairs: 0,
+            state: None,
+            done: false,
+        })
+    }
+
+    /// Replace the session's cache with `cache` — typically a scoped,
+    /// budgeted handle onto a shared fleet cache
+    /// ([`PairCache::scoped`]).  Call before the first `step()`;
+    /// because cache contents never change results, the swap affects
+    /// hit rates and residency accounting only.
+    pub fn with_cache(mut self, cache: PairCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// The session's cache handle, if caching is enabled.
+    pub fn cache(&self) -> Option<&PairCache> {
+        self.cache.as_ref()
+    }
+
+    /// Shards consumed so far.
+    pub fn shards_done(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.t)
+    }
+
+    /// Total shards the plan yields (known after the first step).
+    pub fn total_shards(&self) -> Option<usize> {
+        self.state.as_ref().map(|s| s.total_shards)
+    }
+
+    /// Whether the stream is exhausted (`step()` would return `None`).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Pair distances produced so far (episodes + retirement).
+    pub fn pairs(&self) -> usize {
+        self.pairs
+    }
+
+    /// Per-shard records pushed so far.
+    pub fn history(&self) -> &RunHistory {
+        &self.history
+    }
+
+    /// Stage 0 + stream planning; runs once, on the first step.
+    fn prepare(&self) -> anyhow::Result<Prepared> {
+        let set = self.set.get();
+        let algo = &self.cfg.algo;
+        let backend = self.backend.get();
+        let cache = self.cache.as_ref();
+
+        // Stage 0: leader-pass aggregation over the whole corpus, so
+        // the *stream consists of representatives* (ε = 0 skips this
+        // and the stream is bitwise the historical one).  Members
+        // attach to their leader up front — the same forwarding-pointer
+        // mechanism retirement uses — and resolve transitively with the
+        // retired objects once the stream ends.
+        let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let agg = algo
+            .aggregate
+            .is_active()
+            .then(|| aggregate::aggregate(set, &algo.aggregate, backend, algo.threads, cache))
+            .transpose()?;
+        let agg_cache = cache
+            .map(|c| c.stats().delta(&agg_snapshot))
+            .unwrap_or_default();
+        let m = agg.as_ref().map_or(set.len(), |a| a.reps());
+        // The corpus is nonempty (rejected at construction), so the
+        // leader pass must elect at least one representative: every
+        // segment either becomes a leader or joins one.
+        anyhow::ensure!(
+            m > 0,
+            "aggregation over a nonempty corpus produced no representatives"
+        );
+
+        // Seeded *after* aggregation so the episode RNG stream is
+        // identical whether or not stage 0 ran.
+        let rng = Rng::seed_from(algo.seed);
+        let plan = Shards::new(m, self.cfg.shard_size, self.cfg.shard_seed);
+        let total_shards = plan.total();
+
+        let mut attach: Vec<usize> = vec![usize::MAX; set.len()];
+        if let Some(a) = &agg {
+            for (pos, &rep) in a.rep_ids.iter().enumerate() {
+                for &id in &a.members[pos] {
+                    if id != rep {
+                        attach[id] = rep;
+                    }
+                }
+            }
+        }
+        Ok(Prepared {
+            agg,
+            agg_cache,
+            rng,
+            plan,
+            total_shards,
+            t: 0,
+            attach,
+            carried: Vec::new(),
+            last_episode: None,
+        })
+    }
+
+    /// Consume the next shard: run its episode, retire non-carried
+    /// objects, and return the shard's telemetry record — or `None`
+    /// when the stream is exhausted.
+    pub fn step(&mut self) -> anyhow::Result<Option<IterationRecord>> {
+        if self.done {
+            return Ok(None);
+        }
+        if self.state.is_none() {
+            self.state = Some(self.prepare()?);
+        }
+        let Some(st) = self.state.as_mut() else {
+            anyhow::bail!("session state missing after prepare");
+        };
+        let Some(shard) = st.plan.next() else {
+            self.done = true;
+            return Ok(None);
+        };
+        let set = self.set.get();
+        let backend = self.backend.get();
+        let algo = &self.cfg.algo;
+        let cache = self.cache.as_ref();
+        let n = set.len();
+        let t = st.t;
+        let total_shards = st.total_shards;
+
+        let t0 = Stopwatch::start();
+        let carried_in = st.carried.len();
+        // Shard entries are stream positions 0..m; map them to global
+        // segment ids (identity when aggregation is off).
+        let active: Vec<usize> = st
+            .carried
+            .iter()
+            .copied()
+            .chain(shard.iter().map(|&p| match &st.agg {
+                Some(a) => a.rep_ids[p],
+                None => p,
+            }))
+            .collect();
+
+        let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let ep = run_episode(set, &active, algo, backend, cache, &mut st.rng, None)?;
+
+        let mut rect_bytes = 0usize;
+        let mut rect_pairs = 0usize;
+        let mut rect_delta = CacheStats::default();
+        if t + 1 < total_shards {
+            // Retire: everything not carried forward follows its
+            // nearest surviving medoid (medoid × batch rectangle).
+            let mut is_medoid = vec![false; n];
+            for &m in &ep.medoid_ids {
+                is_medoid[m] = true;
+            }
+            let retired: Vec<usize> =
+                active.iter().copied().filter(|&id| !is_medoid[id]).collect();
+            if !retired.is_empty() {
+                let xs: Vec<&Segment> =
+                    ep.medoid_ids.iter().map(|&i| &set.segments[i]).collect();
+                let ys: Vec<&Segment> = retired.iter().map(|&i| &set.segments[i]).collect();
+                let rect_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+                let d = build_cross_cached(&xs, &ys, backend, algo.threads, cache)?;
+                if let Some(c) = cache {
+                    rect_delta = c.stats().delta(&rect_snapshot);
+                }
+                rect_pairs = xs.len() * ys.len();
+                rect_bytes = rect_pairs * std::mem::size_of::<f32>();
+                // Column argmin over the rows=medoids rectangle,
+                // walking each row contiguously.  Strict < on rows in
+                // increasing order keeps ties on the first medoid —
+                // deterministic under any thread count.
+                let ny = ys.len();
+                let mut best = vec![0usize; ny];
+                let mut best_d = vec![f32::INFINITY; ny];
+                for (i, row) in d.chunks_exact(ny).enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        if v < best_d[j] {
+                            best_d[j] = v;
+                            best[j] = i;
+                        }
+                    }
+                }
+                for (j, &id) in retired.iter().enumerate() {
+                    st.attach[id] = ep.medoid_ids[best[j]];
+                }
+            }
+            st.carried = ep.medoid_ids.clone();
+        }
+        self.assign_cache.hits += rect_delta.hits;
+        self.assign_cache.misses += rect_delta.misses;
+        self.assign_cache.evictions += rect_delta.evictions;
+
+        let mut shard_delta = match cache {
+            Some(c) => c.stats().delta(&shard_snapshot),
+            None => CacheStats::default(),
+        };
+        if t == 0 {
+            shard_delta.hits += st.agg_cache.hits;
+            shard_delta.misses += st.agg_cache.misses;
+            shard_delta.evictions += st.agg_cache.evictions;
+        }
+        // Stage-0 probe-engine stamps, carried by the first shard's
+        // record only (the pass runs once, before the stream).
+        let (probe_rounds, rect_rows, rect_cols, supers, eps_eff) = match (&st.agg, t) {
+            (Some(a), 0) => (
+                a.probe_rounds,
+                a.rect_rows,
+                a.rect_cols,
+                a.super_leaders,
+                a.epsilon as f64,
+            ),
+            _ => (0, 0, 0, 0, 0.0),
+        };
+        let wall = t0.elapsed();
+        let record = IterationRecord {
+            iteration: t,
+            subsets: ep.summary.final_subsets,
+            max_occupancy: ep.summary.max_occupancy,
+            min_occupancy: ep.summary.min_occupancy,
+            max_occupancy_pre_split: ep.summary.max_occupancy_pre_split,
+            splits: ep.summary.splits,
+            total_clusters: ep.summary.total_clusters,
+            f_measure: ep.f_measure,
+            wall,
+            peak_matrix_bytes: ep.summary.peak_matrix_bytes.max(rect_bytes),
+            cache: shard_delta,
+            carried_medoids: carried_in,
+            representatives: st.agg.as_ref().map_or(0, |a| a.reps()),
+            compression_ratio: st.agg.as_ref().map_or(1.0, |a| a.compression_ratio()),
+            assignment_pairs: match (&st.agg, t) {
+                (Some(a), 0) => a.probe_pairs,
+                _ => 0,
+            },
+            sample_pairs: match (&st.agg, t) {
+                (Some(a), 0) => a.sample_pairs,
+                _ => 0,
+            },
+            probe_rounds,
+            probe_rect_rows: rect_rows,
+            probe_rect_cols: rect_cols,
+            super_leaders: supers,
+            aggregate_epsilon: eps_eff,
+            backend: backend.name().to_string(),
+            // Shard throughput counts the episode's pairs plus the
+            // retirement rectangle's.
+            pairs_per_sec: pairs_rate(ep.summary.pairs + rect_pairs, wall),
+        };
+        self.pairs += ep.summary.pairs + rect_pairs;
+        self.history.push(record.clone());
+        st.last_episode = Some((active, ep));
+        st.t += 1;
+        if st.t >= total_shards {
+            self.done = true;
+        }
+        Ok(Some(record))
+    }
+
+    /// Drain any remaining shards and resolve the stream: final labels
+    /// via the forwarding chains, final K and F-measure.
+    pub fn finish(mut self) -> anyhow::Result<StreamResult> {
+        while self.step()?.is_some() {}
+        let st = self
+            .state
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("stream delivered no shards"))?;
+        let (final_active, final_ep) = st
+            .last_episode
+            .ok_or_else(|| anyhow::anyhow!("stream delivered no shards"))?;
+        let set = self.set.get();
+        let n = set.len();
+
+        // Labels of the final episode's active objects, by segment id.
+        let mut labels = vec![usize::MAX; n];
+        for (pos, &id) in final_active.iter().enumerate() {
+            labels[id] = final_ep.labels[pos];
+        }
+        // Retired objects follow their forwarding chain: each hop lands
+        // on a medoid that stayed active at least one more shard, so
+        // every chain terminates at a finally-labelled object.
+        // Aggregated members prepend one hop (member → leader) to their
+        // leader's chain, hence the +1 on the bound.
+        let max_hops = st.total_shards + usize::from(st.agg.is_some());
+        let attach = st.attach;
+        for id in 0..n {
+            if labels[id] != usize::MAX {
+                continue;
+            }
+            let mut cur = id;
+            let mut hops = 0usize;
+            while labels[cur] == usize::MAX {
+                anyhow::ensure!(
+                    attach[cur] != usize::MAX,
+                    "segment {cur} neither labelled nor attached"
+                );
+                cur = attach[cur];
+                hops += 1;
+                anyhow::ensure!(
+                    hops <= max_hops,
+                    "forwarding chain longer than the stream"
+                );
+            }
+            labels[id] = labels[cur];
+        }
+
+        let f_measure = metrics::f_measure(&labels, &set.labels());
+        Ok(StreamResult {
+            labels,
+            k: final_ep.k,
+            f_measure,
+            history: self.history,
+            shards: st.total_shards,
+            assign_cache: self.assign_cache,
+            pairs: self.pairs,
+        })
+    }
+}
+
+impl StreamSession<'static> {
+    /// Session over `Arc`-shared corpus + backend: the result is
+    /// `'static` and `Send`, movable into worker-pool jobs (the serve
+    /// multiplexer's unit of scheduling).
+    pub fn shared(
+        set: Arc<SegmentSet>,
+        cfg: StreamConfig,
+        backend: Arc<dyn DtwBackend + Send + Sync>,
+    ) -> anyhow::Result<Self> {
+        Self::from_parts(SetRef::Shared(set), cfg, BackendRef::Shared(backend))
+    }
+}
+
+/// Shard-at-a-time MAHC over a [`Shards`] stream: a thin blocking loop
+/// over one [`StreamSession`].
 pub struct StreamingDriver<'a> {
     set: &'a SegmentSet,
     cfg: StreamConfig,
@@ -95,252 +571,7 @@ impl<'a> StreamingDriver<'a> {
     /// Consume the whole stream; returns the final clustering + one
     /// telemetry record per shard.
     pub fn run(&self) -> anyhow::Result<StreamResult> {
-        let algo = &self.cfg.algo;
-        let n = self.set.len();
-        let base_name = if algo.beta.is_some() {
-            "mahc+m-stream"
-        } else {
-            "mahc-stream"
-        };
-        let algo_name = if algo.aggregate.is_active() {
-            format!("{base_name}+agg")
-        } else {
-            base_name.to_string()
-        };
-        let mut history = RunHistory::new(&self.set.name, &algo_name);
-
-        // One cache for the whole stream: episodes warm it with subset
-        // and medoid pairs, retirement rectangles and later episodes
-        // reap the hits.
-        let cache =
-            (algo.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(algo.cache_bytes));
-        let cache = cache.as_ref();
-        let mut assign_cache = CacheStats::default();
-
-        // Stage 0: leader-pass aggregation over the whole corpus, so
-        // the *stream consists of representatives* (ε = 0 skips this
-        // and the stream is bitwise the historical one).  Members
-        // attach to their leader up front — the same forwarding-pointer
-        // mechanism retirement uses — and resolve transitively with the
-        // retired objects once the stream ends.
-        let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
-        let agg = algo
-            .aggregate
-            .is_active()
-            .then(|| {
-                aggregate::aggregate(self.set, &algo.aggregate, self.backend, algo.threads, cache)
-            })
-            .transpose()?;
-        // Leader-probe counter movement, folded into shard 0's record
-        // below so the stream's cache totals include the pass that
-        // warmed it.
-        let agg_cache = cache
-            .map(|c| c.stats().delta(&agg_snapshot))
-            .unwrap_or_default();
-        let m = agg.as_ref().map_or(n, |a| a.reps());
-        anyhow::ensure!(m > 0 || n == 0, "aggregation produced no representatives");
-
-        let mut rng = Rng::seed_from(algo.seed);
-        let plan = Shards::new(m, self.cfg.shard_size, self.cfg.shard_seed);
-        let total_shards = plan.total();
-
-        // Forwarding pointer per segment id: the medoid a retired
-        // object was assigned to, or the leader an aggregated member
-        // follows (usize::MAX while unset / still active).  Resolved
-        // transitively once the stream ends.
-        let mut attach: Vec<usize> = vec![usize::MAX; n];
-        if let Some(a) = &agg {
-            for (pos, &rep) in a.rep_ids.iter().enumerate() {
-                for &id in &a.members[pos] {
-                    if id != rep {
-                        attach[id] = rep;
-                    }
-                }
-            }
-        }
-        let mut carried: Vec<usize> = Vec::new();
-        let mut last_episode = None;
-
-        for (t, shard) in plan.enumerate() {
-            let t0 = Stopwatch::start();
-            let carried_in = carried.len();
-            // Shard entries are stream positions 0..m; map them to
-            // global segment ids (identity when aggregation is off).
-            let active: Vec<usize> = carried
-                .iter()
-                .copied()
-                .chain(shard.iter().map(|&p| match &agg {
-                    Some(a) => a.rep_ids[p],
-                    None => p,
-                }))
-                .collect();
-
-            let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
-            let ep = run_episode(
-                self.set,
-                &active,
-                algo,
-                self.backend,
-                cache,
-                &mut rng,
-                None,
-            )?;
-
-            let mut rect_bytes = 0usize;
-            let mut rect_pairs = 0usize;
-            let mut rect_delta = CacheStats::default();
-            if t + 1 < total_shards {
-                // Retire: everything not carried forward follows its
-                // nearest surviving medoid (medoid × batch rectangle).
-                let mut is_medoid = vec![false; n];
-                for &m in &ep.medoid_ids {
-                    is_medoid[m] = true;
-                }
-                let retired: Vec<usize> =
-                    active.iter().copied().filter(|&id| !is_medoid[id]).collect();
-                if !retired.is_empty() {
-                    let xs: Vec<&Segment> = ep
-                        .medoid_ids
-                        .iter()
-                        .map(|&i| &self.set.segments[i])
-                        .collect();
-                    let ys: Vec<&Segment> =
-                        retired.iter().map(|&i| &self.set.segments[i]).collect();
-                    let rect_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
-                    let d =
-                        build_cross_cached(&xs, &ys, self.backend, algo.threads, cache)?;
-                    if let Some(c) = cache {
-                        rect_delta = c.stats().delta(&rect_snapshot);
-                    }
-                    rect_pairs = xs.len() * ys.len();
-                    rect_bytes = rect_pairs * std::mem::size_of::<f32>();
-                    // Column argmin over the rows=medoids rectangle,
-                    // walking each row contiguously.  Strict < on rows
-                    // in increasing order keeps ties on the first
-                    // medoid — deterministic under any thread count.
-                    let ny = ys.len();
-                    let mut best = vec![0usize; ny];
-                    let mut best_d = vec![f32::INFINITY; ny];
-                    for (i, row) in d.chunks_exact(ny).enumerate() {
-                        for (j, &v) in row.iter().enumerate() {
-                            if v < best_d[j] {
-                                best_d[j] = v;
-                                best[j] = i;
-                            }
-                        }
-                    }
-                    for (j, &id) in retired.iter().enumerate() {
-                        attach[id] = ep.medoid_ids[best[j]];
-                    }
-                }
-                carried = ep.medoid_ids.clone();
-            }
-            assign_cache.hits += rect_delta.hits;
-            assign_cache.misses += rect_delta.misses;
-            assign_cache.evictions += rect_delta.evictions;
-
-            let mut shard_delta = match cache {
-                Some(c) => c.stats().delta(&shard_snapshot),
-                None => CacheStats::default(),
-            };
-            if t == 0 {
-                shard_delta.hits += agg_cache.hits;
-                shard_delta.misses += agg_cache.misses;
-                shard_delta.evictions += agg_cache.evictions;
-            }
-            // Stage-0 probe-engine stamps, carried by the first shard's
-            // record only (the pass runs once, before the stream).
-            let (probe_rounds, rect_rows, rect_cols, supers, eps_eff) = match (&agg, t) {
-                (Some(a), 0) => (
-                    a.probe_rounds,
-                    a.rect_rows,
-                    a.rect_cols,
-                    a.super_leaders,
-                    a.epsilon as f64,
-                ),
-                _ => (0, 0, 0, 0, 0.0),
-            };
-            let wall = t0.elapsed();
-            history.push(IterationRecord {
-                iteration: t,
-                subsets: ep.summary.final_subsets,
-                max_occupancy: ep.summary.max_occupancy,
-                min_occupancy: ep.summary.min_occupancy,
-                max_occupancy_pre_split: ep.summary.max_occupancy_pre_split,
-                splits: ep.summary.splits,
-                total_clusters: ep.summary.total_clusters,
-                f_measure: ep.f_measure,
-                wall,
-                peak_matrix_bytes: ep.summary.peak_matrix_bytes.max(rect_bytes),
-                cache: shard_delta,
-                carried_medoids: carried_in,
-                representatives: agg.as_ref().map_or(0, |a| a.reps()),
-                compression_ratio: agg.as_ref().map_or(1.0, |a| a.compression_ratio()),
-                assignment_pairs: match (&agg, t) {
-                    (Some(a), 0) => a.probe_pairs,
-                    _ => 0,
-                },
-                sample_pairs: match (&agg, t) {
-                    (Some(a), 0) => a.sample_pairs,
-                    _ => 0,
-                },
-                probe_rounds,
-                probe_rect_rows: rect_rows,
-                probe_rect_cols: rect_cols,
-                super_leaders: supers,
-                aggregate_epsilon: eps_eff,
-                backend: self.backend.name().to_string(),
-                // Shard throughput counts the episode's pairs plus the
-                // retirement rectangle's.
-                pairs_per_sec: pairs_rate(ep.summary.pairs + rect_pairs, wall),
-            });
-            last_episode = Some((active, ep));
-        }
-
-        let (final_active, final_ep) =
-            last_episode.ok_or_else(|| anyhow::anyhow!("stream delivered no shards"))?;
-
-        // Labels of the final episode's active objects, by segment id.
-        let mut labels = vec![usize::MAX; n];
-        for (pos, &id) in final_active.iter().enumerate() {
-            labels[id] = final_ep.labels[pos];
-        }
-        // Retired objects follow their forwarding chain: each hop lands
-        // on a medoid that stayed active at least one more shard, so
-        // every chain terminates at a finally-labelled object.
-        // Aggregated members prepend one hop (member → leader) to their
-        // leader's chain, hence the +1 on the bound.
-        let max_hops = total_shards + usize::from(agg.is_some());
-        for id in 0..n {
-            if labels[id] != usize::MAX {
-                continue;
-            }
-            let mut cur = id;
-            let mut hops = 0usize;
-            while labels[cur] == usize::MAX {
-                anyhow::ensure!(
-                    attach[cur] != usize::MAX,
-                    "segment {cur} neither labelled nor attached"
-                );
-                cur = attach[cur];
-                hops += 1;
-                anyhow::ensure!(
-                    hops <= max_hops,
-                    "forwarding chain longer than the stream"
-                );
-            }
-            labels[id] = labels[cur];
-        }
-
-        let f_measure = metrics::f_measure(&labels, &self.set.labels());
-        Ok(StreamResult {
-            labels,
-            k: final_ep.k,
-            f_measure,
-            history,
-            shards: total_shards,
-            assign_cache,
-        })
+        StreamSession::new(self.set, self.cfg.clone(), self.backend)?.finish()
     }
 }
 
@@ -496,6 +727,13 @@ mod tests {
         .err()
         .expect("empty corpus must be rejected at construction");
         assert!(err.to_string().contains("empty"), "got: {err}");
+        // The session constructor rejects it the same way.
+        assert!(StreamSession::new(
+            &empty,
+            StreamConfig::new(algo(2, Some(8), 2), 4),
+            &backend
+        )
+        .is_err());
     }
 
     #[test]
@@ -639,6 +877,12 @@ mod tests {
             &backend
         )
         .is_err());
+        assert!(StreamSession::new(
+            &set,
+            StreamConfig::new(AlgoConfig::default(), 0),
+            &backend
+        )
+        .is_err());
         let empty = SegmentSet {
             name: "empty".into(),
             dim: 3,
@@ -651,5 +895,145 @@ mod tests {
             &backend
         )
         .is_err());
+    }
+
+    #[test]
+    fn stepwise_session_reproduces_run_bitwise() {
+        // The state machine IS the loop: stepping shard by shard and
+        // finishing must equal StreamingDriver::run exactly, record for
+        // record.
+        let set = generate(&DatasetSpec::tiny(120, 6, 52));
+        let backend = NativeBackend::new();
+        let cfg = StreamConfig::new(algo(2, Some(30), 3), 40);
+        let run = StreamingDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut session = StreamSession::new(&set, cfg, &backend).unwrap();
+        assert_eq!(session.shards_done(), 0);
+        assert_eq!(session.total_shards(), None, "plan is lazy");
+        let mut steps = 0usize;
+        while let Some(r) = session.step().unwrap() {
+            assert_eq!(r.iteration, steps);
+            steps += 1;
+            assert_eq!(session.shards_done(), steps);
+        }
+        assert!(session.is_done());
+        assert_eq!(session.total_shards(), Some(run.shards));
+        assert!(session.step().unwrap().is_none(), "idempotent at end");
+        let res = session.finish().unwrap();
+        assert_eq!(steps, run.shards);
+        assert_eq!(res.labels, run.labels);
+        assert_eq!(res.k, run.k);
+        assert_eq!(res.f_measure.to_bits(), run.f_measure.to_bits());
+        assert_eq!(res.pairs, run.pairs);
+        assert_eq!(res.history.records.len(), run.history.records.len());
+        for (a, b) in res.history.records.iter().zip(&run.history.records) {
+            assert_eq!(a.total_clusters, b.total_clusters);
+            assert_eq!(a.carried_medoids, b.carried_medoids);
+            assert_eq!(a.f_measure.to_bits(), b.f_measure.to_bits());
+        }
+    }
+
+    #[test]
+    fn finish_drains_a_partially_stepped_session() {
+        let set = generate(&DatasetSpec::tiny(100, 5, 55));
+        let backend = NativeBackend::new();
+        let cfg = StreamConfig::new(algo(2, Some(30), 3), 30);
+        let run = StreamingDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut session = StreamSession::new(&set, cfg, &backend).unwrap();
+        session.step().unwrap().expect("first shard");
+        let res = session.finish().unwrap();
+        assert_eq!(res.labels, run.labels);
+        assert_eq!(res.k, run.k);
+        assert_eq!(res.f_measure.to_bits(), run.f_measure.to_bits());
+        assert_eq!(res.shards, run.shards);
+    }
+
+    #[test]
+    fn scoped_shared_cache_session_is_bitwise_identical() {
+        // A session running over a budgeted scoped handle of a shared
+        // fleet cache must reproduce the plain run exactly: cache
+        // contents and budgets change hit rates, never results.
+        let set = generate(&DatasetSpec::tiny(120, 6, 56));
+        let backend = NativeBackend::new();
+        let cfg = StreamConfig::new(algo(2, Some(30), 3), 40);
+        let plain = StreamingDriver::new(&set, cfg.clone(), &backend)
+            .unwrap()
+            .run()
+            .unwrap();
+        let fleet = PairCache::with_capacity_bytes(4 << 20);
+        let handle = fleet.scoped(0, Some(64 << 10));
+        let res = StreamSession::new(&set, cfg, &backend)
+            .unwrap()
+            .with_cache(handle)
+            .finish()
+            .unwrap();
+        assert_eq!(res.labels, plain.labels);
+        assert_eq!(res.k, plain.k);
+        assert_eq!(res.f_measure.to_bits(), plain.f_measure.to_bits());
+        assert!(fleet.len() > 0, "session warmed the shared cache");
+        assert!(
+            fleet.bytes() <= fleet.capacity_entries() * crate::distance::cache::ENTRY_BYTES,
+            "fleet capacity respected"
+        );
+    }
+
+    #[test]
+    fn aggregation_on_nonempty_corpus_always_yields_representatives() {
+        // The real invariant behind the old `m > 0 || n == 0` guard
+        // (whose n == 0 arm was dead — empty corpora are rejected at
+        // construction): a leader pass over a nonempty corpus elects at
+        // least one representative for any legal ε/cap, because every
+        // segment either becomes a leader or joins one.
+        let set = generate(&DatasetSpec::tiny(30, 3, 53));
+        let backend = NativeBackend::new();
+        for eps in [0.5_f32, 10.0, 1e30] {
+            for cap in [None, Some(1), Some(5)] {
+                let mut a = algo(2, Some(12), 2);
+                a.aggregate = crate::config::AggregateConfig {
+                    epsilon: eps,
+                    cap,
+                    ..Default::default()
+                };
+                let res = StreamingDriver::new(&set, StreamConfig::new(a, 10), &backend)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                let reps = res.history.records[0].representatives;
+                assert!(reps >= 1, "eps={eps} cap={cap:?}: no representatives");
+                assert_eq!(res.labels.len(), 30, "everyone labelled");
+                assert!(res.labels.iter().all(|&l| l < res.k));
+            }
+        }
+    }
+
+    #[test]
+    fn shared_session_is_send_and_movable_across_threads() {
+        // The serve multiplexer moves sessions into worker-pool jobs:
+        // a shared-ownership session must be Send, and running it on
+        // another thread must be bitwise the sequential run.
+        fn assert_send<T: Send>(_: &T) {}
+        let set = Arc::new(generate(&DatasetSpec::tiny(60, 4, 54)));
+        let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+        let cfg = StreamConfig::new(algo(2, Some(20), 2), 20);
+        let seq = StreamingDriver::new(&set, cfg.clone(), backend.as_ref())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut session =
+            StreamSession::shared(Arc::clone(&set), cfg, Arc::clone(&backend)).unwrap();
+        assert_send(&session);
+        session.step().unwrap().expect("first shard on this thread");
+        let res = std::thread::spawn(move || session.finish())
+            .join()
+            .expect("no panic")
+            .unwrap();
+        assert_eq!(res.labels, seq.labels);
+        assert_eq!(res.k, seq.k);
+        assert_eq!(res.f_measure.to_bits(), seq.f_measure.to_bits());
     }
 }

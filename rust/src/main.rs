@@ -8,6 +8,10 @@
 //! * `stream` — shard-at-a-time MAHC: consume the corpus as a stream of
 //!   `--shard-size` batches, carrying medoids forward under the β
 //!   bound; prints per-shard telemetry.
+//! * `serve` — concurrent multi-stream mode: `--sessions` streaming
+//!   sessions interleaved over one worker pool (and optionally one
+//!   shared pair cache), with admission control and per-session
+//!   budgets; prints per-session outcomes and fleet telemetry.
 //! * `datagen` — generate a dataset and print its Table-1 composition.
 //! * `inspect` — validate the artifact manifest and report entries.
 //!
@@ -18,17 +22,21 @@
 //! mahc cluster --dataset small_a --scale 0.05 --aggregate-eps 12.5 --aggregate-cap 64
 //! mahc cluster --dataset small_b --scale 0.05 --algo ahc
 //! mahc stream --dataset small_a --scale 0.05 --shard-size 300 --beta 150 --cache-mb 64
+//! mahc serve --dataset small_a --scale 0.05 --sessions 6 --fleet-cap 4 --fleet-cache-mb 64
 //! mahc datagen --dataset medium --scale 0.1
 //! mahc inspect --artifacts artifacts
 //! ```
 
+use std::sync::Arc;
+
 use mahc::baselines;
 use mahc::config::{
-    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, StreamConfig,
+    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, ServeConfig,
+    StreamConfig,
 };
 use mahc::corpus::{generate, CompositionStats};
 use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
-use mahc::mahc::{MahcDriver, StreamingDriver};
+use mahc::mahc::{MahcDriver, ServeDriver, SessionSpec, StreamingDriver};
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use mahc::util::cli::Args;
 
@@ -36,7 +44,8 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
     "aggregate-eps", "aggregate-cap", "aggregate-batch", "aggregate-tree", "aggregate-probe",
-    "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed",
+    "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed", "sessions", "fleet-cap",
+    "queue-cap", "workers", "fleet-cache-mb", "fault-session",
 ];
 
 fn main() {
@@ -51,13 +60,14 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("cluster") => cluster(&args),
         Some("stream") => stream(&args),
+        Some("serve") => serve(&args),
         Some("datagen") => datagen(&args),
         Some("inspect") => inspect(&args),
         Some(other) => {
-            anyhow::bail!("unknown subcommand '{other}' (cluster|stream|datagen|inspect)")
+            anyhow::bail!("unknown subcommand '{other}' (cluster|stream|serve|datagen|inspect)")
         }
         None => {
-            eprintln!("usage: mahc <cluster|stream|datagen|inspect> [options]");
+            eprintln!("usage: mahc <cluster|stream|serve|datagen|inspect> [options]");
             eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|blocked|xla] [--threads N] [--seed N] [--out FILE]");
@@ -76,6 +86,15 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--cache-mb N] [--aggregate-eps F] [--aggregate-cap N] [--out FILE]");
             eprintln!("          [--aggregate-quantile Q] [--aggregate-sample N] [--aggregate-batch N]");
             eprintln!("          [--aggregate-tree K] [--aggregate-probe N]");
+            eprintln!("  serve   --dataset <name> [--scale F] [--sessions N   concurrent streams]");
+            eprintln!("          [--fleet-cap N    max concurrently-active sessions]");
+            eprintln!("          [--queue-cap N    sessions allowed to wait behind the cap]");
+            eprintln!("          [--workers N      shared pool size]");
+            eprintln!("          [--fleet-cache-mb N  shared pair cache (0 = private caches)]");
+            eprintln!("          [--cache-mb N     per-session residency budget in the fleet cache]");
+            eprintln!("          [--fault-session I  inject a panic into session I (robustness demo)]");
+            eprintln!("          [--shard-size N] [--p0 N] [--beta N] [--iters N] [--out FILE]");
+            eprintln!("          [--backend native|blocked   (xla holds host handles; rejected)]");
             eprintln!("  datagen --dataset <name> [--scale F]");
             eprintln!("  inspect [--artifacts DIR]");
             Ok(())
@@ -399,6 +418,93 @@ fn stream_with(
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, res.history.to_json().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let spec = dataset_from(args)?;
+    let mut algo = algo_config_from(args)?;
+    let sessions: usize = args.get_or("sessions", 4)?;
+    anyhow::ensure!(sessions >= 1, "--sessions must be >= 1");
+
+    eprintln!(
+        "generating {} (N={}, classes={}) ...",
+        spec.name, spec.segments, spec.classes
+    );
+    let set = Arc::new(generate(&spec));
+    let stats = CompositionStats::of(&set);
+    eprintln!("  composition: {}", stats.table_row());
+
+    let shard_size: usize = args.get_or("shard-size", set.len().div_ceil(4).max(1))?;
+    if algo.beta.is_none() {
+        algo.beta = Some((2 * shard_size / algo.p0.max(1)).max(8));
+    }
+
+    let defaults = ServeConfig::default();
+    let serve_cfg = ServeConfig {
+        workers: args.get_or("workers", defaults.workers)?,
+        fleet_cap: args.get_or("fleet-cap", defaults.fleet_cap)?,
+        queue_cap: args.get_or("queue-cap", defaults.queue_cap)?,
+        cache_bytes: args
+            .get_parsed::<usize>("fleet-cache-mb")?
+            .map_or(defaults.cache_bytes, |mb| mb << 20),
+    };
+    let fault: Option<usize> = args.get_parsed::<usize>("fault-session")?;
+
+    // Sessions hop across pool workers between steps, so the backend
+    // must be Send + Sync; the XLA backend's host handles are not.
+    let backend: Arc<dyn DtwBackend + Send + Sync> = match algo.backend {
+        BackendKind::Native => Arc::new(NativeBackend::new()),
+        BackendKind::Blocked => Arc::new(BlockedBackend::new()),
+        BackendKind::Xla => anyhow::bail!(
+            "serve requires a Send + Sync backend; --backend xla holds host handles \
+             (use native or blocked)"
+        ),
+    };
+
+    // One corpus, many streams: session i consumes it in its own
+    // shuffled arrival order, so the fleet exercises distinct episode
+    // sequences while every session stays individually reproducible.
+    let base_seed = algo.seed;
+    let mut specs = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let cfg =
+            StreamConfig::new(algo.clone(), shard_size).with_shard_seed(base_seed + i as u64);
+        let mut s = SessionSpec::new(&format!("s{i}"), Arc::clone(&set), cfg);
+        if fault == Some(i) {
+            s.panic_after_shards = Some(1);
+        }
+        specs.push(s);
+    }
+
+    let t0 = mahc::telemetry::Stopwatch::start();
+    let report = ServeDriver::new(serve_cfg, backend)?.run(specs)?;
+    println!("session  status      K        F  shards       pairs");
+    for s in &report.sessions {
+        match &s.result {
+            Ok(r) => println!(
+                "{:<8} {:<7} {:>5} {:>8.4} {:>7} {:>11}",
+                s.name, "ok", r.k, r.f_measure, r.shards, r.pairs
+            ),
+            Err(e) => println!("{:<8} {:<7} {e}", s.name, "failed"),
+        }
+    }
+    let stalls = report.fleet.records.last().map_or(0, |r| r.stalls);
+    println!(
+        "fleet: {} ok / {} failed; peak active {}, peak cache {:.1} MiB, \
+         {} stalls, {:.0} pairs/s, wall {:.2}s",
+        report.completed(),
+        report.failed(),
+        report.fleet.peak_active(),
+        report.fleet.peak_cache_bytes() as f64 / (1 << 20) as f64,
+        stalls,
+        report.fleet.final_pairs_per_sec(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.to_json().to_string())?;
         eprintln!("wrote {path}");
     }
     Ok(())

@@ -334,6 +334,111 @@ impl RunHistory {
     }
 }
 
+/// One sample of the serve multiplexer's fleet-wide state, taken at a
+/// scheduling event (admission, step completion, session end, …).  The
+/// per-session layer stays [`IterationRecord`]; this layer observes the
+/// fleet: occupancy, queueing, cache pressure, and aggregate throughput
+/// across sessions.
+#[derive(Debug, Clone)]
+pub struct FleetRecord {
+    /// Monotone event sequence number within the serve run.
+    pub seq: usize,
+    /// What triggered the sample: `admit`, `queue`, `reject`, `step`,
+    /// `done`, `failed`.
+    pub event: String,
+    /// Name of the session the event concerns.
+    pub session: String,
+    /// Sessions admitted and not yet finished.
+    pub active: usize,
+    /// Sessions queued behind the fleet cap.
+    pub waiting: usize,
+    /// Session steps currently running on the worker pool.
+    pub inflight: usize,
+    /// Sessions finished successfully so far.
+    pub completed: usize,
+    /// Sessions failed (error or panic) so far.
+    pub failed: usize,
+    /// Sessions rejected at admission so far.
+    pub rejected: usize,
+    /// Times the scheduler stalled waiting for pool capacity so far.
+    pub stalls: usize,
+    /// Resident bytes of the shared fleet cache (0 when absent).
+    pub cache_resident_bytes: usize,
+    /// Pair distances produced by all sessions so far.
+    pub pairs_total: usize,
+    /// Wall seconds since the serve run started.
+    pub wall_secs: f64,
+    /// Fleet throughput: `pairs_total / wall_secs` (0 when idle).
+    pub pairs_per_sec: f64,
+}
+
+impl FleetRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seq", json::num(self.seq as f64)),
+            ("event", json::s(&self.event)),
+            ("session", json::s(&self.session)),
+            ("active", json::num(self.active as f64)),
+            ("waiting", json::num(self.waiting as f64)),
+            ("inflight", json::num(self.inflight as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("failed", json::num(self.failed as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("stalls", json::num(self.stalls as f64)),
+            (
+                "cache_resident_bytes",
+                json::num(self.cache_resident_bytes as f64),
+            ),
+            ("pairs_total", json::num(self.pairs_total as f64)),
+            ("wall_secs", json::num(self.wall_secs)),
+            ("pairs_per_sec", json::num(self.pairs_per_sec)),
+        ])
+    }
+}
+
+/// Event log of one serve run — the fleet-wide companion of
+/// [`RunHistory`], serialised through the same JSON machinery.
+#[derive(Debug, Clone, Default)]
+pub struct FleetHistory {
+    pub records: Vec<FleetRecord>,
+}
+
+impl FleetHistory {
+    pub fn new() -> Self {
+        FleetHistory::default()
+    }
+
+    pub fn push(&mut self, r: FleetRecord) {
+        self.records.push(r);
+    }
+
+    /// Peak concurrently-active session count over the run.
+    pub fn peak_active(&self) -> usize {
+        self.records.iter().map(|r| r.active).max().unwrap_or(0)
+    }
+
+    /// Peak resident bytes of the shared fleet cache over the run.
+    pub fn peak_cache_bytes(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.cache_resident_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Final fleet throughput (last sample's pairs/sec; 0 when empty).
+    pub fn final_pairs_per_sec(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.pairs_per_sec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![(
+            "fleet",
+            json::arr(self.records.iter().map(|r| r.to_json()).collect()),
+        )])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,5 +629,47 @@ mod tests {
             0.0
         );
         assert_eq!(iters[0].get("wall_secs").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn fleet_history_serialises_and_summarises() {
+        let mut h = FleetHistory::new();
+        for (seq, (event, active, bytes, pps)) in [
+            ("admit", 1usize, 0usize, 0.0f64),
+            ("step", 2, 4096, 125.0),
+            ("done", 1, 2048, 250.0),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            h.push(FleetRecord {
+                seq,
+                event: event.to_string(),
+                session: format!("s{seq}"),
+                active,
+                waiting: 0,
+                inflight: active,
+                completed: usize::from(event == "done"),
+                failed: 0,
+                rejected: 0,
+                stalls: 0,
+                cache_resident_bytes: bytes,
+                pairs_total: seq * 100,
+                wall_secs: seq as f64,
+                pairs_per_sec: pps,
+            });
+        }
+        assert_eq!(h.peak_active(), 2);
+        assert_eq!(h.peak_cache_bytes(), 4096);
+        assert_eq!(h.final_pairs_per_sec(), 250.0);
+        let text = h.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let fleet = parsed.get("fleet").unwrap().as_arr().unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[1].get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(
+            fleet[2].get("pairs_per_sec").unwrap().as_f64().unwrap(),
+            250.0
+        );
     }
 }

@@ -9,8 +9,16 @@
 //!   sequentially or in parallel") and for tile rows in the distance
 //!   builder.
 //! * [`WorkerPool`] — a long-lived pool with a job queue, used by the
-//!   MAHC driver so thread spawn cost is not paid per iteration.
+//!   serve multiplexer (`mahc::serve`) so thread spawn cost is not paid
+//!   per session step.
+//!
+//! The pool is built for multi-tenant use: a job that panics is caught
+//! at the job boundary ([`std::panic::catch_unwind`]), so the worker
+//! thread survives and the panic surfaces as an [`anyhow::Error`] to
+//! the one caller that submitted the poisoned job — never as a dead
+//! worker or a crash in an unrelated session.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -24,18 +32,20 @@ pub fn default_threads() -> usize {
 
 /// Apply `f` to every index in `0..n` on up to `threads` OS threads,
 /// returning results in index order.  `f` must be `Sync` (it is shared,
-/// not cloned).  Panics in `f` propagate.
-pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+/// not cloned).  Panics in `f` propagate to the caller through the
+/// scope join — callers that need isolation run under a [`WorkerPool`]
+/// job, whose boundary catches the unwind.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> anyhow::Result<Vec<T>>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
     if n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     if threads == 1 {
-        return (0..n).map(f).collect();
+        return Ok((0..n).map(f).collect());
     }
 
     let next = AtomicUsize::new(0);
@@ -57,22 +67,71 @@ where
                 }
                 let mut guard = slots.lock().unwrap_or_else(|p| p.into_inner());
                 for (i, v) in local {
-                    guard[i] = Some(v);
+                    if let Some(slot) = guard.get_mut(i) {
+                        *slot = Some(v);
+                    }
                 }
             });
         }
     });
 
-    out.into_iter().map(|v| v.expect("worker missed slot")).collect()
+    // The scope joins every worker before returning, and each worker
+    // fills every index it claimed, so an empty slot is unreachable —
+    // but degrade to an error rather than a panic if the invariant is
+    // ever broken.
+    out.into_iter()
+        .enumerate()
+        .map(|(i, v)| v.ok_or_else(|| anyhow::anyhow!("parallel_map worker missed slot {i}")))
+        .collect()
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Awaitable result of one [`WorkerPool::submit`] job.
+///
+/// [`JobHandle::join`] blocks until the worker finishes the job and
+/// returns its value — or an error if the job panicked (the panic is
+/// caught at the job boundary; the worker itself survives) or the
+/// worker died before reporting.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<Result<T, String>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Wait for the job and return its result.  A panicking job yields
+    /// `Err` with the panic payload; the pool keeps serving other jobs
+    /// at full size either way.
+    pub fn join(self) -> anyhow::Result<T> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(panic)) => Err(anyhow::anyhow!("worker job panicked: {panic}")),
+            Err(_) => Err(anyhow::anyhow!(
+                "worker dropped the job result before reporting"
+            )),
+        }
+    }
+}
+
+/// Render a caught panic payload for the error path (payloads are
+/// `&str` or `String` in practice; anything else gets a placeholder).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// A long-lived worker pool with a shared job queue.
 ///
-/// The MAHC driver owns one of these for the whole clustering run;
-/// per-iteration stage-1 jobs are submitted as closures and awaited via
-/// the returned receivers.
+/// The serve multiplexer owns one of these for a whole fleet of
+/// streaming sessions; per-step jobs are submitted as closures and
+/// awaited via [`JobHandle`]s.  Every job runs inside
+/// [`catch_unwind`], so one session's panic cannot kill a worker or
+/// leak into another session — the documented foundation of the serve
+/// mode's failure-isolation contract.
 pub struct WorkerPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -80,79 +139,115 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    pub fn new(size: usize) -> Self {
+    /// Spawn `size` workers (at least one).  Fails only if the OS
+    /// refuses to spawn a thread.
+    pub fn new(size: usize) -> anyhow::Result<Self> {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(size);
         for i in 0..size {
             let rx = Arc::clone(&rx);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("mahc-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // queue closed
+            let handle = std::thread::Builder::new()
+                .name(format!("mahc-worker-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.recv()
+                    };
+                    match job {
+                        // Defence in depth: `submit` already wraps the
+                        // user closure in catch_unwind, but the worker
+                        // loop guards itself too so no future job
+                        // constructor can re-introduce worker death.
+                        Ok(job) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
                         }
-                    })
-                    .expect("spawn worker"),
-            );
+                        Err(_) => break, // queue closed
+                    }
+                })
+                .map_err(|e| anyhow::anyhow!("failed to spawn mahc-worker-{i}: {e}"))?;
+            handles.push(handle);
         }
-        WorkerPool {
+        Ok(WorkerPool {
             tx: Some(tx),
             handles,
             size,
-        }
+        })
     }
 
     pub fn size(&self) -> usize {
         self.size
     }
 
-    /// Submit a job returning `T`; await it on the returned receiver.
-    pub fn submit<T, F>(&self, f: F) -> mpsc::Receiver<T>
+    /// Submit a job returning `T`; await it via [`JobHandle::join`].
+    ///
+    /// Errors if the pool has been [`WorkerPool::shutdown`] or every
+    /// worker has exited.  A panic *inside* `f` is not an error here —
+    /// it surfaces from `join` on this job's handle only.
+    pub fn submit<T, F>(&self, f: F) -> anyhow::Result<JobHandle<T>>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let (tx, rx) = mpsc::channel();
         let job: Job = Box::new(move || {
+            // AssertUnwindSafe: `f` is moved into the job, so a panic
+            // can only abandon state the unwind itself drops; shared
+            // structures the closure reaches (e.g. the pair cache)
+            // recover their lock poisoning internally.
+            let out = catch_unwind(AssertUnwindSafe(f)).map_err(panic_message);
             // The receiver may have been dropped; ignore send failure.
-            let _ = tx.send(f());
+            let _ = tx.send(out);
         });
+        self.queue()?
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("worker queue closed: every worker has exited"))?;
+        Ok(JobHandle { rx })
+    }
+
+    /// Submit a fire-and-forget job (no result channel).  Panics in `f`
+    /// are caught at the job boundary like [`WorkerPool::submit`];
+    /// callers that need completion signals send them from inside `f`.
+    pub fn execute<F>(&self, f: F) -> anyhow::Result<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let job: Job = Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(f));
+        });
+        self.queue()?
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("worker queue closed: every worker has exited"))
+    }
+
+    fn queue(&self) -> anyhow::Result<&mpsc::Sender<Job>> {
         self.tx
             .as_ref()
-            .expect("pool already shut down")
-            .send(job)
-            .expect("worker queue closed");
-        rx
+            .ok_or_else(|| anyhow::anyhow!("worker pool is shut down"))
     }
 
     /// Map a closure over `0..n` through the pool, in index order.
-    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// Any panicking index fails the whole map (the caller's unit of
+    /// work), but the pool itself stays healthy for other callers.
+    pub fn map<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + Clone + 'static,
     {
-        let rxs: Vec<_> = (0..n)
+        let handles: Vec<JobHandle<T>> = (0..n)
             .map(|i| {
                 let f = f.clone();
                 self.submit(move || f(i))
             })
-            .collect();
-        rxs.into_iter()
-            .map(|rx| rx.recv().expect("worker dropped result"))
-            .collect()
+            .collect::<anyhow::Result<_>>()?;
+        handles.into_iter().map(|h| h.join()).collect()
     }
-}
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
+    /// Close the queue and join every worker.  Subsequent `submit` /
+    /// `execute` / `map` calls return errors.  Called implicitly on
+    /// drop; explicit shutdown lets the serve driver bound teardown.
+    pub fn shutdown(&mut self) {
         drop(self.tx.take());
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -160,47 +255,140 @@ impl Drop for WorkerPool {
     }
 }
 
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn parallel_map_preserves_order() {
-        let out = parallel_map(100, 8, |i| i * i);
+        let out = parallel_map(100, 8, |i| i * i).unwrap();
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
     }
 
     #[test]
     fn parallel_map_empty_and_single() {
-        assert!(parallel_map(0, 4, |i| i).is_empty());
-        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+        assert!(parallel_map(0, 4, |i| i).unwrap().is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1).unwrap(), vec![1]);
     }
 
     #[test]
     fn parallel_map_single_thread_fallback() {
-        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert_eq!(parallel_map(5, 1, |i| i).unwrap(), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn pool_executes_all_jobs() {
-        let pool = WorkerPool::new(4);
-        let out = pool.map(50, |i| i * 2);
+        let pool = WorkerPool::new(4).unwrap();
+        let out = pool.map(50, |i| i * 2).unwrap();
         assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
     }
 
     #[test]
     fn pool_submit_individual() {
-        let pool = WorkerPool::new(2);
-        let rx = pool.submit(|| 7);
-        assert_eq!(rx.recv().unwrap(), 7);
+        let pool = WorkerPool::new(2).unwrap();
+        let handle = pool.submit(|| 7).unwrap();
+        assert_eq!(handle.join().unwrap(), 7);
     }
 
     #[test]
     fn pool_survives_many_rounds() {
-        let pool = WorkerPool::new(3);
+        let pool = WorkerPool::new(3).unwrap();
         for round in 0..10 {
-            let out = pool.map(10, move |i| i + round);
+            let out = pool.map(10, move |i| i + round).unwrap();
             assert_eq!(out[9], 9 + round);
         }
+    }
+
+    #[test]
+    fn panicking_job_errors_only_its_own_handle() {
+        let pool = WorkerPool::new(2).unwrap();
+        let bad = pool.submit(|| -> usize { panic!("injected job failure") }).unwrap();
+        let good = pool.submit(|| 41usize).unwrap();
+        let err = bad.join().expect_err("panicking job must surface as Err");
+        assert!(err.to_string().contains("injected job failure"), "{err}");
+        assert_eq!(good.join().unwrap(), 41, "sibling job is undisturbed");
+    }
+
+    #[test]
+    fn pool_serves_at_full_size_after_a_panic() {
+        // Regression for the pre-serve behaviour where a panicking job
+        // killed its worker thread forever: afterwards, all `size`
+        // workers must still be able to run jobs *concurrently*.
+        let size = 4;
+        let pool = WorkerPool::new(size).unwrap();
+        for _ in 0..size {
+            let h = pool.submit(|| -> usize { panic!("kill attempt") }).unwrap();
+            assert!(h.join().is_err());
+        }
+        // Each job blocks until all `size` jobs have started; if any
+        // worker died above, fewer than `size` can run at once and the
+        // rendezvous times out.
+        let started = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..size)
+            .map(|_| {
+                let started = Arc::clone(&started);
+                pool.submit(move || {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    let t0 = crate::telemetry::Stopwatch::start();
+                    while started.load(Ordering::SeqCst) < size {
+                        if t0.elapsed().as_secs() > 10 {
+                            return false;
+                        }
+                        std::thread::yield_now();
+                    }
+                    true
+                })
+                .unwrap()
+            })
+            .collect();
+        for h in handles {
+            assert!(
+                h.join().unwrap(),
+                "pool lost workers after panicking jobs (rendezvous timed out)"
+            );
+        }
+    }
+
+    #[test]
+    fn panicking_index_fails_map_but_not_the_pool() {
+        let pool = WorkerPool::new(3).unwrap();
+        let err = pool
+            .map(8, |i| {
+                if i == 5 {
+                    panic!("poisoned index");
+                }
+                i
+            })
+            .expect_err("a panicking index must fail the map");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // The pool remains usable for the next caller.
+        assert_eq!(pool.map(4, |i| i + 1).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_an_error_not_a_panic() {
+        let mut pool = WorkerPool::new(2).unwrap();
+        pool.shutdown();
+        let err = pool.submit(|| 1).err().expect("submit must fail");
+        assert!(err.to_string().contains("shut down"), "{err}");
+        assert!(pool.execute(|| ()).is_err());
+        assert!(pool.map(3, |i| i).is_err());
+        // Shutdown is idempotent.
+        pool.shutdown();
+    }
+
+    #[test]
+    fn string_and_str_panic_payloads_are_reported() {
+        let pool = WorkerPool::new(1).unwrap();
+        let h = pool.submit(|| -> () { panic!("{}", format!("dyn {}", 42)) }).unwrap();
+        let err = h.join().unwrap_err();
+        assert!(err.to_string().contains("dyn 42"), "{err}");
     }
 }

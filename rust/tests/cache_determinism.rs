@@ -10,13 +10,13 @@
 mod common;
 
 use common::{backend_under_test, thread_matrix};
-use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::{generate, Segment};
 use mahc::distance::{
     build_condensed, build_condensed_cached, build_cross, build_cross_cached, BackendKind,
     PairCache,
 };
-use mahc::mahc::MahcDriver;
+use mahc::mahc::{MahcDriver, StreamSession, StreamingDriver};
 
 /// Backend under test: native by default, or the CI matrix cell.
 fn backend() -> Box<dyn mahc::distance::DtwBackend> {
@@ -171,4 +171,78 @@ fn ample_cache_reaches_high_hit_rate_by_iteration_three() {
     // first-iteration hits come from same-subset medoid pairs alone.
     let first = &res.history.records[0].cache;
     assert!(first.misses > 0);
+}
+
+#[test]
+fn interleaved_sessions_on_one_shared_cache_match_private_cache_runs() {
+    // The serve-mode form of the cache contract: several streaming
+    // sessions sharing one fleet cache through scoped, budgeted handles
+    // — their steps interleaved shard by shard — must each reproduce
+    // their private-cache sequential run bit for bit.  (The scheduler
+    // itself is exercised in `serve_concurrency`; this pins the cache
+    // invariance in isolation, deterministically on one thread.)
+    let backend = backend();
+    let backend = backend.as_ref();
+    let budget = 32 << 10;
+    let sets: Vec<_> = (0..3)
+        .map(|i| generate(&DatasetSpec::tiny(54 + 12 * i, 4, 3030 + i as u64)))
+        .collect();
+    let cfgs: Vec<StreamConfig> = (0..3)
+        .map(|_| {
+            StreamConfig::new(
+                AlgoConfig {
+                    p0: 2,
+                    beta: Some(22),
+                    convergence: Convergence::FixedIters(2),
+                    cache_bytes: budget,
+                    ..Default::default()
+                },
+                20,
+            )
+        })
+        .collect();
+    let expected: Vec<_> = sets
+        .iter()
+        .zip(&cfgs)
+        .map(|(set, cfg)| {
+            StreamingDriver::new(set, cfg.clone(), backend)
+                .unwrap()
+                .run()
+                .unwrap()
+        })
+        .collect();
+
+    let fleet = PairCache::with_capacity_bytes(4 << 20);
+    let mut offset = 0;
+    let mut sessions: Vec<StreamSession> = sets
+        .iter()
+        .zip(&cfgs)
+        .map(|(set, cfg)| {
+            let s = StreamSession::new(set, cfg.clone(), backend)
+                .unwrap()
+                .with_cache(fleet.scoped(offset, Some(budget)));
+            offset += set.len();
+            s
+        })
+        .collect();
+    // Round-robin: one shard of each session per lap, so the shared
+    // cache sees the sessions' insertions and evictions interleaved.
+    loop {
+        let mut progressed = false;
+        for s in sessions.iter_mut() {
+            if !s.is_done() {
+                s.step().unwrap();
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    for (session, exp) in sessions.into_iter().zip(&expected) {
+        let got = session.finish().unwrap();
+        assert_eq!(got.labels, exp.labels);
+        assert_eq!(got.k, exp.k);
+        assert_eq!(got.f_measure.to_bits(), exp.f_measure.to_bits());
+    }
 }

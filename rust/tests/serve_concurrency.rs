@@ -1,0 +1,217 @@
+//! Serve-mode contract: interleaving many streaming sessions over one
+//! worker pool and one shared pair cache changes *no* output bit of any
+//! session, and every fleet-level protection — admission caps, β, the
+//! per-session cache budgets, panic isolation — holds while the fleet
+//! actually runs concurrently.
+//!
+//! The CI TSan job runs this suite: the scheduler, the shared cache's
+//! scoped handles, and the worker pool all cross threads here, so any
+//! unsynchronised access shows up as a data-race report rather than a
+//! flaky bit.
+
+use std::sync::Arc;
+
+use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
+use mahc::corpus::{generate, SegmentSet};
+use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
+use mahc::StreamResult;
+
+fn algo(beta: usize, cache_bytes: usize) -> AlgoConfig {
+    AlgoConfig {
+        p0: 2,
+        beta: Some(beta),
+        convergence: Convergence::FixedIters(2),
+        cache_bytes,
+        ..Default::default()
+    }
+}
+
+fn backend() -> Arc<dyn DtwBackend + Send + Sync> {
+    Arc::new(NativeBackend::new())
+}
+
+/// One spec plus the sequential (private-cache) result it must
+/// reproduce under fleet interleaving.
+fn spec_and_expected(i: usize, cache_bytes: usize) -> (SessionSpec, StreamResult) {
+    let set: Arc<SegmentSet> =
+        Arc::new(generate(&DatasetSpec::tiny(60 + 10 * i, 4, 700 + i as u64)));
+    let cfg = StreamConfig::new(algo(24, cache_bytes), 24);
+    let expected = StreamingDriver::new(&set, cfg.clone(), &NativeBackend::new())
+        .unwrap()
+        .run()
+        .unwrap();
+    (SessionSpec::new(&format!("s{i}"), set, cfg), expected)
+}
+
+#[test]
+fn five_interleaved_sessions_reproduce_sequential_results_bitwise() {
+    let beta = 24;
+    let mut specs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..5 {
+        let (s, e) = spec_and_expected(i, 16 << 10);
+        specs.push(s);
+        expected.push(e);
+    }
+    let report = ServeDriver::new(
+        ServeConfig {
+            workers: 4,
+            fleet_cap: 5,
+            queue_cap: 0,
+            cache_bytes: 1 << 20,
+        },
+        backend(),
+    )
+    .unwrap()
+    .run(specs)
+    .unwrap();
+
+    assert_eq!(report.completed(), 5);
+    for (out, exp) in report.sessions.iter().zip(&expected) {
+        let got = out.result.as_ref().expect("session must complete");
+        assert_eq!(got.labels, exp.labels, "labels diverged for {}", out.name);
+        assert_eq!(got.k, exp.k, "K diverged for {}", out.name);
+        assert_eq!(
+            got.f_measure.to_bits(),
+            exp.f_measure.to_bits(),
+            "F diverged for {}",
+            out.name
+        );
+        assert_eq!(got.shards, exp.shards);
+        assert_eq!(got.history.records.len(), exp.history.records.len());
+        // β is a per-session guarantee and must survive fleet
+        // concurrency: every episode of every session stays under it.
+        for r in &got.history.records {
+            assert!(
+                r.max_occupancy <= beta,
+                "{} shard {} occupancy {} > β under concurrency",
+                out.name,
+                r.iteration,
+                r.max_occupancy
+            );
+        }
+    }
+    assert!(report.fleet.peak_active() <= 5);
+}
+
+#[test]
+fn per_session_cache_budgets_hold_while_the_fleet_runs() {
+    let budget = 4096usize; // 128 entries per session
+    let mut specs = Vec::new();
+    for i in 0..4 {
+        let (s, _) = spec_and_expected(i, budget);
+        specs.push(s);
+    }
+    let report = ServeDriver::new(
+        ServeConfig {
+            workers: 4,
+            fleet_cap: 4,
+            queue_cap: 0,
+            cache_bytes: 8 << 20,
+        },
+        backend(),
+    )
+    .unwrap()
+    .run(specs)
+    .unwrap();
+    assert_eq!(report.completed(), 4);
+    let peak = report.fleet.peak_cache_bytes();
+    assert!(peak > 0, "fleet cache never used");
+    assert!(
+        peak <= 4 * budget,
+        "fleet residency {peak} B exceeds the sum of per-session budgets {} B",
+        4 * budget
+    );
+}
+
+#[test]
+fn a_panicking_session_leaves_the_rest_of_the_fleet_bitwise_intact() {
+    let mut specs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..4 {
+        let (s, e) = spec_and_expected(i, 8 << 10);
+        specs.push(s);
+        expected.push(e);
+    }
+    specs[2].panic_after_shards = Some(1);
+    let report = ServeDriver::new(
+        ServeConfig {
+            workers: 2,
+            fleet_cap: 4,
+            queue_cap: 0,
+            cache_bytes: 1 << 20,
+        },
+        backend(),
+    )
+    .unwrap()
+    .run(specs)
+    .unwrap();
+
+    assert_eq!(report.completed(), 3);
+    assert_eq!(report.failed(), 1);
+    for (i, (out, exp)) in report.sessions.iter().zip(&expected).enumerate() {
+        if i == 2 {
+            let msg = out.result.as_ref().expect_err("faulted session must fail");
+            assert!(msg.contains("injected session fault"), "got: {msg}");
+            continue;
+        }
+        let got = out.result.as_ref().expect("bystander must complete");
+        assert_eq!(got.labels, exp.labels, "bystander {} perturbed", out.name);
+        assert_eq!(
+            got.f_measure.to_bits(),
+            exp.f_measure.to_bits(),
+            "bystander {} F perturbed",
+            out.name
+        );
+    }
+}
+
+#[test]
+fn admission_control_caps_the_fleet_deterministically() {
+    let mut specs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..5 {
+        let (s, e) = spec_and_expected(i, 0);
+        specs.push(s);
+        expected.push(e);
+    }
+    let report = ServeDriver::new(
+        ServeConfig {
+            workers: 2,
+            fleet_cap: 2,
+            queue_cap: 1,
+            cache_bytes: 0,
+        },
+        backend(),
+    )
+    .unwrap()
+    .run(specs)
+    .unwrap();
+
+    // Specs 0-1 fill the fleet cap, spec 2 queues (promoted later),
+    // specs 3-4 are rejected — decided at submission, so always the
+    // same specs regardless of scheduling timing.
+    assert_eq!(report.completed(), 3);
+    for (i, (out, exp)) in report.sessions.iter().zip(&expected).enumerate() {
+        if i < 3 {
+            let got = out.result.as_ref().expect("admitted session completes");
+            assert_eq!(got.labels, exp.labels, "session {} diverged", out.name);
+        } else {
+            let msg = out.result.as_ref().expect_err("overflow spec rejected");
+            assert!(msg.contains("rejected at admission"), "got: {msg}");
+        }
+    }
+    assert!(
+        report.fleet.peak_active() <= 2,
+        "fleet cap breached: peak {}",
+        report.fleet.peak_active()
+    );
+    let rejects = report
+        .fleet
+        .records
+        .iter()
+        .filter(|r| r.event == "reject")
+        .count();
+    assert_eq!(rejects, 2);
+}
