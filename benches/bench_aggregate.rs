@@ -147,13 +147,14 @@ fn main() {
     // Pin 3: the quantile-derived radius (full sample) equals this
     // harness's own p25 bit for bit — the documented estimator rule.
     let seed = AggregateConfig::default().quantile_seed;
-    let (eps_q, sample_pairs) = derive_epsilon(&set, 0.25, n, seed, &backend, 4, None).unwrap();
+    let est = derive_epsilon(&set, 0.25, n, seed, &backend, 4, None).unwrap();
     assert_eq!(
-        eps_q.to_bits(),
+        est.epsilon.to_bits(),
         quantile(0.25).to_bits(),
         "full-sample quantile estimate must be exact"
     );
-    assert_eq!(sample_pairs, dists.len());
+    assert_eq!(est.sample_pairs, dists.len());
+    assert_eq!(est.sample_segments, n);
     println!("quantile-derived ε (q=0.25, full sample) is exact: MATCH");
 
     // Probe-engine showdown at the p25 radius: flat-serial (per-row
@@ -221,8 +222,9 @@ fn main() {
             "quantile",
             json::obj(vec![
                 ("q", json::num(0.25)),
-                ("derived_eps", json::num(eps_q as f64)),
-                ("sample_pairs", json::num(sample_pairs as f64)),
+                ("derived_eps", json::num(est.epsilon as f64)),
+                ("sample_pairs", json::num(est.sample_pairs as f64)),
+                ("sample_segments", json::num(est.sample_segments as f64)),
             ]),
         ),
         (

@@ -1,0 +1,271 @@
+//! Lower-bound cascade cost/benefit: how many exact DTW evaluations
+//! the LB_Keogh-style envelope cascade avoids, at what wall cost, and
+//! whether the pruned path still makes bitwise-exact decisions.
+//!
+//! Two workloads:
+//!
+//! 1. **Generated corpus sweep** — threshold-carrying rectangle queries
+//!    over a `DatasetSpec::tiny` corpus at pair-distance quantile
+//!    radii (p05/p25/p50).  Reported, not floored: how much a loose
+//!    global envelope prunes on MFCC-like data is a measurement, not a
+//!    promise.  Decision parity against the exact rectangle *is*
+//!    asserted at every radius.
+//! 2. **ε ≪ separation join** — well-separated synthetic clusters with
+//!    the threshold set between the intra-cluster diameter and the
+//!    inter-cluster gap: the regime stage-0 aggregation actually runs
+//!    in.  Here the prune rate is pinned: the cascade must skip at
+//!    least 30% of DP calls (`PRUNE_FLOOR`), and the committed
+//!    `BENCH_baseline.json` floors `pruning.prune_fraction` at the same
+//!    value.
+//!
+//! End-to-end pin: a full aggregated `MahcDriver` run with `prune = on`
+//! reproduces the `prune = off` oracle bitwise while its first
+//! iteration records a non-zero `lb_pairs`.
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shrinks both workloads, and
+//! `MAHC_BENCH_JSON=path` writes the fragment assembled into
+//! `BENCH_ci.json` (diffed against `BENCH_baseline.json`).
+
+use mahc::aggregate::quantile_of_sorted;
+use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, PruneMode};
+use mahc::corpus::{generate, Segment, SegmentSet};
+use mahc::distance::{CascadeBackend, CascadeMode, DtwBackend, NativeBackend};
+use mahc::mahc::MahcDriver;
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
+
+/// The acceptance floor: at the join radius the cascade must avoid at
+/// least this fraction of exact DP calls.
+const PRUNE_FLOOR: f64 = 0.30;
+
+/// `classes` well-separated clusters: per-class feature centres spaced
+/// `10.0` apart per dimension with a small deterministic wobble, so the
+/// intra-cluster diameter and the inter-cluster gap differ by orders of
+/// magnitude — the shape an ε-join sees when ε is set from a low pair-
+/// distance quantile.
+fn clustered_set(classes: usize, per_class: usize, dim: usize) -> SegmentSet {
+    let mut segments = Vec::with_capacity(classes * per_class);
+    for c in 0..classes {
+        for m in 0..per_class {
+            let i = c * per_class + m;
+            let len = 8 + (i % 5) * 3;
+            let mut feats = Vec::with_capacity(len * dim);
+            for t in 0..len {
+                for d in 0..dim {
+                    let centre = (c * 10) as f32;
+                    let wobble = ((t * (d + 2) + m) as f32 * 0.7).sin() * 0.25;
+                    feats.push(centre + wobble);
+                }
+            }
+            segments.push(Segment {
+                id: i,
+                class_id: c,
+                len,
+                dim,
+                feats,
+            });
+        }
+    }
+    SegmentSet {
+        name: "separated-clusters".to_string(),
+        dim,
+        segments,
+        num_classes: classes,
+    }
+}
+
+/// Assert the cascade's decision parity against the exact rectangle:
+/// survivors are bitwise exact, pruned values sit strictly above the
+/// threshold, and `value ≤ threshold` agrees pair for pair with the
+/// exact backend's verdict.
+fn assert_decision_parity(vals: &[f32], flags: &[bool], exact: &[f32], threshold: f32, ctx: &str) {
+    assert_eq!(vals.len(), exact.len(), "{ctx}: rectangle shape diverged");
+    for ((&v, &f), &ex) in vals.iter().zip(flags).zip(exact) {
+        if f {
+            assert_eq!(v.to_bits(), ex.to_bits(), "{ctx}: survivor not exact");
+        } else {
+            assert!(v > threshold, "{ctx}: pruned value at or below threshold");
+            assert!(v <= ex, "{ctx}: inadmissible bound {v} > exact {ex}");
+        }
+        assert_eq!(
+            v <= threshold,
+            ex <= threshold,
+            "{ctx}: ε-decision diverged (got {v}, exact {ex}, t {threshold})"
+        );
+    }
+}
+
+fn main() {
+    let n = if quick_mode() { 100 } else { 180 };
+    let set = generate(&DatasetSpec::tiny(n, 10, 21));
+    let backend = NativeBackend::new();
+    println!("== bench_pruning: tiny corpus at N={n} ==");
+
+    // Workload 1: threshold sweep over a cross rectangle of the
+    // generated corpus, radii from the rectangle's own distance
+    // quantiles.
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let (xs, ys) = (&refs[..40], &refs[40..]);
+    let exact_rect = backend.pairwise(xs, ys).unwrap();
+    let mut sorted = exact_rect.clone();
+    sorted.sort_unstable_by(f32::total_cmp);
+
+    let cascade = CascadeBackend::borrowed(&backend, &set, CascadeMode::On);
+    println!("\n  radius   threshold  lb_pairs  pruned  prune_rate");
+    let mut sweep_rows: Vec<json::Json> = Vec::new();
+    for (tag, q) in [("p05", 0.05), ("p25", 0.25), ("p50", 0.50)] {
+        let threshold = quantile_of_sorted(&sorted, q);
+        let before = cascade.stats();
+        let (vals, flags) = cascade.pairwise_pruned(xs, ys, threshold).unwrap();
+        let d = cascade.stats().delta(&before);
+        assert_decision_parity(&vals, &flags, &exact_rect, threshold, tag);
+        println!(
+            "  {tag}   {threshold:>9.3} {:>9} {:>7}  {:>9.3}",
+            d.lb_pairs,
+            d.lb_pruned,
+            d.prune_rate()
+        );
+        sweep_rows.push(json::obj(vec![
+            ("tag", json::s(tag)),
+            ("threshold", json::num(threshold as f64)),
+            ("lb_pairs", json::num(d.lb_pairs as f64)),
+            ("lb_pruned", json::num(d.lb_pruned as f64)),
+            ("exact_pairs", json::num(d.exact_pairs as f64)),
+            ("prune_fraction", json::num(d.prune_rate())),
+        ]));
+    }
+    println!("  decision parity vs the exact rectangle: MATCH at every radius");
+
+    // Workload 2: the ε-join regime.  Threshold = 1.5× the measured
+    // intra-cluster diameter, far below the inter-cluster gap, so
+    // same-cluster pairs survive (and compute exactly) while
+    // cross-cluster pairs are bounded out.
+    let classes = 4;
+    let per_class = if quick_mode() { 24 } else { 40 };
+    let join_set = clustered_set(classes, per_class, 3);
+    let jn = join_set.len();
+    let jrefs: Vec<&Segment> = join_set.segments.iter().collect();
+    let join_exact = backend.pairwise(&jrefs, &jrefs).unwrap();
+    let mut intra_max = 0.0f32;
+    for (i, a) in join_set.segments.iter().enumerate() {
+        for (j, b) in join_set.segments.iter().enumerate() {
+            if a.class_id == b.class_id {
+                intra_max = intra_max.max(join_exact[i * jn + j]);
+            }
+        }
+    }
+    let join_threshold = intra_max * 1.5;
+
+    let join_cascade = CascadeBackend::borrowed(&backend, &join_set, CascadeMode::On);
+    let before = join_cascade.stats();
+    let (jvals, jflags) = join_cascade
+        .pairwise_pruned(&jrefs, &jrefs, join_threshold)
+        .unwrap();
+    let jd = join_cascade.stats().delta(&before);
+    assert_decision_parity(&jvals, &jflags, &join_exact, join_threshold, "join");
+    let prune_fraction = jd.prune_rate();
+    println!(
+        "\nε-join over {classes}x{per_class} separated clusters (t={join_threshold:.3}):"
+    );
+    println!(
+        "  {} bounded, {} pruned, {} exact DP calls — {:.1}% of the DP avoided",
+        jd.lb_pairs,
+        jd.lb_pruned,
+        jd.exact_pairs,
+        prune_fraction * 100.0
+    );
+
+    // The acceptance floor (EXPERIMENTS.md §Pruning): the committed
+    // baseline pins the same number via `pruning.prune_fraction`.
+    assert!(
+        prune_fraction >= PRUNE_FLOOR,
+        "cascade avoided only {:.1}% of DP calls at the join radius (floor {:.0}%)",
+        prune_fraction * 100.0,
+        PRUNE_FLOOR * 100.0
+    );
+
+    // Wall cost of the two paths over the same join rectangle.
+    let pairs = (jn * jn) as u64;
+    let exact_wall = Bench::new("pruning/join-exact")
+        .quick()
+        .throughput(pairs)
+        .run(|| backend.pairwise(&jrefs, &jrefs).unwrap());
+    let cascade_wall = Bench::new("pruning/join-cascade")
+        .quick()
+        .throughput(pairs)
+        .run(|| {
+            join_cascade
+                .pairwise_pruned(&jrefs, &jrefs, join_threshold)
+                .unwrap()
+        });
+    let speedup = exact_wall.mean.as_secs_f64() / cascade_wall.mean.as_secs_f64().max(1e-12);
+    println!(
+        "  exact {:.4}s vs cascade {:.4}s per rectangle — {speedup:.2}x",
+        exact_wall.mean.as_secs_f64(),
+        cascade_wall.mean.as_secs_f64()
+    );
+
+    // End-to-end pin: the aggregated driver with prune=on reproduces
+    // the prune=off oracle bitwise and actually exercised the cascade.
+    let eps = {
+        let cond = mahc::distance::build_condensed(&refs, &backend, 4).unwrap();
+        let mut d: Vec<f32> = cond.as_slice().to_vec();
+        d.sort_unstable_by(f32::total_cmp);
+        quantile_of_sorted(&d, 0.25)
+    };
+    let base = AlgoConfig {
+        p0: 3,
+        beta: Some((n as f64 / 3.0 * 1.25).ceil() as usize),
+        convergence: Convergence::FixedIters(2),
+        aggregate: AggregateConfig::new(eps),
+        ..Default::default()
+    };
+    let off = MahcDriver::new(&set, base.clone(), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    let on_cfg = AlgoConfig {
+        prune: PruneMode::On,
+        ..base
+    };
+    let on = MahcDriver::new(&set, on_cfg, &backend).unwrap().run().unwrap();
+    assert_eq!(on.labels, off.labels, "prune=on must be bitwise the oracle");
+    assert_eq!(on.k, off.k);
+    assert_eq!(on.f_measure.to_bits(), off.f_measure.to_bits());
+    let driver_lb_pairs: u64 = on.history.records.iter().map(|r| r.lb_pairs).sum();
+    assert!(
+        driver_lb_pairs > 0,
+        "prune=on driver run never engaged the cascade"
+    );
+    println!(
+        "\ndriver prune=on reproduces prune=off bitwise ({driver_lb_pairs} pairs bounded): MATCH"
+    );
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("n", json::num(n as f64)),
+        ("sweep", json::arr(sweep_rows)),
+        (
+            "join",
+            json::obj(vec![
+                ("classes", json::num(classes as f64)),
+                ("n", json::num(jn as f64)),
+                ("threshold", json::num(join_threshold as f64)),
+                ("lb_pairs", json::num(jd.lb_pairs as f64)),
+                ("lb_pruned", json::num(jd.lb_pruned as f64)),
+                ("exact_pairs", json::num(jd.exact_pairs as f64)),
+            ]),
+        ),
+        ("prune_fraction", json::num(prune_fraction)),
+        ("driver_lb_pairs", json::num(driver_lb_pairs as f64)),
+        (
+            "walls",
+            json::obj(vec![
+                ("exact", exact_wall.to_json()),
+                ("cascade", cascade_wall.to_json()),
+                ("speedup", json::num(speedup)),
+            ]),
+        ),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
+}

@@ -35,7 +35,7 @@
 
 use crate::config::AggregateConfig;
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_cross_cached, DtwBackend, PairCache};
+use crate::distance::{build_cross_cached, build_cross_cached_pruned, DtwBackend, PairCache};
 
 /// Result of the leader pass: `m` representatives plus the membership
 /// lists that map them back onto the full corpus, and the probe-engine
@@ -56,6 +56,9 @@ pub struct Aggregation {
     /// Pair distances consumed by the quantile-ε estimate (0 when ε was
     /// given absolutely).
     pub sample_pairs: usize,
+    /// Segments the quantile-ε estimate sampled after clamping to the
+    /// corpus (0 when ε was given absolutely).
+    pub sample_segments: usize,
     /// Probe rounds the pass ran (= N on the per-row reference path).
     pub probe_rounds: usize,
     /// Rows of the largest probe rectangle dispatched.
@@ -79,6 +82,7 @@ impl Aggregation {
             rep_of: (0..n).collect(),
             probe_pairs: 0,
             sample_pairs: 0,
+            sample_segments: 0,
             probe_rounds: 0,
             rect_rows: 0,
             rect_cols: 0,
@@ -258,7 +262,18 @@ impl Pass<'_> {
         } else {
             let xs: Vec<&Segment> = self.set.segments[lo..hi].iter().collect();
             let ys: Vec<&Segment> = col_ids.iter().map(|&g| &self.set.segments[g]).collect();
-            let d = build_cross_cached(&xs, &ys, backend, threads, cache)?;
+            // Flat probing only ever compares rectangle cells against ε
+            // (`consider` rejects dist > ε before looking at the value),
+            // so the pruning cascade may answer cells it can bound out
+            // with the bound itself — decisions are unchanged.  Tree
+            // rectangles feed `nearest_indices` *ordering* and must stay
+            // exact.
+            let threshold = if self.tree.is_none() {
+                Some(self.epsilon)
+            } else {
+                None
+            };
+            let d = build_cross_cached_pruned(&xs, &ys, backend, threads, cache, threshold)?;
             anyhow::ensure!(
                 d.len() == (hi - lo) * ncols,
                 "backend returned {} probe distances for a {}x{} rectangle",
@@ -316,7 +331,9 @@ impl Pass<'_> {
                 .iter()
                 .map(|&r| &self.set.segments[self.rep_ids[r]])
                 .collect();
-            let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
+            // Like the rectangle: values only ever meet `consider`'s
+            // ε gate, so bound-answered cells are decision-safe.
+            let d = build_cross_cached_pruned(&xs, &ys, backend, 1, cache, Some(self.epsilon))?;
             anyhow::ensure!(
                 d.len() == ys.len(),
                 "backend returned {} probe distances for {} fresh leaders",
@@ -472,17 +489,20 @@ pub fn aggregate(
     if !cfg.is_active() || n == 0 {
         return Ok(Aggregation::identity(n));
     }
-    let (epsilon, sample_pairs) = match cfg.quantile {
-        Some(q) => super::quantile::derive_epsilon(
-            set,
-            q,
-            cfg.quantile_sample,
-            cfg.quantile_seed,
-            backend,
-            threads,
-            cache,
-        )?,
-        None => (cfg.epsilon, 0),
+    let (epsilon, sample_pairs, sample_segments) = match cfg.quantile {
+        Some(q) => {
+            let est = super::quantile::derive_epsilon(
+                set,
+                q,
+                cfg.quantile_sample,
+                cfg.quantile_seed,
+                backend,
+                threads,
+                cache,
+            )?;
+            (est.epsilon, est.sample_pairs, est.sample_segments)
+        }
+        None => (cfg.epsilon, 0, 0),
     };
 
     let mut pass = Pass {
@@ -520,6 +540,7 @@ pub fn aggregate(
         rep_of: pass.rep_of,
         probe_pairs: pass.probe_pairs,
         sample_pairs,
+        sample_segments,
         probe_rounds,
         rect_rows: pass.rect_rows,
         rect_cols: pass.rect_cols,
@@ -568,6 +589,7 @@ mod tests {
         assert_eq!(agg.probe_pairs, 6);
         assert_eq!(agg.probe_rounds, 1);
         assert_eq!(agg.sample_pairs, 0);
+        assert_eq!(agg.sample_segments, 0);
         assert_eq!(agg.super_leaders, 0);
         assert_eq!(agg.epsilon, 0.2);
         assert_eq!(agg.reps(), 2);

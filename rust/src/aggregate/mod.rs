@@ -31,4 +31,4 @@ pub mod leader;
 pub mod quantile;
 
 pub use leader::{aggregate, Aggregation};
-pub use quantile::{derive_epsilon, quantile_of_sorted};
+pub use quantile::{derive_epsilon, quantile_of_sorted, EpsilonEstimate};

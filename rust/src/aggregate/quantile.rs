@@ -31,14 +31,31 @@ pub fn quantile_of_sorted(sorted: &[f32], q: f64) -> f32 {
     sorted[rank.min(sorted.len() - 1)]
 }
 
+/// What [`derive_epsilon`] measured: the radius plus the effective
+/// sample the estimate was computed over, so telemetry can report how
+/// much evidence backed the ε a run used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpsilonEstimate {
+    /// The derived leader radius.
+    pub epsilon: f32,
+    /// Pair distances the estimate consumed (C(sample_segments, 2)).
+    pub sample_pairs: usize,
+    /// Segments actually sampled after clamping to the corpus size —
+    /// may be smaller than the configured sample, never larger.
+    pub sample_segments: usize,
+}
+
 /// Estimate the leader radius ε as the `q` pair-distance quantile of a
 /// seeded corpus sample.
 ///
 /// Draws `sample` distinct segments with the repo RNG seeded from
 /// `seed` (the whole corpus when `sample >= n`), builds the condensed
-/// matrix over the sample, and returns `(ε, pairs)` where `pairs` is
-/// the number of pair distances the estimate consumed.  A corpus with
-/// fewer than two segments has no pairs; the estimate degrades to 0.
+/// matrix over the sample, and returns the estimate together with its
+/// effective sample size.  A `sample` below 2 is a configuration error
+/// (one segment has no pairs, so the caller would silently get a radius
+/// backed by whatever this function substituted — reject instead of
+/// clamping up).  A corpus with fewer than two segments has no pairs;
+/// the estimate degrades to 0.
 pub fn derive_epsilon(
     set: &SegmentSet,
     q: f64,
@@ -47,16 +64,25 @@ pub fn derive_epsilon(
     backend: &dyn DtwBackend,
     threads: usize,
     cache: Option<&PairCache>,
-) -> anyhow::Result<(f32, usize)> {
+) -> anyhow::Result<EpsilonEstimate> {
     anyhow::ensure!(
         q.is_finite() && q > 0.0 && q < 1.0,
         "aggregate quantile must lie strictly inside (0, 1) (got {q})"
     );
+    anyhow::ensure!(
+        sample >= 2,
+        "aggregate sample must cover at least 2 segments to have a pair \
+         distance (got {sample})"
+    );
     let n = set.len();
     if n < 2 {
-        return Ok((0.0, 0));
+        return Ok(EpsilonEstimate {
+            epsilon: 0.0,
+            sample_pairs: 0,
+            sample_segments: n,
+        });
     }
-    let s = sample.clamp(2, n);
+    let s = sample.min(n);
     // Sorted sample ids: the multiset of pair distances is order-free,
     // sorting just keeps the condensed build's probe order canonical.
     let mut ids = Rng::seed_from(seed).sample_indices(n, s);
@@ -65,7 +91,11 @@ pub fn derive_epsilon(
     let cond = build_condensed_cached(&segs, backend, threads, cache)?;
     let mut dists: Vec<f32> = cond.as_slice().to_vec();
     dists.sort_unstable_by(f32::total_cmp);
-    Ok((quantile_of_sorted(&dists, q), dists.len()))
+    Ok(EpsilonEstimate {
+        epsilon: quantile_of_sorted(&dists, q),
+        sample_pairs: dists.len(),
+        sample_segments: s,
+    })
 }
 
 #[cfg(test)]
@@ -84,10 +114,11 @@ mod tests {
         let mut exact: Vec<f32> = cond.as_slice().to_vec();
         exact.sort_unstable_by(f32::total_cmp);
         for q in [0.05, 0.25, 0.5, 0.9] {
-            let (eps, pairs) = derive_epsilon(&set, q, set.len(), 7, &backend, 4, None).unwrap();
-            assert_eq!(pairs, exact.len());
+            let est = derive_epsilon(&set, q, set.len(), 7, &backend, 4, None).unwrap();
+            assert_eq!(est.sample_pairs, exact.len());
+            assert_eq!(est.sample_segments, set.len());
             assert_eq!(
-                eps.to_bits(),
+                est.epsilon.to_bits(),
                 quantile_of_sorted(&exact, q).to_bits(),
                 "q = {q}"
             );
@@ -98,13 +129,15 @@ mod tests {
     fn estimate_is_seed_and_thread_deterministic() {
         let set = generate(&DatasetSpec::tiny(40, 4, 302));
         let backend = NativeBackend::new();
-        let (a, pa) = derive_epsilon(&set, 0.5, 16, 11, &backend, 1, None).unwrap();
+        let a = derive_epsilon(&set, 0.5, 16, 11, &backend, 1, None).unwrap();
         for threads in [1usize, 4, 8] {
-            let (b, pb) = derive_epsilon(&set, 0.5, 16, 11, &backend, threads, None).unwrap();
-            assert_eq!(a.to_bits(), b.to_bits(), "threads = {threads}");
-            assert_eq!(pa, pb);
+            let b = derive_epsilon(&set, 0.5, 16, 11, &backend, threads, None).unwrap();
+            assert_eq!(a.epsilon.to_bits(), b.epsilon.to_bits(), "threads = {threads}");
+            assert_eq!(a.sample_pairs, b.sample_pairs);
+            assert_eq!(a.sample_segments, b.sample_segments);
         }
-        assert_eq!(pa, 16 * 15 / 2, "sample of 16 has C(16,2) pairs");
+        assert_eq!(a.sample_pairs, 16 * 15 / 2, "sample of 16 has C(16,2) pairs");
+        assert_eq!(a.sample_segments, 16);
     }
 
     #[test]
@@ -117,6 +150,25 @@ mod tests {
                 "q = {q} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn rejects_pairless_samples_instead_of_clamping_up() {
+        let set = generate(&DatasetSpec::tiny(10, 2, 303));
+        let backend = NativeBackend::new();
+        for sample in [0usize, 1] {
+            let err = derive_epsilon(&set, 0.5, sample, 1, &backend, 1, None)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("at least 2 segments"),
+                "sample = {sample}: {err}"
+            );
+        }
+        // Oversized samples still clamp *down* to the corpus.
+        let est = derive_epsilon(&set, 0.5, 1_000, 1, &backend, 1, None).unwrap();
+        assert_eq!(est.sample_segments, set.len());
+        assert_eq!(est.sample_pairs, set.len() * (set.len() - 1) / 2);
     }
 
     #[test]
@@ -135,9 +187,9 @@ mod tests {
     fn tiny_corpora_degrade_to_zero() {
         let mut set = generate(&DatasetSpec::tiny(8, 2, 304));
         set.segments.truncate(1);
-        let (eps, pairs) =
-            derive_epsilon(&set, 0.5, 64, 1, &NativeBackend::new(), 1, None).unwrap();
-        assert_eq!(eps, 0.0);
-        assert_eq!(pairs, 0);
+        let est = derive_epsilon(&set, 0.5, 64, 1, &NativeBackend::new(), 1, None).unwrap();
+        assert_eq!(est.epsilon, 0.0);
+        assert_eq!(est.sample_pairs, 0);
+        assert_eq!(est.sample_segments, 1);
     }
 }

@@ -285,6 +285,53 @@ impl AggregateConfig {
     }
 }
 
+/// Whether the lower-bound pruning cascade
+/// ([`crate::distance::CascadeBackend`]) wraps the distance backend.
+///
+/// `Off` is the exact path, unchanged — the bitwise reference the
+/// pruning parity suite compares against.  `On` answers threshold
+/// queries through an LB_Keogh-style envelope bound first and runs the
+/// DTW recurrence only when the bound cannot decide; clusterings are
+/// bitwise identical because the bound is admissible (never exceeds the
+/// exact distance) and threshold consumers reject any value above their
+/// radius before comparing magnitudes.  `Debug` additionally computes
+/// the exact distance for every bounded pair and fails the run if a
+/// bound ever exceeds it — the admissibility oracle, for tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PruneMode {
+    /// Exact distances everywhere (default).
+    #[default]
+    Off,
+    /// Cascade lower bounds before DTW on threshold queries.
+    On,
+    /// Cascade *and* verify every bound against the exact distance.
+    Debug,
+}
+
+impl PruneMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMode::Off => "off",
+            PruneMode::On => "on",
+            PruneMode::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" | "exact" | "false" | "0" => Ok(PruneMode::Off),
+            "on" | "lb" | "true" | "1" => Ok(PruneMode::On),
+            "debug" | "verify" => Ok(PruneMode::Debug),
+            other => anyhow::bail!("unknown prune mode '{other}' (off|on|debug)"),
+        }
+    }
+
+    /// Whether the cascade wraps the backend at all.
+    pub fn is_active(&self) -> bool {
+        !matches!(self, PruneMode::Off)
+    }
+}
+
 /// How the final number of clusters K is chosen (paper §5: K = ΣKⱼ from
 /// the first stage is empirically a good approximation).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -345,6 +392,9 @@ pub struct AlgoConfig {
     /// `epsilon > 0` the drivers cluster leader-pass representatives
     /// instead of raw segments.  Off (ε = 0) by default.
     pub aggregate: AggregateConfig,
+    /// Lower-bound pruning cascade around the backend (off = exact
+    /// path, bitwise the historical behaviour).
+    pub prune: PruneMode,
 }
 
 impl Default for AlgoConfig {
@@ -362,6 +412,7 @@ impl Default for AlgoConfig {
             max_clusters_frac: 0.25,
             cache_bytes: 0,
             aggregate: AggregateConfig::default(),
+            prune: PruneMode::Off,
         }
     }
 }
@@ -386,6 +437,12 @@ impl AlgoConfig {
     /// Enable stage-0 aggregation with leader radius `epsilon`.
     pub fn with_aggregate(mut self, aggregate: AggregateConfig) -> Self {
         self.aggregate = aggregate;
+        self
+    }
+
+    /// Select the lower-bound pruning mode.
+    pub fn with_prune(mut self, prune: PruneMode) -> Self {
+        self.prune = prune;
         self
     }
 
@@ -569,6 +626,7 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
             "max_clusters_frac" => cfg.max_clusters_frac = v.parse()?,
             "cache_bytes" => cfg.cache_bytes = v.parse()?,
             "cache_mb" => cfg.cache_bytes = v.parse::<usize>()? << 20,
+            "prune" => cfg.prune = PruneMode::parse(v)?,
             "aggregate_eps" => cfg.aggregate.epsilon = v.parse()?,
             "aggregate_cap" => {
                 cfg.aggregate.cap = if v == "none" {
@@ -798,6 +856,35 @@ mod tests {
         assert_eq!(b.tree_probe, 3);
         assert_eq!(b.quantile, Some(0.5));
         assert_eq!(b.quantile_sample, 64);
+    }
+
+    #[test]
+    fn prune_mode_parses_and_defaults_off() {
+        assert_eq!(AlgoConfig::default().prune, PruneMode::Off);
+        assert!(!PruneMode::default().is_active());
+        for (value, want) in [
+            ("off", PruneMode::Off),
+            ("exact", PruneMode::Off),
+            ("on", PruneMode::On),
+            ("lb", PruneMode::On),
+            ("debug", PruneMode::Debug),
+            ("verify", PruneMode::Debug),
+        ] {
+            let mut cfg = AlgoConfig::default();
+            apply_overrides(
+                &mut cfg,
+                &[("prune".to_string(), value.to_string())],
+            )
+            .unwrap();
+            assert_eq!(cfg.prune, want, "prune = {value}");
+            assert_eq!(PruneMode::parse(want.name()).unwrap(), want, "round-trip");
+        }
+        assert!(PruneMode::parse("sometimes").is_err());
+        assert!(PruneMode::On.is_active() && PruneMode::Debug.is_active());
+        assert_eq!(
+            AlgoConfig::default().with_prune(PruneMode::On).prune,
+            PruneMode::On
+        );
     }
 
     #[test]

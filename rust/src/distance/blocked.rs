@@ -257,6 +257,17 @@ impl DtwBackend for BlockedBackend {
         "blocked"
     }
 
+    fn kernel_tag(&self) -> u32 {
+        // Same convention as NativeBackend: full band is the shared
+        // exact tag 0 (the lane kernel is bitwise-equal to the scalar
+        // DP), banded delegates to the scalar band kernel and tags by
+        // radius.
+        match self.band {
+            None => 0,
+            Some(b) => u32::try_from(b).unwrap_or(u32::MAX - 1).saturating_add(1),
+        }
+    }
+
     fn preferred_rows(&self) -> usize {
         // Must match NativeBackend: the condensed/cross builders block
         // triangle rows by this size, and the cached builders probe the

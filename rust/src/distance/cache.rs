@@ -5,9 +5,14 @@
 //! from one iteration to the next (and medoid pairs recur in stage 2) —
 //! yet the driver used to recompute every condensed matrix from
 //! scratch.  [`PairCache`] closes that gap: a sharded, capacity-bounded
-//! map from global segment-id pairs `(min, max)` to their DTW distance,
-//! sitting *above* the [`super::DtwBackend`] trait so both the native
-//! DP and the XLA tile executor benefit.
+//! map from `(kernel tag, min_id, max_id)` triples to their DTW
+//! distance, sitting *above* the [`super::DtwBackend`] trait so both
+//! the native DP and the XLA tile executor benefit.  The kernel tag
+//! ([`super::DtwBackend::kernel_tag`]) folds the distance semantics —
+//! full-band vs each Sakoe-Chiba radius, which can differ by the
+//! `INFEASIBLE` sentinel alone — into the key, so backends with
+//! different kernels can share one physical cache without serving each
+//! other aliased values.
 //!
 //! The capacity bound is the time-side companion of the paper's space
 //! bound: β caps any single resident condensed matrix at
@@ -47,6 +52,7 @@
 //! interference can perturb any session's output — only its hit rate.
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -56,21 +62,47 @@ use crate::telemetry::CacheStats;
 /// few enough that the per-shard FIFO stays cache-friendly.
 const SHARDS: usize = 16;
 
-/// Approximate resident cost of one cached pair: 12 bytes of payload
-/// (u64 key + f32 value) plus hash-table control/load-factor overhead
-/// and the FIFO queue slot.  Deliberately conservative so the
+/// Approximate resident cost of one cached pair: 20 bytes of payload
+/// (u128 tagged key + f32 value) plus hash-table control/load-factor
+/// overhead and the FIFO queue slot.  Deliberately conservative so the
 /// configured byte budget is an upper bound, not a target to overrun.
 pub const ENTRY_BYTES: usize = 32;
 
+/// The cache keys ids into a 32-bit field per side; a scoped handle (or
+/// a serve-fleet admission) whose offset + corpus span would leave that
+/// range must be rejected with this error — in release builds too —
+/// rather than silently aliasing another session's pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IdNamespaceError {
+    /// First global id of the rejected namespace range.
+    pub offset: usize,
+    /// Ids the caller needs above `offset` (0: the offset alone is
+    /// already out of range).
+    pub span: usize,
+}
+
+impl fmt::Display for IdNamespaceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pair-cache id namespace exhausted: offset {} + span {} leaves the \
+             32-bit pair-key field",
+            self.offset, self.span
+        )
+    }
+}
+
+impl std::error::Error for IdNamespaceError {}
+
 struct Shard {
-    map: HashMap<u64, f32>,
-    fifo: VecDeque<u64>,
+    map: HashMap<u128, f32>,
+    fifo: VecDeque<u128>,
 }
 
 /// Per-handle residency ledger for budgeted scoped handles: the keys
 /// this handle inserted, oldest first.
 struct SessionFifo {
-    fifo: VecDeque<u64>,
+    fifo: VecDeque<u128>,
     budget_entries: usize,
 }
 
@@ -132,9 +164,19 @@ impl PairCache {
     ///
     /// Callers pick offsets so that session id ranges are disjoint
     /// (session *i* gets the running sum of earlier corpus sizes);
-    /// `offset + local_id` must stay below 2³².
-    pub fn scoped(&self, offset: usize, budget_bytes: Option<usize>) -> PairCache {
-        PairCache {
+    /// `offset + local_id` must stay below 2³², and an offset already
+    /// outside that range is rejected here with a typed error — the
+    /// guard holds in release builds, unlike the debug assertion on the
+    /// per-pair key path.
+    pub fn scoped(
+        &self,
+        offset: usize,
+        budget_bytes: Option<usize>,
+    ) -> Result<PairCache, IdNamespaceError> {
+        if offset >= (1usize << 32) {
+            return Err(IdNamespaceError { offset, span: 0 });
+        }
+        Ok(PairCache {
             shards: Arc::clone(&self.shards),
             per_shard: self.per_shard,
             offset,
@@ -147,7 +189,7 @@ impl PairCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
-        }
+        })
     }
 
     /// This handle's id-namespace offset.
@@ -156,7 +198,8 @@ impl PairCache {
     }
 
     /// Symmetric pair key under an id offset: order-free, unique while
-    /// offset ids stay below 2³².
+    /// offset ids stay below 2³² (validated at [`PairCache::scoped`]
+    /// and serve admission; debug-asserted here).
     #[inline]
     fn key_at(offset: usize, a: usize, b: usize) -> u64 {
         debug_assert!(a != b, "diagonal pairs are implicitly zero");
@@ -166,29 +209,45 @@ impl PairCache {
         ((lo as u64) << 32) | hi as u64
     }
 
+    /// Full cache key: the kernel tag in the high 64 bits, the
+    /// symmetric pair key in the low 64 — so distances computed under
+    /// different kernels never alias even in a shared cache.
     #[inline]
-    fn key(&self, a: usize, b: usize) -> u64 {
-        Self::key_at(self.offset, a, b)
+    fn key_tagged(tag: u32, offset: usize, a: usize, b: usize) -> u128 {
+        ((tag as u128) << 64) | Self::key_at(offset, a, b) as u128
     }
 
     #[inline]
-    fn shard_of(key: u64) -> usize {
+    fn key(&self, tag: u32, a: usize, b: usize) -> u128 {
+        Self::key_tagged(tag, self.offset, a, b)
+    }
+
+    #[inline]
+    fn shard_of(key: u128) -> usize {
         // SplitMix64-style finaliser: id pairs are highly structured,
-        // so mix before taking the shard index.
-        let mut z = key.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        // so fold the tag half in and mix before taking the shard
+        // index.
+        let folded = (key as u64) ^ ((key >> 64) as u64).wrapping_mul(0xd1b5_4a32_d192_ed03);
+        let mut z = folded.wrapping_mul(0x9e37_79b9_7f4a_7c15);
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
         (z >> 59) as usize % SHARDS
     }
 
     #[inline]
-    fn shard(&self, key: u64) -> &Mutex<Shard> {
+    fn shard(&self, key: u128) -> &Mutex<Shard> {
         &self.shards[Self::shard_of(key)] // lint: allow(R002) shard_of is a residue mod SHARDS == shards.len()
     }
 
     /// Look up the distance between segment ids `a` and `b` (in this
-    /// handle's namespace), counting the probe as a hit or miss.
+    /// handle's namespace) under the default kernel tag 0.
     pub fn get(&self, a: usize, b: usize) -> Option<f32> {
-        let key = self.key(a, b);
+        self.get_tagged(0, a, b)
+    }
+
+    /// Look up the distance for `(a, b)` computed under kernel `tag`,
+    /// counting the probe as a hit or miss.
+    pub fn get_tagged(&self, tag: u32, a: usize, b: usize) -> Option<f32> {
+        let key = self.key(tag, a, b);
         // Lock poisoning only means another worker panicked mid-access;
         // shard state is a plain map + FIFO with no torn invariants, so
         // recovering the guard is safe and keeps the cache panic-free.
@@ -202,14 +261,19 @@ impl PairCache {
         found
     }
 
-    /// Insert the distance for `(a, b)`, evicting FIFO-oldest entries
-    /// of the shard when its capacity share is exhausted — and, on a
-    /// budgeted handle, this handle's own oldest entries when its
-    /// session budget is exhausted.  Re-inserting an existing key
-    /// overwrites in place (values for a pair never differ, so this is
-    /// a no-op in practice).
+    /// Insert the distance for `(a, b)` under the default kernel tag 0.
     pub fn insert(&self, a: usize, b: usize, v: f32) {
-        let key = self.key(a, b);
+        self.insert_tagged(0, a, b, v)
+    }
+
+    /// Insert the distance for `(a, b)` computed under kernel `tag`,
+    /// evicting FIFO-oldest entries of the shard when its capacity
+    /// share is exhausted — and, on a budgeted handle, this handle's
+    /// own oldest entries when its session budget is exhausted.
+    /// Re-inserting an existing key overwrites in place (values for a
+    /// tagged pair never differ, so this is a no-op in practice).
+    pub fn insert_tagged(&self, tag: u32, a: usize, b: usize, v: f32) {
+        let key = self.key(tag, a, b);
         let mut newly_inserted = false;
         {
             let mut shard = self.shard(key).lock().unwrap_or_else(|p| p.into_inner());
@@ -402,11 +466,11 @@ mod tests {
         let c = PairCache::with_capacity_bytes(1);
         // Find two keys landing in the same shard; inserting per_shard+1
         // of them must evict the oldest.
-        let base = PairCache::shard_of(PairCache::key_at(0, 0, 1_000_000));
+        let base = PairCache::shard_of(PairCache::key_tagged(0, 0, 0, 1_000_000));
         let mut same: Vec<usize> = Vec::new();
         let mut i = 0usize;
         while same.len() < 2 {
-            if PairCache::shard_of(PairCache::key_at(0, i, i + 1_000_000)) == base {
+            if PairCache::shard_of(PairCache::key_tagged(0, 0, i, i + 1_000_000)) == base {
                 same.push(i);
             }
             i += 1;
@@ -462,8 +526,8 @@ mod tests {
     #[test]
     fn scoped_handles_namespace_local_ids() {
         let root = PairCache::with_capacity_bytes(1 << 20);
-        let a = root.scoped(0, None);
-        let b = root.scoped(100, None);
+        let a = root.scoped(0, None).unwrap();
+        let b = root.scoped(100, None).unwrap();
         // Same local pair, different namespaces, different corpora.
         a.insert(0, 1, 1.0);
         b.insert(0, 1, 2.0);
@@ -480,7 +544,7 @@ mod tests {
         root.insert(1, 2, 0.5);
         let _ = root.get(1, 2);
         let before = root.stats();
-        let s = root.scoped(0, None);
+        let s = root.scoped(0, None).unwrap();
         assert_eq!(s.get(1, 2), Some(0.5));
         assert_eq!(s.get(7, 8), None);
         let ss = s.stats();
@@ -493,7 +557,7 @@ mod tests {
     #[test]
     fn session_budget_bounds_handle_residency() {
         let root = PairCache::with_capacity_bytes(1 << 20);
-        let s = root.scoped(0, Some(2 * ENTRY_BYTES));
+        let s = root.scoped(0, Some(2 * ENTRY_BYTES)).unwrap();
         assert_eq!(s.session_budget_entries(), Some(2));
         for i in 0..10usize {
             s.insert(i, i + 100, i as f32);
@@ -511,7 +575,7 @@ mod tests {
         // stale FIFO slots from session evictions must not break the
         // global bound or leak queue memory.
         let root = PairCache::with_capacity_bytes(1);
-        let s = root.scoped(0, Some(ENTRY_BYTES)); // one-entry budget
+        let s = root.scoped(0, Some(ENTRY_BYTES)).unwrap(); // one-entry budget
         for i in 0..2000usize {
             s.insert(i, i + 5_000, i as f32);
         }
@@ -532,11 +596,37 @@ mod tests {
     }
 
     #[test]
+    fn kernel_tags_partition_the_key_space() {
+        // Same pair, different kernel tags: both values stay resident
+        // and each probe sees only its own kernel's distance.
+        let c = PairCache::with_capacity_bytes(1 << 20);
+        c.insert_tagged(0, 3, 9, 1.0);
+        c.insert_tagged(1, 3, 9, 2.0);
+        c.insert_tagged(7, 3, 9, 3.0);
+        assert_eq!(c.get_tagged(0, 3, 9), Some(1.0));
+        assert_eq!(c.get_tagged(1, 9, 3), Some(2.0), "tagged key stays order-free");
+        assert_eq!(c.get_tagged(7, 3, 9), Some(3.0));
+        assert_eq!(c.get_tagged(2, 3, 9), None, "unseen tag misses");
+        assert_eq!(c.len(), 3, "tags are distinct entries");
+        // The untagged API is exactly tag 0.
+        assert_eq!(c.get(3, 9), Some(1.0));
+    }
+
+    #[test]
+    fn scoped_rejects_offsets_outside_the_id_field() {
+        let root = PairCache::with_capacity_bytes(1 << 20);
+        assert!(root.scoped((1usize << 32) - 1, None).is_ok());
+        let err = root.scoped(1usize << 32, None).unwrap_err();
+        assert_eq!(err.offset, 1usize << 32);
+        assert!(err.to_string().contains("id namespace exhausted"));
+    }
+
+    #[test]
     fn concurrent_budgeted_sessions_stay_disjoint() {
         let root = PairCache::with_capacity_bytes(1 << 20);
         std::thread::scope(|scope| {
             for t in 0..4usize {
-                let s = root.scoped(t * 10_000, Some(64 * ENTRY_BYTES));
+                let s = root.scoped(t * 10_000, Some(64 * ENTRY_BYTES)).unwrap();
                 scope.spawn(move || {
                     for i in 0..300usize {
                         s.insert(i, i + 1_000, (t * 10_000 + i) as f32);

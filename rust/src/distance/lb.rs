@@ -1,0 +1,336 @@
+//! The cascading lower-bound pruning layer: [`CascadeBackend`] wraps
+//! any exact [`DtwBackend`] and answers threshold-carrying pair queries
+//! (`pairwise_pruned`) through a cascade — cheap LB_Keogh-style
+//! envelope bound first, exact DP only when the bound cannot decide.
+//!
+//! # Decision-parity contract
+//!
+//! A pruned entry carries the *lower bound itself* as its value, with
+//! its flag cleared.  The bound is admissible in floating point
+//! (`lb ≤ exact` bitwise, see [`crate::dtw::envelope`]), so
+//! `lb > threshold` implies `exact > threshold`: any consumer that only
+//! compares returned values against that same threshold — the stage-0
+//! leader pass's ε-join rule, the streaming retirement argmin's
+//! strict-`<` update — makes exactly the decisions the exact backend
+//! would, and the clustering output is bitwise identical to the
+//! `prune = off` oracle (pinned in `rust/tests/pruning.rs`).
+//!
+//! DTW is not a metric (no triangle inequality), but nothing here leans
+//! on one: admissibility of the envelope bound against each individual
+//! alignment total is all the cascade needs.
+//!
+//! Plain `pairwise` calls (condensed matrix builds, tree-mode probe
+//! rectangles whose values feed orderings rather than threshold tests)
+//! delegate to the inner backend untouched, and the wrapper reuses the
+//! inner backend's cache kernel tag, so exact values cached by pruned
+//! and unpruned runs interchange freely.  Lower bounds are never
+//! cached.
+//!
+//! [`CascadeMode::Debug`] additionally computes the exact distance for
+//! *every* pair of a pruned query and verifies `lb ≤ exact`, returning
+//! the same values and flags as [`CascadeMode::On`] — an admissibility
+//! tripwire for new backends or feature pipelines.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::DtwBackend;
+use crate::corpus::{Segment, SegmentSet};
+use crate::dtw::envelope::{lb_one_sided, Envelope};
+use crate::telemetry::PruneStats;
+
+/// How the cascade treats pruned pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CascadeMode {
+    /// Prune: bound out pairs without running the DP.
+    On,
+    /// Prune, but also run the DP on every pair and verify `lb ≤ exact`
+    /// (values and flags returned are identical to `On`).
+    Debug,
+}
+
+/// The wrapped exact backend: borrowed for driver-scoped runs, shared
+/// for streaming/serve sessions that must own their backend.
+enum InnerRef<'a> {
+    Borrowed(&'a dyn DtwBackend),
+    Shared(Arc<dyn DtwBackend + Send + Sync>),
+}
+
+impl InnerRef<'_> {
+    fn get(&self) -> &dyn DtwBackend {
+        match self {
+            InnerRef::Borrowed(b) => *b,
+            InnerRef::Shared(s) => s.as_ref(),
+        }
+    }
+}
+
+/// Lower-bound cascade over an exact backend, with per-segment
+/// envelopes precomputed once for the whole corpus at construction.
+pub struct CascadeBackend<'a> {
+    inner: InnerRef<'a>,
+    /// Envelope per global segment id.
+    envelopes: Vec<Envelope>,
+    dim: usize,
+    mode: CascadeMode,
+    lb_pairs: AtomicU64,
+    lb_pruned: AtomicU64,
+    exact_pairs: AtomicU64,
+}
+
+impl<'a> CascadeBackend<'a> {
+    /// Wrap a borrowed backend (driver episodes).
+    pub fn borrowed(inner: &'a dyn DtwBackend, set: &SegmentSet, mode: CascadeMode) -> Self {
+        Self::build(InnerRef::Borrowed(inner), set, mode)
+    }
+
+    /// Wrap a shared backend (streaming sessions and serve fleets,
+    /// which need the wrapper to be `Send`).
+    pub fn shared(
+        inner: Arc<dyn DtwBackend + Send + Sync>,
+        set: &SegmentSet,
+        mode: CascadeMode,
+    ) -> CascadeBackend<'static> {
+        CascadeBackend::build(InnerRef::Shared(inner), set, mode)
+    }
+
+    fn build(inner: InnerRef<'_>, set: &SegmentSet, mode: CascadeMode) -> CascadeBackend<'_> {
+        let mut envelopes = vec![Envelope::of_frames(&[], set.dim); set.len()];
+        for seg in &set.segments {
+            if let Some(slot) = envelopes.get_mut(seg.id) {
+                *slot = Envelope::of_frames(&seg.feats, seg.dim);
+            }
+        }
+        CascadeBackend {
+            inner,
+            envelopes,
+            dim: set.dim,
+            mode,
+            lb_pairs: AtomicU64::new(0),
+            lb_pruned: AtomicU64::new(0),
+            exact_pairs: AtomicU64::new(0),
+        }
+    }
+
+    fn envelope_of(&self, seg: &Segment) -> anyhow::Result<&Envelope> {
+        self.envelopes.get(seg.id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "segment id {} outside the cascade's envelope table ({} segments)",
+                seg.id,
+                self.envelopes.len()
+            )
+        })
+    }
+
+    /// Normalised symmetric envelope bound for one pair: the larger of
+    /// the two one-sided sums over the shared `(lx + ly)` denominator,
+    /// never above the exact normalised DTW distance (bitwise).
+    pub fn lb_pair(&self, x: &Segment, y: &Segment) -> anyhow::Result<f32> {
+        anyhow::ensure!(
+            x.dim == self.dim && y.dim == self.dim,
+            "segment dim {}/{} does not match the cascade's corpus dim {}",
+            x.dim,
+            y.dim,
+            self.dim
+        );
+        let env_y = self.envelope_of(y)?;
+        let env_x = self.envelope_of(x)?;
+        let fwd = lb_one_sided(&x.feats, self.dim, env_y);
+        let bwd = lb_one_sided(&y.feats, self.dim, env_x);
+        Ok(fwd.max(bwd) / (x.len + y.len) as f32)
+    }
+
+    /// Counter snapshot (cumulative since construction); the drivers
+    /// delta consecutive snapshots into per-iteration telemetry.
+    pub fn stats(&self) -> PruneStats {
+        PruneStats {
+            lb_pairs: self.lb_pairs.load(Ordering::Relaxed),
+            lb_pruned: self.lb_pruned.load(Ordering::Relaxed),
+            exact_pairs: self.exact_pairs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl DtwBackend for CascadeBackend<'_> {
+    /// Threshold-free queries are exact: the cascade only engages where
+    /// a caller can state what "too far" means.
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        self.exact_pairs
+            .fetch_add((xs.len() * ys.len()) as u64, Ordering::Relaxed);
+        self.inner.get().pairwise(xs, ys)
+    }
+
+    fn pairwise_pruned(
+        &self,
+        xs: &[&Segment],
+        ys: &[&Segment],
+        threshold: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<bool>)> {
+        let ny = ys.len();
+        let mut vals: Vec<f32> = Vec::with_capacity(xs.len() * ny);
+        let mut flags: Vec<bool> = Vec::with_capacity(xs.len() * ny);
+        for x in xs {
+            let mut lbs: Vec<f32> = Vec::with_capacity(ny);
+            for y in ys {
+                lbs.push(self.lb_pair(x, y)?);
+            }
+            let survive: Vec<usize> = lbs
+                .iter()
+                .enumerate()
+                .filter(|&(_, &lb)| lb <= threshold)
+                .map(|(j, _)| j)
+                .collect();
+            let mut row_vals = lbs.clone();
+            let mut row_flags = vec![false; ny];
+            if !survive.is_empty() {
+                let sub: Vec<&Segment> = survive.iter().filter_map(|&j| ys.get(j).copied()).collect();
+                let d = self.inner.get().pairwise(&[*x], &sub)?;
+                anyhow::ensure!(
+                    d.len() == sub.len(),
+                    "inner backend returned {} distances for {} surviving pairs",
+                    d.len(),
+                    sub.len()
+                );
+                for (&j, &v) in survive.iter().zip(&d) {
+                    if let Some(slot) = row_vals.get_mut(j) {
+                        *slot = v;
+                    }
+                    if let Some(flag) = row_flags.get_mut(j) {
+                        *flag = true;
+                    }
+                }
+            }
+            if self.mode == CascadeMode::Debug {
+                // Admissibility tripwire: every pair's bound must sit at
+                // or below its exact distance, pruned or not.
+                let exact = self.inner.get().pairwise(&[*x], ys)?;
+                for ((&lb, &ex), y) in lbs.iter().zip(&exact).zip(ys) {
+                    anyhow::ensure!(
+                        lb <= ex,
+                        "inadmissible bound: lb {} > exact {} for pair ({}, {})",
+                        lb,
+                        ex,
+                        x.id,
+                        y.id
+                    );
+                }
+            }
+            self.lb_pairs.fetch_add(ny as u64, Ordering::Relaxed);
+            self.lb_pruned
+                .fetch_add((ny - survive.len()) as u64, Ordering::Relaxed);
+            self.exact_pairs
+                .fetch_add(survive.len() as u64, Ordering::Relaxed);
+            vals.extend_from_slice(&row_vals);
+            flags.extend_from_slice(&row_flags);
+        }
+        Ok((vals, flags))
+    }
+
+    fn supports_pruning(&self) -> bool {
+        true
+    }
+
+    fn prune_stats(&self) -> Option<PruneStats> {
+        Some(self.stats())
+    }
+
+    fn name(&self) -> &'static str {
+        match self.inner.get().name() {
+            "native" => "native+lb",
+            "blocked" => "blocked+lb",
+            _ => "cascade+lb",
+        }
+    }
+
+    /// Exact values cached by pruned and unpruned runs interchange:
+    /// the cascade computes with the inner kernel and never caches
+    /// lower bounds.
+    fn kernel_tag(&self) -> u32 {
+        self.inner.get().kernel_tag()
+    }
+
+    fn preferred_rows(&self) -> usize {
+        self.inner.get().preferred_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::corpus::generate;
+    use crate::distance::NativeBackend;
+
+    fn refs(set: &SegmentSet) -> Vec<&Segment> {
+        set.segments.iter().collect()
+    }
+
+    #[test]
+    fn plain_pairwise_is_exact_and_counts() {
+        let set = generate(&DatasetSpec::tiny(12, 3, 41));
+        let inner = NativeBackend::new();
+        let cascade = CascadeBackend::borrowed(&inner, &set, CascadeMode::On);
+        let rs = refs(&set);
+        let want = inner.pairwise(&rs[..4], &rs[4..9]).unwrap();
+        let got = cascade.pairwise(&rs[..4], &rs[4..9]).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(cascade.stats().exact_pairs, 20);
+        assert_eq!(cascade.stats().lb_pairs, 0);
+    }
+
+    #[test]
+    fn pruned_query_survivors_are_exact_and_prunes_carry_the_bound() {
+        let set = generate(&DatasetSpec::tiny(20, 3, 42));
+        let inner = NativeBackend::new();
+        let cascade = CascadeBackend::borrowed(&inner, &set, CascadeMode::On);
+        let rs = refs(&set);
+        let exact = inner.pairwise(&rs[..6], &rs[6..]).unwrap();
+        // A mid-range threshold so both branches of the cascade fire.
+        let mut sorted = exact.clone();
+        sorted.sort_unstable_by(f32::total_cmp);
+        let threshold = sorted[sorted.len() / 2];
+        let (vals, flags) = cascade.pairwise_pruned(&rs[..6], &rs[6..], threshold).unwrap();
+        assert_eq!(vals.len(), exact.len());
+        let mut pruned = 0usize;
+        for ((&v, &f), &ex) in vals.iter().zip(&flags).zip(&exact) {
+            if f {
+                assert_eq!(v.to_bits(), ex.to_bits(), "survivors are exact");
+            } else {
+                pruned += 1;
+                assert!(v > threshold, "pruned value must exceed the threshold");
+                assert!(v <= ex, "pruned value is an admissible bound");
+            }
+        }
+        let s = cascade.stats();
+        assert_eq!(s.lb_pairs as usize, exact.len());
+        assert_eq!(s.lb_pruned as usize, pruned);
+        assert_eq!(s.exact_pairs as usize, exact.len() - pruned);
+    }
+
+    #[test]
+    fn debug_mode_returns_on_mode_results() {
+        let set = generate(&DatasetSpec::tiny(16, 2, 43));
+        let inner = NativeBackend::new();
+        let on = CascadeBackend::borrowed(&inner, &set, CascadeMode::On);
+        let dbg = CascadeBackend::borrowed(&inner, &set, CascadeMode::Debug);
+        let rs = refs(&set);
+        let (v1, f1) = on.pairwise_pruned(&rs[..5], &rs[5..], 0.4).unwrap();
+        let (v2, f2) = dbg.pairwise_pruned(&rs[..5], &rs[5..], 0.4).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&v1), bits(&v2));
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn threshold_below_every_bound_prunes_everything() {
+        // Negative threshold: every finite bound exceeds it except pairs
+        // whose bound is exactly 0 (which survive and compute).
+        let set = generate(&DatasetSpec::tiny(10, 2, 44));
+        let inner = NativeBackend::new();
+        let cascade = CascadeBackend::borrowed(&inner, &set, CascadeMode::On);
+        let rs = refs(&set);
+        let (_, flags) = cascade.pairwise_pruned(&rs[..3], &rs[3..], -1.0).unwrap();
+        assert!(flags.iter().all(|&f| !f), "nothing survives a negative threshold");
+        assert_eq!(cascade.stats().exact_pairs, 0);
+    }
+}

@@ -13,12 +13,15 @@
 pub mod blocked;
 pub mod cache;
 pub mod condensed;
+pub mod lb;
 
 pub use blocked::BlockedBackend;
-pub use cache::PairCache;
+pub use cache::{IdNamespaceError, PairCache};
 pub use condensed::Condensed;
+pub use lb::{CascadeBackend, CascadeMode};
 
 use crate::corpus::Segment;
+use crate::telemetry::PruneStats;
 use crate::util::pool::parallel_map;
 
 /// Strict left-to-right f32 accumulation — the fixed-order reduction
@@ -78,6 +81,49 @@ pub trait DtwBackend: Sync {
 
     /// Human-readable name for telemetry.
     fn name(&self) -> &'static str;
+
+    /// Threshold-carrying pair query for consumers that only compare
+    /// distances against `threshold`: returns the row-major value
+    /// buffer plus a parallel flag per pair — `true` means the value is
+    /// the exact distance, `false` means the pair was bounded out and
+    /// the value is an admissible lower bound (strictly above
+    /// `threshold`, so threshold comparisons decide identically).  The
+    /// default computes everything exactly; only
+    /// [`lb::CascadeBackend`] prunes.
+    fn pairwise_pruned(
+        &self,
+        xs: &[&Segment],
+        ys: &[&Segment],
+        threshold: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<bool>)> {
+        let _ = threshold;
+        let d = self.pairwise(xs, ys)?;
+        let flags = vec![true; d.len()];
+        Ok((d, flags))
+    }
+
+    /// Whether `pairwise_pruned` can actually bound pairs out.  `false`
+    /// keeps threshold-aware call sites on the exact code path, bit for
+    /// bit.
+    fn supports_pruning(&self) -> bool {
+        false
+    }
+
+    /// Cascade counter snapshot, if this backend prunes.  Lets drivers
+    /// read per-iteration deltas through `&dyn DtwBackend` without
+    /// widening any signatures.
+    fn prune_stats(&self) -> Option<PruneStats> {
+        None
+    }
+
+    /// Distinguishes distance *kernels* in the shared [`PairCache`]:
+    /// backends whose values can differ for the same segment pair must
+    /// return different tags.  Convention: 0 is the exact full-band
+    /// kernel; a Sakoe-Chiba radius `b` (which can additionally return
+    /// the `INFEASIBLE` sentinel) maps to `1 + b`.
+    fn kernel_tag(&self) -> u32 {
+        0
+    }
 
     /// Preferred number of X rows per `pairwise` call.  The condensed
     /// builder groups triangle rows into blocks of this size: batched
@@ -172,6 +218,17 @@ impl DtwBackend for NativeBackend {
         "native"
     }
 
+    fn kernel_tag(&self) -> u32 {
+        // Full band shares tag 0 with every exact full-band kernel
+        // (blocked is bitwise-equal, so sharing is legitimate); each
+        // band radius is its own kernel — banded values can differ and
+        // can be the INFEASIBLE sentinel.
+        match self.band {
+            None => 0,
+            Some(b) => u32::try_from(b).unwrap_or(u32::MAX - 1).saturating_add(1),
+        }
+    }
+
     fn preferred_rows(&self) -> usize {
         // Amortise per-call Y transposition across a block of X rows
         // while keeping work-stealing granularity reasonable.
@@ -254,6 +311,9 @@ pub fn build_condensed_cached(
         return Ok(cond);
     }
 
+    // Kernel tag keys this backend's values apart from any other
+    // kernel sharing the cache (banded vs unbanded, say).
+    let tag = backend.kernel_tag();
     let block = backend.preferred_rows().max(1);
     let nblocks = (n - 1).div_ceil(block);
     type BlockRows = (usize, Vec<Vec<f32>>);
@@ -269,7 +329,7 @@ pub fn build_condensed_cached(
             let mut row = vec![0.0f32; i];
             let mut miss = Vec::new();
             for (j, slot) in row.iter_mut().enumerate() {
-                match cache.get(segments[i].id, segments[j].id) {
+                match cache.get_tagged(tag, segments[i].id, segments[j].id) {
                     Some(v) => {
                         *slot = v;
                         any_hit = true;
@@ -298,7 +358,7 @@ pub fn build_condensed_cached(
                 let src = &d[(i - i0) * width..(i - i0) * width + i];
                 for (j, &v) in src.iter().enumerate() {
                     vals[i - i0][j] = v;
-                    cache.insert(segments[i].id, segments[j].id, v);
+                    cache.insert_tagged(tag, segments[i].id, segments[j].id, v);
                 }
             }
             return Ok((i0, vals));
@@ -319,7 +379,7 @@ pub fn build_condensed_cached(
             );
             for (&j, &v) in miss.iter().zip(&d) {
                 vals[r][j] = v;
-                cache.insert(segments[i].id, segments[j].id, v);
+                cache.insert_tagged(tag, segments[i].id, segments[j].id, v);
             }
         }
         Ok((i0, vals))
@@ -385,6 +445,7 @@ pub fn build_cross_cached(
     if xs.is_empty() || ys.is_empty() {
         return Ok(Vec::new());
     }
+    let tag = backend.kernel_tag();
     let block = backend.preferred_rows().max(1);
     let nblocks = xs.len().div_ceil(block);
     let rows: Vec<anyhow::Result<Vec<f32>>> = parallel_map(nblocks, threads, |b| {
@@ -400,7 +461,7 @@ pub fn build_cross_cached(
                 let cached = if xs[i].id == y.id {
                     None
                 } else {
-                    cache.get(xs[i].id, y.id)
+                    cache.get_tagged(tag, xs[i].id, y.id)
                 };
                 match cached {
                     Some(v) => {
@@ -432,7 +493,7 @@ pub fn build_cross_cached(
                 for (j, y) in ys.iter().enumerate() {
                     let v = d[(i - i0) * ny + j];
                     if xs[i].id != y.id {
-                        cache.insert(xs[i].id, y.id, v);
+                        cache.insert_tagged(tag, xs[i].id, y.id, v);
                     }
                 }
             }
@@ -454,7 +515,104 @@ pub fn build_cross_cached(
             for (&j, &v) in miss.iter().zip(&d) {
                 vals[r * ny + j] = v;
                 if xs[i].id != ys[j].id {
-                    cache.insert(xs[i].id, ys[j].id, v);
+                    cache.insert_tagged(tag, xs[i].id, ys[j].id, v);
+                }
+            }
+        }
+        Ok(vals)
+    })?;
+    let mut out = Vec::with_capacity(xs.len() * ys.len());
+    for r in rows {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+/// [`build_cross_cached`] with a decision threshold: when the backend
+/// prunes ([`DtwBackend::supports_pruning`]) and a threshold is given,
+/// pairs the cascade bounds out above `threshold` come back as lower
+/// bounds (still above `threshold`) instead of exact distances, and
+/// only exact values are published to the cache.
+///
+/// `threshold = None` — or a backend that cannot prune — is *literally*
+/// [`build_cross_cached`]: the exact path stays the bitwise oracle for
+/// the pruned one.  Consumers must only compare returned values against
+/// the same `threshold` (the stage-0 leader ε-join rule does exactly
+/// this), which is what makes pruning invisible to results.
+pub fn build_cross_cached_pruned(
+    xs: &[&Segment],
+    ys: &[&Segment],
+    backend: &dyn DtwBackend,
+    threads: usize,
+    cache: Option<&PairCache>,
+    threshold: Option<f32>,
+) -> anyhow::Result<Vec<f32>> {
+    let Some(threshold) = threshold else {
+        return build_cross_cached(xs, ys, backend, threads, cache);
+    };
+    if !backend.supports_pruning() {
+        return build_cross_cached(xs, ys, backend, threads, cache);
+    }
+    if xs.is_empty() || ys.is_empty() {
+        return Ok(Vec::new());
+    }
+    let tag = backend.kernel_tag();
+    let block = backend.preferred_rows().max(1);
+    let nblocks = xs.len().div_ceil(block);
+    let rows: Vec<anyhow::Result<Vec<f32>>> = parallel_map(nblocks, threads, |b| {
+        let i0 = b * block;
+        let i1 = (i0 + block).min(xs.len());
+        let ny = ys.len();
+        let block_xs = xs
+            .get(i0..i1)
+            .ok_or_else(|| anyhow::anyhow!("row block {i0}..{i1} out of range"))?;
+        let mut vals = vec![0.0f32; (i1 - i0) * ny];
+        // Cached exact values first — the cascade's cheapest tier.
+        let mut missing: Vec<Vec<usize>> = Vec::with_capacity(i1 - i0);
+        for (x, row) in block_xs.iter().zip(vals.chunks_exact_mut(ny)) {
+            let mut miss = Vec::new();
+            for ((j, y), slot) in ys.iter().enumerate().zip(row.iter_mut()) {
+                let cached = if x.id == y.id {
+                    None
+                } else {
+                    cache.and_then(|c| c.get_tagged(tag, x.id, y.id))
+                };
+                match cached {
+                    Some(v) => *slot = v,
+                    None => miss.push(j),
+                }
+            }
+            missing.push(miss);
+        }
+        // Gaps go through the pruned query, one row-shaped request per
+        // row (the cascade batches DP survivors per row itself, so this
+        // shape adds no extra exact calls).  Only exact values — flag
+        // set — are published; a lower bound must never be cached.
+        for ((x, row), miss) in block_xs
+            .iter()
+            .zip(vals.chunks_exact_mut(ny))
+            .zip(&missing)
+        {
+            if miss.is_empty() {
+                continue;
+            }
+            let sub: Vec<&Segment> = miss.iter().filter_map(|&j| ys.get(j).copied()).collect();
+            let (d, flags) = backend.pairwise_pruned(&[*x], &sub, threshold)?;
+            anyhow::ensure!(
+                d.len() == sub.len() && flags.len() == sub.len(),
+                "backend returned {} distances / {} flags for {} pairs",
+                d.len(),
+                flags.len(),
+                sub.len()
+            );
+            for (((&j, &v), &exact), y) in miss.iter().zip(&d).zip(&flags).zip(&sub) {
+                if let Some(slot) = row.get_mut(j) {
+                    *slot = v;
+                }
+                if exact && x.id != y.id {
+                    if let Some(c) = cache {
+                        c.insert_tagged(tag, x.id, y.id, v);
+                    }
                 }
             }
         }
@@ -611,6 +769,92 @@ mod tests {
             assert_eq!(a.as_slice(), want.as_slice(), "threads={threads}");
             assert_eq!(b.as_slice(), want.as_slice(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn banded_and_unbanded_builds_share_a_cache_without_aliasing() {
+        // The regression this PR's keying fix pins: a banded build
+        // (whose values differ and can be the INFEASIBLE sentinel) and
+        // an unbanded build sharing one physical cache must each see
+        // exactly their own kernel's values.
+        let set = generate(&DatasetSpec::tiny(24, 3, 11));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let full = NativeBackend::new();
+        let banded = NativeBackend::banded(1);
+        assert_ne!(full.kernel_tag(), banded.kernel_tag());
+        let want_full = build_condensed(&refs, &full, 2).unwrap();
+        let want_band = build_condensed(&refs, &banded, 2).unwrap();
+        assert_ne!(
+            want_full.as_slice(),
+            want_band.as_slice(),
+            "band 1 must actually change some distances for this pin to bite"
+        );
+
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        // Warm with the banded kernel first, then build unbanded (and
+        // vice versa): each must reproduce its own uncached matrix.
+        let b1 = build_condensed_cached(&refs, &banded, 2, Some(&cache)).unwrap();
+        let f1 = build_condensed_cached(&refs, &full, 2, Some(&cache)).unwrap();
+        let b2 = build_condensed_cached(&refs, &banded, 2, Some(&cache)).unwrap();
+        let f2 = build_condensed_cached(&refs, &full, 2, Some(&cache)).unwrap();
+        assert_eq!(b1.as_slice(), want_band.as_slice());
+        assert_eq!(f1.as_slice(), want_full.as_slice());
+        assert_eq!(b2.as_slice(), want_band.as_slice(), "warm banded pass");
+        assert_eq!(f2.as_slice(), want_full.as_slice(), "warm unbanded pass");
+
+        // The blocked backend's full-band kernel is bitwise-equal to
+        // the native one, so sharing tag 0 serves it the same values.
+        assert_eq!(BlockedBackend::new().kernel_tag(), full.kernel_tag());
+        let fb = build_condensed_cached(&refs, &BlockedBackend::new(), 2, Some(&cache)).unwrap();
+        assert_eq!(fb.as_slice(), want_full.as_slice());
+    }
+
+    #[test]
+    fn pruned_cross_builder_without_pruning_backend_is_the_exact_path() {
+        let set = generate(&DatasetSpec::tiny(18, 3, 12));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        let (xs, ys) = (&refs[..6], &refs[6..]);
+        let want = build_cross(xs, ys, &backend, 2).unwrap();
+        // A non-pruning backend ignores the threshold entirely.
+        let got = build_cross_cached_pruned(xs, ys, &backend, 2, None, Some(0.1)).unwrap();
+        assert_eq!(got, want);
+        // threshold = None delegates even for pruning backends.
+        let cascade = lb::CascadeBackend::borrowed(&backend, &set, lb::CascadeMode::On);
+        let none = build_cross_cached_pruned(xs, ys, &cascade, 2, None, None).unwrap();
+        assert_eq!(none, want);
+    }
+
+    #[test]
+    fn pruned_cross_builder_matches_exact_decisions_and_skips_lb_cache_inserts() {
+        let set = generate(&DatasetSpec::tiny(26, 3, 13));
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let backend = NativeBackend::new();
+        let cascade = lb::CascadeBackend::borrowed(&backend, &set, lb::CascadeMode::Debug);
+        let (xs, ys) = (&refs[..10], &refs[10..]);
+        let want = build_cross(xs, ys, &backend, 2).unwrap();
+        let mut sorted = want.clone();
+        sorted.sort_unstable_by(f32::total_cmp);
+        let threshold = sorted[sorted.len() / 3];
+
+        let cache = PairCache::with_capacity_bytes(1 << 20);
+        let got =
+            build_cross_cached_pruned(xs, ys, &cascade, 2, Some(&cache), Some(threshold)).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (&g, &w) in got.iter().zip(&want) {
+            // Threshold decisions agree pair for pair; surviving values
+            // are bitwise exact.
+            assert_eq!(g <= threshold, w <= threshold);
+            if g <= threshold {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+        let stats = cascade.stats();
+        assert!(stats.lb_pruned > 0, "threshold must prune something");
+        // Every cached entry is exact: a warm exact rebuild over the
+        // same cache reproduces the oracle bit for bit.
+        let warm = build_cross_cached(xs, ys, &backend, 2, Some(&cache)).unwrap();
+        assert_eq!(warm, want);
     }
 
     #[test]

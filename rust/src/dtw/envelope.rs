@@ -1,0 +1,135 @@
+//! Per-segment feature envelopes for LB_Keogh-style DTW lower bounds.
+//!
+//! An [`Envelope`] holds the global per-dimension min/max of one
+//! segment's frames.  Because DTW's local cost is the Euclidean frame
+//! distance and every monotone warping path visits every frame of each
+//! side at least once, clamping a frame against the other side's
+//! envelope yields a cost no cell of the DP can undercut — summing
+//! those clamped costs over one side's frames lower-bounds the
+//! alignment total (banded or not: narrowing the band only removes
+//! candidate paths, and the `INFEASIBLE` sentinel dominates any finite
+//! bound).
+//!
+//! Float rigour matters here because the cascade's admissibility is
+//! asserted bitwise: [`lb_one_sided`] accumulates squared clamps per
+//! frame in the same ascending-dimension order as the DP's cell fill
+//! (`classic::dtw_transposed`), and IEEE-754 round-to-nearest is
+//! monotone under subtraction, multiplication of non-negatives,
+//! addition of non-negatives, and square root — so the *floating-point*
+//! bound never exceeds the *floating-point* DP total, not merely the
+//! real-valued one.  `rust/tests/pruning.rs` fuzzes this inequality.
+
+/// Global per-dimension bounds of one segment's frames.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    /// Feature dimensionality (`lo.len() == hi.len() == dim`).
+    pub dim: usize,
+    /// Per-dimension minimum over all frames.
+    pub lo: Vec<f32>,
+    /// Per-dimension maximum over all frames.
+    pub hi: Vec<f32>,
+}
+
+impl Envelope {
+    /// Envelope of a flat row-major `(len, dim)` feature buffer.  An
+    /// empty buffer yields an all-zero envelope (no segment has zero
+    /// frames in practice; the kernel treats it as unboundedly loose).
+    pub fn of_frames(feats: &[f32], dim: usize) -> Envelope {
+        let mut frames = feats.chunks_exact(dim);
+        let (mut lo, mut hi) = match frames.next() {
+            Some(first) => (first.to_vec(), first.to_vec()),
+            None => (vec![0.0f32; dim], vec![0.0f32; dim]),
+        };
+        for frame in frames {
+            for ((l, h), &v) in lo.iter_mut().zip(hi.iter_mut()).zip(frame) {
+                if v < *l {
+                    *l = v;
+                }
+                if v > *h {
+                    *h = v;
+                }
+            }
+        }
+        Envelope { dim, lo, hi }
+    }
+}
+
+/// Unnormalised one-sided lower bound: Σ over frames of
+/// `sqrt(Σ_d clamp_d²)`, where `clamp_d` is the distance from the
+/// frame's value to the envelope's `[lo, hi]` interval in dimension
+/// `d`.  Accumulation over `d` is sequential and ascending — the same
+/// association order as the DP cell fill — so the bound is comparable
+/// to the exact total bit for bit (see the module docs).
+pub fn lb_one_sided(feats: &[f32], dim: usize, env: &Envelope) -> f32 {
+    debug_assert_eq!(dim, env.dim);
+    let mut total = 0.0f32;
+    for frame in feats.chunks_exact(dim) {
+        let mut acc = 0.0f32;
+        for ((&v, &lo), &hi) in frame.iter().zip(&env.lo).zip(&env.hi) {
+            let t = if v > hi {
+                v - hi
+            } else if v < lo {
+                lo - v
+            } else {
+                0.0
+            };
+            acc += t * t;
+        }
+        total += acc.sqrt();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_tracks_per_dim_extrema() {
+        // 3 frames of dim 2.
+        let feats = [0.0f32, 5.0, -2.0, 7.0, 1.0, 6.0];
+        let env = Envelope::of_frames(&feats, 2);
+        assert_eq!(env.lo, vec![-2.0, 5.0]);
+        assert_eq!(env.hi, vec![1.0, 7.0]);
+    }
+
+    #[test]
+    fn frames_inside_the_envelope_bound_to_zero() {
+        let feats = [0.0f32, 1.0, 2.0, 3.0];
+        let env = Envelope::of_frames(&feats, 1);
+        assert_eq!(lb_one_sided(&feats, 1, &env), 0.0);
+    }
+
+    #[test]
+    fn one_sided_bound_matches_hand_computation() {
+        // Envelope of y = [1, 2] (dim 1): [1, 2].  x = [0, 3, 1.5]:
+        // clamps 1, 1, 0 → total 2.
+        let env = Envelope::of_frames(&[1.0f32, 2.0], 1);
+        let x = [0.0f32, 3.0, 1.5];
+        assert_eq!(lb_one_sided(&x, 1, &env), 2.0);
+    }
+
+    #[test]
+    fn bound_never_exceeds_exact_dtw() {
+        let dim = 3;
+        let mk = |seed: usize, len: usize| -> Vec<f32> {
+            (0..len * dim)
+                .map(|k| ((k * 13 + seed * 7) as f32 * 0.37).sin() * 2.0)
+                .collect()
+        };
+        for (sx, lx) in [(1usize, 4usize), (2, 7), (3, 11)] {
+            for (sy, ly) in [(4usize, 5usize), (5, 9), (6, 3)] {
+                let x = mk(sx, lx);
+                let y = mk(sy, ly);
+                let exact = crate::dtw::dtw(&x, &y, dim, lx, ly);
+                let env_y = Envelope::of_frames(&y, dim);
+                let env_x = Envelope::of_frames(&x, dim);
+                let norm = (lx + ly) as f32;
+                let lb_xy = lb_one_sided(&x, dim, &env_y) / norm;
+                let lb_yx = lb_one_sided(&y, dim, &env_x) / norm;
+                assert!(lb_xy <= exact, "lb {lb_xy} > exact {exact}");
+                assert!(lb_yx <= exact, "lb {lb_yx} > exact {exact}");
+            }
+        }
+    }
+}

@@ -8,5 +8,7 @@
 //! three implementations together.
 
 pub mod classic;
+pub mod envelope;
 
 pub use classic::{dtw, dtw_banded, INFEASIBLE};
+pub use envelope::{lb_one_sided, Envelope};

@@ -12,11 +12,13 @@ use super::split::{merge_small, split_oversized};
 use super::stage::{run_stage1, SubsetOutcome};
 use crate::aggregate;
 use crate::ahc;
-use crate::config::{AlgoConfig, Convergence, FinalK};
+use crate::config::{AlgoConfig, Convergence, FinalK, PruneMode};
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
+use crate::distance::{build_condensed_cached, CascadeBackend, CascadeMode, DtwBackend, PairCache};
 use crate::metrics;
-use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory, Stopwatch};
+use crate::telemetry::{
+    pairs_rate, CacheStats, IterationRecord, PruneStats, RunHistory, Stopwatch,
+};
 use crate::util::rng::Rng;
 
 /// Final output of a clustering run.
@@ -67,6 +69,22 @@ impl<'a> MahcDriver<'a> {
         };
         let mut history = RunHistory::new(&self.set.name, &algo_name);
 
+        // Lower-bound pruning cascade: wraps the backend so threshold
+        // consumers (the stage-0 leader pass) can bound pairs out
+        // before the DTW recurrence runs.  Off = the raw backend, the
+        // bitwise reference (`rust/tests/pruning.rs`).
+        let cascade = cfg.prune.is_active().then(|| {
+            let mode = match cfg.prune {
+                PruneMode::Debug => CascadeMode::Debug,
+                _ => CascadeMode::On,
+            };
+            CascadeBackend::borrowed(self.backend, self.set, mode)
+        });
+        let backend: &dyn DtwBackend = match &cascade {
+            Some(c) => c,
+            None => self.backend,
+        };
+
         // Cross-iteration DTW pair cache (the time-side dual of β's
         // space bound — see `distance::cache`).  One cache per run:
         // refine keeps stage-1 cluster members together, so recurring
@@ -82,16 +100,19 @@ impl<'a> MahcDriver<'a> {
         // distance; the probes' counter movement is folded into the
         // first record below so the run's hit rate stays honest.
         let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let agg_prune_snapshot = backend.prune_stats().unwrap_or_default();
         let agg = cfg
             .aggregate
             .is_active()
-            .then(|| {
-                aggregate::aggregate(self.set, &cfg.aggregate, self.backend, cfg.threads, cache)
-            })
+            .then(|| aggregate::aggregate(self.set, &cfg.aggregate, backend, cfg.threads, cache))
             .transpose()?;
         let agg_cache = cache
             .map(|c| c.stats().delta(&agg_snapshot))
             .unwrap_or_default();
+        let agg_prune = backend
+            .prune_stats()
+            .unwrap_or_default()
+            .delta(&agg_prune_snapshot);
 
         let mut rng = Rng::seed_from(cfg.seed);
         let ids: Vec<usize> = match &agg {
@@ -102,7 +123,7 @@ impl<'a> MahcDriver<'a> {
             self.set,
             &ids,
             cfg,
-            self.backend,
+            backend,
             cache,
             &mut rng,
             Some(&mut history),
@@ -144,6 +165,7 @@ impl<'a> MahcDriver<'a> {
             if idx == 0 {
                 // Stage-0 probe-engine shape, stamped once.
                 r.sample_pairs = a.sample_pairs;
+                r.sample_segments = a.sample_segments;
                 r.probe_rounds = a.probe_rounds;
                 r.probe_rect_rows = a.rect_rows;
                 r.probe_rect_cols = a.rect_cols;
@@ -156,6 +178,12 @@ impl<'a> MahcDriver<'a> {
                 r.cache.hits += agg_cache.hits;
                 r.cache.misses += agg_cache.misses;
                 r.cache.evictions += agg_cache.evictions;
+                // Same honesty rule for the pruning cascade: the leader
+                // pass is the thresholded consumer, so its bound/exact
+                // movement belongs to the first record too.
+                r.lb_pairs += agg_prune.lb_pairs;
+                r.lb_pruned += agg_prune.lb_pruned;
+                r.exact_pairs += agg_prune.exact_pairs;
             }
         }
         Ok(MahcResult {
@@ -235,6 +263,7 @@ pub(crate) fn run_episode(
         Some(c) => c.stats(),
         None => CacheStats::default(),
     };
+    let mut prune_snapshot = backend.prune_stats().unwrap_or_default();
 
     let mut subsets = partition_ids(ids, cfg.p0, rng);
     // If β is already violated by the initial division, enforce it
@@ -290,6 +319,18 @@ pub(crate) fn run_episode(
                 delta
             }
             None => CacheStats::default(),
+        };
+        // Per-iteration cascade counter movement (zeros without the
+        // pruning wrapper).  Stage-1 builds are threshold-free, so this
+        // mostly tallies `exact_pairs` — it exists so a run can prove
+        // at a glance that no bound leaked into an exact phase.
+        let prune_iter = match backend.prune_stats() {
+            Some(now) => {
+                let delta = now.delta(&prune_snapshot);
+                prune_snapshot = now;
+                delta
+            }
+            None => PruneStats::default(),
         };
 
         // Evaluation / conclusion clustering: K = ΣKⱼ (paper §5
@@ -348,6 +389,10 @@ pub(crate) fn run_episode(
                     compression_ratio: 1.0,
                     assignment_pairs: 0,
                     sample_pairs: 0,
+                    sample_segments: 0,
+                    lb_pairs: prune_iter.lb_pairs,
+                    lb_pruned: prune_iter.lb_pruned,
+                    exact_pairs: prune_iter.exact_pairs,
                     probe_rounds: 0,
                     probe_rect_rows: 0,
                     probe_rect_cols: 0,
@@ -407,6 +452,10 @@ pub(crate) fn run_episode(
                 compression_ratio: 1.0,
                 assignment_pairs: 0,
                 sample_pairs: 0,
+                sample_segments: 0,
+                lb_pairs: prune_iter.lb_pairs,
+                lb_pruned: prune_iter.lb_pruned,
+                exact_pairs: prune_iter.exact_pairs,
                 probe_rounds: 0,
                 probe_rect_rows: 0,
                 probe_rect_cols: 0,
@@ -672,6 +721,50 @@ mod tests {
                 .any(|r| r.cache.hits > 0),
             "later iterations see warm pairs"
         );
+    }
+
+    #[test]
+    fn prune_modes_reproduce_the_exact_run_bitwise() {
+        // The cascade only answers threshold queries with bounds, and
+        // every threshold consumer rejects above-radius values before
+        // comparing magnitudes — so labels, K and F must be bit-equal
+        // to the exact run, in both On and Debug (self-checking) modes.
+        let base = AlgoConfig {
+            p0: 3,
+            beta: Some(30),
+            convergence: Convergence::FixedIters(3),
+            aggregate: crate::config::AggregateConfig::new(0.5),
+            ..Default::default()
+        };
+        let exact = run(base.clone(), 80, 5, 33);
+        assert!(
+            exact
+                .history
+                .records
+                .iter()
+                .all(|r| r.lb_pairs == 0 && r.lb_pruned == 0 && r.exact_pairs == 0),
+            "exact runs report silent prune counters"
+        );
+        for mode in [crate::config::PruneMode::On, crate::config::PruneMode::Debug] {
+            let pruned = run(
+                AlgoConfig {
+                    prune: mode,
+                    ..base.clone()
+                },
+                80,
+                5,
+                33,
+            );
+            assert_eq!(exact.labels, pruned.labels, "mode {mode:?}");
+            assert_eq!(exact.k, pruned.k);
+            assert_eq!(exact.f_measure.to_bits(), pruned.f_measure.to_bits());
+            let first = &pruned.history.records[0];
+            assert!(
+                first.lb_pairs > 0,
+                "leader probes must route through the bound (mode {mode:?})"
+            );
+            assert_eq!(first.backend, "native+lb");
+        }
     }
 
     #[test]

@@ -49,7 +49,7 @@ use std::time::Duration;
 use super::streaming::{StreamResult, StreamSession};
 use crate::config::{ServeConfig, StreamConfig};
 use crate::corpus::SegmentSet;
-use crate::distance::{DtwBackend, PairCache};
+use crate::distance::{DtwBackend, IdNamespaceError, PairCache};
 use crate::telemetry::{pairs_rate, FleetHistory, FleetRecord, Stopwatch};
 use crate::util::json::{self, Json};
 use crate::util::pool::{panic_message, WorkerPool};
@@ -178,6 +178,19 @@ fn step_once(
     }
 }
 
+/// Namespace admission check: reserve `n` contiguous ids starting at
+/// `offset` for one session's corpus in the shared fleet cache.  The
+/// pair-key id field is 32-bit per side, so the running corpus total
+/// must stay inside it — typed and release-mode, because the per-pair
+/// debug assertion in the cache is a tripwire, not the guard.  Returns
+/// the next free offset.
+fn reserve_ids(offset: usize, n: usize) -> Result<usize, IdNamespaceError> {
+    match offset.checked_add(n) {
+        Some(end) if end <= (1usize << 32) => Ok(end),
+        _ => Err(IdNamespaceError { offset, span: n }),
+    }
+}
+
 /// Scheduler gauges snapshotted into every [`FleetRecord`].
 #[derive(Default)]
 struct Gauges {
@@ -282,7 +295,14 @@ impl ServeDriver {
             faults.push(spec.panic_after_shards);
             let my_offset = offset;
             let n = spec.set.len();
-            offset = offset.saturating_add(n);
+            // A rejected spec claims no ids, so later specs still fit.
+            let ns_err: Option<IdNamespaceError> = match reserve_ids(my_offset, n) {
+                Ok(end) => {
+                    offset = end;
+                    None
+                }
+                Err(e) => Some(e),
+            };
 
             let has_active_slot = g.active < self.cfg.fleet_cap;
             if !has_active_slot && waiting.len() >= self.cfg.queue_cap {
@@ -310,16 +330,14 @@ impl ServeDriver {
 
             let budget = spec.cfg.algo.cache_bytes;
             let built = (|| -> anyhow::Result<Box<StreamSession<'static>>> {
-                anyhow::ensure!(
-                    my_offset + n < (1usize << 32),
-                    "fleet cache id namespace exhausted: offset {my_offset} + corpus {n} \
-                     overflows the 32-bit pair-key field"
-                );
+                if let Some(e) = ns_err {
+                    return Err(anyhow::Error::new(e));
+                }
                 let mut session =
                     StreamSession::shared(spec.set, spec.cfg, Arc::clone(&self.backend))?;
                 if budget > 0 {
                     if let Some(fc) = &fleet_cache {
-                        session = session.with_cache(fc.scoped(my_offset, Some(budget)));
+                        session = session.with_cache(fc.scoped(my_offset, Some(budget))?);
                     }
                 }
                 Ok(Box::new(session))
@@ -652,6 +670,30 @@ mod tests {
             "fleet residency {peak} exceeds the sum of session budgets {}",
             3 * budget
         );
+    }
+
+    #[test]
+    fn admission_rejects_id_namespace_overflow_with_a_typed_error() {
+        // Boundary: a corpus ending exactly at 2³² fits; one id more —
+        // or an offset sum that would overflow usize itself — is
+        // rejected with the typed error, in release builds too (the
+        // per-pair key check is only a debug assertion).
+        let full = 1usize << 32;
+        assert_eq!(reserve_ids(0, full).unwrap(), full);
+        assert_eq!(reserve_ids(full - 7, 7).unwrap(), full);
+        let e = reserve_ids(full - 7, 8).unwrap_err();
+        assert_eq!(e.offset, full - 7);
+        assert_eq!(e.span, 8);
+        assert!(e.to_string().contains("id namespace exhausted"));
+        let e = reserve_ids(usize::MAX, 2).unwrap_err();
+        assert_eq!(e.offset, usize::MAX);
+        // Chained reservations walk the running sum exactly like serve
+        // admission does.
+        let mut off = 0usize;
+        for n in [56, 64, 72] {
+            off = reserve_ids(off, n).unwrap();
+        }
+        assert_eq!(off, 56 + 64 + 72);
     }
 
     #[test]

@@ -56,11 +56,16 @@ use std::sync::Arc;
 
 use super::driver::{run_episode, EpisodeOutcome};
 use crate::aggregate;
-use crate::config::StreamConfig;
+use crate::config::{PruneMode, StreamConfig};
 use crate::corpus::{Segment, SegmentSet, Shards};
-use crate::distance::{build_cross_cached, DtwBackend, PairCache};
+use crate::distance::{
+    build_cross_cached, build_cross_cached_pruned, CascadeBackend, CascadeMode, DtwBackend,
+    PairCache,
+};
 use crate::metrics;
-use crate::telemetry::{pairs_rate, CacheStats, IterationRecord, RunHistory, Stopwatch};
+use crate::telemetry::{
+    pairs_rate, CacheStats, IterationRecord, PruneStats, RunHistory, Stopwatch,
+};
 use crate::util::rng::Rng;
 
 /// Final output of a streaming clustering run.
@@ -104,10 +109,16 @@ impl SetRef<'_> {
     }
 }
 
-/// Backend handle, mirroring [`SetRef`].
+/// Backend handle, mirroring [`SetRef`].  The `Owned` variant holds the
+/// session's private [`CascadeBackend`] pruning wrapper (its envelope
+/// table and counters belong to this session alone); `DtwBackend: Sync`
+/// and the cascade's inner handle is a shared/borrowed reference, so the
+/// box is `Send + Sync` for any lifetime and `StreamSession<'static>`
+/// stays movable into worker-pool jobs.
 enum BackendRef<'a> {
     Borrowed(&'a dyn DtwBackend),
     Shared(Arc<dyn DtwBackend + Send + Sync>),
+    Owned(Box<dyn DtwBackend + Send + Sync + 'a>),
 }
 
 impl BackendRef<'_> {
@@ -115,6 +126,7 @@ impl BackendRef<'_> {
         match self {
             BackendRef::Borrowed(b) => *b,
             BackendRef::Shared(b) => b.as_ref(),
+            BackendRef::Owned(b) => b.as_ref(),
         }
     }
 }
@@ -127,6 +139,9 @@ struct Prepared {
     /// Leader-probe counter movement, folded into shard 0's record so
     /// the stream's cache totals include the pass that warmed it.
     agg_cache: CacheStats,
+    /// Cascade counter movement of the leader pass, folded into shard
+    /// 0's record like `agg_cache` (all zero when pruning is off).
+    agg_prune: PruneStats,
     rng: Rng,
     plan: Shards,
     total_shards: usize,
@@ -198,6 +213,26 @@ impl<'a> StreamSession<'a> {
         let history = RunHistory::new(&set.get().name, &algo_name);
         let cache =
             (algo.cache_bytes > 0).then(|| PairCache::with_capacity_bytes(algo.cache_bytes));
+        // Lower-bound pruning cascade: wrap whatever handle we were
+        // given, so the leader pass and the retirement argmin can bound
+        // pairs out before the DTW recurrence (off = the raw handle,
+        // the bitwise reference).
+        let backend = if algo.prune.is_active() {
+            let mode = match algo.prune {
+                PruneMode::Debug => CascadeMode::Debug,
+                _ => CascadeMode::On,
+            };
+            let boxed: Box<dyn DtwBackend + Send + Sync + 'a> = match backend {
+                BackendRef::Borrowed(b) => {
+                    Box::new(CascadeBackend::borrowed(b, set.get(), mode))
+                }
+                BackendRef::Shared(b) => Box::new(CascadeBackend::shared(b, set.get(), mode)),
+                BackendRef::Owned(b) => b,
+            };
+            BackendRef::Owned(boxed)
+        } else {
+            backend
+        };
         Ok(StreamSession {
             set,
             cfg,
@@ -269,6 +304,7 @@ impl<'a> StreamSession<'a> {
         // mechanism retirement uses — and resolve transitively with the
         // retired objects once the stream ends.
         let agg_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let agg_prune_snapshot = backend.prune_stats().unwrap_or_default();
         let agg = algo
             .aggregate
             .is_active()
@@ -277,6 +313,10 @@ impl<'a> StreamSession<'a> {
         let agg_cache = cache
             .map(|c| c.stats().delta(&agg_snapshot))
             .unwrap_or_default();
+        let agg_prune = backend
+            .prune_stats()
+            .unwrap_or_default()
+            .delta(&agg_prune_snapshot);
         let m = agg.as_ref().map_or(set.len(), |a| a.reps());
         // The corpus is nonempty (rejected at construction), so the
         // leader pass must elect at least one representative: every
@@ -305,6 +345,7 @@ impl<'a> StreamSession<'a> {
         Ok(Prepared {
             agg,
             agg_cache,
+            agg_prune,
             rng,
             plan,
             total_shards,
@@ -355,6 +396,7 @@ impl<'a> StreamSession<'a> {
             .collect();
 
         let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+        let prune_snapshot = backend.prune_stats().unwrap_or_default();
         let ep = run_episode(set, &active, algo, backend, cache, &mut st.rng, None)?;
 
         let mut rect_bytes = 0usize;
@@ -374,12 +416,6 @@ impl<'a> StreamSession<'a> {
                     ep.medoid_ids.iter().map(|&i| &set.segments[i]).collect();
                 let ys: Vec<&Segment> = retired.iter().map(|&i| &set.segments[i]).collect();
                 let rect_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
-                let d = build_cross_cached(&xs, &ys, backend, algo.threads, cache)?;
-                if let Some(c) = cache {
-                    rect_delta = c.stats().delta(&rect_snapshot);
-                }
-                rect_pairs = xs.len() * ys.len();
-                rect_bytes = rect_pairs * std::mem::size_of::<f32>();
                 // Column argmin over the rows=medoids rectangle,
                 // walking each row contiguously.  Strict < on rows in
                 // increasing order keeps ties on the first medoid —
@@ -387,14 +423,62 @@ impl<'a> StreamSession<'a> {
                 let ny = ys.len();
                 let mut best = vec![0usize; ny];
                 let mut best_d = vec![f32::INFINITY; ny];
-                for (i, row) in d.chunks_exact(ny).enumerate() {
-                    for (j, &v) in row.iter().enumerate() {
-                        if v < best_d[j] {
-                            best_d[j] = v;
-                            best[j] = i;
+                if backend.supports_pruning() {
+                    // Row-cascaded argmin: each medoid row prunes
+                    // against the loosest per-column incumbent so far.
+                    // A bound-answered cell carries lb > max_j best_d[j]
+                    // ≥ best_d[j], so it loses the strict < exactly as
+                    // its exact value would — selections are bitwise
+                    // the one-rectangle path's.
+                    for (i, x) in xs.iter().enumerate() {
+                        let threshold = if i == 0 {
+                            None
+                        } else {
+                            let mut t = 0.0f32;
+                            for &b in &best_d {
+                                t = t.max(b);
+                            }
+                            Some(t)
+                        };
+                        let row = build_cross_cached_pruned(
+                            &[*x],
+                            &ys,
+                            backend,
+                            algo.threads,
+                            cache,
+                            threshold,
+                        )?;
+                        anyhow::ensure!(
+                            row.len() == ny,
+                            "backend returned {} retirement distances for {} objects",
+                            row.len(),
+                            ny
+                        );
+                        for ((bd, b), &v) in
+                            best_d.iter_mut().zip(best.iter_mut()).zip(&row)
+                        {
+                            if v < *bd {
+                                *bd = v;
+                                *b = i;
+                            }
+                        }
+                    }
+                } else {
+                    let d = build_cross_cached(&xs, &ys, backend, algo.threads, cache)?;
+                    for (i, row) in d.chunks_exact(ny).enumerate() {
+                        for (j, &v) in row.iter().enumerate() {
+                            if v < best_d[j] {
+                                best_d[j] = v;
+                                best[j] = i;
+                            }
                         }
                     }
                 }
+                if let Some(c) = cache {
+                    rect_delta = c.stats().delta(&rect_snapshot);
+                }
+                rect_pairs = xs.len() * ys.len();
+                rect_bytes = rect_pairs * std::mem::size_of::<f32>();
                 for (j, &id) in retired.iter().enumerate() {
                     st.attach[id] = ep.medoid_ids[best[j]];
                 }
@@ -413,6 +497,18 @@ impl<'a> StreamSession<'a> {
             shard_delta.hits += st.agg_cache.hits;
             shard_delta.misses += st.agg_cache.misses;
             shard_delta.evictions += st.agg_cache.evictions;
+        }
+        // Cascade counters for this shard; the stage-0 aggregation
+        // pass's counters fold into the first shard's record, mirroring
+        // the agg_cache treatment above.
+        let mut prune_delta = backend
+            .prune_stats()
+            .unwrap_or_default()
+            .delta(&prune_snapshot);
+        if t == 0 {
+            prune_delta.lb_pairs += st.agg_prune.lb_pairs;
+            prune_delta.lb_pruned += st.agg_prune.lb_pruned;
+            prune_delta.exact_pairs += st.agg_prune.exact_pairs;
         }
         // Stage-0 probe-engine stamps, carried by the first shard's
         // record only (the pass runs once, before the stream).
@@ -450,6 +546,13 @@ impl<'a> StreamSession<'a> {
                 (Some(a), 0) => a.sample_pairs,
                 _ => 0,
             },
+            sample_segments: match (&st.agg, t) {
+                (Some(a), 0) => a.sample_segments,
+                _ => 0,
+            },
+            lb_pairs: prune_delta.lb_pairs,
+            lb_pruned: prune_delta.lb_pruned,
+            exact_pairs: prune_delta.exact_pairs,
             probe_rounds,
             probe_rect_rows: rect_rows,
             probe_rect_cols: rect_cols,
@@ -868,6 +971,70 @@ mod tests {
     }
 
     #[test]
+    fn prune_modes_reproduce_the_exact_stream_bitwise() {
+        // The cascade is a pure evaluation-order optimisation: every
+        // retirement argmin and every stage-0 probe decision must come
+        // out bitwise the exact path's, across shard boundaries.
+        let set = generate(&DatasetSpec::tiny(120, 6, 57));
+        let backend = NativeBackend::new();
+        let mut base = algo(2, Some(30), 3);
+        base.aggregate = crate::config::AggregateConfig::new(0.5);
+        let exact = StreamingDriver::new(
+            &set,
+            StreamConfig::new(base.clone(), 40),
+            &backend,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert!(exact.shards > 1, "need retirement rectangles");
+        for r in &exact.history.records {
+            assert_eq!(r.lb_pairs, 0, "exact mode must not touch the bound");
+            assert_eq!(r.lb_pruned, 0);
+            assert_eq!(r.exact_pairs, 0);
+            assert_eq!(r.backend, "native");
+        }
+        for mode in [PruneMode::On, PruneMode::Debug] {
+            let mut a = base.clone();
+            a.prune = mode;
+            let pruned = StreamingDriver::new(&set, StreamConfig::new(a, 40), &backend)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(pruned.labels, exact.labels, "mode={mode:?}");
+            assert_eq!(pruned.k, exact.k, "mode={mode:?}");
+            assert_eq!(
+                pruned.f_measure.to_bits(),
+                exact.f_measure.to_bits(),
+                "mode={mode:?}"
+            );
+            assert_eq!(pruned.shards, exact.shards, "mode={mode:?}");
+            assert!(
+                pruned.history.records[0].lb_pairs > 0,
+                "mode={mode:?}: stage-0 probes should exercise the bound"
+            );
+            for r in &pruned.history.records {
+                assert_eq!(r.backend, "native+lb", "mode={mode:?}");
+                // exact_pairs also counts threshold-free queries
+                // (condensed builds), so it can exceed the survivors;
+                // the pruned count can never exceed the bounded count.
+                assert!(
+                    r.lb_pruned <= r.lb_pairs,
+                    "mode={mode:?} shard {}: pruned {} > bounded {}",
+                    r.iteration,
+                    r.lb_pruned,
+                    r.lb_pairs
+                );
+                assert!(
+                    r.exact_pairs >= r.lb_pairs - r.lb_pruned,
+                    "mode={mode:?} shard {}: survivors must run the DP",
+                    r.iteration
+                );
+            }
+        }
+    }
+
+    #[test]
     fn rejects_bad_configs_and_empty_sets() {
         let set = generate(&DatasetSpec::tiny(20, 2, 46));
         let backend = NativeBackend::new();
@@ -966,7 +1133,7 @@ mod tests {
             .run()
             .unwrap();
         let fleet = PairCache::with_capacity_bytes(4 << 20);
-        let handle = fleet.scoped(0, Some(64 << 10));
+        let handle = fleet.scoped(0, Some(64 << 10)).unwrap();
         let res = StreamSession::new(&set, cfg, &backend)
             .unwrap()
             .with_cache(handle)

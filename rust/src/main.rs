@@ -31,8 +31,8 @@ use std::sync::Arc;
 
 use mahc::baselines;
 use mahc::config::{
-    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, ServeConfig,
-    StreamConfig,
+    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, PruneMode,
+    ServeConfig, StreamConfig,
 };
 use mahc::corpus::{generate, CompositionStats};
 use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
@@ -45,7 +45,7 @@ const VALUE_KEYS: &[&str] = &[
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
     "aggregate-eps", "aggregate-cap", "aggregate-batch", "aggregate-tree", "aggregate-probe",
     "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed", "sessions", "fleet-cap",
-    "queue-cap", "workers", "fleet-cache-mb", "fault-session",
+    "queue-cap", "workers", "fleet-cache-mb", "fault-session", "prune",
 ];
 
 fn main() {
@@ -72,6 +72,8 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|blocked|xla] [--threads N] [--seed N] [--out FILE]");
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
+            eprintln!("          [--prune off|on|debug  lower-bound cascade for threshold queries");
+            eprintln!("                     (off = exact oracle; debug verifies admissibility)]");
             eprintln!("          [--aggregate-eps F  stage-0 leader radius (0 = off)]");
             eprintln!("          [--aggregate-cap N  stage-0 per-group occupancy cap]");
             eprintln!("          [--aggregate-quantile Q  derive the radius from the pair-distance");
@@ -85,7 +87,7 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--p0 N] [--beta N] [--iters N] [--backend native|blocked|xla]");
             eprintln!("          [--cache-mb N] [--aggregate-eps F] [--aggregate-cap N] [--out FILE]");
             eprintln!("          [--aggregate-quantile Q] [--aggregate-sample N] [--aggregate-batch N]");
-            eprintln!("          [--aggregate-tree K] [--aggregate-probe N]");
+            eprintln!("          [--aggregate-tree K] [--aggregate-probe N] [--prune off|on|debug]");
             eprintln!("  serve   --dataset <name> [--scale F] [--sessions N   concurrent streams]");
             eprintln!("          [--fleet-cap N    max concurrently-active sessions]");
             eprintln!("          [--queue-cap N    sessions allowed to wait behind the cap]");
@@ -133,6 +135,9 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     }
     if let Some(mb) = args.get_parsed::<usize>("cache-mb")? {
         cfg.cache_bytes = mb << 20;
+    }
+    if let Some(p) = args.get("prune") {
+        cfg.prune = PruneMode::parse(p)?;
     }
     if let Some(eps) = args.get_parsed::<f32>("aggregate-eps")? {
         cfg.aggregate.epsilon = eps;
@@ -198,6 +203,22 @@ fn cluster(args: &Args) -> anyhow::Result<()> {
             cluster_with(&set, cfg, &algo, &backend, args)
         }
     }
+}
+
+/// One-line cascade summary, printed only when a run actually routed
+/// pair queries through the lower bound (`--prune on|debug`).
+fn print_prune_summary(records: &[mahc::telemetry::IterationRecord]) {
+    let lb_pairs: u64 = records.iter().map(|r| r.lb_pairs).sum();
+    if lb_pairs == 0 {
+        return;
+    }
+    let lb_pruned: u64 = records.iter().map(|r| r.lb_pruned).sum();
+    let exact_pairs: u64 = records.iter().map(|r| r.exact_pairs).sum();
+    println!(
+        "pruning: {:.1}% of bounded pairs skipped the DP \
+         ({lb_pairs} bounded, {lb_pruned} pruned, {exact_pairs} exact DP calls)",
+        lb_pruned as f64 / lb_pairs as f64 * 100.0
+    );
 }
 
 fn cluster_with(
@@ -269,12 +290,13 @@ fn cluster_with(
                     );
                     println!(
                         "  probe engine: {} rounds, largest rectangle {}x{}, \
-                         {} super-leaders, {} quantile sample pairs",
+                         {} super-leaders, {} quantile sample pairs over {} segments",
                         r0.probe_rounds,
                         r0.probe_rect_rows,
                         r0.probe_rect_cols,
                         r0.super_leaders,
-                        r0.sample_pairs
+                        r0.sample_pairs,
+                        r0.sample_segments
                     );
                 }
             }
@@ -289,6 +311,7 @@ fn cluster_with(
                     t.evictions
                 );
             }
+            print_prune_summary(&res.history.records);
             if let Some(path) = args.get("out") {
                 std::fs::write(path, res.history.to_json().to_string())?;
                 eprintln!("wrote {path}");
@@ -390,12 +413,13 @@ fn stream_with(
             );
             println!(
                 "  probe engine: {} rounds, largest rectangle {}x{}, \
-                 {} super-leaders, {} quantile sample pairs",
+                 {} super-leaders, {} quantile sample pairs over {} segments",
                 r0.probe_rounds,
                 r0.probe_rect_rows,
                 r0.probe_rect_cols,
                 r0.super_leaders,
-                r0.sample_pairs
+                r0.sample_pairs,
+                r0.sample_segments
             );
         }
     }
@@ -416,6 +440,7 @@ fn stream_with(
             res.assign_cache.misses
         );
     }
+    print_prune_summary(&res.history.records);
     if let Some(path) = args.get("out") {
         std::fs::write(path, res.history.to_json().to_string())?;
         eprintln!("wrote {path}");

@@ -78,6 +78,42 @@ impl CacheStats {
     }
 }
 
+/// Counters of the lower-bound pruning cascade
+/// ([`crate::distance::CascadeBackend`]).  Like [`CacheStats`], a value
+/// is either a cumulative snapshot (what the backend reports) or a
+/// per-iteration delta (what [`IterationRecord`] stores); all zero when
+/// pruning is off.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Pairs the cascade evaluated a lower bound for.
+    pub lb_pairs: u64,
+    /// Pairs the bound decided above the threshold — no DTW was run.
+    pub lb_pruned: u64,
+    /// Pairs that reached the exact DP (cascade survivors plus
+    /// threshold-free queries answered exactly).
+    pub exact_pairs: u64,
+}
+
+impl PruneStats {
+    /// Counter movement since an `earlier` snapshot.
+    pub fn delta(&self, earlier: &PruneStats) -> PruneStats {
+        PruneStats {
+            lb_pairs: self.lb_pairs - earlier.lb_pairs,
+            lb_pruned: self.lb_pruned - earlier.lb_pruned,
+            exact_pairs: self.exact_pairs - earlier.exact_pairs,
+        }
+    }
+
+    /// Fraction of bounded pairs the cascade pruned (0 when idle).
+    pub fn prune_rate(&self) -> f64 {
+        if self.lb_pairs == 0 {
+            0.0
+        } else {
+            self.lb_pruned as f64 / self.lb_pairs as f64
+        }
+    }
+}
+
 /// Everything observable about one MAHC iteration.
 #[derive(Debug, Clone)]
 pub struct IterationRecord {
@@ -123,6 +159,17 @@ pub struct IterationRecord {
     /// record only; 0 when ε was given absolutely or aggregation is
     /// off).
     pub sample_pairs: usize,
+    /// Segments the quantile-ε estimate actually sampled after clamping
+    /// to the corpus size (first record only; companion to
+    /// `sample_pairs`).
+    pub sample_segments: usize,
+    /// Lower-bound evaluations the pruning cascade ran during this step
+    /// (0 when pruning is off).
+    pub lb_pairs: u64,
+    /// Pairs the cascade's bound rejected without running DTW.
+    pub lb_pruned: u64,
+    /// Pairs that reached the exact DP kernel through the cascade.
+    pub exact_pairs: u64,
     /// Probe rounds the stage-0 pass ran — rectangle dispatches, N on
     /// the per-row reference path.  Stamped on the first record of an
     /// aggregated run; 0 elsewhere.
@@ -175,6 +222,10 @@ impl IterationRecord {
             ("compression_ratio", json::num(self.compression_ratio)),
             ("assignment_pairs", json::num(self.assignment_pairs as f64)),
             ("sample_pairs", json::num(self.sample_pairs as f64)),
+            ("sample_segments", json::num(self.sample_segments as f64)),
+            ("lb_pairs", json::num(self.lb_pairs as f64)),
+            ("lb_pruned", json::num(self.lb_pruned as f64)),
+            ("exact_pairs", json::num(self.exact_pairs as f64)),
             ("probe_rounds", json::num(self.probe_rounds as f64)),
             ("probe_rect_rows", json::num(self.probe_rect_rows as f64)),
             ("probe_rect_cols", json::num(self.probe_rect_cols as f64)),
@@ -465,6 +516,10 @@ mod tests {
             compression_ratio: 0.5,
             assignment_pairs: if i == 0 { 42 } else { 0 },
             sample_pairs: if i == 0 { 11 } else { 0 },
+            sample_segments: if i == 0 { 5 } else { 0 },
+            lb_pairs: 20 * (i as u64 + 1),
+            lb_pruned: 15 * (i as u64 + 1),
+            exact_pairs: 5 * (i as u64 + 1),
             probe_rounds: if i == 0 { 6 } else { 0 },
             probe_rect_rows: if i == 0 { 16 } else { 0 },
             probe_rect_cols: if i == 0 { 9 } else { 0 },
@@ -586,6 +641,41 @@ mod tests {
             iters[0].get("aggregate_epsilon").unwrap().as_f64().unwrap(),
             1.25
         );
+        assert_eq!(
+            iters[0].get("sample_segments").unwrap().as_usize().unwrap(),
+            5
+        );
+        assert_eq!(iters[0].get("lb_pairs").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(iters[0].get("lb_pruned").unwrap().as_usize().unwrap(), 15);
+        assert_eq!(
+            iters[0].get("exact_pairs").unwrap().as_usize().unwrap(),
+            5
+        );
+    }
+
+    #[test]
+    fn prune_stats_delta_and_rate() {
+        let early = PruneStats {
+            lb_pairs: 100,
+            lb_pruned: 60,
+            exact_pairs: 40,
+        };
+        let late = PruneStats {
+            lb_pairs: 300,
+            lb_pruned: 210,
+            exact_pairs: 90,
+        };
+        let d = late.delta(&early);
+        assert_eq!(
+            d,
+            PruneStats {
+                lb_pairs: 200,
+                lb_pruned: 150,
+                exact_pairs: 50
+            }
+        );
+        assert!((d.prune_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(PruneStats::default().prune_rate(), 0.0);
     }
 
     #[test]

@@ -467,10 +467,11 @@ fn quantile_epsilon_oracle() {
     // A sample covering the corpus IS the exact quantile, bit for bit,
     // whatever the seed.
     for q in [0.1, 0.5, 0.75] {
-        let (eps, pairs) = derive_epsilon(&set, q, set.len(), 5, &native, 4, None).unwrap();
-        assert_eq!(pairs, exact.len());
+        let est = derive_epsilon(&set, q, set.len(), 5, &native, 4, None).unwrap();
+        assert_eq!(est.sample_pairs, exact.len());
+        assert_eq!(est.sample_segments, set.len());
         assert_eq!(
-            eps.to_bits(),
+            est.epsilon.to_bits(),
             quantile_of_sorted(&exact, q).to_bits(),
             "full-sample estimate must be exact at q = {q}"
         );
@@ -480,11 +481,14 @@ fn quantile_epsilon_oracle() {
     // lands within the documented tolerance: between the exact
     // quantiles at q - 0.25 and q + 0.25.
     let q = 0.5;
-    let (a, pa) = derive_epsilon(&set, q, 20, 9, &native, 4, None).unwrap();
-    let (b, pb) = derive_epsilon(&set, q, 20, 9, &native, 1, None).unwrap();
+    let est_a = derive_epsilon(&set, q, 20, 9, &native, 4, None).unwrap();
+    let est_b = derive_epsilon(&set, q, 20, 9, &native, 1, None).unwrap();
+    let (a, pa) = (est_a.epsilon, est_a.sample_pairs);
+    let (b, pb) = (est_b.epsilon, est_b.sample_pairs);
     assert_eq!(a.to_bits(), b.to_bits(), "same seed, same estimate");
     assert_eq!(pa, pb);
     assert_eq!(pa, 20 * 19 / 2, "sample of 20 segments has C(20,2) pairs");
+    assert_eq!(est_a.sample_segments, 20);
     let lo = quantile_of_sorted(&exact, q - 0.25);
     let hi = quantile_of_sorted(&exact, q + 0.25);
     assert!(
@@ -507,7 +511,9 @@ fn quantile_epsilon_oracle() {
     // End to end: a quantile-configured run is bitwise the absolute-ε
     // run at the derived radius, and stamps that radius in telemetry.
     let seed = AggregateConfig::default().quantile_seed;
-    let (eps25, _) = derive_epsilon(&set, 0.25, 256, seed, &native, 4, None).unwrap();
+    let eps25 = derive_epsilon(&set, 0.25, 256, seed, &native, 4, None)
+        .unwrap()
+        .epsilon;
     assert!(eps25 > 0.0, "p25 of distinct random segments is nonzero");
     let mut qcfg = cfg(0.0);
     qcfg.aggregate = AggregateConfig::default().with_quantile(0.25);

@@ -220,7 +220,7 @@ fn interleaved_sessions_on_one_shared_cache_match_private_cache_runs() {
         .map(|(set, cfg)| {
             let s = StreamSession::new(set, cfg.clone(), backend)
                 .unwrap()
-                .with_cache(fleet.scoped(offset, Some(budget)));
+                .with_cache(fleet.scoped(offset, Some(budget)).unwrap());
             offset += set.len();
             s
         })

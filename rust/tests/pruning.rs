@@ -1,0 +1,283 @@
+//! Tier-1 pins for the lower-bound pruning engine (`--prune`).
+//!
+//! The contract under test: `prune = off` IS today's exact code path,
+//! and `prune = on` / `prune = debug` reproduce it **bitwise** — labels,
+//! K, F-measure — across thread counts and backends, because the
+//! envelope bound is admissible in floating point and every consumer of
+//! a pruned value only compares it against the threshold that pruned
+//! it.  The suite runs inside the CI backend matrix (`--test pruning`),
+//! so each matrix cell re-checks parity under its own
+//! `MAHC_TEST_BACKEND` / `MAHC_TEST_THREADS` pair on top of the sweep
+//! built in here.
+
+mod common;
+
+use mahc::config::{
+    AggregateConfig, AlgoConfig, Convergence, DatasetSpec, PruneMode, StreamConfig,
+};
+use mahc::corpus::{generate, Segment, SegmentSet};
+use mahc::distance::{
+    build_cross, build_cross_cached_pruned, BackendKind, BlockedBackend, CascadeBackend,
+    CascadeMode, DtwBackend, NativeBackend, PairCache,
+};
+use mahc::dtw::INFEASIBLE;
+use mahc::mahc::{MahcDriver, StreamingDriver};
+
+fn matrix_backends() -> Vec<Box<dyn DtwBackend>> {
+    // The scalar reference and the lane-parallel kernel, plus whatever
+    // cell the CI matrix pins via MAHC_TEST_BACKEND (dedup'd by name).
+    let mut backends: Vec<Box<dyn DtwBackend>> =
+        vec![Box::new(NativeBackend::new()), Box::new(BlockedBackend::new())];
+    let env = common::backend_under_test(BackendKind::Native);
+    if backends.iter().all(|b| b.name() != env.name()) {
+        backends.push(env);
+    }
+    backends
+}
+
+fn base_cfg(threads: usize) -> AlgoConfig {
+    let mut cfg = AlgoConfig {
+        p0: 3,
+        beta: Some(30),
+        convergence: Convergence::FixedIters(3),
+        threads,
+        ..Default::default()
+    };
+    // Stage-0 aggregation is the driver's threshold-carrying consumer:
+    // without it every query is a condensed build, which stays exact by
+    // design, and the cascade would have nothing to do.
+    cfg.aggregate = AggregateConfig::new(0.5);
+    cfg
+}
+
+/// Hand-built corpus with controlled lengths and features; ids are
+/// positional, as [`generate`] produces them.
+fn synth_set(dim: usize, lens: &[usize], gen: impl Fn(usize, usize) -> f32) -> SegmentSet {
+    let segments: Vec<Segment> = lens
+        .iter()
+        .enumerate()
+        .map(|(id, &len)| Segment {
+            id,
+            class_id: 0,
+            len,
+            dim,
+            feats: (0..len * dim).map(|k| gen(id, k)).collect(),
+        })
+        .collect();
+    SegmentSet {
+        name: "synth".into(),
+        dim,
+        segments,
+        num_classes: 1,
+    }
+}
+
+#[test]
+fn batch_prune_modes_are_bitwise_the_exact_run_across_the_matrix() {
+    let set = generate(&DatasetSpec::tiny(80, 5, 33));
+    for backend in matrix_backends() {
+        for threads in common::thread_matrix(&[1, 8]) {
+            let cfg = base_cfg(threads);
+            let exact = MahcDriver::new(&set, cfg.clone(), backend.as_ref())
+                .unwrap()
+                .run()
+                .unwrap();
+            for r in &exact.history.records {
+                assert_eq!(r.lb_pairs, 0, "exact mode must never touch the bound");
+                assert_eq!(r.lb_pruned, 0);
+            }
+            for mode in [PruneMode::On, PruneMode::Debug] {
+                let mut pruned_cfg = cfg.clone();
+                pruned_cfg.prune = mode;
+                let got = MahcDriver::new(&set, pruned_cfg, backend.as_ref())
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                let ctx = format!("{}/t{threads}/{mode:?}", backend.name());
+                assert_eq!(got.labels, exact.labels, "{ctx}: labels diverged");
+                assert_eq!(got.k, exact.k, "{ctx}: K diverged");
+                assert_eq!(
+                    got.f_measure.to_bits(),
+                    exact.f_measure.to_bits(),
+                    "{ctx}: F diverged"
+                );
+                let r0 = got.history.records.first().expect("records");
+                assert!(r0.lb_pairs > 0, "{ctx}: the cascade never engaged");
+                assert!(
+                    r0.backend.ends_with("+lb"),
+                    "{ctx}: backend stamp is {}",
+                    r0.backend
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stream_prune_modes_are_bitwise_the_exact_run_across_the_matrix() {
+    let set = generate(&DatasetSpec::tiny(120, 6, 34));
+    for backend in matrix_backends() {
+        for threads in common::thread_matrix(&[1, 8]) {
+            let cfg = StreamConfig::new(base_cfg(threads), 40);
+            let exact = StreamingDriver::new(&set, cfg.clone(), backend.as_ref())
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(exact.shards > 1, "need retirement rectangles to prune");
+            for mode in [PruneMode::On, PruneMode::Debug] {
+                let mut pruned_cfg = cfg.clone();
+                pruned_cfg.algo.prune = mode;
+                let got = StreamingDriver::new(&set, pruned_cfg, backend.as_ref())
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                let ctx = format!("{}/t{threads}/{mode:?}", backend.name());
+                assert_eq!(got.labels, exact.labels, "{ctx}: labels diverged");
+                assert_eq!(got.k, exact.k, "{ctx}: K diverged");
+                assert_eq!(
+                    got.f_measure.to_bits(),
+                    exact.f_measure.to_bits(),
+                    "{ctx}: F diverged"
+                );
+                assert_eq!(got.shards, exact.shards, "{ctx}: shard count diverged");
+                let total_lb: u64 = got.history.records.iter().map(|r| r.lb_pairs).sum();
+                assert!(total_lb > 0, "{ctx}: the cascade never engaged");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzzed_lb_admissibility_never_exceeds_exact_dtw() {
+    // Pseudo-random corpora over several dims, lengths and scales: the
+    // float bound must sit at or below the float DP total for every
+    // pair — a plain f32 <=, which is exactly what the Debug cascade
+    // asserts in production.
+    let native = NativeBackend::new();
+    for (dim, seed) in [(1usize, 101u64), (3, 102), (13, 103)] {
+        let lens: Vec<usize> = (0..18).map(|i| 3 + (i * 7 + dim) % 21).collect();
+        let set = synth_set(dim, &lens, |id, k| {
+            let t = (k as f32 * 0.37 + id as f32 * 1.7 + seed as f32 * 0.11).sin();
+            t * (1.0 + (id % 5) as f32)
+        });
+        let cascade = CascadeBackend::borrowed(&native, &set, CascadeMode::On);
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let exact = build_cross(&refs, &refs, &native, 4).unwrap();
+        let n = refs.len();
+        for (i, x) in refs.iter().enumerate() {
+            for (j, y) in refs.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let lb = cascade.lb_pair(x, y).unwrap();
+                let ex = exact[i * n + j];
+                assert!(
+                    lb <= ex,
+                    "dim={dim}: inadmissible bound {lb} > exact {ex} for pair ({i}, {j})"
+                );
+            }
+        }
+        // A real corpus from the generator, through the Debug tripwire
+        // (which verifies lb <= exact for every pair internally).
+        let real = generate(&DatasetSpec::tiny(30, 4, seed));
+        let dbg = CascadeBackend::borrowed(&native, &real, CascadeMode::Debug);
+        let rr: Vec<&Segment> = real.segments.iter().collect();
+        for threshold in [0.0f32, 0.2, 0.5, 2.0] {
+            dbg.pairwise_pruned(&rr[..10], &rr[10..], threshold)
+                .expect("admissibility tripwire must not fire");
+        }
+    }
+}
+
+#[test]
+fn banded_inner_with_infeasible_pairs_keeps_the_bound_admissible() {
+    // Band narrower than the length gap: the exact banded DP returns
+    // the INFEASIBLE sentinel for those pairs, which dominates any
+    // finite envelope bound — the Debug tripwire must stay quiet and
+    // decisions must match the exact banded path.
+    let dim = 2;
+    let lens = [4usize, 16, 5, 20, 6, 12];
+    let set = synth_set(dim, &lens, |id, k| ((k + id * 3) as f32 * 0.29).cos());
+    let banded = NativeBackend::banded(1);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let exact = build_cross(&refs[..3], &refs[3..], &banded, 1).unwrap();
+    assert!(
+        exact.iter().any(|&v| v >= INFEASIBLE / 2.0),
+        "the length gaps must make some pairs infeasible for this pin to bite"
+    );
+    let cascade = CascadeBackend::borrowed(&banded, &set, CascadeMode::Debug);
+    for threshold in [0.0f32, 0.5, 10.0] {
+        let (vals, flags) = cascade
+            .pairwise_pruned(&refs[..3], &refs[3..], threshold)
+            .expect("infeasible pairs must not trip admissibility");
+        for ((&v, &f), &ex) in vals.iter().zip(&flags).zip(&exact) {
+            assert_eq!(
+                v <= threshold,
+                ex <= threshold,
+                "threshold decision diverged at t={threshold}"
+            );
+            if f {
+                assert_eq!(v.to_bits(), ex.to_bits(), "survivors are exact");
+            }
+        }
+    }
+    // And the wrapper keys the banded kernel's cache tag, so pruned
+    // banded values never alias full-band entries.
+    assert_eq!(cascade.kernel_tag(), banded.kernel_tag());
+    assert_ne!(cascade.kernel_tag(), NativeBackend::new().kernel_tag());
+}
+
+#[test]
+fn degenerate_thresholds_and_identical_corpora_stay_exact() {
+    let native = NativeBackend::new();
+
+    // All-identical corpus: every pair distance and every bound is 0,
+    // so an ε = 0 threshold prunes nothing and everything stays exact.
+    let same = synth_set(3, &[7; 12], |_, k| ((k % 3) as f32) * 0.5);
+    let cascade = CascadeBackend::borrowed(&native, &same, CascadeMode::Debug);
+    let refs: Vec<&Segment> = same.segments.iter().collect();
+    let (vals, flags) = cascade.pairwise_pruned(&refs[..4], &refs[4..], 0.0).unwrap();
+    assert!(flags.iter().all(|&f| f), "zero bounds survive an ε = 0 threshold");
+    assert!(vals.iter().all(|&v| v == 0.0));
+
+    // ε = 0 end to end: aggregation at radius 0 with pruning on is
+    // still bitwise the unaggregated exact run (every segment leads).
+    let set = generate(&DatasetSpec::tiny(50, 4, 35));
+    let mut off = base_cfg(2);
+    off.aggregate = AggregateConfig::new(0.0);
+    let mut on = off.clone();
+    on.prune = PruneMode::On;
+    let exact = MahcDriver::new(&set, off, &native).unwrap().run().unwrap();
+    let pruned = MahcDriver::new(&set, on, &native).unwrap().run().unwrap();
+    assert_eq!(pruned.labels, exact.labels);
+    assert_eq!(pruned.k, exact.k);
+    assert_eq!(pruned.f_measure.to_bits(), exact.f_measure.to_bits());
+
+    // The pruned cross builder at a mid-range threshold: decisions
+    // match the oracle pair for pair, survivors bitwise, and a warm
+    // exact rebuild over the same cache is untouched by lower bounds.
+    let rs: Vec<&Segment> = set.segments.iter().collect();
+    let cas = CascadeBackend::borrowed(&native, &set, CascadeMode::On);
+    let (xs, ys) = (&rs[..20], &rs[20..]);
+    let want = build_cross(xs, ys, &native, 2).unwrap();
+    let mut sorted = want.clone();
+    sorted.sort_unstable_by(f32::total_cmp);
+    let threshold = sorted[sorted.len() / 2];
+    let cache = PairCache::with_capacity_bytes(1 << 20);
+    let got =
+        build_cross_cached_pruned(xs, ys, &cas, 2, Some(&cache), Some(threshold)).unwrap();
+    common::assert_bitwise(
+        &got.iter()
+            .zip(&want)
+            .map(|(&g, &w)| if g <= threshold { g } else { w })
+            .collect::<Vec<_>>(),
+        &want,
+        "survivor values",
+    );
+    for (&g, &w) in got.iter().zip(&want) {
+        assert_eq!(g <= threshold, w <= threshold, "decision parity");
+    }
+    assert!(cas.stats().lb_pruned > 0, "mid-range threshold must prune");
+    let warm = mahc::distance::build_cross_cached(xs, ys, &native, 2, Some(&cache)).unwrap();
+    common::assert_bitwise(&warm, &want, "warm exact rebuild over pruned cache");
+}
