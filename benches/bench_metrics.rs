@@ -1,0 +1,107 @@
+//! Vector-metric vs DTW per-pair cost on comparable corpora, in
+//! pair-distances per second.
+//!
+//! The metric-generic API's economic claim is that embedding workloads
+//! are *cheap*: a cosine or Euclidean pair is one O(D) sweep where a
+//! DTW pair is an O(T²·D) dynamic program.  This harness first proves
+//! the vector kernels' scalar/blocked bitwise parity (a cheap subset
+//! of `rust/tests/metric_parity.rs`), then measures cosine, Euclidean,
+//! and DTW on same-size pair tiles and asserts the cosine-vs-DTW
+//! pairs/sec floor recorded in EXPERIMENTS.md §Metrics.
+//!
+//! CI hooks: `MAHC_BENCH_QUICK=1` shortens the sampling windows for
+//! the perf-smoke job, and `MAHC_BENCH_JSON=path` writes the
+//! measurements (pairs/sec per metric, the cosine/DTW ratio, the
+//! enforced floor) as a JSON fragment for the `BENCH_ci.json`
+//! artifact.
+
+use mahc::config::DatasetSpec;
+use mahc::corpus::{generate, generate_embeddings, EmbeddingSpec, Segment};
+use mahc::distance::{NativeBackend, PairwiseBackend, VectorBackend, VectorMetric};
+use mahc::util::bench::{quick_mode, write_json_report, Bench};
+use mahc::util::json;
+
+fn bench(name: &str, pairs: u64) -> Bench {
+    let b = Bench::new(name).throughput(pairs);
+    if quick_mode() {
+        b.quick()
+    } else {
+        b
+    }
+}
+
+fn main() {
+    // Embedding corpus: 96 segments of one 39-dim frame each, so a
+    // vector pair reads exactly as many features as one DTW *frame*
+    // comparison does.
+    let mut espec = EmbeddingSpec::tiny(96, 8, 11);
+    espec.dim = 39;
+    let eset = generate_embeddings(&espec);
+    let erefs: Vec<&Segment> = eset.segments.iter().collect();
+    let (exs, eys) = (&erefs[..32], &erefs[32..96]);
+    let pairs = (exs.len() * eys.len()) as u64;
+
+    // The DTW reference corpus from bench_backends: same segment
+    // count, 39-dim features, paper-realistic lengths.
+    let mut dspec = DatasetSpec::tiny(96, 8, 11);
+    dspec.feat_dim = 39;
+    dspec.len_range = (6, 60);
+    let dset = generate(&dspec);
+    let drefs: Vec<&Segment> = dset.segments.iter().collect();
+    let (dxs, dys) = (&drefs[..32], &drefs[32..96]);
+
+    let cos_s = VectorBackend::native(VectorMetric::Cosine);
+    let cos_b = VectorBackend::blocked(VectorMetric::Cosine);
+    let euc_s = VectorBackend::native(VectorMetric::Euclidean);
+    let dtw = NativeBackend::new();
+
+    // Parity before speed: a benchmark of wrong answers is worthless.
+    let a = cos_s.pairwise(exs, eys).unwrap();
+    let b = cos_b.pairwise(exs, eys).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "pair {i}: {x} vs {y}");
+    }
+
+    println!("== bench_metrics: 32x64 pair tiles, D=39 ==");
+    let rc = bench("cosine/tile32x64", pairs).run(|| cos_s.pairwise(exs, eys).unwrap());
+    let rcb = bench("cosine_blocked/tile32x64", pairs).run(|| cos_b.pairwise(exs, eys).unwrap());
+    let re = bench("euclidean/tile32x64", pairs).run(|| euc_s.pairwise(exs, eys).unwrap());
+    let rd = bench("dtw/tile32x64", pairs).run(|| dtw.pairwise(dxs, dys).unwrap());
+
+    let cosine_vs_dtw_ratio = rc.throughput.unwrap() / rd.throughput.unwrap();
+    let euclidean_vs_dtw_ratio = re.throughput.unwrap() / rd.throughput.unwrap();
+
+    println!();
+    println!("vector/dtw pairs-per-sec ratio (same tile, same dim):");
+    println!("  cosine     {cosine_vs_dtw_ratio:.1}x");
+    println!("  euclidean  {euclidean_vs_dtw_ratio:.1}x");
+
+    // The acceptance floor from EXPERIMENTS.md §Metrics: with segment
+    // lengths averaging ~30 frames, a DTW pair costs hundreds of frame
+    // comparisons where a cosine pair costs one — any honest kernel
+    // clears 3x with an order of magnitude to spare.  Override via
+    // MAHC_BENCH_FLOOR (e.g. 0 to record numbers only).
+    let floor: f64 = std::env::var("MAHC_BENCH_FLOOR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+
+    write_json_report(&json::obj(vec![
+        ("quick", json::Json::Bool(quick_mode())),
+        ("floor", json::num(floor)),
+        ("cosine_vs_dtw_ratio", json::num(cosine_vs_dtw_ratio)),
+        ("euclidean_vs_dtw_ratio", json::num(euclidean_vs_dtw_ratio)),
+        (
+            "series",
+            json::arr(vec![rc.to_json(), rcb.to_json(), re.to_json(), rd.to_json()]),
+        ),
+    ]))
+    .expect("writing MAHC_BENCH_JSON fragment");
+
+    assert!(
+        cosine_vs_dtw_ratio >= floor,
+        "cosine must deliver >= {floor}x DTW pairs/sec on the same tile \
+         (got {cosine_vs_dtw_ratio:.1}x) — see EXPERIMENTS.md §Metrics"
+    );
+}

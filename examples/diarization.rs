@@ -1,0 +1,85 @@
+//! Speaker diarization over utterance embeddings — the embedding-space
+//! workload the metric-generic distance API exists for.
+//!
+//! A session of utterance embeddings is generated with an *unknown*
+//! speaker count (drawn from the corpus seed, as in real diarization),
+//! then clustered by MAHC under the cosine metric with silhouette
+//! model selection — no DTW, no variable-length alignment, same
+//! multi-stage machinery.  The run reports the discovered speaker
+//! count against the hidden truth, the diarization F-measure, and the
+//! silhouette score the selector selected on, and dumps the run JSON
+//! so the `metric` / `silhouette_score` telemetry fields are visible
+//! end to end.
+//!
+//! ```text
+//! cargo run --release --example diarization
+//! ```
+//!
+//! CI hooks: the examples-smoke job runs this under
+//! `MAHC_EXAMPLE_QUICK=1`, which shrinks the session.
+
+use mahc::ahc::SelectionMethod;
+use mahc::config::{AlgoConfig, Convergence};
+use mahc::corpus::{diarization, DiarizationSpec};
+use mahc::distance::{VectorBackend, VectorMetric};
+use mahc::mahc::MahcDriver;
+
+fn quick() -> bool {
+    mahc::util::bench::env_flag("MAHC_EXAMPLE_QUICK")
+}
+
+fn main() -> anyhow::Result<()> {
+    let utterances = if quick() { 120 } else { 600 };
+    let spec = DiarizationSpec::tiny(utterances, 8, 23);
+    let set = diarization(&spec);
+    println!(
+        "session: {} utterance embeddings (dim {}), speaker count hidden",
+        set.len(),
+        set.dim
+    );
+
+    let cfg = AlgoConfig {
+        p0: if quick() { 3 } else { 5 },
+        beta: Some(if quick() { 60 } else { 160 }),
+        convergence: Convergence::FixedIters(if quick() { 3 } else { 5 }),
+        selection: SelectionMethod::Silhouette,
+        ..Default::default()
+    };
+    let backend = VectorBackend::blocked(VectorMetric::Cosine);
+    let result = MahcDriver::new(&set, cfg, &backend)?.run()?;
+
+    let last = result
+        .history
+        .records
+        .last()
+        .expect("run produced no iterations");
+    println!(
+        "diarization: {} speakers discovered (true: {}), F={:.4}",
+        result.k, set.num_classes, result.f_measure
+    );
+    println!(
+        "telemetry: metric={} silhouette_score={:.4} backend={}",
+        last.metric, last.silhouette_score, last.backend
+    );
+    assert_eq!(last.metric, "cosine");
+    assert!(
+        last.silhouette_score > 0.0,
+        "silhouette selection must score the evaluation cut"
+    );
+    assert!(
+        result.f_measure > 0.5,
+        "diarization degenerated: F = {}",
+        result.f_measure
+    );
+
+    // The JSON the CLI's --out flag would write, proving the new
+    // fields travel through the writer.
+    let json = result.history.to_json().to_string();
+    assert!(json.contains("\"metric\""));
+    assert!(json.contains("\"silhouette_score\""));
+    println!(
+        "run JSON carries metric + silhouette_score ({} bytes)",
+        json.len()
+    );
+    Ok(())
+}

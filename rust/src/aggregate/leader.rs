@@ -35,7 +35,7 @@
 
 use crate::config::AggregateConfig;
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_cross_cached, build_cross_cached_pruned, DtwBackend, PairCache};
+use crate::distance::{build_cross_cached, build_cross_cached_pruned, PairwiseBackend, PairCache};
 
 /// Result of the leader pass: `m` representatives plus the membership
 /// lists that map them back onto the full corpus, and the probe-engine
@@ -237,7 +237,7 @@ impl Pass<'_> {
         &mut self,
         lo: usize,
         hi: usize,
-        backend: &dyn DtwBackend,
+        backend: &dyn PairwiseBackend,
         threads: usize,
         cache: Option<&PairCache>,
     ) -> anyhow::Result<()> {
@@ -312,7 +312,7 @@ impl Pass<'_> {
         row: &[f32],
         cols: &[usize],
         base_leaders: usize,
-        backend: &dyn DtwBackend,
+        backend: &dyn PairwiseBackend,
         cache: Option<&PairCache>,
     ) -> anyhow::Result<()> {
         let mut best: Option<(usize, f32)> = None;
@@ -367,7 +367,7 @@ impl Pass<'_> {
         id: usize,
         row: &[f32],
         base_supers: usize,
-        backend: &dyn DtwBackend,
+        backend: &dyn PairwiseBackend,
         cache: Option<&PairCache>,
     ) -> anyhow::Result<()> {
         let mut sdist: Vec<f32> = row.to_vec();
@@ -480,7 +480,7 @@ impl Pass<'_> {
 pub fn aggregate(
     set: &SegmentSet,
     cfg: &AggregateConfig,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<Aggregation> {

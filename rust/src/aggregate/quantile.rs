@@ -15,7 +15,7 @@
 //! `rust/tests/aggregation.rs` together with the sampling tolerance.
 
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
+use crate::distance::{build_condensed_cached, PairwiseBackend, PairCache};
 use crate::util::rng::Rng;
 
 /// Empirical quantile of a sorted slice: the value at the lower rank
@@ -61,7 +61,7 @@ pub fn derive_epsilon(
     q: f64,
     sample: usize,
     seed: u64,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<EpsilonEstimate> {

@@ -6,20 +6,53 @@
 //! exactly in O(n²) time with the nearest-neighbour-chain algorithm
 //! ([`nnchain`]).  [`dendrogram`] turns the merge list into labelled
 //! cuts; [`lmethod`] finds the number of clusters per subset (Salvador
-//! & Chan, as in the paper's Step 4); [`medoid`] picks each cluster's
+//! & Chan, as in the paper's Step 4) with [`silhouette`]-based
+//! selection as the diarization-style alternative
+//! ([`SelectionMethod`]); [`medoid`] picks each cluster's
 //! representative for the second stage.
 
 pub mod dendrogram;
 pub mod lmethod;
 pub mod medoid;
 pub mod nnchain;
+pub mod silhouette;
 
 pub use dendrogram::Dendrogram;
 pub use lmethod::l_method;
 pub use medoid::medoids;
 pub use nnchain::ward_linkage;
+pub use silhouette::{mean_silhouette, silhouette_k};
 
 use crate::distance::Condensed;
+
+/// How the number of clusters is chosen when no override is given.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectionMethod {
+    /// The paper's L-method knee over merge heights (Salvador & Chan).
+    #[default]
+    LMethod,
+    /// Mean-silhouette argmax over candidate cuts (`silhouette`), the
+    /// convention of the diarization exemplars.  Falls back to the
+    /// L-method on corpora too small for a silhouette (n < 3).
+    Silhouette,
+}
+
+impl SelectionMethod {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "lmethod" | "l-method" => Ok(SelectionMethod::LMethod),
+            "silhouette" => Ok(SelectionMethod::Silhouette),
+            other => anyhow::bail!("unknown selection method '{other}' (lmethod|silhouette)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionMethod::LMethod => "lmethod",
+            SelectionMethod::Silhouette => "silhouette",
+        }
+    }
+}
 
 /// Result of clustering one subset: flat labels in `0..k`, the chosen
 /// k, and the medoid (index into the subset) of each cluster.
@@ -30,15 +63,28 @@ pub struct SubsetClustering {
     pub medoids: Vec<usize>,
 }
 
-/// Cluster one subset end-to-end: Ward AHC → L-method k → cut → medoids.
+/// Cluster one subset end-to-end with the default L-method selection:
+/// Ward AHC → L-method k → cut → medoids.  Thin wrapper over
+/// [`cluster_subset_with`], kept for the historical call sites.
 ///
-/// `max_k` caps the L-method's answer (the driver passes
+/// `max_k` caps the selection's answer (the driver passes
 /// `max_clusters_frac * n`); `k_override` forces a specific cut (used
 /// by the final stage, Algorithm 1 step 13).
 pub fn cluster_subset(
     cond: &Condensed,
     max_k: usize,
     k_override: Option<usize>,
+) -> SubsetClustering {
+    cluster_subset_with(cond, max_k, k_override, SelectionMethod::LMethod)
+}
+
+/// Cluster one subset end-to-end: Ward AHC → `selection`-chosen k →
+/// cut → medoids.
+pub fn cluster_subset_with(
+    cond: &Condensed,
+    max_k: usize,
+    k_override: Option<usize>,
+    selection: SelectionMethod,
 ) -> SubsetClustering {
     let n = cond.n();
     if n == 0 {
@@ -59,8 +105,19 @@ pub fn cluster_subset(
     let k = match k_override {
         Some(k) => k.clamp(1, n),
         None => {
-            let heights = dendro.merge_heights();
-            l_method(&heights, n).clamp(1, max_k.max(1)).min(n)
+            let chosen = match selection {
+                SelectionMethod::Silhouette => silhouette_k(cond, &dendro, max_k.max(1)),
+                SelectionMethod::LMethod => None,
+            };
+            match chosen {
+                Some(k) => k.clamp(1, max_k.max(1)).min(n),
+                // L-method proper, and the silhouette fallback for
+                // corpora with no candidate cut (n < 3).
+                None => {
+                    let heights = dendro.merge_heights();
+                    l_method(&heights, n).clamp(1, max_k.max(1)).min(n)
+                }
+            }
         }
     };
     let labels = dendro.cut(k);
@@ -133,6 +190,24 @@ mod tests {
         assert_eq!(out.labels, vec![0]);
         let out = cluster_subset(&Condensed::zeros(0), 4, None);
         assert_eq!(out.k, 0);
+    }
+
+    #[test]
+    fn silhouette_selection_agrees_with_lmethod_on_separated_blobs() {
+        let (cond, _) = blob_condensed();
+        let l = cluster_subset(&cond, 6, None);
+        let s = cluster_subset_with(&cond, 6, None, SelectionMethod::Silhouette);
+        assert_eq!(l.k, s.k, "both selectors must find the 3 blobs");
+        assert_eq!(l.labels, s.labels, "same dendrogram, same cut");
+    }
+
+    #[test]
+    fn silhouette_selection_falls_back_below_three_points() {
+        let mut cond = Condensed::zeros(2);
+        cond.set(1, 0, 1.0);
+        let l = cluster_subset(&cond, 2, None);
+        let s = cluster_subset_with(&cond, 2, None, SelectionMethod::Silhouette);
+        assert_eq!(l.k, s.k);
     }
 
     #[test]

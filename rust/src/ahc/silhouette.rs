@@ -1,0 +1,177 @@
+//! Silhouette-based cluster-count selection — the model-selection
+//! method every SNIPPETS.md diarization exemplar uses, offered beside
+//! the paper's L-method knee (`lmethod.rs`).
+//!
+//! For a candidate cut into k clusters, each point's silhouette is
+//! `s(i) = (b(i) − a(i)) / max(a(i), b(i))` where `a(i)` is the mean
+//! distance to the point's own cluster (excluding itself) and `b(i)`
+//! the smallest mean distance to any other cluster; the cut's score is
+//! the mean over all points.  [`silhouette_k`] scans every cut
+//! `k ∈ [2, min(max_k, n−1)]` of one dendrogram and keeps the argmax
+//! (smaller k on ties, so the scan is deterministic).
+//!
+//! Determinism: all accumulation is widened to f64 in explicit
+//! fixed-order loops (ascending point, then ascending cluster), so a
+//! score — and with it the chosen k — is a pure function of the
+//! condensed matrix, independent of thread count or backend.
+
+use super::Dendrogram;
+use crate::distance::Condensed;
+
+/// Mean silhouette of one labelling over a condensed distance matrix.
+///
+/// `labels` must be dense in `0..k` (the [`Dendrogram::cut`]
+/// convention).  Degenerate inputs score 0: fewer than two clusters, a
+/// labelling length that does not match the matrix, or an all-zero
+/// matrix.  Points in singleton clusters contribute `s(i) = 0`, the
+/// standard convention.
+pub fn mean_silhouette(cond: &Condensed, labels: &[usize], k: usize) -> f64 {
+    let n = cond.n();
+    if k < 2 || n < 2 || labels.len() != n {
+        return 0.0;
+    }
+    let mut counts = vec![0usize; k];
+    for &l in labels {
+        if let Some(c) = counts.get_mut(l) {
+            *c += 1;
+        } else {
+            // Out-of-range label: the cut contract is broken; score the
+            // labelling as uninformative rather than panicking.
+            return 0.0;
+        }
+    }
+
+    let mut total = 0.0f64;
+    let mut sums = vec![0.0f64; k];
+    for (i, &own) in labels.iter().enumerate() {
+        for s in sums.iter_mut() {
+            *s = 0.0;
+        }
+        for (j, &lj) in labels.iter().enumerate() {
+            if i != j {
+                if let Some(s) = sums.get_mut(lj) {
+                    *s += cond.get(i, j) as f64;
+                }
+            }
+        }
+        let own_count = counts.get(own).copied().unwrap_or(0);
+        if own_count <= 1 {
+            // Singleton cluster: s(i) = 0 by convention.
+            continue;
+        }
+        let a = sums.get(own).copied().unwrap_or(0.0) / (own_count - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (c, (&s, &cnt)) in sums.iter().zip(counts.iter()).enumerate() {
+            if c != own && cnt > 0 {
+                let mean = s / cnt as f64;
+                if mean < b {
+                    b = mean;
+                }
+            }
+        }
+        if !b.is_finite() {
+            continue;
+        }
+        let denom = a.max(b);
+        if denom > 0.0 {
+            total += (b - a) / denom;
+        }
+    }
+    total / n as f64
+}
+
+/// Pick the cluster count by maximising the mean silhouette over cuts
+/// of `dendro`, scanning `k ∈ [2, min(max_k, n−1)]` in ascending order
+/// (strict improvement required, so ties keep the smaller k).
+///
+/// Returns `None` when no candidate cut exists (n < 3 or `max_k` < 2):
+/// the caller falls back to the L-method path, which owns the
+/// degenerate cases.
+pub fn silhouette_k(cond: &Condensed, dendro: &Dendrogram, max_k: usize) -> Option<usize> {
+    let n = cond.n();
+    let hi = max_k.min(n.saturating_sub(1));
+    if hi < 2 {
+        return None;
+    }
+    let mut best_k = None;
+    let mut best_score = f64::NEG_INFINITY;
+    for k in 2..=hi {
+        let labels = dendro.cut(k);
+        let score = mean_silhouette(cond, &labels, k);
+        if score > best_score {
+            best_score = score;
+            best_k = Some(k);
+        }
+    }
+    best_k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ahc::ward_linkage;
+
+    /// Well-separated blobs on a line, `per` points each.
+    fn blobs(centers: &[f32], per: usize) -> (Condensed, Vec<usize>) {
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for (c, &center) in centers.iter().enumerate() {
+            for k in 0..per {
+                pts.push(center + k as f32 * 0.1);
+                truth.push(c);
+            }
+        }
+        let n = pts.len();
+        let mut cond = Condensed::zeros(n);
+        for i in 0..n {
+            for j in 0..i {
+                cond.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        (cond, truth)
+    }
+
+    #[test]
+    fn separated_blobs_score_near_one_at_true_k() {
+        let (cond, truth) = blobs(&[0.0, 10.0, 20.0], 4);
+        let s = mean_silhouette(&cond, &truth, 3);
+        assert!(s > 0.9, "tight separated blobs should score near 1, got {s}");
+    }
+
+    #[test]
+    fn wrong_k_scores_below_true_k() {
+        let (cond, truth) = blobs(&[0.0, 10.0, 20.0], 4);
+        let dendro = ward_linkage(&cond);
+        let s_true = mean_silhouette(&cond, &truth, 3);
+        for k in [2usize, 4, 6] {
+            let s = mean_silhouette(&cond, &dendro.cut(k), k);
+            assert!(s < s_true, "k={k} ({s}) must score below true k ({s_true})");
+        }
+    }
+
+    #[test]
+    fn selection_recovers_true_k() {
+        let (cond, _) = blobs(&[0.0, 10.0, 20.0, 30.0], 5);
+        let dendro = ward_linkage(&cond);
+        assert_eq!(silhouette_k(&cond, &dendro, 10), Some(4));
+    }
+
+    #[test]
+    fn degenerate_inputs_fall_back() {
+        let (cond, _) = blobs(&[0.0, 10.0], 1);
+        let dendro = ward_linkage(&cond);
+        // n = 2: no candidate in [2, n−1].
+        assert_eq!(silhouette_k(&cond, &dendro, 8), None);
+        assert_eq!(mean_silhouette(&cond, &[0, 0], 1), 0.0);
+        assert_eq!(mean_silhouette(&Condensed::zeros(0), &[], 2), 0.0);
+    }
+
+    #[test]
+    fn singleton_clusters_contribute_zero() {
+        let (cond, _) = blobs(&[0.0, 10.0], 2);
+        // 0,1 together; 2 and 3 singletons.
+        let s = mean_silhouette(&cond, &[0, 0, 1, 2], 3);
+        // Points 2 and 3 contribute 0; points 0 and 1 are near-perfect.
+        assert!(s > 0.0 && s < 0.75, "partial credit only, got {s}");
+    }
+}

@@ -10,7 +10,7 @@
 
 use crate::ahc;
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed, DtwBackend};
+use crate::distance::{build_condensed, PairwiseBackend};
 use crate::metrics;
 
 /// Result of the classical-AHC baseline.
@@ -27,7 +27,7 @@ pub struct AhcBaseline {
 /// L method choose (capped at `max_clusters_frac`·N like the subsets).
 pub fn full_ahc(
     set: &SegmentSet,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     k: Option<usize>,
     max_clusters_frac: f64,

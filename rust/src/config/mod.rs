@@ -7,7 +7,50 @@
 //! Config files use a minimal `key = value` TOML subset parsed by
 //! [`parse_kv`]; every key can also be overridden from the CLI.
 
-use crate::distance::BackendKind;
+use crate::ahc::SelectionMethod;
+use crate::distance::{BackendKind, MetricKind};
+
+/// Typed rejection for incoherent metric/backend/prune combinations.
+///
+/// Surfaced through `anyhow` by [`AlgoConfig::validate`], so callers
+/// that care (CLI error formatting, serve admission) can
+/// `downcast_ref::<MetricConfigError>()` instead of string-matching —
+/// and an incoherent `--prune debug --metric cosine` is a clean
+/// validation error, never a runtime panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricConfigError {
+    /// The pruning cascade needs an admissible lower bound and the
+    /// metric has none (cosine).
+    PruneUnsupported { metric: MetricKind, prune: PruneMode },
+    /// The backend kernel only implements DTW (the XLA artifact).
+    BackendUnsupported {
+        metric: MetricKind,
+        backend: BackendKind,
+    },
+}
+
+impl std::fmt::Display for MetricConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricConfigError::PruneUnsupported { metric, prune } => write!(
+                f,
+                "prune = {} needs an admissible lower bound, but metric '{}' has none \
+                 (use --prune off, or a metric with a bound: dtw, euclidean)",
+                prune.name(),
+                metric.name()
+            ),
+            MetricConfigError::BackendUnsupported { metric, backend } => write!(
+                f,
+                "backend '{}' only implements the dtw metric (got metric '{}'); \
+                 use --backend native or --backend blocked for vector metrics",
+                backend.name(),
+                metric.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MetricConfigError {}
 
 /// Which of the paper's four TIMIT-derived compositions to mirror.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -367,10 +410,21 @@ pub struct AlgoConfig {
     /// Merge undersized subsets (paper §7 concludes this is unnecessary;
     /// kept as an ablation switch, Fig. 11).
     pub merge_min: Option<usize>,
-    /// Distance backend (scalar native DTW, the lane-parallel blocked
+    /// Distance backend (scalar native, the lane-parallel blocked
     /// kernel, or the PJRT XLA artifact).  Native and blocked produce
-    /// bitwise-identical clusterings (`rust/tests/backend_parity.rs`).
+    /// bitwise-identical clusterings (`rust/tests/backend_parity.rs`,
+    /// `rust/tests/metric_parity.rs`).
     pub backend: BackendKind,
+    /// Distance metric: DTW over variable-length segments (historical
+    /// default) or cosine/Euclidean over fixed-dimension vectors.
+    /// Orthogonal to `backend` — both kernel variants exist for every
+    /// metric (XLA is DTW-only; [`AlgoConfig::validate`] rejects the
+    /// combination with a typed [`MetricConfigError`]).
+    pub metric: MetricKind,
+    /// How the cluster count is chosen per subset: the paper's
+    /// L-method knee or mean-silhouette argmax
+    /// (`ahc::SelectionMethod`).
+    pub selection: SelectionMethod,
     /// Worker threads for per-subset stage-1 jobs.
     pub threads: usize,
     /// Shuffle subset membership before splitting (ablation; default
@@ -406,6 +460,8 @@ impl Default for AlgoConfig {
             convergence: Convergence::FixedIters(5),
             merge_min: None,
             backend: BackendKind::Native,
+            metric: MetricKind::Dtw,
+            selection: SelectionMethod::LMethod,
             threads: crate::util::pool::default_threads(),
             split_shuffle: false,
             seed: 1234,
@@ -446,6 +502,18 @@ impl AlgoConfig {
         self
     }
 
+    /// Select the distance metric.
+    pub fn with_metric(mut self, metric: MetricKind) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    /// Select the cluster-count selection method.
+    pub fn with_selection(mut self, selection: SelectionMethod) -> Self {
+        self.selection = selection;
+        self
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.p0 == 0 {
             anyhow::bail!("p0 must be >= 1");
@@ -462,6 +530,20 @@ impl AlgoConfig {
         }
         if !(0.0..=1.0).contains(&self.max_clusters_frac) {
             anyhow::bail!("max_clusters_frac must be in [0,1]");
+        }
+        if self.prune.is_active() && !self.metric.has_lower_bound() {
+            return Err(MetricConfigError::PruneUnsupported {
+                metric: self.metric,
+                prune: self.prune,
+            }
+            .into());
+        }
+        if self.metric != MetricKind::Dtw && self.backend == BackendKind::Xla {
+            return Err(MetricConfigError::BackendUnsupported {
+                metric: self.metric,
+                backend: self.backend,
+            }
+            .into());
         }
         self.aggregate.validate()?;
         Ok(())
@@ -621,6 +703,8 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
             "threads" => cfg.threads = v.parse()?,
             "seed" => cfg.seed = v.parse()?,
             "backend" => cfg.backend = BackendKind::parse(v)?,
+            "metric" => cfg.metric = MetricKind::parse(v)?,
+            "selection" => cfg.selection = SelectionMethod::parse(v)?,
             "merge_min" => cfg.merge_min = Some(v.parse()?),
             "split_shuffle" => cfg.split_shuffle = v.parse()?,
             "max_clusters_frac" => cfg.max_clusters_frac = v.parse()?,
@@ -885,6 +969,81 @@ mod tests {
             AlgoConfig::default().with_prune(PruneMode::On).prune,
             PruneMode::On
         );
+    }
+
+    #[test]
+    fn metric_and_selection_keys_round_trip() {
+        assert_eq!(AlgoConfig::default().metric, MetricKind::Dtw);
+        assert_eq!(AlgoConfig::default().selection, SelectionMethod::LMethod);
+        for (value, want) in [
+            ("dtw", MetricKind::Dtw),
+            ("cosine", MetricKind::Cosine),
+            ("euclidean", MetricKind::Euclidean),
+            ("l2", MetricKind::Euclidean),
+        ] {
+            let mut cfg = AlgoConfig::default();
+            apply_overrides(&mut cfg, &[("metric".to_string(), value.to_string())]).unwrap();
+            assert_eq!(cfg.metric, want, "metric = {value}");
+            assert_eq!(MetricKind::parse(want.name()).unwrap(), want, "round-trip");
+        }
+        for (value, want) in [
+            ("lmethod", SelectionMethod::LMethod),
+            ("l-method", SelectionMethod::LMethod),
+            ("silhouette", SelectionMethod::Silhouette),
+        ] {
+            let mut cfg = AlgoConfig::default();
+            apply_overrides(&mut cfg, &[("selection".to_string(), value.to_string())]).unwrap();
+            assert_eq!(cfg.selection, want, "selection = {value}");
+            assert_eq!(SelectionMethod::parse(want.name()).unwrap(), want, "round-trip");
+        }
+        assert!(MetricKind::parse("hamming").is_err());
+        assert!(SelectionMethod::parse("gap").is_err());
+        let built = AlgoConfig::default()
+            .with_metric(MetricKind::Cosine)
+            .with_selection(SelectionMethod::Silhouette);
+        assert_eq!(built.metric, MetricKind::Cosine);
+        assert_eq!(built.selection, SelectionMethod::Silhouette);
+    }
+
+    #[test]
+    fn incoherent_metric_combos_reject_with_typed_errors() {
+        // Cosine has no admissible lower bound: every active prune mode
+        // must be rejected, and the error must downcast to the typed
+        // variant (no panic, no stringly-typed matching).
+        for prune in [PruneMode::On, PruneMode::Debug] {
+            let cfg = AlgoConfig::default()
+                .with_metric(MetricKind::Cosine)
+                .with_prune(prune);
+            let err = cfg.validate().unwrap_err();
+            match err.downcast_ref::<MetricConfigError>() {
+                Some(MetricConfigError::PruneUnsupported { metric, prune: p }) => {
+                    assert_eq!(*metric, MetricKind::Cosine);
+                    assert_eq!(*p, prune);
+                }
+                other => panic!("expected PruneUnsupported, got {other:?}"),
+            }
+        }
+        // Euclidean has the norm bound, DTW the envelope bound: both
+        // accept pruning.
+        for metric in [MetricKind::Dtw, MetricKind::Euclidean] {
+            let cfg = AlgoConfig::default()
+                .with_metric(metric)
+                .with_prune(PruneMode::Debug);
+            assert!(cfg.validate().is_ok(), "{} + prune", metric.name());
+        }
+        // The XLA kernel is DTW-only.
+        let mut cfg = AlgoConfig::default().with_metric(MetricKind::Euclidean);
+        cfg.backend = BackendKind::Xla;
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<MetricConfigError>(),
+                Some(MetricConfigError::BackendUnsupported { .. })
+            ),
+            "expected BackendUnsupported, got {err:?}"
+        );
+        cfg.metric = MetricKind::Dtw;
+        assert!(cfg.validate().is_ok(), "xla + dtw stays legal");
     }
 
     #[test]

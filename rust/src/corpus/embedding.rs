@@ -1,0 +1,318 @@
+//! Fixed-dimensional embedding corpora for the vector metrics
+//! (cosine / Euclidean), alongside the variable-length triphone
+//! corpora that feed DTW.
+//!
+//! Each segment is a single `dim`-dimensional frame (`len == 1`), so
+//! the flat feature buffer *is* the embedding vector — exactly the
+//! layout [`crate::distance::VectorBackend`] expects.  Two generators
+//! are provided:
+//!
+//! * [`generate_embeddings`] — a labelled Gaussian-mixture corpus with
+//!   Zipf-skewed class cardinalities, the embedding analogue of the
+//!   triphone generator (same shuffle/re-id discipline).
+//! * [`diarization`] — a speaker-diarization-style scenario: the true
+//!   speaker count is itself drawn from the seeded RNG (unknown a
+//!   priori, as in real diarization), with per-speaker session offsets
+//!   so utterances from one speaker form a tight but non-degenerate
+//!   cloud.
+
+use super::dataset::{Segment, SegmentSet};
+use crate::util::rng::{Rng, Zipf};
+
+/// How far apart class centroids sit (feature-space units).
+const CENTROID_SPREAD: f64 = 3.0;
+/// Per-speaker session drift in the diarization scenario.
+const SESSION_STD: f64 = 0.15;
+
+/// Parameters for a Gaussian-mixture embedding corpus.
+#[derive(Debug, Clone)]
+pub struct EmbeddingSpec {
+    pub name: String,
+    /// Total number of embedding vectors.
+    pub segments: usize,
+    /// Number of mixture components (ground-truth classes).
+    pub classes: usize,
+    /// Embedding dimensionality.
+    pub dim: usize,
+    /// Within-class noise stddev (centroids sit ~[`CENTROID_SPREAD`]
+    /// apart per axis, so 0.3–0.6 gives separable-but-touching blobs).
+    pub spread: f64,
+    /// Zipf exponent for class cardinalities (0 = uniform).
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl EmbeddingSpec {
+    /// Small spec for tests: separable blobs, mild skew.
+    pub fn tiny(segments: usize, classes: usize, seed: u64) -> Self {
+        EmbeddingSpec {
+            name: format!("embed_tiny_{segments}x{classes}"),
+            segments,
+            classes,
+            dim: 16,
+            spread: 0.4,
+            skew: 0.7,
+            seed,
+        }
+    }
+}
+
+/// Generate a labelled embedding corpus from an [`EmbeddingSpec`].
+pub fn generate_embeddings(spec: &EmbeddingSpec) -> SegmentSet {
+    let mut rng = Rng::seed_from(spec.seed ^ 0x454d_4245_44);
+    let centroids = class_centroids(spec.classes, spec.dim, &mut rng);
+    let counts = cardinalities(spec.segments, spec.classes, spec.skew, &mut rng);
+
+    let mut segments = Vec::with_capacity(spec.segments);
+    for (class_id, (centroid, &count)) in centroids.iter().zip(&counts).enumerate() {
+        for _ in 0..count {
+            let id = segments.len();
+            segments.push(sample_embedding(id, class_id, centroid, spec.spread, &mut rng));
+        }
+    }
+    // Interleave classes so contiguous id ranges are not single-class
+    // (initial MAHC partitions slice by position).
+    rng.shuffle(&mut segments);
+    for (i, s) in segments.iter_mut().enumerate() {
+        s.id = i;
+    }
+
+    let set = SegmentSet {
+        name: spec.name.clone(),
+        dim: spec.dim,
+        segments,
+        num_classes: spec.classes,
+    };
+    debug_assert!(set.validate().is_ok());
+    set
+}
+
+/// Parameters for the diarization-style scenario.
+#[derive(Debug, Clone)]
+pub struct DiarizationSpec {
+    /// Total number of utterance embeddings in the session.
+    pub utterances: usize,
+    /// Upper bound on the (randomly drawn) true speaker count.
+    pub max_speakers: usize,
+    /// Speaker-embedding dimensionality.
+    pub dim: usize,
+    pub seed: u64,
+}
+
+impl DiarizationSpec {
+    pub fn tiny(utterances: usize, max_speakers: usize, seed: u64) -> Self {
+        DiarizationSpec {
+            utterances,
+            max_speakers,
+            dim: 32,
+            seed,
+        }
+    }
+}
+
+/// Generate a diarization-style corpus: the speaker count is drawn in
+/// `[2, max_speakers]` from the seeded RNG, speaking time follows a
+/// Zipf draw (a few dominant speakers, a long tail), and each
+/// utterance is its speaker's embedding plus session drift.  The true
+/// count is recoverable as `set.num_classes`.
+pub fn diarization(spec: &DiarizationSpec) -> SegmentSet {
+    let mut rng = Rng::seed_from(spec.seed ^ 0x4449_4152);
+    let speakers = 2 + rng.range(0, spec.max_speakers.max(3) - 1);
+    let centroids = class_centroids(speakers, spec.dim, &mut rng);
+    let counts = cardinalities(spec.utterances, speakers, 1.1, &mut rng);
+
+    let mut segments = Vec::with_capacity(spec.utterances);
+    for (class_id, (centroid, &count)) in centroids.iter().zip(&counts).enumerate() {
+        // A per-speaker session offset: this speaker's utterances share
+        // channel/prosody drift on top of the identity embedding.
+        let session: Vec<f64> = (0..spec.dim).map(|_| rng.normal() * SESSION_STD).collect();
+        for _ in 0..count {
+            let id = segments.len();
+            let feats: Vec<f32> = centroid
+                .iter()
+                .zip(&session)
+                .map(|(&c, &s)| (c + s + rng.normal() * 0.35) as f32)
+                .collect();
+            segments.push(Segment {
+                id,
+                class_id,
+                len: 1,
+                dim: spec.dim,
+                feats,
+            });
+        }
+    }
+    rng.shuffle(&mut segments);
+    for (i, s) in segments.iter_mut().enumerate() {
+        s.id = i;
+    }
+
+    let set = SegmentSet {
+        name: format!("diarization_{}spk", speakers),
+        dim: spec.dim,
+        segments,
+        num_classes: speakers,
+    };
+    debug_assert!(set.validate().is_ok());
+    set
+}
+
+/// Class centroids spread over the embedding space.
+fn class_centroids(classes: usize, dim: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..classes)
+        .map(|_| (0..dim).map(|_| rng.normal() * CENTROID_SPREAD).collect())
+        .collect()
+}
+
+/// Zipf-distributed class cardinalities summing exactly to `total`,
+/// floored at one member per class.
+fn cardinalities(total: usize, classes: usize, skew: f64, rng: &mut Rng) -> Vec<usize> {
+    let mut counts = vec![1usize; classes];
+    let mut remaining = total.saturating_sub(classes);
+    if skew <= 1e-9 {
+        let per = remaining / classes;
+        remaining -= per * classes;
+        // After the even share, fewer than `classes` singles remain.
+        for (i, cnt) in counts.iter_mut().enumerate() {
+            *cnt += per + usize::from(i < remaining);
+        }
+    } else {
+        let zipf = Zipf::new(classes, skew);
+        for _ in 0..remaining {
+            // sample() ranks are 1-based in [1, classes].
+            if let Some(cnt) = counts.get_mut(zipf.sample(rng) - 1) {
+                *cnt += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// One embedding: centroid plus isotropic Gaussian noise, as a
+/// single-frame segment.
+fn sample_embedding(
+    id: usize,
+    class_id: usize,
+    centroid: &[f64],
+    spread: f64,
+    rng: &mut Rng,
+) -> Segment {
+    let feats: Vec<f32> = centroid
+        .iter()
+        .map(|&c| (c + rng.normal() * spread) as f32)
+        .collect();
+    Segment {
+        id,
+        class_id,
+        len: 1,
+        dim: centroid.len(),
+        feats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_composition() {
+        let spec = EmbeddingSpec::tiny(120, 6, 7);
+        let set = generate_embeddings(&spec);
+        assert_eq!(set.len(), 120);
+        assert_eq!(set.num_classes, 6);
+        set.validate().unwrap();
+        let mut seen = vec![0usize; 6];
+        for s in &set.segments {
+            assert_eq!(s.len, 1);
+            assert_eq!(s.feats.len(), spec.dim);
+            seen[s.class_id] += 1;
+        }
+        assert!(seen.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_embeddings(&EmbeddingSpec::tiny(80, 5, 3));
+        let b = generate_embeddings(&EmbeddingSpec::tiny(80, 5, 3));
+        assert_eq!(a.segments[11].feats, b.segments[11].feats);
+        assert_eq!(a.labels(), b.labels());
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = generate_embeddings(&EmbeddingSpec::tiny(80, 5, 3));
+        let b = generate_embeddings(&EmbeddingSpec::tiny(80, 5, 4));
+        assert_ne!(a.segments[0].feats, b.segments[0].feats);
+    }
+
+    #[test]
+    fn within_class_closer_than_between() {
+        // The property vector-metric clustering depends on: mean
+        // within-class Euclidean distance < mean between-class.
+        let set = generate_embeddings(&EmbeddingSpec::tiny(60, 5, 9));
+        let dist = |a: &Segment, b: &Segment| -> f64 {
+            a.feats
+                .iter()
+                .zip(&b.feats)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut within = (0.0f64, 0usize);
+        let mut between = (0.0f64, 0usize);
+        for i in 0..set.len() {
+            for j in i + 1..set.len() {
+                let d = dist(&set.segments[i], &set.segments[j]);
+                if set.segments[i].class_id == set.segments[j].class_id {
+                    within.0 += d;
+                    within.1 += 1;
+                } else {
+                    between.0 += d;
+                    between.1 += 1;
+                }
+            }
+        }
+        let w = within.0 / within.1 as f64;
+        let b = between.0 / between.1 as f64;
+        assert!(w * 1.5 < b, "within {w:.3} not clearly below between {b:.3}");
+    }
+
+    #[test]
+    fn diarization_draws_unknown_speaker_count() {
+        let set = diarization(&DiarizationSpec::tiny(100, 8, 21));
+        set.validate().unwrap();
+        assert_eq!(set.len(), 100);
+        assert!(set.num_classes >= 2 && set.num_classes <= 8);
+        // Different seeds can land on different true counts.
+        let distinct: std::collections::HashSet<usize> = (0..16)
+            .map(|s| diarization(&DiarizationSpec::tiny(20, 8, s)).num_classes)
+            .collect();
+        assert!(distinct.len() > 1, "speaker count never varied");
+    }
+
+    #[test]
+    fn diarization_deterministic_and_skewed() {
+        let a = diarization(&DiarizationSpec::tiny(90, 6, 5));
+        let b = diarization(&DiarizationSpec::tiny(90, 6, 5));
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.segments[4].feats, b.segments[4].feats);
+        // Zipf speaking time: the dominant speaker holds a plurality.
+        let mut counts = vec![0usize; a.num_classes];
+        for s in &a.segments {
+            counts[s.class_id] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > min, "speaking time unexpectedly uniform");
+    }
+
+    #[test]
+    fn ids_are_dense_after_shuffle() {
+        let set = generate_embeddings(&EmbeddingSpec::tiny(64, 4, 2));
+        for (i, s) in set.segments.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        let first: Vec<usize> = set.segments[..16].iter().map(|s| s.class_id).collect();
+        assert!(first.iter().any(|&c| c != first[0]));
+    }
+}

@@ -17,7 +17,13 @@
 //! summaries; [`shards`] presents a corpus as a bounded stream of id
 //! batches for the streaming driver.
 
+//! [`embedding`] generates fixed-dimensional embedding corpora
+//! (single-frame segments) for the cosine/Euclidean vector metrics,
+//! including a diarization-style scenario with an unknown speaker
+//! count.
+
 pub mod dataset;
+pub mod embedding;
 pub mod generator;
 pub mod phones;
 pub mod shards;
@@ -25,6 +31,7 @@ pub mod stats;
 pub mod waveform;
 
 pub use dataset::{Segment, SegmentSet};
+pub use embedding::{diarization, generate_embeddings, DiarizationSpec, EmbeddingSpec};
 pub use generator::generate;
 pub use shards::Shards;
 pub use stats::CompositionStats;

@@ -27,7 +27,7 @@
 //! column and the DP is causal in `j`, so they can never influence the
 //! cell the lane's result is read from.
 
-use super::{DtwBackend, NativeBackend};
+use super::{PairwiseBackend, NativeBackend};
 use crate::corpus::Segment;
 
 /// Pairs aligned per kernel call.  Eight f32 lanes fill one AVX2 vector
@@ -216,7 +216,7 @@ fn dtw_lanes(
     }
 }
 
-impl DtwBackend for BlockedBackend {
+impl PairwiseBackend for BlockedBackend {
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
         if self.band.is_some() {
             // Banded path: delegate to NativeBackend outright so the

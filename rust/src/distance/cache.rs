@@ -6,9 +6,9 @@
 //! yet the driver used to recompute every condensed matrix from
 //! scratch.  [`PairCache`] closes that gap: a sharded, capacity-bounded
 //! map from `(kernel tag, min_id, max_id)` triples to their DTW
-//! distance, sitting *above* the [`super::DtwBackend`] trait so both
+//! distance, sitting *above* the [`super::PairwiseBackend`] trait so both
 //! the native DP and the XLA tile executor benefit.  The kernel tag
-//! ([`super::DtwBackend::kernel_tag`]) folds the distance semantics —
+//! ([`super::PairwiseBackend::kernel_tag`]) folds the distance semantics —
 //! full-band vs each Sakoe-Chiba radius, which can differ by the
 //! `INFEASIBLE` sentinel alone — into the key, so backends with
 //! different kernels can share one physical cache without serving each

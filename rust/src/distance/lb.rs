@@ -1,7 +1,16 @@
 //! The cascading lower-bound pruning layer: [`CascadeBackend`] wraps
-//! any exact [`DtwBackend`] and answers threshold-carrying pair queries
-//! (`pairwise_pruned`) through a cascade — cheap LB_Keogh-style
-//! envelope bound first, exact DP only when the bound cannot decide.
+//! any exact [`PairwiseBackend`] and answers threshold-carrying pair queries
+//! (`pairwise_pruned`) through a cascade — a cheap per-pair lower
+//! bound first, the exact kernel only when the bound cannot decide.
+//!
+//! The bound itself is metric-specific, selected by the inner
+//! backend's [`super::BoundFamily`]: DTW kernels get the LB_Keogh-style
+//! envelope bound, Euclidean vector backends get the reverse-triangle
+//! norm bound |‖x‖−‖y‖| (with an absolute rounding slack subtracted so
+//! the computed bound stays admissible against the computed distance),
+//! and backends that advertise no bound (cosine) degrade to the exact
+//! path: `supports_pruning` reports `false` and every threshold-aware
+//! call site stays on the historical exact code, bit for bit.
 //!
 //! # Decision-parity contract
 //!
@@ -34,7 +43,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::DtwBackend;
+use super::vector::l2_norm;
+use super::{BoundFamily, PairwiseBackend};
 use crate::corpus::{Segment, SegmentSet};
 use crate::dtw::envelope::{lb_one_sided, Envelope};
 use crate::telemetry::PruneStats;
@@ -52,12 +62,12 @@ pub enum CascadeMode {
 /// The wrapped exact backend: borrowed for driver-scoped runs, shared
 /// for streaming/serve sessions that must own their backend.
 enum InnerRef<'a> {
-    Borrowed(&'a dyn DtwBackend),
-    Shared(Arc<dyn DtwBackend + Send + Sync>),
+    Borrowed(&'a dyn PairwiseBackend),
+    Shared(Arc<dyn PairwiseBackend + Send + Sync>),
 }
 
 impl InnerRef<'_> {
-    fn get(&self) -> &dyn DtwBackend {
+    fn get(&self) -> &dyn PairwiseBackend {
         match self {
             InnerRef::Borrowed(b) => *b,
             InnerRef::Shared(s) => s.as_ref(),
@@ -65,13 +75,29 @@ impl InnerRef<'_> {
     }
 }
 
-/// Lower-bound cascade over an exact backend, with per-segment
-/// envelopes precomputed once for the whole corpus at construction.
+/// Precomputed per-segment bound tables, one variant per
+/// [`BoundFamily`] (all indexed by global segment id).
+enum Bounds {
+    /// LB_Keogh-style min/max envelopes over DTW frames.
+    Envelopes { envelopes: Vec<Envelope>, dim: usize },
+    /// Euclidean vector norms plus per-segment rounding slack: the
+    /// real-arithmetic bound ‖x−y‖ ≥ |‖x‖−‖y‖| can be violated by an
+    /// ulp in f32 when x ≈ y, so each segment carries an absolute
+    /// slack of `‖s‖ · flat_len · ε · 2` that is subtracted from the
+    /// norm difference (clamped at zero) before it is used as a bound.
+    Norms { norms: Vec<f32>, slacks: Vec<f32> },
+    /// The inner backend advertises no admissible bound (cosine): the
+    /// cascade degrades to the exact path.
+    Unbounded,
+}
+
+/// Lower-bound cascade over an exact backend, with per-segment bound
+/// tables (envelopes or norms, per the inner backend's
+/// [`BoundFamily`]) precomputed once for the whole corpus at
+/// construction.
 pub struct CascadeBackend<'a> {
     inner: InnerRef<'a>,
-    /// Envelope per global segment id.
-    envelopes: Vec<Envelope>,
-    dim: usize,
+    bounds: Bounds,
     mode: CascadeMode,
     lb_pairs: AtomicU64,
     lb_pruned: AtomicU64,
@@ -80,14 +106,14 @@ pub struct CascadeBackend<'a> {
 
 impl<'a> CascadeBackend<'a> {
     /// Wrap a borrowed backend (driver episodes).
-    pub fn borrowed(inner: &'a dyn DtwBackend, set: &SegmentSet, mode: CascadeMode) -> Self {
+    pub fn borrowed(inner: &'a dyn PairwiseBackend, set: &SegmentSet, mode: CascadeMode) -> Self {
         Self::build(InnerRef::Borrowed(inner), set, mode)
     }
 
     /// Wrap a shared backend (streaming sessions and serve fleets,
     /// which need the wrapper to be `Send`).
     pub fn shared(
-        inner: Arc<dyn DtwBackend + Send + Sync>,
+        inner: Arc<dyn PairwiseBackend + Send + Sync>,
         set: &SegmentSet,
         mode: CascadeMode,
     ) -> CascadeBackend<'static> {
@@ -95,16 +121,35 @@ impl<'a> CascadeBackend<'a> {
     }
 
     fn build(inner: InnerRef<'_>, set: &SegmentSet, mode: CascadeMode) -> CascadeBackend<'_> {
-        let mut envelopes = vec![Envelope::of_frames(&[], set.dim); set.len()];
-        for seg in &set.segments {
-            if let Some(slot) = envelopes.get_mut(seg.id) {
-                *slot = Envelope::of_frames(&seg.feats, seg.dim);
+        let bounds = match inner.get().bound_family() {
+            BoundFamily::DtwEnvelope => {
+                let mut envelopes = vec![Envelope::of_frames(&[], set.dim); set.len()];
+                for seg in &set.segments {
+                    if let Some(slot) = envelopes.get_mut(seg.id) {
+                        *slot = Envelope::of_frames(&seg.feats, seg.dim);
+                    }
+                }
+                Bounds::Envelopes { envelopes, dim: set.dim }
             }
-        }
+            BoundFamily::VectorNorm => {
+                let mut norms = vec![0.0f32; set.len()];
+                let mut slacks = vec![0.0f32; set.len()];
+                for seg in &set.segments {
+                    let n = l2_norm(&seg.feats);
+                    if let Some(slot) = norms.get_mut(seg.id) {
+                        *slot = n;
+                    }
+                    if let Some(slot) = slacks.get_mut(seg.id) {
+                        *slot = n * seg.feats.len() as f32 * f32::EPSILON * 2.0;
+                    }
+                }
+                Bounds::Norms { norms, slacks }
+            }
+            BoundFamily::None => Bounds::Unbounded,
+        };
         CascadeBackend {
             inner,
-            envelopes,
-            dim: set.dim,
+            bounds,
             mode,
             lb_pairs: AtomicU64::new(0),
             lb_pruned: AtomicU64::new(0),
@@ -112,32 +157,53 @@ impl<'a> CascadeBackend<'a> {
         }
     }
 
-    fn envelope_of(&self, seg: &Segment) -> anyhow::Result<&Envelope> {
-        self.envelopes.get(seg.id).ok_or_else(|| {
+    fn table_entry<'t, T>(table: &'t [T], seg: &Segment) -> anyhow::Result<&'t T> {
+        table.get(seg.id).ok_or_else(|| {
             anyhow::anyhow!(
-                "segment id {} outside the cascade's envelope table ({} segments)",
+                "segment id {} outside the cascade's bound table ({} segments)",
                 seg.id,
-                self.envelopes.len()
+                table.len()
             )
         })
     }
 
-    /// Normalised symmetric envelope bound for one pair: the larger of
-    /// the two one-sided sums over the shared `(lx + ly)` denominator,
-    /// never above the exact normalised DTW distance (bitwise).
+    /// Admissible lower bound for one pair, per the active
+    /// [`BoundFamily`].
+    ///
+    /// * Envelopes: the larger of the two one-sided LB_Keogh sums over
+    ///   the shared `(lx + ly)` denominator, never above the exact
+    ///   normalised DTW distance (bitwise).
+    /// * Norms: `max(0, |‖x‖−‖y‖| − slack_x − slack_y)` — the
+    ///   reverse-triangle bound with the rounding slack of
+    ///   [`Bounds::Norms`], fuzz-pinned against the exact kernel in
+    ///   `rust/tests/metric_parity.rs`.
+    /// * Unbounded: 0, trivially admissible for a non-negative
+    ///   distance (the cascade reports `supports_pruning() == false`,
+    ///   so threshold-aware call sites never reach this).
     pub fn lb_pair(&self, x: &Segment, y: &Segment) -> anyhow::Result<f32> {
-        anyhow::ensure!(
-            x.dim == self.dim && y.dim == self.dim,
-            "segment dim {}/{} does not match the cascade's corpus dim {}",
-            x.dim,
-            y.dim,
-            self.dim
-        );
-        let env_y = self.envelope_of(y)?;
-        let env_x = self.envelope_of(x)?;
-        let fwd = lb_one_sided(&x.feats, self.dim, env_y);
-        let bwd = lb_one_sided(&y.feats, self.dim, env_x);
-        Ok(fwd.max(bwd) / (x.len + y.len) as f32)
+        match &self.bounds {
+            Bounds::Envelopes { envelopes, dim } => {
+                anyhow::ensure!(
+                    x.dim == *dim && y.dim == *dim,
+                    "segment dim {}/{} does not match the cascade's corpus dim {}",
+                    x.dim,
+                    y.dim,
+                    dim
+                );
+                let env_y = Self::table_entry(envelopes, y)?;
+                let env_x = Self::table_entry(envelopes, x)?;
+                let fwd = lb_one_sided(&x.feats, *dim, env_y);
+                let bwd = lb_one_sided(&y.feats, *dim, env_x);
+                Ok(fwd.max(bwd) / (x.len + y.len) as f32)
+            }
+            Bounds::Norms { norms, slacks } => {
+                let nx = *Self::table_entry(norms, x)?;
+                let ny = *Self::table_entry(norms, y)?;
+                let slack = *Self::table_entry(slacks, x)? + *Self::table_entry(slacks, y)?;
+                Ok(((nx - ny).abs() - slack).max(0.0))
+            }
+            Bounds::Unbounded => Ok(0.0),
+        }
     }
 
     /// Counter snapshot (cumulative since construction); the drivers
@@ -151,7 +217,7 @@ impl<'a> CascadeBackend<'a> {
     }
 }
 
-impl DtwBackend for CascadeBackend<'_> {
+impl PairwiseBackend for CascadeBackend<'_> {
     /// Threshold-free queries are exact: the cascade only engages where
     /// a caller can state what "too far" means.
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
@@ -227,7 +293,10 @@ impl DtwBackend for CascadeBackend<'_> {
     }
 
     fn supports_pruning(&self) -> bool {
-        true
+        // Without an admissible bound the cascade is a pass-through:
+        // reporting `false` keeps every threshold-aware call site on
+        // the exact code path, bit for bit.
+        !matches!(self.bounds, Bounds::Unbounded)
     }
 
     fn prune_stats(&self) -> Option<PruneStats> {
@@ -240,6 +309,14 @@ impl DtwBackend for CascadeBackend<'_> {
             "blocked" => "blocked+lb",
             _ => "cascade+lb",
         }
+    }
+
+    fn metric_name(&self) -> &'static str {
+        self.inner.get().metric_name()
+    }
+
+    fn bound_family(&self) -> BoundFamily {
+        self.inner.get().bound_family()
     }
 
     /// Exact values cached by pruned and unpruned runs interchange:

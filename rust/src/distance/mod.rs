@@ -1,24 +1,31 @@
-//! Distance-matrix construction: condensed storage + pluggable DTW
-//! backends + the parallel builder.
+//! Distance-matrix construction: condensed storage + pluggable
+//! pairwise backends + the parallel builder.
 //!
 //! The MAHC space constraint the paper is about lives here: a subset of
 //! n segments needs an n(n−1)/2-entry condensed matrix ([`Condensed`]),
 //! so β (the subset occupancy threshold) directly bounds peak memory.
 //! [`build_condensed`] fills one by tiling pair blocks over a
-//! [`DtwBackend`] — the native scalar Rust DP ([`NativeBackend`]), the
-//! lane-parallel multi-pair kernel ([`BlockedBackend`], bitwise-equal
-//! results, see `blocked`), or the AOT XLA executable
-//! (`runtime::XlaDtwBackend`) — in parallel.
+//! [`PairwiseBackend`].  The *metric* is a pluggable axis: DTW over
+//! variable-length segments — the native scalar Rust DP
+//! ([`NativeBackend`]), the lane-parallel multi-pair kernel
+//! ([`BlockedBackend`], bitwise-equal results, see `blocked`), or the
+//! AOT XLA executable (`runtime::XlaDtwBackend`) — sits beside
+//! cosine/Euclidean over fixed-dimension embedding vectors
+//! ([`VectorBackend`], see `vector`) behind the same trait, so every
+//! consumer (cached builders, the pruning cascade, stage-0 probing,
+//! linkage, both drivers, serve mode) is metric-generic.
 
 pub mod blocked;
 pub mod cache;
 pub mod condensed;
 pub mod lb;
+pub mod vector;
 
 pub use blocked::BlockedBackend;
 pub use cache::{IdNamespaceError, PairCache};
 pub use condensed::Condensed;
 pub use lb::{CascadeBackend, CascadeMode};
+pub use vector::{VectorBackend, VectorMetric};
 
 use crate::corpus::Segment;
 use crate::telemetry::PruneStats;
@@ -72,15 +79,129 @@ impl BackendKind {
     }
 }
 
-/// A pairwise-DTW engine.  Implementations must be `Sync`: the builder
-/// calls them from worker threads.
-pub trait DtwBackend: Sync {
+/// Which distance metric a backend computes over segment pairs.
+///
+/// Orthogonal to [`BackendKind`] (the kernel *implementation*:
+/// native/blocked/xla): `--backend blocked --metric cosine` selects the
+/// 8-lane cosine kernel, `--backend native --metric dtw` the scalar DP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Dynamic time warping over variable-length frame sequences (the
+    /// historical metric; path-normalized as in the paper).
+    Dtw,
+    /// Cosine distance (1 − cosine similarity) over fixed-dimension
+    /// vectors — the diarization-embedding workload.
+    Cosine,
+    /// Euclidean (L2) distance over fixed-dimension vectors.
+    Euclidean,
+}
+
+impl MetricKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "dtw" => Ok(MetricKind::Dtw),
+            "cosine" => Ok(MetricKind::Cosine),
+            "euclidean" | "l2" => Ok(MetricKind::Euclidean),
+            other => anyhow::bail!("unknown metric '{other}' (dtw|cosine|euclidean)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Dtw => "dtw",
+            MetricKind::Cosine => "cosine",
+            MetricKind::Euclidean => "euclidean",
+        }
+    }
+
+    /// Whether an admissible lower bound exists for the pruning
+    /// cascade: DTW has the LB_Keogh-style envelope bound, Euclidean
+    /// the reverse-triangle norm bound; cosine has none, so `--prune`
+    /// is rejected at config validation (see
+    /// `config::MetricConfigError`).
+    pub fn has_lower_bound(&self) -> bool {
+        !matches!(self, MetricKind::Cosine)
+    }
+}
+
+/// Which family of admissible lower bounds [`lb::CascadeBackend`] can
+/// precompute for a backend, advertised via
+/// [`PairwiseBackend::bound_family`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundFamily {
+    /// LB_Keogh-style per-segment min/max envelopes over DTW frames
+    /// (the trait default: every pre-existing backend is a DTW
+    /// kernel).
+    DtwEnvelope,
+    /// Reverse-triangle-inequality bound from per-segment vector norms
+    /// (Euclidean over fixed-dimension vectors): ‖x−y‖ ≥ |‖x‖−‖y‖|,
+    /// with an absolute rounding-slack subtracted so the *computed*
+    /// bound stays admissible against the *computed* distance.
+    VectorNorm,
+    /// No admissible bound is known (cosine).  The cascade refuses to
+    /// wrap such a backend; config validation rejects `--prune` for it
+    /// with a typed error.
+    None,
+}
+
+/// A pairwise-distance engine — the metric-generic trait every
+/// consumer (condensed/cross builders, [`PairCache`], the pruning
+/// cascade, stage-0 leader probing, NN-chain linkage, both drivers,
+/// serve mode) operates through.  The DTW backends are one
+/// instantiation; [`VectorBackend`] adds cosine/Euclidean over
+/// fixed-dimension vectors.
+///
+/// # Contract
+///
+/// * **Bitwise determinism.**  For a given segment pair, `pairwise`
+///   must return the same f32 bit pattern on every call, regardless of
+///   batch shape, row grouping, thread count, or which other pairs
+///   share the call.  The whole pin suite (backend parity, cache
+///   determinism, streaming-vs-batch) rests on this: results are
+///   cached by segment-id pair and replayed across iterations.
+/// * **Symmetry.**  `d(x, y)` must equal `d(y, x)` bit for bit — the
+///   shared [`PairCache`] stores one value per unordered id pair.
+/// * **`pairwise_pruned` admissibility.**  When a pair is bounded out
+///   (flag `false`), the reported value must be a true lower bound on
+///   the exact distance *and* strictly above the carried threshold, so
+///   every threshold comparison decides identically to the exact path.
+/// * **Kernel-tag discipline.**  Two backends may share a
+///   [`kernel_tag`](PairwiseBackend::kernel_tag) only if they are
+///   bitwise-interchangeable for every pair (e.g. scalar and blocked
+///   variants of the same metric).  Any change that can flip a single
+///   bit — a different band radius, a different metric — must change
+///   the tag, or the cache would alias stale values across kernels.
+///
+/// Implementations must be `Sync`: the builder calls them from worker
+/// threads.
+pub trait PairwiseBackend: Sync {
     /// Distances between all (x, y) segment pairs: returns a
     /// row-major `xs.len() × ys.len()` buffer.
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>>;
 
-    /// Human-readable name for telemetry.
+    /// Human-readable kernel name for telemetry ("native", "blocked",
+    /// "xla", "native+lb", …).  Identifies the *implementation*, not
+    /// the metric — see
+    /// [`metric_name`](PairwiseBackend::metric_name).
     fn name(&self) -> &'static str;
+
+    /// Name of the metric family this backend computes ("dtw",
+    /// "cosine", "euclidean") — carried into the `metric` telemetry
+    /// field.  Defaults to "dtw": every pre-existing backend is a DTW
+    /// kernel.
+    fn metric_name(&self) -> &'static str {
+        "dtw"
+    }
+
+    /// Which lower-bound family the pruning cascade should precompute
+    /// when wrapping this backend.  Defaults to
+    /// [`BoundFamily::DtwEnvelope`] (the historical behaviour for
+    /// every DTW kernel); vector metrics override with
+    /// [`BoundFamily::VectorNorm`] (Euclidean) or [`BoundFamily::None`]
+    /// (cosine).
+    fn bound_family(&self) -> BoundFamily {
+        BoundFamily::DtwEnvelope
+    }
 
     /// Threshold-carrying pair query for consumers that only compare
     /// distances against `threshold`: returns the row-major value
@@ -110,7 +231,7 @@ pub trait DtwBackend: Sync {
     }
 
     /// Cascade counter snapshot, if this backend prunes.  Lets drivers
-    /// read per-iteration deltas through `&dyn DtwBackend` without
+    /// read per-iteration deltas through `&dyn PairwiseBackend` without
     /// widening any signatures.
     fn prune_stats(&self) -> Option<PruneStats> {
         None
@@ -136,6 +257,11 @@ pub trait DtwBackend: Sync {
     }
 }
 
+/// Deprecated pre-metric-generic name for [`PairwiseBackend`], kept
+/// one PR as a re-export so downstream call sites keep compiling.
+/// Migrate to `PairwiseBackend`; this alias will be removed.
+pub use self::PairwiseBackend as DtwBackend;
+
 /// Native rolling-row DP backend.
 pub struct NativeBackend {
     /// Optional Sakoe-Chiba band radius.
@@ -158,7 +284,7 @@ impl Default for NativeBackend {
     }
 }
 
-impl DtwBackend for NativeBackend {
+impl PairwiseBackend for NativeBackend {
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
         let mut out = Vec::with_capacity(xs.len() * ys.len());
         match self.band {
@@ -243,7 +369,7 @@ impl DtwBackend for NativeBackend {
 /// entries, rows are dealt in strides so the load per worker is even.
 pub fn build_condensed(
     segments: &[&Segment],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
 ) -> anyhow::Result<Condensed> {
     let n = segments.len();
@@ -298,7 +424,7 @@ pub fn build_condensed(
 /// uncached build regardless of cache state.
 pub fn build_condensed_cached(
     segments: &[&Segment],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<Condensed> {
@@ -402,7 +528,7 @@ pub fn build_condensed_cached(
 pub fn build_cross(
     xs: &[&Segment],
     ys: &[&Segment],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
 ) -> anyhow::Result<Vec<f32>> {
     let block = backend.preferred_rows().max(1);
@@ -435,7 +561,7 @@ pub fn build_cross(
 pub fn build_cross_cached(
     xs: &[&Segment],
     ys: &[&Segment],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<Vec<f32>> {
@@ -529,7 +655,7 @@ pub fn build_cross_cached(
 }
 
 /// [`build_cross_cached`] with a decision threshold: when the backend
-/// prunes ([`DtwBackend::supports_pruning`]) and a threshold is given,
+/// prunes ([`PairwiseBackend::supports_pruning`]) and a threshold is given,
 /// pairs the cascade bounds out above `threshold` come back as lower
 /// bounds (still above `threshold`) instead of exact distances, and
 /// only exact values are published to the cache.
@@ -542,7 +668,7 @@ pub fn build_cross_cached(
 pub fn build_cross_cached_pruned(
     xs: &[&Segment],
     ys: &[&Segment],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     cache: Option<&PairCache>,
     threshold: Option<f32>,

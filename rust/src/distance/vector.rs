@@ -1,0 +1,433 @@
+//! Fixed-dimension vector metrics: cosine and Euclidean backends.
+//!
+//! The diarization-embedding workload (SNIPPETS.md exemplars) clusters
+//! fixed-dimension speaker embeddings instead of variable-length frame
+//! sequences.  [`VectorBackend`] serves it behind the same
+//! [`PairwiseBackend`] trait as the DTW kernels: a segment's flat
+//! `feats` buffer (`len · dim` values) is treated as one vector, so an
+//! embedding corpus is simply a [`Segment`] set with `len == 1`.  Every
+//! consumer — cached builders, cascade, drivers, serve — works
+//! unchanged at a fraction of DTW's per-pair cost.
+//!
+//! **Backend-invariance contract** (mirrors `blocked.rs`, verified by
+//! `rust/tests/metric_parity.rs`): the scalar and 8-lane blocked
+//! variants execute the *same* per-pair f32 operation sequence — the
+//! same ascending-element accumulation into an independent per-pair
+//! chain, the same shared finalisation — so their results are bitwise
+//! identical and the two variants share one cache
+//! [`kernel_tag`](PairwiseBackend::kernel_tag) per metric.  Vector tags
+//! live in a reserved namespace (`0x1000_0000` cosine, `0x2000_0000`
+//! Euclidean) that can never collide with the DTW convention
+//! (`0` full band, `1 + b` banded).
+
+use super::{BoundFamily, PairwiseBackend};
+use crate::corpus::Segment;
+
+/// Lanes per blocked kernel call — same width as the DTW lane kernel
+/// ([`super::blocked::LANES`]) so one vector register holds a chunk.
+pub const LANES: usize = super::blocked::LANES;
+
+/// Cache kernel tag for the cosine metric (both scalar and blocked:
+/// bitwise-equal results may share a tag).
+pub const COSINE_TAG: u32 = 0x1000_0000;
+
+/// Cache kernel tag for the Euclidean metric.
+pub const EUCLIDEAN_TAG: u32 = 0x2000_0000;
+
+/// Which vector metric a [`VectorBackend`] computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VectorMetric {
+    /// 1 − cos(x, y).  Zero-norm convention: two zero vectors are
+    /// identical (distance 0); a zero vector against a non-zero one is
+    /// maximally dissimilar (distance 1).
+    Cosine,
+    /// ‖x − y‖₂.
+    Euclidean,
+}
+
+impl VectorMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VectorMetric::Cosine => "cosine",
+            VectorMetric::Euclidean => "euclidean",
+        }
+    }
+}
+
+/// Cosine/Euclidean distance backend over fixed-dimension vectors.
+///
+/// `blocked == false` is the scalar reference path; `blocked == true`
+/// evaluates [`LANES`] pairs per inner loop with the lane layout of
+/// `blocked.rs`, bitwise-pinned to the scalar path.  Both report the
+/// kernel-implementation axis through
+/// [`name`](PairwiseBackend::name) ("native"/"blocked") and the metric
+/// axis through [`metric_name`](PairwiseBackend::metric_name).
+pub struct VectorBackend {
+    pub metric: VectorMetric,
+    pub blocked: bool,
+}
+
+impl VectorBackend {
+    /// Scalar reference variant.
+    pub fn native(metric: VectorMetric) -> Self {
+        VectorBackend { metric, blocked: false }
+    }
+
+    /// 8-lane blocked variant (bitwise-equal to [`Self::native`]).
+    pub fn blocked(metric: VectorMetric) -> Self {
+        VectorBackend { metric, blocked: true }
+    }
+}
+
+/// Ascending-order squared-norm accumulation — the one reduction order
+/// every kernel and the cascade's norm bound share, so norms computed
+/// anywhere in the engine are bitwise interchangeable.
+pub fn squared_norm(v: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in v {
+        acc += x * x;
+    }
+    acc
+}
+
+/// ‖v‖₂ with the shared accumulation order.
+pub fn l2_norm(v: &[f32]) -> f32 {
+    squared_norm(v).sqrt()
+}
+
+/// Shared cosine finalisation: both the scalar and blocked paths feed
+/// their accumulators through this exact expression, so finalisation
+/// can never diverge between variants.
+#[inline]
+fn finish_cosine(dot: f32, nx2: f32, ny2: f32) -> f32 {
+    let nx = nx2.sqrt();
+    let ny = ny2.sqrt();
+    if nx == 0.0 && ny == 0.0 {
+        0.0
+    } else if nx == 0.0 || ny == 0.0 {
+        1.0
+    } else {
+        1.0 - dot / (nx * ny)
+    }
+}
+
+/// Scalar cosine distance: one ascending pass accumulating dot and both
+/// squared norms in independent chains.
+fn cosine_pair(x: &[f32], y: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    let mut nx2 = 0.0f32;
+    let mut ny2 = 0.0f32;
+    for (&a, &b) in x.iter().zip(y) {
+        dot += a * b;
+        nx2 += a * a;
+        ny2 += b * b;
+    }
+    finish_cosine(dot, nx2, ny2)
+}
+
+/// Scalar Euclidean distance: ascending squared-difference fold, one
+/// final sqrt.
+fn euclidean_pair(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&a, &b) in x.iter().zip(y) {
+        let t = a - b;
+        acc += t * t;
+    }
+    acc.sqrt()
+}
+
+/// Up to [`LANES`] Y vectors packed `[d][lane]`-interleaved (row `d` is
+/// `data[d·LANES .. (d+1)·LANES]`), zero beyond the real lane count.
+/// Unlike the DTW [`super::blocked`] grouping there is no length
+/// sorting — every vector shares one flat length — so lanes keep the
+/// caller's column order and outputs land in consecutive slots.
+struct VecLanes {
+    lanes: usize,
+    data: Vec<f32>,
+}
+
+impl VecLanes {
+    fn pack(ys: &[&Segment], flat: usize) -> VecLanes {
+        debug_assert!(!ys.is_empty() && ys.len() <= LANES);
+        let mut data = Vec::with_capacity(flat * LANES);
+        for d in 0..flat {
+            for y in ys {
+                data.push(y.feats.get(d).copied().unwrap_or(0.0));
+            }
+            for _ in ys.len()..LANES {
+                data.push(0.0);
+            }
+        }
+        VecLanes { lanes: ys.len(), data }
+    }
+}
+
+/// Cosine accumulators for one query against every lane: per lane the
+/// dot and squared-norm chains accumulate over ascending `d`, exactly
+/// the scalar [`cosine_pair`] order (padded lanes carry zeros and are
+/// never read).
+fn cosine_lanes(x: &[f32], g: &VecLanes) -> ([f32; LANES], [f32; LANES]) {
+    let mut dot = [0.0f32; LANES];
+    let mut ny2 = [0.0f32; LANES];
+    for (&xv, row) in x.iter().zip(g.data.chunks_exact(LANES)) {
+        for ((d, n2), &yv) in dot.iter_mut().zip(ny2.iter_mut()).zip(row) {
+            *d += xv * yv;
+            *n2 += yv * yv;
+        }
+    }
+    (dot, ny2)
+}
+
+/// Euclidean accumulators for one query against every lane — the scalar
+/// squared-difference fold widened by [`LANES`].
+fn euclidean_lanes(x: &[f32], g: &VecLanes) -> [f32; LANES] {
+    let mut acc2 = [0.0f32; LANES];
+    for (&xv, row) in x.iter().zip(g.data.chunks_exact(LANES)) {
+        for (acc, &yv) in acc2.iter_mut().zip(row) {
+            let t = xv - yv;
+            *acc += t * t;
+        }
+    }
+    acc2
+}
+
+/// Every segment on both sides must carry the same non-empty flat
+/// feature length — vector metrics have no alignment step to absorb a
+/// mismatch.  Returns that shared length.
+fn check_flat(xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<usize> {
+    let flat = xs
+        .iter()
+        .chain(ys.iter())
+        .next()
+        .map(|s| s.feats.len())
+        .unwrap_or(0);
+    for s in xs.iter().chain(ys.iter()) {
+        if s.feats.len() != flat || flat == 0 {
+            anyhow::bail!(
+                "vector metric requires equal fixed-dimension segments: \
+                 segment {} has {} features, expected {} (non-zero)",
+                s.id,
+                s.feats.len(),
+                flat
+            );
+        }
+    }
+    Ok(flat)
+}
+
+impl PairwiseBackend for VectorBackend {
+    fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
+        let ny = ys.len();
+        let mut out = vec![0.0f32; xs.len() * ny];
+        if xs.is_empty() || ny == 0 {
+            return Ok(out);
+        }
+        let flat = check_flat(xs, ys)?;
+
+        if !self.blocked {
+            for (x, row) in xs.iter().zip(out.chunks_exact_mut(ny)) {
+                for (y, o) in ys.iter().zip(row.iter_mut()) {
+                    *o = match self.metric {
+                        VectorMetric::Cosine => cosine_pair(&x.feats, &y.feats),
+                        VectorMetric::Euclidean => euclidean_pair(&x.feats, &y.feats),
+                    };
+                }
+            }
+            return Ok(out);
+        }
+
+        // Blocked path: pack each LANES-wide column group once, reuse it
+        // across every X row (amortisation mirrors `blocked.rs`).  The
+        // groups keep the caller's column order, so each group's outputs
+        // are exactly one `chunks_mut(LANES)` slot of the row.
+        let groups: Vec<VecLanes> = ys.chunks(LANES).map(|c| VecLanes::pack(c, flat)).collect();
+        for (x, row) in xs.iter().zip(out.chunks_exact_mut(ny)) {
+            match self.metric {
+                VectorMetric::Cosine => {
+                    // The query's squared norm is one ascending chain —
+                    // bitwise the same value the scalar path accumulates
+                    // per pair — so it is hoisted out of the group loop.
+                    let nx2 = squared_norm(&x.feats);
+                    for (g, out_chunk) in groups.iter().zip(row.chunks_mut(LANES)) {
+                        let (dot, ny2) = cosine_lanes(&x.feats, g);
+                        debug_assert_eq!(g.lanes, out_chunk.len());
+                        for ((o, &d), &n2) in
+                            out_chunk.iter_mut().zip(dot.iter()).zip(ny2.iter())
+                        {
+                            *o = finish_cosine(d, nx2, n2);
+                        }
+                    }
+                }
+                VectorMetric::Euclidean => {
+                    for (g, out_chunk) in groups.iter().zip(row.chunks_mut(LANES)) {
+                        let acc2 = euclidean_lanes(&x.feats, g);
+                        debug_assert_eq!(g.lanes, out_chunk.len());
+                        for (o, &a2) in out_chunk.iter_mut().zip(acc2.iter()) {
+                            *o = a2.sqrt();
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        // The `backend` telemetry axis stays the *implementation* name;
+        // the metric travels through `metric_name`.
+        if self.blocked {
+            "blocked"
+        } else {
+            "native"
+        }
+    }
+
+    fn metric_name(&self) -> &'static str {
+        self.metric.name()
+    }
+
+    fn bound_family(&self) -> BoundFamily {
+        match self.metric {
+            // Reverse-triangle norm bound (see `lb.rs`).
+            VectorMetric::Euclidean => BoundFamily::VectorNorm,
+            // No admissible cosine bound is known here; config
+            // validation rejects `--prune` for it.
+            VectorMetric::Cosine => BoundFamily::None,
+        }
+    }
+
+    fn kernel_tag(&self) -> u32 {
+        match self.metric {
+            VectorMetric::Cosine => COSINE_TAG,
+            VectorMetric::Euclidean => EUCLIDEAN_TAG,
+        }
+    }
+
+    fn preferred_rows(&self) -> usize {
+        // Must match the DTW backends: equal builder block shapes keep
+        // cache probe order invariant across every backend and metric.
+        16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(id: usize, feats: Vec<f32>) -> Segment {
+        let dim = feats.len();
+        Segment { id, class_id: 0, len: 1, dim, feats }
+    }
+
+    fn corpus(n: usize, dim: usize, seed: u64) -> Vec<Segment> {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        (0..n)
+            .map(|id| {
+                let feats = (0..dim).map(|_| rng.normal() as f32).collect();
+                seg(id, feats)
+            })
+            .collect()
+    }
+
+    fn assert_bitwise(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: pair {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_bitwise_equals_native_for_both_metrics() {
+        for metric in [VectorMetric::Cosine, VectorMetric::Euclidean] {
+            for (n, dim, seed) in [(3usize, 1usize, 1u64), (9, 8, 2), (21, 37, 3)] {
+                let segs = corpus(n, dim, seed);
+                let refs: Vec<&Segment> = segs.iter().collect();
+                let split = n / 2;
+                let native = VectorBackend::native(metric)
+                    .pairwise(&refs[..split], &refs[split..])
+                    .unwrap();
+                let blocked = VectorBackend::blocked(metric)
+                    .pairwise(&refs[..split], &refs[split..])
+                    .unwrap();
+                assert_bitwise(&native, &blocked, &format!("{:?} n={n} dim={dim}", metric));
+            }
+        }
+    }
+
+    #[test]
+    fn distances_are_symmetric_bitwise() {
+        for metric in [VectorMetric::Cosine, VectorMetric::Euclidean] {
+            let segs = corpus(8, 5, 7);
+            let refs: Vec<&Segment> = segs.iter().collect();
+            let b = VectorBackend::native(metric);
+            let fwd = b.pairwise(&refs[..4], &refs[4..]).unwrap();
+            let rev = b.pairwise(&refs[4..], &refs[..4]).unwrap();
+            for (i, f) in fwd.iter().enumerate() {
+                let (r, c) = (i / 4, i % 4);
+                let g = rev.iter().nth(c * 4 + r).unwrap();
+                assert_eq!(f.to_bits(), g.to_bits(), "pair ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn cosine_zero_norm_convention() {
+        let z = seg(0, vec![0.0, 0.0]);
+        let a = seg(1, vec![1.0, 0.0]);
+        let z2 = seg(2, vec![0.0, 0.0]);
+        let b = VectorBackend::native(VectorMetric::Cosine);
+        let d = b.pairwise(&[&z], &[&z2, &a]).unwrap();
+        assert_eq!(d, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn cosine_identical_vectors_are_near_zero_and_opposite_near_two() {
+        let a = seg(0, vec![0.6, 0.8]);
+        let na = seg(1, vec![-0.6, -0.8]);
+        let b = VectorBackend::native(VectorMetric::Cosine);
+        let d = b.pairwise(&[&a], &[&a, &na]).unwrap();
+        assert!(d.first().unwrap().abs() < 1e-6, "self distance {}", d.first().unwrap());
+        assert!((d.last().unwrap() - 2.0).abs() < 1e-6, "antipodal {}", d.last().unwrap());
+    }
+
+    #[test]
+    fn euclidean_matches_reference_formula() {
+        let a = seg(0, vec![1.0, 2.0, 2.0]);
+        let b = seg(1, vec![1.0, 0.0, 0.0]);
+        let d = VectorBackend::native(VectorMetric::Euclidean)
+            .pairwise(&[&a], &[&b])
+            .unwrap();
+        assert!((d.first().unwrap() - 8.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mismatched_flat_lengths_error() {
+        let a = seg(0, vec![1.0, 2.0]);
+        let b = seg(1, vec![1.0, 2.0, 3.0]);
+        for metric in [VectorMetric::Cosine, VectorMetric::Euclidean] {
+            let err = VectorBackend::native(metric).pairwise(&[&a], &[&b]);
+            assert!(err.is_err(), "{metric:?} must reject mismatched dims");
+        }
+    }
+
+    #[test]
+    fn tags_and_axes_are_disjoint_from_dtw() {
+        let cos = VectorBackend::blocked(VectorMetric::Cosine);
+        let euc = VectorBackend::native(VectorMetric::Euclidean);
+        assert_ne!(cos.kernel_tag(), euc.kernel_tag());
+        // DTW tags are 0 (full) or 1 + band; the vector namespace starts
+        // far above any plausible band radius.
+        assert!(cos.kernel_tag() >= 0x1000_0000);
+        assert_eq!(cos.name(), "blocked");
+        assert_eq!(euc.name(), "native");
+        assert_eq!(cos.metric_name(), "cosine");
+        assert_eq!(euc.metric_name(), "euclidean");
+        assert_eq!(cos.kernel_tag(), VectorBackend::native(VectorMetric::Cosine).kernel_tag());
+        assert_eq!(euc.bound_family(), BoundFamily::VectorNorm);
+        assert_eq!(cos.bound_family(), BoundFamily::None);
+        assert_eq!(
+            euc.preferred_rows(),
+            super::super::NativeBackend::new().preferred_rows()
+        );
+    }
+}

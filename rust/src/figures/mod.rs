@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use crate::baselines::full_ahc;
 use crate::config::{AlgoConfig, Convergence, DatasetSpec, NamedDataset};
 use crate::corpus::{generate, CompositionStats, SegmentSet};
-use crate::distance::{DtwBackend, NativeBackend};
+use crate::distance::{PairwiseBackend, NativeBackend};
 use crate::mahc::MahcDriver;
 use crate::util::csv::CsvWriter;
 
@@ -80,7 +80,7 @@ pub fn default_beta(n: usize, p0: usize) -> usize {
 fn run(
     set: &SegmentSet,
     cfg: AlgoConfig,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
 ) -> anyhow::Result<crate::mahc::MahcResult> {
     MahcDriver::new(set, cfg, backend)?.run()
 }

@@ -9,12 +9,12 @@
 
 use super::partition::partition_ids;
 use super::split::{merge_small, split_oversized};
-use super::stage::{run_stage1, SubsetOutcome};
+use super::stage::{run_stage1_with, SubsetOutcome};
 use crate::aggregate;
-use crate::ahc;
+use crate::ahc::{self, SelectionMethod};
 use crate::config::{AlgoConfig, Convergence, FinalK, PruneMode};
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed_cached, CascadeBackend, CascadeMode, DtwBackend, PairCache};
+use crate::distance::{build_condensed_cached, CascadeBackend, CascadeMode, PairwiseBackend, PairCache};
 use crate::metrics;
 use crate::telemetry::{
     pairs_rate, CacheStats, IterationRecord, PruneStats, RunHistory, Stopwatch,
@@ -38,14 +38,14 @@ pub struct MahcResult {
 pub struct MahcDriver<'a> {
     set: &'a SegmentSet,
     cfg: AlgoConfig,
-    backend: &'a dyn DtwBackend,
+    backend: &'a dyn PairwiseBackend,
 }
 
 impl<'a> MahcDriver<'a> {
     pub fn new(
         set: &'a SegmentSet,
         cfg: AlgoConfig,
-        backend: &'a dyn DtwBackend,
+        backend: &'a dyn PairwiseBackend,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         if set.is_empty() {
@@ -80,7 +80,7 @@ impl<'a> MahcDriver<'a> {
             };
             CascadeBackend::borrowed(self.backend, self.set, mode)
         });
-        let backend: &dyn DtwBackend = match &cascade {
+        let backend: &dyn PairwiseBackend = match &cascade {
             Some(c) => c,
             None => self.backend,
         };
@@ -217,6 +217,9 @@ pub(crate) struct EpisodeSummary {
     /// Pair distances produced over the episode (stage-1 condensed
     /// builds + medoid matrices; cache hits included).
     pub pairs: usize,
+    /// Mean silhouette of the final iteration's evaluation cut (0.0
+    /// under L-method selection, where the medoid matrix is dropped).
+    pub silhouette: f64,
 }
 
 /// Result of one episode of the iteration loop over an id set.
@@ -244,7 +247,7 @@ pub(crate) fn run_episode(
     set: &SegmentSet,
     ids: &[usize],
     cfg: &AlgoConfig,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     cache: Option<&PairCache>,
     rng: &mut Rng,
     mut history: Option<&mut RunHistory>,
@@ -291,14 +294,16 @@ pub(crate) fn run_episode(
         let occ_max = subsets.iter().map(|s| s.len()).max().unwrap_or(0);
         let occ_min = subsets.iter().map(|s| s.len()).min().unwrap_or(0);
 
-        // Steps 3-5: per-subset AHC, L-method, medoids.
-        let outcomes = run_stage1(
+        // Steps 3-5: per-subset AHC, model selection (L-method knee or
+        // silhouette), medoids.
+        let outcomes = run_stage1_with(
             set,
             &subsets,
             backend,
             cfg.threads,
             cfg.max_clusters_frac,
             cache,
+            cfg.selection,
         )?;
         let total_clusters: usize = outcomes.iter().map(|o| o.k).sum();
         first_stage_total.get_or_insert(total_clusters);
@@ -307,8 +312,17 @@ pub(crate) fn run_episode(
         // One medoid dendrogram per iteration serves three cuts:
         // the per-iteration evaluation clustering (steps 13-15 as
         // if concluding now — the F the paper plots), the final
-        // clustering, and the refine grouping (step 7).
-        let stage2 = MedoidStage::build(set, &outcomes, backend, cfg.threads, cache)?;
+        // clustering, and the refine grouping (step 7).  Under
+        // silhouette selection the medoid condensed matrix is retained
+        // so the evaluation cut can be scored for telemetry.
+        let stage2 = MedoidStage::build(
+            set,
+            &outcomes,
+            backend,
+            cfg.threads,
+            cache,
+            cfg.selection == SelectionMethod::Silhouette,
+        )?;
 
         // Per-iteration cache counter movement (zeros when off).
         let cache_iter = match cache {
@@ -341,6 +355,10 @@ pub(crate) fn run_episode(
         };
         let (labels_iter, k_iter) = stage2.cut_to_labels(&pos_of, n_active, k_target);
         let f = metrics::f_measure(&labels_iter, &truth_active);
+        // Silhouette of the evaluation cut over the medoid matrix — the
+        // model-selection quality signal; 0.0 under L-method selection
+        // (the matrix is not retained there).
+        let sil = stage2.silhouette_of_cut(k_target);
 
         // Step 6: convergence test (i > 2 in the paper's 1-based
         // numbering — we require at least 3 completed iterations).
@@ -367,6 +385,7 @@ pub(crate) fn run_episode(
         summary.min_occupancy = summary.min_occupancy.min(occ_min);
         summary.total_clusters = total_clusters;
         summary.peak_matrix_bytes = summary.peak_matrix_bytes.max(iter_bytes);
+        summary.silhouette = sil;
 
         if last {
             summary.max_occupancy_pre_split = summary.max_occupancy_pre_split.max(occ_max);
@@ -400,6 +419,8 @@ pub(crate) fn run_episode(
                     aggregate_epsilon: 0.0,
                     backend: backend.name().to_string(),
                     pairs_per_sec: pairs_rate(iter_pairs, wall),
+                    metric: backend.metric_name().to_string(),
+                    silhouette_score: sil,
                 });
             }
             return Ok(EpisodeOutcome {
@@ -463,6 +484,8 @@ pub(crate) fn run_episode(
                 aggregate_epsilon: 0.0,
                 backend: backend.name().to_string(),
                 pairs_per_sec: pairs_rate(iter_pairs, wall),
+                metric: backend.metric_name().to_string(),
+                silhouette_score: sil,
             });
         }
 
@@ -485,6 +508,9 @@ struct MedoidStage {
     /// medoid order used in the dendrogram.
     clusters_members: Vec<Vec<usize>>,
     dendro: crate::ahc::Dendrogram,
+    /// The medoid condensed matrix, retained only when the evaluation
+    /// cut must be silhouette-scored (silhouette selection).
+    cond: Option<crate::distance::Condensed>,
     /// Medoid-matrix footprint (memory telemetry).
     bytes: usize,
     s: usize,
@@ -494,9 +520,10 @@ impl MedoidStage {
     fn build(
         set: &SegmentSet,
         outcomes: &[SubsetOutcome],
-        backend: &dyn DtwBackend,
+        backend: &dyn PairwiseBackend,
         threads: usize,
         cache: Option<&PairCache>,
+        retain_cond: bool,
     ) -> anyhow::Result<MedoidStage> {
         let medoid_ids: Vec<usize> = outcomes
             .iter()
@@ -521,8 +548,21 @@ impl MedoidStage {
             medoid_ids,
             clusters_members,
             dendro,
+            cond: retain_cond.then_some(cond),
             bytes,
         })
+    }
+
+    /// Mean silhouette of the evaluation cut over the medoid matrix, or
+    /// 0.0 when the matrix was not retained (L-method selection).
+    fn silhouette_of_cut(&self, k_target: usize) -> f64 {
+        match &self.cond {
+            Some(cond) => {
+                let (labels, k) = self.cut_groups(k_target);
+                ahc::mean_silhouette(cond, &labels, k)
+            }
+            None => 0.0,
+        }
     }
 
     /// Cut the medoid dendrogram into `target` groups (clamped to S).
@@ -837,6 +877,37 @@ mod tests {
         }
         assert_eq!(res.history.assignment_pairs_total(), 39);
         assert_eq!(res.history.compression_ratio(), 1.0 / 40.0);
+    }
+
+    #[test]
+    fn silhouette_selection_stamps_score_telemetry() {
+        let base = AlgoConfig {
+            p0: 3,
+            convergence: Convergence::FixedIters(3),
+            ..Default::default()
+        };
+        let lmethod = run(base.clone(), 90, 6, 35);
+        for r in &lmethod.history.records {
+            assert_eq!(r.metric, "dtw", "DTW backends report the dtw metric");
+            assert_eq!(
+                r.silhouette_score, 0.0,
+                "no silhouette without silhouette selection"
+            );
+        }
+        let sil = run(
+            AlgoConfig {
+                selection: crate::ahc::SelectionMethod::Silhouette,
+                ..base
+            },
+            90,
+            6,
+            35,
+        );
+        assert!(sil.f_measure > 0.0 && sil.f_measure <= 1.0);
+        assert!(
+            sil.history.records.iter().all(|r| r.silhouette_score > 0.0),
+            "separable data scores a positive silhouette each iteration"
+        );
     }
 
     #[test]

@@ -49,7 +49,7 @@ use std::time::Duration;
 use super::streaming::{StreamResult, StreamSession};
 use crate::config::{ServeConfig, StreamConfig};
 use crate::corpus::SegmentSet;
-use crate::distance::{DtwBackend, IdNamespaceError, PairCache};
+use crate::distance::{PairwiseBackend, IdNamespaceError, PairCache};
 use crate::telemetry::{pairs_rate, FleetHistory, FleetRecord, Stopwatch};
 use crate::util::json::{self, Json};
 use crate::util::pool::{panic_message, WorkerPool};
@@ -235,7 +235,7 @@ fn sample(
 /// module docs for the scheduling model.
 pub struct ServeDriver {
     cfg: ServeConfig,
-    backend: Arc<dyn DtwBackend + Send + Sync>,
+    backend: Arc<dyn PairwiseBackend + Send + Sync>,
 }
 
 impl ServeDriver {
@@ -244,7 +244,7 @@ impl ServeDriver {
     /// XLA at compile time rather than at first dispatch.
     pub fn new(
         cfg: ServeConfig,
-        backend: Arc<dyn DtwBackend + Send + Sync>,
+        backend: Arc<dyn PairwiseBackend + Send + Sync>,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         Ok(ServeDriver { cfg, backend })
@@ -509,7 +509,7 @@ mod tests {
         }
     }
 
-    fn backend() -> Arc<dyn DtwBackend + Send + Sync> {
+    fn backend() -> Arc<dyn PairwiseBackend + Send + Sync> {
         Arc::new(NativeBackend::new())
     }
 

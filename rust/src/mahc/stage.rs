@@ -1,10 +1,10 @@
 //! Stage 1 of each MAHC iteration (Algorithm 1 steps 3-5): independent
-//! AHC over every subset, L-method model selection, medoid extraction —
-//! dispatched to the worker pool.
+//! AHC over every subset, model selection (L-method knee or
+//! silhouette), medoid extraction — dispatched to the worker pool.
 
-use crate::ahc;
+use crate::ahc::{self, SelectionMethod};
 use crate::corpus::{Segment, SegmentSet};
-use crate::distance::{build_condensed_cached, DtwBackend, PairCache};
+use crate::distance::{build_condensed_cached, PairwiseBackend, PairCache};
 use crate::util::pool::parallel_map;
 
 /// Result of clustering one subset.
@@ -33,21 +33,42 @@ impl SubsetOutcome {
     }
 }
 
-/// Run stage 1 over all subsets on up to `threads` workers.
-///
-/// `k_override` forces every subset to a fixed cut (only used by unit
-/// tests; the driver passes `None` so the L method decides).
+/// Run stage 1 over all subsets on up to `threads` workers with the
+/// default L-method selection.  Thin wrapper over [`run_stage1_with`],
+/// kept for the historical call sites.
 pub fn run_stage1(
     set: &SegmentSet,
     subsets: &[Vec<usize>],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     threads: usize,
     max_clusters_frac: f64,
     cache: Option<&PairCache>,
 ) -> anyhow::Result<Vec<SubsetOutcome>> {
+    run_stage1_with(
+        set,
+        subsets,
+        backend,
+        threads,
+        max_clusters_frac,
+        cache,
+        SelectionMethod::LMethod,
+    )
+}
+
+/// Run stage 1 over all subsets on up to `threads` workers, choosing
+/// each subset's cluster count with `selection`.
+pub fn run_stage1_with(
+    set: &SegmentSet,
+    subsets: &[Vec<usize>],
+    backend: &dyn PairwiseBackend,
+    threads: usize,
+    max_clusters_frac: f64,
+    cache: Option<&PairCache>,
+    selection: SelectionMethod,
+) -> anyhow::Result<Vec<SubsetOutcome>> {
     let results: Vec<anyhow::Result<SubsetOutcome>> =
         parallel_map(subsets.len(), threads, |s| {
-            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac, cache)
+            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac, cache, selection)
         })?;
     results.into_iter().collect()
 }
@@ -55,9 +76,10 @@ pub fn run_stage1(
 fn cluster_one_subset(
     set: &SegmentSet,
     ids: &[usize],
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     max_clusters_frac: f64,
     cache: Option<&PairCache>,
+    selection: SelectionMethod,
 ) -> anyhow::Result<SubsetOutcome> {
     let refs: Vec<&Segment> = ids.iter().map(|&i| &set.segments[i]).collect();
     // Distance build is itself single-threaded here: parallelism is
@@ -66,7 +88,7 @@ fn cluster_one_subset(
     // cache and never reach the backend again.
     let cond = build_condensed_cached(&refs, backend, 1, cache)?;
     let max_k = ((ids.len() as f64 * max_clusters_frac).ceil() as usize).max(2);
-    let clustering = ahc::cluster_subset(&cond, max_k, None);
+    let clustering = ahc::cluster_subset_with(&cond, max_k, None, selection);
     let medoid_ids = clustering
         .medoids
         .iter()
@@ -154,6 +176,28 @@ mod tests {
         // Labels from different subsets never collide.
         let used: std::collections::HashSet<usize> = labels.iter().copied().collect();
         assert_eq!(used.len(), k, "every global cluster non-empty");
+    }
+
+    #[test]
+    fn silhouette_selection_produces_valid_outcomes() {
+        let set = generate(&DatasetSpec::tiny(40, 3, 15));
+        let subsets = vec![(0..40).collect::<Vec<_>>()];
+        let out = run_stage1_with(
+            &set,
+            &subsets,
+            &NativeBackend::new(),
+            2,
+            0.4,
+            None,
+            SelectionMethod::Silhouette,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        let o = &out[0];
+        // Silhouette candidates live in [2, min(max_k, n−1)].
+        assert!(o.k >= 2 && o.k <= 16, "k = {}", o.k);
+        assert_eq!(o.medoid_ids.len(), o.k);
+        assert_eq!(o.labels.len(), 40);
     }
 
     #[test]

@@ -59,7 +59,7 @@ use crate::aggregate;
 use crate::config::{PruneMode, StreamConfig};
 use crate::corpus::{Segment, SegmentSet, Shards};
 use crate::distance::{
-    build_cross_cached, build_cross_cached_pruned, CascadeBackend, CascadeMode, DtwBackend,
+    build_cross_cached, build_cross_cached_pruned, CascadeBackend, CascadeMode, PairwiseBackend,
     PairCache,
 };
 use crate::metrics;
@@ -111,18 +111,18 @@ impl SetRef<'_> {
 
 /// Backend handle, mirroring [`SetRef`].  The `Owned` variant holds the
 /// session's private [`CascadeBackend`] pruning wrapper (its envelope
-/// table and counters belong to this session alone); `DtwBackend: Sync`
+/// table and counters belong to this session alone); `PairwiseBackend: Sync`
 /// and the cascade's inner handle is a shared/borrowed reference, so the
 /// box is `Send + Sync` for any lifetime and `StreamSession<'static>`
 /// stays movable into worker-pool jobs.
 enum BackendRef<'a> {
-    Borrowed(&'a dyn DtwBackend),
-    Shared(Arc<dyn DtwBackend + Send + Sync>),
-    Owned(Box<dyn DtwBackend + Send + Sync + 'a>),
+    Borrowed(&'a dyn PairwiseBackend),
+    Shared(Arc<dyn PairwiseBackend + Send + Sync>),
+    Owned(Box<dyn PairwiseBackend + Send + Sync + 'a>),
 }
 
 impl BackendRef<'_> {
-    fn get(&self) -> &dyn DtwBackend {
+    fn get(&self) -> &dyn PairwiseBackend {
         match self {
             BackendRef::Borrowed(b) => *b,
             BackendRef::Shared(b) => b.as_ref(),
@@ -185,7 +185,7 @@ impl<'a> StreamSession<'a> {
     pub fn new(
         set: &'a SegmentSet,
         cfg: StreamConfig,
-        backend: &'a dyn DtwBackend,
+        backend: &'a dyn PairwiseBackend,
     ) -> anyhow::Result<Self> {
         Self::from_parts(SetRef::Borrowed(set), cfg, BackendRef::Borrowed(backend))
     }
@@ -222,7 +222,7 @@ impl<'a> StreamSession<'a> {
                 PruneMode::Debug => CascadeMode::Debug,
                 _ => CascadeMode::On,
             };
-            let boxed: Box<dyn DtwBackend + Send + Sync + 'a> = match backend {
+            let boxed: Box<dyn PairwiseBackend + Send + Sync + 'a> = match backend {
                 BackendRef::Borrowed(b) => {
                     Box::new(CascadeBackend::borrowed(b, set.get(), mode))
                 }
@@ -562,6 +562,8 @@ impl<'a> StreamSession<'a> {
             // Shard throughput counts the episode's pairs plus the
             // retirement rectangle's.
             pairs_per_sec: pairs_rate(ep.summary.pairs + rect_pairs, wall),
+            metric: backend.metric_name().to_string(),
+            silhouette_score: ep.summary.silhouette,
         };
         self.pairs += ep.summary.pairs + rect_pairs;
         self.history.push(record.clone());
@@ -640,7 +642,7 @@ impl StreamSession<'static> {
     pub fn shared(
         set: Arc<SegmentSet>,
         cfg: StreamConfig,
-        backend: Arc<dyn DtwBackend + Send + Sync>,
+        backend: Arc<dyn PairwiseBackend + Send + Sync>,
     ) -> anyhow::Result<Self> {
         Self::from_parts(SetRef::Shared(set), cfg, BackendRef::Shared(backend))
     }
@@ -651,14 +653,14 @@ impl StreamSession<'static> {
 pub struct StreamingDriver<'a> {
     set: &'a SegmentSet,
     cfg: StreamConfig,
-    backend: &'a dyn DtwBackend,
+    backend: &'a dyn PairwiseBackend,
 }
 
 impl<'a> StreamingDriver<'a> {
     pub fn new(
         set: &'a SegmentSet,
         cfg: StreamConfig,
-        backend: &'a dyn DtwBackend,
+        backend: &'a dyn PairwiseBackend,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         if set.is_empty() {
@@ -1185,7 +1187,7 @@ mod tests {
         // another thread must be bitwise the sequential run.
         fn assert_send<T: Send>(_: &T) {}
         let set = Arc::new(generate(&DatasetSpec::tiny(60, 4, 54)));
-        let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+        let backend: Arc<dyn PairwiseBackend + Send + Sync> = Arc::new(NativeBackend::new());
         let cfg = StreamConfig::new(algo(2, Some(20), 2), 20);
         let seq = StreamingDriver::new(&set, cfg.clone(), backend.as_ref())
             .unwrap()

@@ -34,8 +34,14 @@ use mahc::config::{
     apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, PruneMode,
     ServeConfig, StreamConfig,
 };
-use mahc::corpus::{generate, CompositionStats};
-use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::ahc::SelectionMethod;
+use mahc::corpus::{
+    diarization, generate, generate_embeddings, CompositionStats, DiarizationSpec, EmbeddingSpec,
+};
+use mahc::distance::{
+    BackendKind, BlockedBackend, MetricKind, PairwiseBackend, NativeBackend, VectorBackend,
+    VectorMetric,
+};
 use mahc::mahc::{MahcDriver, ServeDriver, SessionSpec, StreamingDriver};
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use mahc::util::cli::Args;
@@ -45,7 +51,7 @@ const VALUE_KEYS: &[&str] = &[
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
     "aggregate-eps", "aggregate-cap", "aggregate-batch", "aggregate-tree", "aggregate-probe",
     "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed", "sessions", "fleet-cap",
-    "queue-cap", "workers", "fleet-cache-mb", "fault-session", "prune",
+    "queue-cap", "workers", "fleet-cache-mb", "fault-session", "prune", "metric", "selection",
 ];
 
 fn main() {
@@ -68,9 +74,12 @@ fn run() -> anyhow::Result<()> {
         }
         None => {
             eprintln!("usage: mahc <cluster|stream|serve|datagen|inspect> [options]");
-            eprintln!("  cluster --dataset <small_a|small_b|medium|large> [--scale F]");
-            eprintln!("          [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
+            eprintln!("  cluster --dataset <small_a|small_b|medium|large|embeddings|diarization>");
+            eprintln!("          [--scale F] [--algo mahc+m|mahc|ahc] [--p0 N] [--beta N] [--iters N]");
             eprintln!("          [--backend native|blocked|xla] [--threads N] [--seed N] [--out FILE]");
+            eprintln!("          [--metric dtw|cosine|euclidean  pairwise distance; the vector");
+            eprintln!("                     metrics need a fixed-dim corpus (embeddings|diarization)]");
+            eprintln!("          [--selection lmethod|silhouette  per-subset cluster-count choice]");
             eprintln!("          [--cache-mb N   cross-iteration DTW pair cache budget]");
             eprintln!("          [--prune off|on|debug  lower-bound cascade for threshold queries");
             eprintln!("                     (off = exact oracle; debug verifies admissibility)]");
@@ -104,10 +113,41 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
-fn dataset_from(args: &Args) -> anyhow::Result<DatasetSpec> {
+/// Generate the corpus named by `--dataset`: one of the paper's
+/// triphone compositions, or a fixed-dim embedding corpus
+/// (`embeddings` | `diarization`) for the vector metrics.  `--scale`
+/// scales the embedding corpora off a nominal 2000-segment session.
+fn corpus_from(args: &Args) -> anyhow::Result<mahc::corpus::SegmentSet> {
     let name = args.get("dataset").unwrap_or("small_a");
     let scale: f64 = args.get_or("scale", 0.05)?;
-    Ok(DatasetSpec::named(NamedDataset::parse(name)?, scale))
+    let seed: u64 = args.get_or("seed", AlgoConfig::default().seed)?;
+    match name {
+        "embeddings" | "embedding" => {
+            let segments = ((2000.0 * scale).round() as usize).max(40);
+            let classes = (segments / 12).clamp(4, 32);
+            let mut spec = EmbeddingSpec::tiny(segments, classes, seed);
+            spec.name = format!("embeddings_{segments}x{classes}");
+            Ok(generate_embeddings(&spec))
+        }
+        "diarization" => {
+            let utterances = ((2000.0 * scale).round() as usize).max(40);
+            Ok(diarization(&DiarizationSpec::tiny(utterances, 8, seed)))
+        }
+        _ => {
+            let spec = DatasetSpec::named(NamedDataset::parse(name)?, scale);
+            Ok(generate(&spec))
+        }
+    }
+}
+
+/// The [`VectorMetric`] a non-DTW [`MetricKind`] instantiates
+/// (config validation has already rejected DTW-only combinations).
+fn vector_metric(kind: MetricKind) -> VectorMetric {
+    match kind {
+        MetricKind::Cosine => VectorMetric::Cosine,
+        MetricKind::Euclidean => VectorMetric::Euclidean,
+        MetricKind::Dtw => unreachable!("vector_metric is never asked for dtw"),
+    }
 }
 
 fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
@@ -168,40 +208,68 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
+    if let Some(m) = args.get("metric") {
+        cfg.metric = MetricKind::parse(m)?;
+    }
+    if let Some(s) = args.get("selection") {
+        cfg.selection = SelectionMethod::parse(s)?;
+    }
+    // Surface incoherent combinations (vector metric + xla, active
+    // prune on a bound-less metric) as typed config errors here,
+    // before any backend or runtime is constructed.
+    cfg.validate()?;
     Ok(cfg)
 }
 
 fn cluster(args: &Args) -> anyhow::Result<()> {
-    let spec = dataset_from(args)?;
     let cfg = algo_config_from(args)?;
     let algo = args
         .get("algo")
         .unwrap_or(if cfg.beta.is_some() { "mahc+m" } else { "mahc" })
         .to_string();
 
+    let set = corpus_from(args)?;
     eprintln!(
-        "generating {} (N={}, classes={}) ...",
-        spec.name, spec.segments, spec.classes
+        "generated {} (N={}, classes={})",
+        set.name,
+        set.len(),
+        set.num_classes
     );
-    let set = generate(&spec);
     let stats = CompositionStats::of(&set);
     eprintln!("  composition: {}", stats.table_row());
 
-    match cfg.backend {
-        BackendKind::Native => {
-            let backend = NativeBackend::new();
-            cluster_with(&set, cfg, &algo, &backend, args)
-        }
-        BackendKind::Blocked => {
-            let backend = BlockedBackend::new();
-            cluster_with(&set, cfg, &algo, &backend, args)
-        }
-        BackendKind::Xla => {
-            let dir = args.get("artifacts").unwrap_or("artifacts");
-            let rt = Runtime::new(std::path::Path::new(dir))?;
-            let backend = XlaDtwBackend::new(&rt)?;
-            cluster_with(&set, cfg, &algo, &backend, args)
-        }
+    match cfg.metric {
+        MetricKind::Dtw => match cfg.backend {
+            BackendKind::Native => {
+                let backend = NativeBackend::new();
+                cluster_with(&set, cfg, &algo, &backend, args)
+            }
+            BackendKind::Blocked => {
+                let backend = BlockedBackend::new();
+                cluster_with(&set, cfg, &algo, &backend, args)
+            }
+            BackendKind::Xla => {
+                let dir = args.get("artifacts").unwrap_or("artifacts");
+                let rt = Runtime::new(std::path::Path::new(dir))?;
+                let backend = XlaDtwBackend::new(&rt)?;
+                cluster_with(&set, cfg, &algo, &backend, args)
+            }
+        },
+        kind => match cfg.backend {
+            BackendKind::Native => {
+                let backend = VectorBackend::native(vector_metric(kind));
+                cluster_with(&set, cfg, &algo, &backend, args)
+            }
+            BackendKind::Blocked => {
+                let backend = VectorBackend::blocked(vector_metric(kind));
+                cluster_with(&set, cfg, &algo, &backend, args)
+            }
+            // validate() already rejected this pairing with a typed
+            // error; keep a defensive arm for direct callers.
+            BackendKind::Xla => anyhow::bail!(
+                "--backend xla computes DTW only; use --metric dtw or a cpu backend"
+            ),
+        },
     }
 }
 
@@ -221,11 +289,23 @@ fn print_prune_summary(records: &[mahc::telemetry::IterationRecord]) {
     );
 }
 
+/// One-line model-selection summary, printed only when silhouette
+/// selection actually scored the final evaluation cut.
+fn print_selection_summary(records: &[mahc::telemetry::IterationRecord]) {
+    let Some(last) = records.last() else { return };
+    if last.silhouette_score != 0.0 {
+        println!(
+            "selection: silhouette scored the final cut at {:.4} (metric {})",
+            last.silhouette_score, last.metric
+        );
+    }
+}
+
 fn cluster_with(
     set: &mahc::corpus::SegmentSet,
     cfg: AlgoConfig,
     algo: &str,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     args: &Args,
 ) -> anyhow::Result<()> {
     match algo {
@@ -271,11 +351,12 @@ fn cluster_with(
                 );
             }
             println!(
-                "final: K={} F={:.4} peak_matrix={:.1} MiB backend={}",
+                "final: K={} F={:.4} peak_matrix={:.1} MiB backend={} metric={}",
                 res.k,
                 res.f_measure,
                 res.history.peak_matrix_bytes() as f64 / (1 << 20) as f64,
-                backend.name()
+                backend.name(),
+                backend.metric_name()
             );
             if let Some(r0) = res.history.records.first() {
                 if r0.representatives > 0 {
@@ -312,6 +393,7 @@ fn cluster_with(
                 );
             }
             print_prune_summary(&res.history.records);
+            print_selection_summary(&res.history.records);
             if let Some(path) = args.get("out") {
                 std::fs::write(path, res.history.to_json().to_string())?;
                 eprintln!("wrote {path}");
@@ -323,14 +405,15 @@ fn cluster_with(
 }
 
 fn stream(args: &Args) -> anyhow::Result<()> {
-    let spec = dataset_from(args)?;
     let mut algo = algo_config_from(args)?;
 
+    let set = corpus_from(args)?;
     eprintln!(
-        "generating {} (N={}, classes={}) ...",
-        spec.name, spec.segments, spec.classes
+        "generated {} (N={}, classes={})",
+        set.name,
+        set.len(),
+        set.num_classes
     );
-    let set = generate(&spec);
     let stats = CompositionStats::of(&set);
     eprintln!("  composition: {}", stats.table_row());
 
@@ -347,28 +430,43 @@ fn stream(args: &Args) -> anyhow::Result<()> {
         cfg.shard_seed = Some(s);
     }
 
-    match cfg.algo.backend {
-        BackendKind::Native => {
-            let backend = NativeBackend::new();
-            stream_with(&set, cfg, &backend, args)
-        }
-        BackendKind::Blocked => {
-            let backend = BlockedBackend::new();
-            stream_with(&set, cfg, &backend, args)
-        }
-        BackendKind::Xla => {
-            let dir = args.get("artifacts").unwrap_or("artifacts");
-            let rt = Runtime::new(std::path::Path::new(dir))?;
-            let backend = XlaDtwBackend::new(&rt)?;
-            stream_with(&set, cfg, &backend, args)
-        }
+    match cfg.algo.metric {
+        MetricKind::Dtw => match cfg.algo.backend {
+            BackendKind::Native => {
+                let backend = NativeBackend::new();
+                stream_with(&set, cfg, &backend, args)
+            }
+            BackendKind::Blocked => {
+                let backend = BlockedBackend::new();
+                stream_with(&set, cfg, &backend, args)
+            }
+            BackendKind::Xla => {
+                let dir = args.get("artifacts").unwrap_or("artifacts");
+                let rt = Runtime::new(std::path::Path::new(dir))?;
+                let backend = XlaDtwBackend::new(&rt)?;
+                stream_with(&set, cfg, &backend, args)
+            }
+        },
+        kind => match cfg.algo.backend {
+            BackendKind::Native => {
+                let backend = VectorBackend::native(vector_metric(kind));
+                stream_with(&set, cfg, &backend, args)
+            }
+            BackendKind::Blocked => {
+                let backend = VectorBackend::blocked(vector_metric(kind));
+                stream_with(&set, cfg, &backend, args)
+            }
+            BackendKind::Xla => anyhow::bail!(
+                "--backend xla computes DTW only; use --metric dtw or a cpu backend"
+            ),
+        },
     }
 }
 
 fn stream_with(
     set: &mahc::corpus::SegmentSet,
     cfg: StreamConfig,
-    backend: &dyn DtwBackend,
+    backend: &dyn PairwiseBackend,
     args: &Args,
 ) -> anyhow::Result<()> {
     let cache_on = cfg.algo.cache_bytes > 0;
@@ -392,13 +490,14 @@ fn stream_with(
         );
     }
     println!(
-        "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={}) backend={}",
+        "final: K={} F={:.4} peak_matrix={:.1} MiB over {} shards (β={}) backend={} metric={}",
         res.k,
         res.f_measure,
         res.history.peak_matrix_bytes() as f64 / (1 << 20) as f64,
         res.shards,
         beta.map_or("off".to_string(), |b| b.to_string()),
-        backend.name()
+        backend.name(),
+        backend.metric_name()
     );
     if let Some(r0) = res.history.records.first() {
         if r0.representatives > 0 {
@@ -441,6 +540,7 @@ fn stream_with(
         );
     }
     print_prune_summary(&res.history.records);
+    print_selection_summary(&res.history.records);
     if let Some(path) = args.get("out") {
         std::fs::write(path, res.history.to_json().to_string())?;
         eprintln!("wrote {path}");
@@ -449,16 +549,17 @@ fn stream_with(
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let spec = dataset_from(args)?;
     let mut algo = algo_config_from(args)?;
     let sessions: usize = args.get_or("sessions", 4)?;
     anyhow::ensure!(sessions >= 1, "--sessions must be >= 1");
 
+    let set = Arc::new(corpus_from(args)?);
     eprintln!(
-        "generating {} (N={}, classes={}) ...",
-        spec.name, spec.segments, spec.classes
+        "generated {} (N={}, classes={})",
+        set.name,
+        set.len(),
+        set.num_classes
     );
-    let set = Arc::new(generate(&spec));
     let stats = CompositionStats::of(&set);
     eprintln!("  composition: {}", stats.table_row());
 
@@ -480,13 +581,15 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 
     // Sessions hop across pool workers between steps, so the backend
     // must be Send + Sync; the XLA backend's host handles are not.
-    let backend: Arc<dyn DtwBackend + Send + Sync> = match algo.backend {
-        BackendKind::Native => Arc::new(NativeBackend::new()),
-        BackendKind::Blocked => Arc::new(BlockedBackend::new()),
-        BackendKind::Xla => anyhow::bail!(
+    let backend: Arc<dyn PairwiseBackend + Send + Sync> = match (algo.metric, algo.backend) {
+        (_, BackendKind::Xla) => anyhow::bail!(
             "serve requires a Send + Sync backend; --backend xla holds host handles \
              (use native or blocked)"
         ),
+        (MetricKind::Dtw, BackendKind::Native) => Arc::new(NativeBackend::new()),
+        (MetricKind::Dtw, BackendKind::Blocked) => Arc::new(BlockedBackend::new()),
+        (kind, BackendKind::Native) => Arc::new(VectorBackend::native(vector_metric(kind))),
+        (kind, BackendKind::Blocked) => Arc::new(VectorBackend::blocked(vector_metric(kind))),
     };
 
     // One corpus, many streams: session i consumes it in its own
@@ -536,8 +639,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn datagen(args: &Args) -> anyhow::Result<()> {
-    let spec = dataset_from(args)?;
-    let set = generate(&spec);
+    let set = corpus_from(args)?;
     let stats = CompositionStats::of(&set);
     println!(
         "{:<12} {:>9} {:>8} {:>13} {:>10} {:>14}",

@@ -12,9 +12,9 @@
 use super::engine::{HostTensor, Runtime};
 use super::manifest::DtwEntry;
 use crate::corpus::Segment;
-use crate::distance::DtwBackend;
+use crate::distance::PairwiseBackend;
 
-/// [`DtwBackend`] over the AOT DTW tile artifacts.
+/// [`PairwiseBackend`] over the AOT DTW tile artifacts.
 pub struct XlaDtwBackend<'rt> {
     rt: &'rt Runtime,
     tiles: Vec<DtwEntry>,
@@ -83,7 +83,7 @@ impl<'rt> XlaDtwBackend<'rt> {
     }
 }
 
-impl<'rt> DtwBackend for XlaDtwBackend<'rt> {
+impl<'rt> PairwiseBackend for XlaDtwBackend<'rt> {
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
         let (nx, ny) = (xs.len(), ys.len());
         let mut out = vec![0.0f32; nx * ny];

@@ -12,7 +12,7 @@
 //!
 //! [`manifest`] parses `artifacts/manifest.json` (written by
 //! `python/compile/aot.py`); [`dtw_exec`] implements the
-//! [`crate::distance::DtwBackend`] trait over DTW tile executables;
+//! [`crate::distance::PairwiseBackend`] trait over DTW tile executables;
 //! [`mfcc_exec`] wraps the MFCC front-end executable for the audio
 //! ingestion path.
 

@@ -189,12 +189,20 @@ pub struct IterationRecord {
     /// aggregation is off).
     pub aggregate_epsilon: f64,
     /// Name of the DTW backend that served this step's distances
-    /// ([`crate::distance::DtwBackend::name`]).
+    /// ([`crate::distance::PairwiseBackend::name`]).
     pub backend: String,
     /// Pair distances the step's builders produced (stage-1 condensed
     /// matrices + the medoid matrix; cache hits included since a hit
     /// still yields a pair distance) per wall-clock second.
     pub pairs_per_sec: f64,
+    /// Name of the distance metric the backend computes
+    /// ([`crate::distance::PairwiseBackend::metric_name`]): `dtw`,
+    /// `cosine` or `euclidean`.
+    pub metric: String,
+    /// Mean silhouette of this step's evaluation cut — the
+    /// model-selection quality signal.  0.0 under L-method selection,
+    /// where the medoid matrix is not retained for scoring.
+    pub silhouette_score: f64,
 }
 
 impl IterationRecord {
@@ -233,6 +241,8 @@ impl IterationRecord {
             ("aggregate_epsilon", json::num(self.aggregate_epsilon)),
             ("backend", json::s(&self.backend)),
             ("pairs_per_sec", json::num(self.pairs_per_sec)),
+            ("metric", json::s(&self.metric)),
+            ("silhouette_score", json::num(self.silhouette_score)),
         ])
     }
 }
@@ -527,6 +537,8 @@ mod tests {
             aggregate_epsilon: if i == 0 { 1.25 } else { 0.0 },
             backend: "native".to_string(),
             pairs_per_sec: 1000.0 * (i + 1) as f64,
+            metric: "dtw".to_string(),
+            silhouette_score: 0.25 * (i + 1) as f64,
         }
     }
 
@@ -650,6 +662,15 @@ mod tests {
         assert_eq!(
             iters[0].get("exact_pairs").unwrap().as_usize().unwrap(),
             5
+        );
+        assert_eq!(iters[0].get("metric").unwrap().as_str().unwrap(), "dtw");
+        assert_eq!(
+            iters[0]
+                .get("silhouette_score")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.25
         );
     }
 

@@ -1,0 +1,319 @@
+//! Metric-parity conformance suite: the vector metrics (cosine /
+//! Euclidean) behind [`VectorBackend`] must honour the same contract
+//! the DTW backends pin in `backend_parity.rs`.
+//!
+//! Guarantees pinned here (and documented in EXPERIMENTS.md §Metrics):
+//!
+//! * scalar and 8-lane blocked vector kernels are **bitwise
+//!   identical** across dims, lane-remainder shapes, and thread
+//!   counts, for condensed triangles, cross rectangles, and the cached
+//!   builders (including PairCache hit/miss/eviction counters);
+//! * the Euclidean norm lower bound is **admissible**: fuzzed
+//!   `lb ≤ exact` over random embedding pairs, and every pair the
+//!   cascade bounds out is genuinely above the carried threshold
+//!   (cosine advertises no bound and must keep pruning off);
+//! * silhouette selection recovers the planted cluster count on a
+//!   labelled embedding corpus and agrees with the L-method knee where
+//!   both are computable;
+//! * a full MAHC run and a serve-mode session complete end to end on
+//!   an embedding metric, stamping `metric` / `silhouette_score`
+//!   telemetry, bitwise-reproduced under the blocked kernel;
+//! * the deprecated `DtwBackend` alias still names the shared trait.
+//!
+//! The CI backend-matrix job sweeps `MAHC_TEST_BACKEND` ∈ {scalar,
+//! blocked} × `MAHC_TEST_THREADS` ∈ {1, 4} over this suite too.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{assert_bitwise, thread_matrix};
+use mahc::ahc::{self, SelectionMethod};
+use mahc::config::{AlgoConfig, Convergence, ServeConfig, StreamConfig};
+use mahc::corpus::{generate_embeddings, EmbeddingSpec, Segment, SegmentSet};
+use mahc::distance::{
+    build_condensed, build_condensed_cached, build_cross, CascadeBackend, CascadeMode,
+    DtwBackend, PairCache, PairwiseBackend, VectorBackend, VectorMetric,
+};
+use mahc::mahc::{MahcDriver, ServeDriver, SessionSpec};
+
+/// Embedding corpus with `dim`-dimensional single-frame segments.
+fn embeddings(n: usize, classes: usize, dim: usize, seed: u64) -> SegmentSet {
+    let mut spec = EmbeddingSpec::tiny(n, classes, seed);
+    spec.dim = dim;
+    generate_embeddings(&spec)
+}
+
+/// Matrix cell for the vector kernels: `MAHC_TEST_BACKEND=blocked`
+/// selects the 8-lane variant, anything else (scalar/native/unset)
+/// the scalar reference.
+fn vector_backend_under_test(metric: VectorMetric) -> VectorBackend {
+    match std::env::var("MAHC_TEST_BACKEND").ok().as_deref() {
+        Some("blocked") => VectorBackend::blocked(metric),
+        _ => VectorBackend::native(metric),
+    }
+}
+
+#[test]
+fn vector_condensed_and_cross_bitwise_scalar_vs_blocked() {
+    // Dims straddling the 8-lane group width, both metrics, a thread
+    // sweep: the blocked kernel must reproduce the scalar bits.
+    for metric in [VectorMetric::Cosine, VectorMetric::Euclidean] {
+        for (dim, seed) in [(1usize, 201u64), (7, 202), (8, 203), (16, 204), (37, 205)] {
+            let set = embeddings(45, 5, dim, seed);
+            let refs: Vec<&Segment> = set.segments.iter().collect();
+            let scalar = VectorBackend::native(metric);
+            let blocked = VectorBackend::blocked(metric);
+            let want = build_condensed(&refs, &scalar, 1).unwrap();
+            for threads in thread_matrix(&[1, 2, 4]) {
+                let got = build_condensed(&refs, &blocked, threads).unwrap();
+                assert_bitwise(
+                    want.as_slice(),
+                    got.as_slice(),
+                    &format!("{} dim={dim} threads={threads}", metric.name()),
+                );
+            }
+            // Cross rectangles around the lane boundary: full groups,
+            // remainder groups, a lone lane.
+            for ny in [1usize, 5, 8, 9, 16, 23] {
+                let (xs, ys) = (&refs[..7], &refs[7..7 + ny]);
+                let want = build_cross(xs, ys, &scalar, 1).unwrap();
+                let got = build_cross(xs, ys, &blocked, 2).unwrap();
+                assert_bitwise(&want, &got, &format!("{} ny={ny}", metric.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_builds_and_hit_patterns_are_variant_invariant() {
+    // Scalar and blocked vector kernels share preferred_rows and
+    // kernel_tag, so the cached builder must probe the cache in the
+    // same block order — counters, not just matrices, must agree.
+    for metric in [VectorMetric::Cosine, VectorMetric::Euclidean] {
+        let set = embeddings(56, 5, 12, 206);
+        let refs: Vec<&Segment> = set.segments.iter().collect();
+        let scalar = VectorBackend::native(metric);
+        let blocked = VectorBackend::blocked(metric);
+        assert_eq!(scalar.preferred_rows(), blocked.preferred_rows());
+        assert_eq!(scalar.kernel_tag(), blocked.kernel_tag());
+
+        let want = build_condensed(&refs, &scalar, 1).unwrap();
+        for budget in [1usize << 8, 1 << 20] {
+            let cs = PairCache::with_capacity_bytes(budget);
+            let cb = PairCache::with_capacity_bytes(budget);
+            for pass in 0..3 {
+                let a = build_condensed_cached(&refs, &scalar, 1, Some(&cs)).unwrap();
+                let b = build_condensed_cached(&refs, &blocked, 1, Some(&cb)).unwrap();
+                assert_bitwise(
+                    want.as_slice(),
+                    a.as_slice(),
+                    &format!("{} scalar budget={budget} pass={pass}", metric.name()),
+                );
+                assert_bitwise(
+                    want.as_slice(),
+                    b.as_slice(),
+                    &format!("{} blocked budget={budget} pass={pass}", metric.name()),
+                );
+            }
+            assert_eq!(
+                cs.stats(),
+                cb.stats(),
+                "{} budget={budget}: counters must not depend on the variant",
+                metric.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn euclidean_norm_bound_admissible_fuzz() {
+    // The reverse-triangle bound with rounding slack must never exceed
+    // the exact kernel value, for any pair — including near-identical
+    // segments where the real-arithmetic bound is tightest.
+    let set = embeddings(60, 4, 16, 207);
+    let backend = vector_backend_under_test(VectorMetric::Euclidean);
+    let cascade = CascadeBackend::borrowed(&backend, &set, CascadeMode::Debug);
+    assert!(cascade.supports_pruning());
+
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let exact = build_cross(&refs[..30], &refs[30..], &backend, 1).unwrap();
+    for (i, x) in refs[..30].iter().enumerate() {
+        for (j, y) in refs[30..].iter().enumerate() {
+            let lb = cascade.lb_pair(x, y).unwrap();
+            let d = exact[i * 30 + j];
+            assert!(
+                lb <= d,
+                "inadmissible bound: lb {lb} > exact {d} for pair ({}, {})",
+                x.id,
+                y.id
+            );
+        }
+    }
+
+    // Threshold sweep through the distance distribution: pruned pairs
+    // (flag false) must carry a bound strictly above the threshold and
+    // still below the exact value; surviving pairs must be exact bits.
+    let mut sorted = exact.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let mut pruned_total = 0usize;
+    for q in [0.0, 0.1, 0.5, 0.9] {
+        // q = 0 carries threshold 0.0: any pair whose norms differ by
+        // more than the rounding slack must be bounded out, so the
+        // sweep provably exercises the pruning path.
+        let threshold = if q == 0.0 {
+            0.0
+        } else {
+            sorted[(sorted.len() as f64 * q) as usize]
+        };
+        let (vals, flags) = cascade
+            .pairwise_pruned(&refs[..30], &refs[30..], threshold)
+            .unwrap();
+        for (k, (&v, &is_exact)) in vals.iter().zip(&flags).enumerate() {
+            if is_exact {
+                assert_eq!(v.to_bits(), exact[k].to_bits(), "q={q} pair {k}");
+            } else {
+                pruned_total += 1;
+                assert!(v > threshold, "q={q} pair {k}: bound {v} <= {threshold}");
+                assert!(v <= exact[k], "q={q} pair {k}: bound {v} > exact");
+            }
+        }
+    }
+    // Debug mode re-ran the kernel on every pair and verified lb ≤
+    // exact internally; some pairs must actually have been bounded out
+    // for the sweep to mean anything.
+    assert!(pruned_total > 0, "norm bound never fired across the sweep");
+
+    // Cosine advertises no admissible bound: the cascade must keep
+    // threshold-aware call sites on the exact path.
+    let cos = VectorBackend::native(VectorMetric::Cosine);
+    let cos_cascade = CascadeBackend::borrowed(&cos, &set, CascadeMode::On);
+    assert!(!cos_cascade.supports_pruning());
+}
+
+#[test]
+fn silhouette_recovers_planted_count_and_agrees_with_lmethod() {
+    // Well-separated equal-size blobs: both selectors are computable
+    // and must land on the planted class count.
+    let spec = EmbeddingSpec {
+        name: "sil_pin".into(),
+        segments: 72,
+        classes: 4,
+        dim: 8,
+        spread: 0.25,
+        skew: 0.0,
+        seed: 208,
+    };
+    let set = generate_embeddings(&spec);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let backend = vector_backend_under_test(VectorMetric::Euclidean);
+    let cond = build_condensed(&refs, &backend, 1).unwrap();
+
+    let sil = ahc::cluster_subset_with(&cond, 12, None, SelectionMethod::Silhouette);
+    let lm = ahc::cluster_subset_with(&cond, 12, None, SelectionMethod::LMethod);
+    assert_eq!(sil.k, 4, "silhouette missed the planted count");
+    assert_eq!(lm.k, sil.k, "selectors disagree on separated blobs");
+    assert_eq!(sil.labels.len(), 72);
+}
+
+fn embedding_cfg(selection: SelectionMethod) -> AlgoConfig {
+    AlgoConfig {
+        p0: 3,
+        beta: Some(40),
+        convergence: Convergence::FixedIters(3),
+        threads: 2,
+        selection,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_mahc_embedding_run_stamps_metric_telemetry() {
+    // The acceptance path: a complete MAHC run on an embedding corpus
+    // under cosine with silhouette selection, emitting the new
+    // telemetry fields — and bitwise-reproduced by the blocked kernel.
+    let set = embeddings(96, 6, 16, 209);
+    let scalar = VectorBackend::native(VectorMetric::Cosine);
+    let want = MahcDriver::new(&set, embedding_cfg(SelectionMethod::Silhouette), &scalar)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(want.k >= 2);
+    assert!(
+        want.f_measure > 0.5,
+        "cosine MAHC degenerated: F = {}",
+        want.f_measure
+    );
+    for r in &want.history.records {
+        assert_eq!(r.metric, "cosine");
+        assert!(
+            r.silhouette_score > 0.0,
+            "iteration {} lost its silhouette score",
+            r.iteration
+        );
+    }
+    let json = want.history.to_json().to_string();
+    assert!(json.contains("\"metric\""), "metric missing from JSON");
+    assert!(
+        json.contains("\"silhouette_score\""),
+        "silhouette_score missing from JSON"
+    );
+
+    let blocked = VectorBackend::blocked(VectorMetric::Cosine);
+    let got = MahcDriver::new(&set, embedding_cfg(SelectionMethod::Silhouette), &blocked)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(got.labels, want.labels);
+    assert_eq!(got.k, want.k);
+    assert_eq!(got.f_measure.to_bits(), want.f_measure.to_bits());
+}
+
+#[test]
+fn serve_sessions_run_embedding_metric_end_to_end() {
+    // Two concurrent streaming sessions over one shared embedding
+    // corpus and a Send + Sync vector backend.
+    let set = Arc::new(embeddings(80, 5, 16, 210));
+    let backend: Arc<dyn PairwiseBackend + Send + Sync> =
+        Arc::new(VectorBackend::native(VectorMetric::Cosine));
+    let serve_cfg = ServeConfig {
+        workers: 2,
+        fleet_cap: 2,
+        queue_cap: 2,
+        cache_bytes: 0,
+    };
+    let mut specs = Vec::new();
+    for i in 0..2u64 {
+        let cfg = StreamConfig::new(embedding_cfg(SelectionMethod::Silhouette), 40)
+            .with_shard_seed(300 + i);
+        specs.push(SessionSpec::new(
+            &format!("emb{i}"),
+            Arc::clone(&set),
+            cfg,
+        ));
+    }
+    let report = ServeDriver::new(serve_cfg, backend).unwrap().run(specs).unwrap();
+    assert_eq!(report.completed(), 2);
+    assert_eq!(report.failed(), 0);
+    for s in &report.sessions {
+        let r = s.result.as_ref().expect("session failed");
+        assert!(r.k >= 2, "{}: degenerate clustering", s.name);
+        assert!(r.pairs > 0, "{}: no pair work recorded", s.name);
+        assert!(r.shards >= 2, "{}: stream never sharded", s.name);
+    }
+}
+
+#[test]
+fn deprecated_dtw_backend_alias_names_the_shared_trait() {
+    // `DtwBackend` must remain usable as a trait object over *any*
+    // pairwise backend for one deprecation cycle.
+    let set = embeddings(10, 2, 8, 211);
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let aliased: Box<dyn DtwBackend> = Box::new(VectorBackend::native(VectorMetric::Euclidean));
+    let via_alias = aliased.pairwise(&refs[..5], &refs[5..]).unwrap();
+    let direct = VectorBackend::native(VectorMetric::Euclidean)
+        .pairwise(&refs[..5], &refs[5..])
+        .unwrap();
+    assert_bitwise(&via_alias, &direct, "alias");
+    assert_eq!(aliased.metric_name(), "euclidean");
+}

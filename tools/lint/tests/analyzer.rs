@@ -23,17 +23,26 @@ fn keys(findings: &[Finding]) -> Vec<(Rule, String, usize)> {
 #[test]
 fn fail_tree_reports_every_rule_span_accurately() {
     let findings = scan_root(&fixture("fail")).unwrap();
+    // Sorted the way scan_root reports: (path, line, rule).
     let expected: Vec<(Rule, String, usize)> = vec![
         (Rule::R001, "rust/src/ahc/r001_fail.rs".into(), 7),
         (Rule::R002, "rust/src/ahc/r001_suppressed_mixed.rs".into(), 5),
+        (Rule::R004, "rust/src/corpus/r004_fail.rs".into(), 2),
+        (Rule::R003, "rust/src/distance/r003_fail.rs".into(), 2),
+        (Rule::R003, "rust/src/distance/r003_vector_fail.rs".into(), 2),
+        (Rule::R003, "rust/src/distance/r003_vector_fail.rs".into(), 3),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 2),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 3),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 5),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 7),
-        (Rule::R003, "rust/src/distance/r003_fail.rs".into(), 2),
-        (Rule::R004, "rust/src/corpus/r004_fail.rs".into(), 2),
+        // ghost_metric: missing from the JSON writer AND the CLI summary.
         (Rule::R005, "rust/src/telemetry/mod.rs".into(), 4),
         (Rule::R005, "rust/src/telemetry/mod.rs".into(), 4),
+        // metric: serialized by to_json but never surfaced on the CLI.
+        (Rule::R005, "rust/src/telemetry/mod.rs".into(), 5),
+        // silhouette_score: missing from both, like ghost_metric.
+        (Rule::R005, "rust/src/telemetry/mod.rs".into(), 6),
+        (Rule::R005, "rust/src/telemetry/mod.rs".into(), 6),
     ];
     assert_eq!(keys(&findings), expected, "{findings:#?}");
 }
@@ -70,7 +79,7 @@ fn allowlist_covers_exactly_and_flags_stale_and_exceeded() {
         .unwrap();
     let out = apply_allowlist(findings.clone(), &ok);
     assert!(out.remaining.is_empty(), "{:#?}", out.remaining);
-    assert_eq!(out.allowlisted, 10);
+    assert_eq!(out.allowlisted, 15);
     assert!(out.errors.is_empty(), "{:?}", out.errors);
 
     let stale =
@@ -154,7 +163,7 @@ fn binary_allowlist_modes() {
     // --no-allowlist surfaces everything even with a covering file present.
     let (ok, stdout) = run_binary(&["--root", root, "--no-allowlist"]);
     assert!(!ok);
-    assert!(stdout.lines().filter(|l| l.contains(": R")).count() >= 10, "{stdout}");
+    assert!(stdout.lines().filter(|l| l.contains(": R")).count() >= 15, "{stdout}");
 }
 
 #[test]

@@ -1,0 +1,5 @@
+pub fn cosine_parts(xs: &[f32], ys: &[f32]) -> f32 {
+    let dot = xs.iter().zip(ys).map(|(&x, &y)| x * y).sum::<f32>();
+    let norm = xs.iter().fold(0.0f32, |acc, &x| acc + x * x);
+    dot / norm.sqrt()
+}

@@ -2,10 +2,15 @@ pub struct IterationRecord {
     pub iteration: usize,
     pub wall_secs: f64,
     pub ghost_metric: f64,
+    pub metric: String,
+    pub silhouette_score: f64,
 }
 
 impl IterationRecord {
     pub fn to_json(&self) -> String {
-        format!("{{\"iteration\":{},\"wall_secs\":{}}}", self.iteration, self.wall_secs)
+        format!(
+            "{{\"iteration\":{},\"wall_secs\":{},\"metric\":\"{}\"}}",
+            self.iteration, self.wall_secs, self.metric
+        )
     }
 }

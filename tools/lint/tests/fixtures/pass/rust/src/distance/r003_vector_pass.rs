@@ -1,0 +1,9 @@
+pub fn cosine_parts(xs: &[f32], ys: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    let mut norm = 0.0f32;
+    for (&x, &y) in xs.iter().zip(ys) {
+        dot += x * y;
+        norm += x * x;
+    }
+    dot / norm.sqrt().max(1e-12)
+}

@@ -1,3 +1,3 @@
 fn main() {
-    println!("iteration wall_secs");
+    println!("iteration wall_secs metric silhouette_score");
 }

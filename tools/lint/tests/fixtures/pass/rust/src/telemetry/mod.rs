@@ -1,10 +1,15 @@
 pub struct IterationRecord {
     pub iteration: usize,
     pub wall_secs: f64,
+    pub metric: String,
+    pub silhouette_score: f64,
 }
 
 impl IterationRecord {
     pub fn to_json(&self) -> String {
-        format!("{{\"iteration\":{},\"wall_secs\":{}}}", self.iteration, self.wall_secs)
+        format!(
+            "{{\"iteration\":{},\"wall_secs\":{},\"metric\":\"{}\",\"silhouette_score\":{}}}",
+            self.iteration, self.wall_secs, self.metric, self.silhouette_score
+        )
     }
 }
