@@ -206,6 +206,41 @@ fn main() {
         tree.probe_pairs as f64 / full as f64 * 100.0
     );
 
+    // Cluster-feature summaries at the p25 radius: the stage-1 cost of
+    // clustering m count-weighted representatives instead of the N raw
+    // segments, and the summary shape that prices the substitution
+    // (max radius, max count, the 2·r_max·√(2·c_max) deviation bound).
+    let m = batched.reps();
+    let rep_pairs = m * (m - 1) / 2;
+    let raw_pairs = n * (n - 1) / 2;
+    let max_count = batched.summaries.iter().map(|s| s.count).max().unwrap_or(0);
+    let max_radius = batched
+        .summaries
+        .iter()
+        .map(|s| s.radius)
+        .fold(0.0f32, f32::max);
+    let spread_total: f64 = batched.summaries.iter().map(|s| s.spread as f64).sum();
+    assert_eq!(
+        batched.summaries.iter().map(|s| s.count).sum::<usize>(),
+        n,
+        "summary counts must partition the corpus"
+    );
+    assert!(
+        max_radius <= eps25,
+        "flat-pass radius {max_radius} exceeded ε {eps25}"
+    );
+    assert!(
+        rep_pairs < raw_pairs,
+        "p25 aggregation left no stage-1 pair savings ({rep_pairs} vs {raw_pairs})"
+    );
+    println!(
+        "\nsummaries at p25: {m} groups, max_count={max_count}, \
+         max_radius={max_radius:.4}, deviation_bound={:.4}; \
+         stage-1 pairs {rep_pairs} vs raw {raw_pairs} ({:.1}%)",
+        batched.deviation_bound(),
+        rep_pairs as f64 / raw_pairs.max(1) as f64 * 100.0
+    );
+
     // Leader-pass wall at the p25 radius (the sweet-spot shape),
     // batched dispatch as the drivers run it.
     let leader = Bench::new("aggregate/leader@p25")
@@ -233,6 +268,22 @@ fn main() {
                 ("serial", probe_mode_row("flat-serial", &serial, serial_wall, n)),
                 ("batched", probe_mode_row("batched", &batched, batched_wall, n)),
                 ("tree", probe_mode_row("batched+tree", &tree, tree_wall, n)),
+            ]),
+        ),
+        (
+            "summaries",
+            json::obj(vec![
+                ("groups", json::num(m as f64)),
+                ("max_count", json::num(max_count as f64)),
+                ("max_radius", json::num(max_radius as f64)),
+                ("spread_total", json::num(spread_total)),
+                ("deviation_bound", json::num(batched.deviation_bound())),
+                ("rep_pairs", json::num(rep_pairs as f64)),
+                ("raw_pairs", json::num(raw_pairs as f64)),
+                (
+                    "pair_ratio",
+                    json::num(rep_pairs as f64 / raw_pairs.max(1) as f64),
+                ),
             ]),
         ),
         ("leader_wall", leader.to_json()),

@@ -16,7 +16,7 @@
 
 use mahc::config::DatasetSpec;
 use mahc::corpus::{generate, Segment};
-use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::distance::{build_condensed, BlockedBackend, PairwiseBackend, NativeBackend};
 use mahc::util::bench::{quick_mode, write_json_report, Bench};
 use mahc::util::json;
 

@@ -7,7 +7,7 @@
 
 use mahc::config::DatasetSpec;
 use mahc::corpus::{generate, Segment};
-use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::distance::{PairwiseBackend, NativeBackend};
 use mahc::runtime::{Runtime, XlaDtwBackend};
 use mahc::util::bench::Bench;
 use std::path::Path;

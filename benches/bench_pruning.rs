@@ -29,7 +29,7 @@
 use mahc::aggregate::quantile_of_sorted;
 use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, PruneMode};
 use mahc::corpus::{generate, Segment, SegmentSet};
-use mahc::distance::{CascadeBackend, CascadeMode, DtwBackend, NativeBackend};
+use mahc::distance::{CascadeBackend, CascadeMode, PairwiseBackend, NativeBackend};
 use mahc::mahc::MahcDriver;
 use mahc::util::bench::{quick_mode, write_json_report, Bench};
 use mahc::util::json;

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
 use mahc::corpus::{generate, SegmentSet};
-use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::distance::{PairwiseBackend, NativeBackend};
 use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
 use mahc::util::bench::{quick_mode, write_json_report, Bench};
 use mahc::util::json;
@@ -40,7 +40,7 @@ fn main() {
         },
         if quick_mode() { 28 } else { 72 },
     );
-    let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+    let backend: Arc<dyn PairwiseBackend + Send + Sync> = Arc::new(NativeBackend::new());
     let specs = || -> Vec<SessionSpec> {
         sets.iter()
             .enumerate()

@@ -13,7 +13,7 @@
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
 use mahc::corpus::generate;
-use mahc::distance::{BlockedBackend, DtwBackend, NativeBackend};
+use mahc::distance::{BlockedBackend, PairwiseBackend, NativeBackend};
 use mahc::mahc::{MahcDriver, MahcResult};
 
 fn quick() -> bool {
@@ -21,7 +21,7 @@ fn quick() -> bool {
     mahc::util::bench::env_flag("MAHC_EXAMPLE_QUICK")
 }
 
-fn run(set: &mahc::corpus::SegmentSet, backend: &dyn DtwBackend) -> anyhow::Result<MahcResult> {
+fn run(set: &mahc::corpus::SegmentSet, backend: &dyn PairwiseBackend) -> anyhow::Result<MahcResult> {
     let cfg = AlgoConfig {
         p0: 4,
         beta: Some(if quick() { 60 } else { 150 }),

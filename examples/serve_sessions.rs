@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
 use mahc::corpus::{generate, SegmentSet};
-use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::distance::{PairwiseBackend, NativeBackend};
 use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
 use mahc::telemetry::Stopwatch;
 use mahc::util::bench::{env_flag, write_json_report};
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     let sessions = if quick() { 4 } else { 6 };
     let base_n = if quick() { 60 } else { 160 };
     let budget = 32 << 10;
-    let backend: Arc<dyn DtwBackend + Send + Sync> = Arc::new(NativeBackend::new());
+    let backend: Arc<dyn PairwiseBackend + Send + Sync> = Arc::new(NativeBackend::new());
 
     // Distinct corpora: session i discovers subwords in its own stream.
     let sets: Vec<Arc<SegmentSet>> = (0..sessions)

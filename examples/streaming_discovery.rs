@@ -13,7 +13,9 @@
 //! cargo run --release --example streaming_discovery
 //! ```
 
-use mahc::config::{AlgoConfig, Convergence, DatasetSpec, StreamConfig};
+use mahc::config::{
+    AggregateConfig, AlgoConfig, Convergence, DatasetSpec, RetireMode, StreamConfig,
+};
 use mahc::corpus::generate;
 use mahc::distance::NativeBackend;
 use mahc::mahc::{MahcDriver, StreamingDriver};
@@ -83,9 +85,54 @@ fn main() -> anyhow::Result<()> {
     }
 
     // The single-shard stream is the batch run, bit for bit.
-    let one = StreamingDriver::new(&set, StreamConfig::new(algo, set.len()), &backend)?.run()?;
+    let one = StreamingDriver::new(&set, StreamConfig::new(algo.clone(), set.len()), &backend)?
+        .run()?;
     anyhow::ensure!(one.labels == batch.labels, "single-shard labels diverged");
     anyhow::ensure!(one.k == batch.k && one.f_measure == batch.f_measure);
     println!("\nsingle-shard stream reproduces the batch run: MATCH");
+
+    // Aggregated stream, leader vs medoid retirement.  With a
+    // quantile-derived ε the leader pass absorbs members before the
+    // shards stream; at stream end `retire = Leader` forwards each
+    // member to its leader's final cluster (the historical path), while
+    // `retire = Medoid` reassigns it to the nearest *final* medoid.
+    // Reassignment can only recover members a leader dragged across a
+    // cluster boundary, so the medoid run's F-measure must never fall
+    // below the leader run's — enforced here on every CI smoke run
+    // (and pinned on a hand-provable fixture in
+    // rust/tests/aggregation_quality.rs).
+    let shard = n.div_ceil(2);
+    let aggregated = AlgoConfig {
+        aggregate: AggregateConfig::new(0.0).with_quantile(0.05),
+        ..algo
+    };
+    let run_retire = |retire: RetireMode| {
+        let mut cfg = aggregated.clone();
+        cfg.retire = retire;
+        StreamingDriver::new(&set, StreamConfig::new(cfg, shard), &backend)?.run()
+    };
+    let leader_run = run_retire(RetireMode::Leader)?;
+    let medoid_run = run_retire(RetireMode::Medoid)?;
+    let r0 = &leader_run.history.records[0];
+    println!("\nretirement at q=0.05 ε (m={} representatives):", r0.representatives);
+    println!(
+        "  leader  K={:<4} F={:.4}\n  medoid  K={:<4} F={:.4}  (ΔF={:+.4})",
+        leader_run.k,
+        leader_run.f_measure,
+        medoid_run.k,
+        medoid_run.f_measure,
+        medoid_run.f_measure - leader_run.f_measure
+    );
+    anyhow::ensure!(
+        medoid_run.k == leader_run.k,
+        "retirement must not change the cluster count"
+    );
+    anyhow::ensure!(
+        medoid_run.f_measure >= leader_run.f_measure,
+        "medoid retirement degraded F: {} < {}",
+        medoid_run.f_measure,
+        leader_run.f_measure
+    );
+    println!("medoid retirement never scores below leader forwarding: OK");
     Ok(())
 }

@@ -20,15 +20,30 @@
 //! bitwise identical to the historical per-row path (`batch_rows = 1`
 //! *is* that path, kept reachable as the parity suite's reference).
 //!
-//! Two-level tree.  With `tree_factor > 0`, every leader is attached to
-//! its nearest *super-leader* within radius `tree_factor`·ε (or founds a
-//! new one), and a segment only probes the leaders under its
-//! `tree_probe` nearest super-groups — probe cost scales with the tree
-//! fan-out instead of m.  DTW is not a metric, so the tree may prune a
-//! would-be leader out of sight; degenerate configurations where it
-//! cannot prune (one covering super-group, singleton super-groups with
-//! an unambiguous nearest, cap-saturated groups) reproduce the flat
-//! pass exactly and are pinned in `rust/tests/aggregation.rs`.
+//! Leader tree.  With `tree_factor > 0` and `tree_depth ≥ 2`, every
+//! leader is attached to its nearest level-1 node within radius
+//! `tree_factor`·ε (or founds a new one), and so on up `tree_depth − 1`
+//! node levels whose radii grow geometrically (`tree_factor`ˡ·ε for
+//! level ℓ — the per-level ε inherits whatever the quantile machinery
+//! derived for the base radius).  A segment descends from the top
+//! level, keeping its `tree_probe` nearest nodes per level, and probes
+//! only the open leaders under the level-1 nodes it reaches — probe
+//! cost scales with the tree fan-out instead of m.  `tree_depth = 1`
+//! *is* the flat pass (the tree is never built) and `tree_depth = 2`
+//! reproduces the historical two-level tree bitwise: the descent issues
+//! the same probes in the same order (parity-pinned in
+//! `rust/tests/aggregation_quality.rs`).  DTW is not a metric, so the
+//! tree may prune a would-be leader out of sight; degenerate
+//! configurations where it cannot prune (one covering super-group,
+//! singleton super-groups with an unambiguous nearest, cap-saturated
+//! groups) reproduce the flat pass exactly and are pinned in
+//! `rust/tests/aggregation.rs`.
+//!
+//! Cluster features.  Each group carries a [`GroupSummary`]
+//! `(count, radius, spread)` absorbed incrementally at the single join
+//! site, and the tree records every leader→node link distance so the
+//! pass can fold leaf summaries upward into per-level summaries
+//! ([`Aggregation::level_summaries`]) — see [`super::summary`].
 //!
 //! ε itself is either given absolutely or derived from a pair-distance
 //! quantile of a seeded corpus sample ([`super::quantile`]).
@@ -36,6 +51,8 @@
 use crate::config::AggregateConfig;
 use crate::corpus::{Segment, SegmentSet};
 use crate::distance::{build_cross_cached, build_cross_cached_pruned, PairwiseBackend, PairCache};
+
+use super::summary::GroupSummary;
 
 /// Result of the leader pass: `m` representatives plus the membership
 /// lists that map them back onto the full corpus, and the probe-engine
@@ -65,12 +82,17 @@ pub struct Aggregation {
     pub rect_rows: usize,
     /// Columns of the largest probe rectangle dispatched.
     pub rect_cols: usize,
-    /// Super-leaders of the two-level tree (0 = flat probing).
+    /// Top-level tree nodes (0 = flat probing).
     pub super_leaders: usize,
     /// Effective leader radius ε (quantile-derived when configured).
     pub epsilon: f32,
     /// Corpus size N the pass ran over.
     pub total: usize,
+    /// Cluster-feature summary per group, parallel to `rep_ids`.
+    pub summaries: Vec<GroupSummary>,
+    /// Summaries folded per tree level (index 0 = level-1 nodes, …,
+    /// last = top level); empty on the flat pass.
+    pub level_summaries: Vec<Vec<GroupSummary>>,
 }
 
 impl Aggregation {
@@ -89,6 +111,8 @@ impl Aggregation {
             super_leaders: 0,
             epsilon: 0.0,
             total: n,
+            summaries: vec![GroupSummary::singleton(); n],
+            level_summaries: Vec::new(),
         }
     }
 
@@ -110,18 +134,48 @@ impl Aggregation {
     pub fn is_identity(&self) -> bool {
         self.reps() == self.total
     }
+
+    /// The reported linkage-height deviation bound vs full AHC:
+    /// `2·r_max·√(2·c_max)` over the group summaries (see
+    /// [`super::summary`] for the derivation).  Exactly 0 when the pass
+    /// collapsed nothing or every group has zero radius.
+    pub fn deviation_bound(&self) -> f64 {
+        let mut r_max = 0.0f32;
+        let mut c_max = 0usize;
+        for s in &self.summaries {
+            r_max = r_max.max(s.radius);
+            c_max = c_max.max(s.count);
+        }
+        if r_max == 0.0 || c_max <= 1 {
+            return 0.0;
+        }
+        2.0 * r_max as f64 * (2.0 * c_max as f64).sqrt()
+    }
 }
 
-/// Super-leader state of the two-level tree.
+/// One node level of the leader tree.  Level 1 (index 0) groups
+/// leaders; level ℓ ≥ 2 groups the nodes one level down.
+struct TreeLevel {
+    /// Attachment radius `tree_factor`ˡ·ε for this level.
+    radius: f32,
+    /// Leader index heading each node, in founding order.
+    nodes: Vec<usize>,
+    /// Children per node, parallel to `nodes`: leader indices at level
+    /// 1, node indices into the level below otherwise.  The founding
+    /// child is always first.
+    children: Vec<Vec<usize>>,
+    /// Distance from each child's leader to the node's leader, parallel
+    /// to `children` (0 for the founding child).
+    links: Vec<Vec<f32>>,
+}
+
+/// Node-level state of the leader tree (depth ≥ 2).
 struct Tree {
-    /// Coarse radius `tree_factor`·ε.
-    coarse: f32,
-    /// Super-groups a segment descends into (the fan-out).
+    /// Nodes a segment keeps per level while descending (the fan-out).
     probe: usize,
-    /// Leader index of each super-leader, in founding order.
-    supers: Vec<usize>,
-    /// Leader indices under each super-leader, parallel to `supers`.
-    groups: Vec<Vec<usize>>,
+    /// Levels bottom-up: `levels[0]` is level 1, `levels.last()` the
+    /// top level the probe rectangles run against.
+    levels: Vec<TreeLevel>,
 }
 
 /// Mutable state of one pass, shared by the flat and tree resolvers.
@@ -132,6 +186,7 @@ struct Pass<'a> {
     rep_ids: Vec<usize>,
     members: Vec<Vec<usize>>,
     rep_of: Vec<usize>,
+    summaries: Vec<GroupSummary>,
     probe_pairs: usize,
     rect_rows: usize,
     rect_cols: usize,
@@ -194,37 +249,52 @@ impl Pass<'_> {
         self.rep_of[id] = r;
         self.rep_ids.push(id);
         self.members.push(vec![id]);
+        self.summaries.push(GroupSummary::singleton());
         r
     }
 
-    /// Attach leader `r` to the tree: nearest super-leader within the
-    /// coarse radius (strict `<`, earliest wins), else found a new
-    /// super-group.  `sdist` holds `r`'s distance to every current
-    /// super-leader — already probed while `r` was still a pending
-    /// segment, so attachment issues no DTW of its own.
-    fn attach_leader(&mut self, r: usize, sdist: &[f32]) {
+    /// Attach fresh leader `r` to the tree, bottom-up: nearest probed
+    /// node within each level's radius (strict `<`, earliest wins),
+    /// founding a new node per level until one accepts.  `pnodes` /
+    /// `pdist` hold, per level, the node indices the segment probed on
+    /// its way down and their distances — already in hand, so
+    /// attachment issues no DTW of its own.  At depth 2 the probed set
+    /// is every top node, reproducing the historical super-leader
+    /// attachment bitwise.
+    fn attach_leader(&mut self, r: usize, pnodes: &[Vec<usize>], pdist: &[Vec<f32>]) {
         let Some(tree) = self.tree.as_mut() else {
             return;
         };
-        debug_assert_eq!(sdist.len(), tree.supers.len());
-        let mut best: Option<(usize, f32)> = None;
-        for (g, &dist) in sdist.iter().enumerate() {
-            if dist > tree.coarse {
-                continue;
+        // `child` is what attaches at the current level: the leader
+        // itself at level 1, then the freshly-founded node index.
+        let mut child = r;
+        for (level, (nodes, dists)) in tree.levels.iter_mut().zip(pnodes.iter().zip(pdist)) {
+            debug_assert_eq!(nodes.len(), dists.len());
+            let mut best: Option<(usize, f32)> = None;
+            for (&g, &dist) in nodes.iter().zip(dists) {
+                if dist > level.radius {
+                    continue;
+                }
+                let closer = match best {
+                    Some((_, b)) => dist < b,
+                    None => true,
+                };
+                if closer {
+                    best = Some((g, dist));
+                }
             }
-            let closer = match best {
-                Some((_, b)) => dist < b,
-                None => true,
-            };
-            if closer {
-                best = Some((g, dist));
-            }
-        }
-        match best {
-            Some((g, _)) => tree.groups[g].push(r),
-            None => {
-                tree.supers.push(r);
-                tree.groups.push(vec![r]);
+            match best {
+                Some((g, dist)) => {
+                    level.children[g].push(child); // lint: in-bounds children is parallel to nodes
+                    level.links[g].push(dist); // lint: in-bounds links is parallel to nodes
+                    return;
+                }
+                None => {
+                    level.nodes.push(r);
+                    level.children.push(vec![child]);
+                    level.links.push(vec![0.0]);
+                    child = level.nodes.len() - 1;
+                }
             }
         }
     }
@@ -243,11 +313,12 @@ impl Pass<'_> {
     ) -> anyhow::Result<()> {
         let base_leaders = self.rep_ids.len();
         // Rectangle columns: open leaders (flat; kept as indices for
-        // the resolver) or every super-leader (tree) as of round start,
+        // the resolver) or every top-level tree node as of round start,
         // ascending, mapped to global ids.
         let (flat_cols, col_ids): (Vec<usize>, Vec<usize>) = match &self.tree {
             Some(t) => {
-                let ids = t.supers.iter().map(|&s| self.rep_ids[s]).collect();
+                let top = t.levels.last().map_or(&[][..], |l| &l.nodes); // lint: in-bounds full-range slice of the empty literal
+                let ids = top.iter().map(|&s| self.rep_ids[s]).collect(); // lint: in-bounds tree node ids index rep_ids
                 (Vec::new(), ids)
             }
             None => {
@@ -346,9 +417,10 @@ impl Pass<'_> {
             }
         }
         match best {
-            Some((r, _)) => {
+            Some((r, dist)) => {
                 self.members[r].push(id);
                 self.rep_of[id] = r;
+                self.summaries[r].absorb(dist); // lint: in-bounds summaries is parallel to rep_ids
             }
             None => {
                 self.push_leader(id);
@@ -357,11 +429,12 @@ impl Pass<'_> {
         Ok(())
     }
 
-    /// Tree resolution of segment `id`: complete the super-leader
-    /// distance vector (rectangle `row` covers the `base_supers` known
-    /// at round start, mid-round foundings get one incremental row),
-    /// descend into the `probe` nearest super-groups, and probe only
-    /// their open leaders — reusing the super distances already in hand.
+    /// Tree resolution of segment `id`: complete the top-level node
+    /// distance vector (rectangle `row` covers the `base_supers` nodes
+    /// known at round start, mid-round foundings get one incremental
+    /// row), descend level by level into the `probe` nearest nodes, and
+    /// probe only the open leaders under the level-1 nodes reached —
+    /// reusing distances to node leaders already in hand.
     fn resolve_tree(
         &mut self,
         id: usize,
@@ -370,42 +443,87 @@ impl Pass<'_> {
         backend: &dyn PairwiseBackend,
         cache: Option<&PairCache>,
     ) -> anyhow::Result<()> {
+        let (nlevels, fan) = match self.tree.as_ref() {
+            Some(t) => (t.levels.len(), t.probe),
+            None => anyhow::bail!("tree resolver invoked without tree state"),
+        };
+        let top = nlevels - 1;
+        // Per level: the node indices the segment probed and their
+        // distances, kept for attachment if `id` becomes a leader.
+        let mut pnodes: Vec<Vec<usize>> = vec![Vec::new(); nlevels];
+        let mut pdist: Vec<Vec<f32>> = vec![Vec::new(); nlevels];
+
         let mut sdist: Vec<f32> = row.to_vec();
-        let nsupers = self.tree.as_ref().map_or(0, |t| t.supers.len());
-        if nsupers > base_supers {
+        let ntop = self.tree.as_ref().map_or(0, |t| t.levels[top].nodes.len()); // lint: in-bounds top < levels.len() by the active-tree guard
+        if ntop > base_supers {
             let fresh_ids: Vec<usize> = {
                 let t = self
                     .tree
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
-                t.supers[base_supers..].iter().map(|&s| self.rep_ids[s]).collect()
+                t.levels[top].nodes[base_supers..] // lint: in-bounds base_supers counts nodes already present
+                    .iter()
+                    .map(|&s| self.rep_ids[s]) // lint: in-bounds tree node ids index rep_ids
+                    .collect()
             };
             let xs = [&self.set.segments[id]];
             let ys: Vec<&Segment> = fresh_ids.iter().map(|&g| &self.set.segments[g]).collect();
             let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
             anyhow::ensure!(
                 d.len() == ys.len(),
-                "backend returned {} probe distances for {} fresh super-leaders",
+                "backend returned {} probe distances for {} fresh top-level nodes",
                 d.len(),
                 ys.len()
             );
             self.probe_pairs += d.len();
             sdist.extend_from_slice(&d);
         }
-        let fan = self.tree.as_ref().map_or(1, |t| t.probe);
-        let picked = nearest_indices(&sdist, fan);
-        // Open leaders under the picked groups, ascending; super-leader
-        // distances are already known.
-        let mut cand: Vec<usize> = Vec::new();
+        pnodes[top] = (0..ntop).collect(); // lint: in-bounds pnodes is sized levels.len()
+        pdist[top] = sdist; // lint: in-bounds pdist is sized levels.len()
+
+        // Descend: at each level keep the `probe` nearest probed nodes,
+        // then resolve their children's distances (reusing any child
+        // headed by an already-probed leader) one level down.
         let mut known: Vec<(usize, f32)> = Vec::new();
+        let mut picked = nearest_indices(&pdist[top], fan); // lint: in-bounds pdist[top] just initialised
+        for l in (1..=top).rev() {
+            let mut cnodes: Vec<usize> = Vec::new();
+            {
+                let t = self
+                    .tree
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
+                for &p in &picked {
+                    let g = pnodes[l][p]; // lint: in-bounds picked indexes pnodes[l]
+                    known.push((t.levels[l].nodes[g], pdist[l][p])); // lint: in-bounds node ids and pdist are parallel
+                    cnodes.extend_from_slice(&t.levels[l].children[g]); // lint: in-bounds children is parallel to nodes
+                }
+            }
+            cnodes.sort_unstable();
+            let leaders: Vec<usize> = {
+                let t = self
+                    .tree
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
+                cnodes.iter().map(|&c| t.levels[l - 1].nodes[c]).collect() // lint: in-bounds child ids index the level below
+            };
+            let d = self.probe_leaders(id, &leaders, &known, backend, cache)?;
+            pnodes[l - 1] = cnodes; // lint: in-bounds l >= 1 inside the descent loop
+            pdist[l - 1] = d; // lint: in-bounds l >= 1 inside the descent loop
+            picked = nearest_indices(&pdist[l - 1], fan); // lint: in-bounds pdist[l - 1] just assigned
+        }
+
+        // Level 1: open leaders under the picked nodes, ascending.
+        let mut cand: Vec<usize> = Vec::new();
         {
             let t = self
                 .tree
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("tree resolver invoked without tree state"))?;
-            for &g in &picked {
-                known.push((t.supers[g], sdist[g]));
-                for &r in &t.groups[g] {
+            for &p in &picked {
+                let g = pnodes[0][p]; // lint: in-bounds picked indexes pnodes[0]
+                known.push((t.levels[0].nodes[g], pdist[0][p])); // lint: in-bounds node ids and pdist are parallel
+                for &r in &t.levels[0].children[g] { // lint: in-bounds children is parallel to nodes
                     if self.has_room(r) {
                         cand.push(r);
                     }
@@ -413,10 +531,44 @@ impl Pass<'_> {
             }
         }
         cand.sort_unstable();
-        let mut dist: Vec<Option<f32>> = Vec::with_capacity(cand.len());
-        for &r in &cand {
+        let dvals = self.probe_leaders(id, &cand, &known, backend, cache)?;
+        let mut best: Option<(usize, f32)> = None;
+        for (&r, &dv) in cand.iter().zip(&dvals) {
+            self.consider(&mut best, r, dv);
+        }
+        match best {
+            Some((r, dist)) => {
+                self.members[r].push(id); // lint: in-bounds r is a leader index
+                self.rep_of[id] = r; // lint: in-bounds rep_of is sized n
+                self.summaries[r].absorb(dist); // lint: in-bounds summaries is parallel to rep_ids
+            }
+            None => {
+                let r = self.push_leader(id);
+                // The probed node distances cover every attachment
+                // candidate, so the new leader attaches without another
+                // probe.
+                self.attach_leader(r, &pnodes, &pdist);
+            }
+        }
+        Ok(())
+    }
+
+    /// Distances from segment `id` to each of `leaders` (leader
+    /// indices, in order): reuse any distance already probed on the way
+    /// down (`known`, scanned in insertion order) and resolve the rest
+    /// with one incremental row.
+    fn probe_leaders(
+        &mut self,
+        id: usize,
+        leaders: &[usize],
+        known: &[(usize, f32)],
+        backend: &dyn PairwiseBackend,
+        cache: Option<&PairCache>,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut dist: Vec<Option<f32>> = Vec::with_capacity(leaders.len());
+        for &r in leaders {
             let mut known_d = None;
-            for &(kr, kd) in &known {
+            for &(kr, kd) in known {
                 if kr == r {
                     known_d = Some(kd);
                     break;
@@ -424,12 +576,12 @@ impl Pass<'_> {
             }
             dist.push(known_d);
         }
-        let need: Vec<usize> = (0..cand.len()).filter(|&i| dist[i].is_none()).collect();
+        let need: Vec<usize> = (0..leaders.len()).filter(|&i| dist[i].is_none()).collect(); // lint: in-bounds dist is sized leaders.len()
         if !need.is_empty() {
             let xs = [&self.set.segments[id]];
             let ys: Vec<&Segment> = need
                 .iter()
-                .map(|&i| &self.set.segments[self.rep_ids[cand[i]]])
+                .map(|&i| &self.set.segments[self.rep_ids[leaders[i]]]) // lint: in-bounds leader ids index rep_ids
                 .collect();
             let d = build_cross_cached(&xs, &ys, backend, 1, cache)?;
             anyhow::ensure!(
@@ -443,26 +595,14 @@ impl Pass<'_> {
                 dist[i] = Some(v);
             }
         }
-        let mut best: Option<(usize, f32)> = None;
-        for (i, &r) in cand.iter().enumerate() {
-            let dv = dist[i].ok_or_else(|| {
-                anyhow::anyhow!("candidate distance {i} unresolved after probe round")
-            })?;
-            self.consider(&mut best, r, dv);
-        }
-        match best {
-            Some((r, _)) => {
-                self.members[r].push(id);
-                self.rep_of[id] = r;
-            }
-            None => {
-                let r = self.push_leader(id);
-                // `sdist` covers every current super-leader, so the new
-                // leader attaches without another probe.
-                self.attach_leader(r, &sdist);
-            }
-        }
-        Ok(())
+        dist.into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.ok_or_else(|| {
+                    anyhow::anyhow!("candidate distance {i} unresolved after probe round")
+                })
+            })
+            .collect()
     }
 }
 
@@ -505,6 +645,7 @@ pub fn aggregate(
         None => (cfg.epsilon, 0, 0),
     };
 
+    // Depth 1 never builds the tree: it *is* the flat pass, bitwise.
     let mut pass = Pass {
         set,
         epsilon,
@@ -512,14 +653,26 @@ pub fn aggregate(
         rep_ids: Vec::new(),
         members: Vec::new(),
         rep_of: vec![usize::MAX; n],
+        summaries: Vec::new(),
         probe_pairs: 0,
         rect_rows: 0,
         rect_cols: 0,
-        tree: (cfg.tree_factor > 0.0).then(|| Tree {
-            coarse: cfg.tree_factor * epsilon,
-            probe: cfg.tree_probe.max(1),
-            supers: Vec::new(),
-            groups: Vec::new(),
+        tree: (cfg.tree_factor > 0.0 && cfg.tree_depth >= 2).then(|| {
+            let mut levels = Vec::with_capacity(cfg.tree_depth - 1);
+            let mut radius = epsilon;
+            for _ in 1..cfg.tree_depth {
+                radius *= cfg.tree_factor;
+                levels.push(TreeLevel {
+                    radius,
+                    nodes: Vec::new(),
+                    children: Vec::new(),
+                    links: Vec::new(),
+                });
+            }
+            Tree {
+                probe: cfg.tree_probe.max(1),
+                levels,
+            }
         }),
     };
 
@@ -534,6 +687,35 @@ pub fn aggregate(
     }
 
     debug_assert_eq!(pass.members.iter().map(|m| m.len()).sum::<usize>(), n);
+
+    // Fold group summaries up the tree: each node's summary merges its
+    // children in attachment order through the recorded link distances
+    // (fixed-order sums — deterministic like the pass itself).
+    let level_summaries: Vec<Vec<GroupSummary>> = match &pass.tree {
+        None => Vec::new(),
+        Some(t) => {
+            let mut out: Vec<Vec<GroupSummary>> = Vec::with_capacity(t.levels.len());
+            let mut prev: Vec<GroupSummary> = pass.summaries.clone();
+            for level in &t.levels {
+                let mut cur = Vec::with_capacity(level.nodes.len());
+                for (kids, links) in level.children.iter().zip(&level.links) {
+                    let mut acc: Option<GroupSummary> = None;
+                    for (&k, &link) in kids.iter().zip(links) {
+                        acc = Some(match acc {
+                            // Founding child: the node's own anchor.
+                            None => prev[k], // lint: in-bounds child ids index the level below
+                            Some(a) => a.merge(&prev[k], link), // lint: in-bounds child ids index the level below
+                        });
+                    }
+                    cur.push(acc.unwrap_or_else(GroupSummary::singleton));
+                }
+                prev.clone_from(&cur);
+                out.push(cur);
+            }
+            out
+        }
+    };
+
     Ok(Aggregation {
         rep_ids: pass.rep_ids,
         members: pass.members,
@@ -544,9 +726,14 @@ pub fn aggregate(
         probe_rounds,
         rect_rows: pass.rect_rows,
         rect_cols: pass.rect_cols,
-        super_leaders: pass.tree.as_ref().map_or(0, |t| t.supers.len()),
+        super_leaders: pass
+            .tree
+            .as_ref()
+            .map_or(0, |t| t.levels.last().map_or(0, |l| l.nodes.len())),
         epsilon,
         total: n,
+        summaries: pass.summaries,
+        level_summaries,
     })
 }
 
@@ -747,6 +934,104 @@ mod tests {
         assert_eq!(a.rep_ids, b.rep_ids);
         assert_eq!(a.members, b.members);
         assert_eq!(cache.stats().hits as usize, a.probe_pairs);
+    }
+
+    #[test]
+    fn summaries_track_joins_and_bound_reflects_them() {
+        let set = scalar_set(&[0.0, 0.1, 0.9, 1.0, 0.05]);
+        let agg = aggregate(
+            &set,
+            &AggregateConfig::new(0.2),
+            &NativeBackend::new(),
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(agg.summaries.len(), 2);
+        // Group 0 absorbed ids 1 (at 0.05) and 4 (at 0.025); group 1
+        // absorbed id 3 (at 0.05).
+        assert_eq!(agg.summaries[0].count, 3);
+        assert!((agg.summaries[0].radius - 0.05).abs() < 1e-6);
+        assert!((agg.summaries[0].spread - 0.075).abs() < 1e-6);
+        assert_eq!(agg.summaries[1].count, 2);
+        assert!((agg.summaries[1].radius - 0.05).abs() < 1e-6);
+        let want = 2.0 * agg.summaries[0].radius as f64 * (2.0 * 3.0f64).sqrt();
+        assert!((agg.deviation_bound() - want).abs() < 1e-9);
+        assert!(agg.level_summaries.is_empty(), "flat pass has no levels");
+        // Identity aggregations report a zero bound.
+        assert_eq!(Aggregation::identity(5).deviation_bound(), 0.0);
+    }
+
+    #[test]
+    fn depth_one_is_the_flat_pass_even_with_a_tree_factor() {
+        let set = scalar_set(&[0.0, 0.05, 1.0, 1.05, 5.0, 5.05]);
+        let flat = aggregate(
+            &set,
+            &AggregateConfig::new(0.2),
+            &NativeBackend::new(),
+            1,
+            None,
+        )
+        .unwrap();
+        let mut cfg = AggregateConfig::new(0.2).with_tree(10.0, 1);
+        cfg.tree_depth = 1;
+        let depth1 = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
+        assert_eq!(depth1.rep_ids, flat.rep_ids);
+        assert_eq!(depth1.members, flat.members);
+        assert_eq!(depth1.probe_pairs, flat.probe_pairs);
+        assert_eq!(depth1.super_leaders, 0, "no tree is ever built");
+        assert!(depth1.level_summaries.is_empty());
+    }
+
+    #[test]
+    fn depth_three_tree_covers_the_corpus_and_folds_summaries() {
+        // Three separation scales under ε = 0.2, factor 5 (level-1
+        // radius 1.0, level-2 radius 5.0): pairs ~0.05 apart join at ε,
+        // pair leaders 0.5 apart share a level-1 node, and the block at
+        // 40 (distance 20) founds its own top-level node.
+        let set = scalar_set(&[0.0, 0.05, 1.0, 1.05, 40.0, 40.05, 41.0]);
+        let mut cfg = AggregateConfig::new(0.2).with_tree(5.0, 2);
+        cfg.tree_depth = 3;
+        let agg = aggregate(&set, &cfg, &NativeBackend::new(), 1, None).unwrap();
+        // Everyone is grouped exactly once.
+        assert_eq!(agg.members.iter().map(|m| m.len()).sum::<usize>(), 7);
+        assert_eq!(agg.level_summaries.len(), 2, "depth 3 = two node levels");
+        for level in &agg.level_summaries {
+            assert_eq!(
+                level.iter().map(|s| s.count).sum::<usize>(),
+                7,
+                "every level's summaries cover the corpus"
+            );
+        }
+        assert_eq!(
+            agg.super_leaders,
+            agg.level_summaries.last().unwrap().len(),
+            "super_leaders reports the top level"
+        );
+        // Leaf summaries cover the corpus too.
+        assert_eq!(agg.summaries.iter().map(|s| s.count).sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn depth_two_matches_the_with_tree_builder_bitwise() {
+        // `with_tree` leaves tree_depth at its default of 2, so an
+        // explicit depth-2 config is the same object; this pins that the
+        // generalized descent at depth 2 reproduces the classic tree.
+        let set = scalar_set(&[0.0, 0.05, 1.0, 1.05, 5.0, 5.05, 0.5, 4.8]);
+        let classic = AggregateConfig::new(0.2).with_tree(10.0, 1);
+        let mut explicit = classic.clone();
+        explicit.tree_depth = 2;
+        let a = aggregate(&set, &classic, &NativeBackend::new(), 1, None).unwrap();
+        let b = aggregate(&set, &explicit, &NativeBackend::new(), 1, None).unwrap();
+        assert_eq!(a.rep_ids, b.rep_ids);
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.probe_pairs, b.probe_pairs);
+        assert_eq!(a.super_leaders, b.super_leaders);
+        assert_eq!(a.level_summaries.len(), 1);
+        assert_eq!(
+            a.level_summaries[0].iter().map(|s| s.count).sum::<usize>(),
+            8
+        );
     }
 
     #[test]

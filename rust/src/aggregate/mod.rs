@@ -29,6 +29,8 @@
 
 pub mod leader;
 pub mod quantile;
+pub mod summary;
 
 pub use leader::{aggregate, Aggregation};
 pub use quantile::{derive_epsilon, quantile_of_sorted, EpsilonEstimate};
+pub use summary::{check_deviation, scale_condensed_by_counts, GroupSummary};

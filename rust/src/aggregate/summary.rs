@@ -1,0 +1,229 @@
+//! Cluster-feature summaries for stage-0 groups, and the deviation
+//! bound they buy (Schubert & Lang 2023, arXiv 2309.02552).
+//!
+//! A leader group is no longer just a representative segment: it
+//! carries a [`GroupSummary`] `(count, radius, spread)` where `radius`
+//! is the largest join distance any member was absorbed at (≤ ε by the
+//! join rule) and `spread` is the fixed-order f32 sum of those join
+//! distances.  Both are maintained *incrementally* at the single place
+//! a member joins a group, so the summation order is the deterministic
+//! join order — the same left-to-right fixed order
+//! [`crate::distance::fixed_order_sum`] prescribes, making the values
+//! bitwise reproducible across thread counts and backends (R003-clean
+//! by construction: there is no parallel reduction to reorder).
+//!
+//! Summaries compose up the leader tree with [`GroupSummary::merge`]:
+//! folding child `b` into parent `a` whose leaders sit `link` apart
+//! gives `radius' = max(r_a, link + r_b)` and
+//! `spread' = s_a + count_b·link + s_b` — triangle-inequality upper
+//! bounds on the true member-to-parent-leader quantities, exact when
+//! the backend's distance is a metric (the vector metrics; DTW violates
+//! the triangle inequality, so for DTW the folded values are the same
+//! principled estimate the tree itself is).
+//!
+//! Deviation bound.  Replacing every member by its leader perturbs any
+//! inter-group distance by at most `r_a + r_b ≤ 2·r_max`; the Ward2
+//! count-scaling `√(2·n_a·n_b/(n_a+n_b)) ≤ √(2·min(n_a,n_b))` amplifies
+//! that by at most `√(2·c_max)`.  The bound reported per run is
+//! therefore `2·r_max·√(2·c_max)` — zero exactly when aggregation is
+//! off, the pass collapsed nothing, or every group has zero radius
+//! (duplicate collapse), in which case count-weighted linkage over
+//! representatives reproduces the full-corpus Ward heights and
+//! [`check_deviation`] (the `--deviation debug` tripwire) verifies that
+//! merge by merge against the O(N²) full-AHC oracle.
+
+use crate::ahc::{ward_linkage, ward_linkage_weighted};
+use crate::corpus::{Segment, SegmentSet};
+use crate::distance::{build_condensed_cached, Condensed, PairwiseBackend, PairCache};
+
+use super::Aggregation;
+
+/// Cluster-feature summary of one leader group: member count, the
+/// largest member→leader join distance, and the fixed-order sum of all
+/// join distances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupSummary {
+    /// Members in the group, the leader included.
+    pub count: usize,
+    /// Max distance from any member to the group leader (0 for a
+    /// singleton; ≤ ε for flat-pass groups).
+    pub radius: f32,
+    /// Sum of member→leader distances in join order (fixed-order f32).
+    pub spread: f32,
+}
+
+impl GroupSummary {
+    /// The summary of a freshly-founded group: the leader alone.
+    pub fn singleton() -> GroupSummary {
+        GroupSummary {
+            count: 1,
+            radius: 0.0,
+            spread: 0.0,
+        }
+    }
+
+    /// Absorb one member that joined at distance `dist` from the
+    /// leader.  Called exactly once per join, in join order, so the
+    /// f32 accumulation order is the deterministic visit order.
+    pub fn absorb(&mut self, dist: f32) {
+        self.count += 1;
+        self.radius = self.radius.max(dist);
+        self.spread += dist;
+    }
+
+    /// Fold child summary `b` into `self` when the two leaders sit
+    /// `link` apart; the merged summary is anchored at `self`'s leader.
+    /// Triangle inequality: every member of `b` is within
+    /// `link + b.radius` of `self`'s leader, and its distance is at
+    /// most `link` plus its own join distance.
+    pub fn merge(&self, b: &GroupSummary, link: f32) -> GroupSummary {
+        GroupSummary {
+            count: self.count + b.count,
+            radius: self.radius.max(link + b.radius),
+            spread: self.spread + (b.count as f32 * link + b.spread),
+        }
+    }
+}
+
+/// Rescale a condensed distance matrix so unweighted Ward2 linkage
+/// initialised with `sizes` reproduces full-corpus Ward over the
+/// groups each object stands for: `d'_ab = √(2·n_a·n_b/(n_a+n_b))·d_ab`
+/// (the Ward2 inter-cluster distance of two pre-merged clusters whose
+/// members all sit at their representative).  All-ones sizes give the
+/// factor √1 = 1 exactly, so the identity path is bitwise unscaled.
+/// Elementwise (no reduction), f64 intermediates — R003-safe.
+pub fn scale_condensed_by_counts(cond: &Condensed, sizes: &[usize]) -> Condensed {
+    let n = cond.n();
+    debug_assert_eq!(sizes.len(), n);
+    let mut out = cond.clone();
+    for i in 0..n {
+        for j in 0..i {
+            let (ni, nj) = (sizes[i] as f64, sizes[j] as f64); // lint: in-bounds sizes is parallel to the condensed row order
+            let w = (2.0 * ni * nj / (ni + nj)).sqrt();
+            out.set(i, j, (w * cond.get(i, j) as f64) as f32);
+        }
+    }
+    out
+}
+
+/// The `--deviation debug` tripwire: rebuild the full-corpus Ward
+/// dendrogram (O(N²) — debug mode only) and the count-weighted
+/// representative dendrogram, and verify every representative-level
+/// merge height sits within the reported deviation bound of its
+/// full-AHC counterpart.  Returns the largest observed |Δheight|;
+/// errors on the first violating merge.
+///
+/// The comparison pairs the sorted representative heights with the top
+/// `m − 1` sorted full-corpus heights (the merges above the
+/// aggregation level; the `N − m` below are the intra-group joins).
+/// An f32 slack of `1e-4 · max(|h_full|, |h_agg|, 1)` per merge covers
+/// accumulation noise in the Lance-Williams recursion, mirroring the
+/// linkage test tolerance.
+pub fn check_deviation(
+    set: &SegmentSet,
+    agg: &Aggregation,
+    backend: &dyn PairwiseBackend,
+    threads: usize,
+    cache: Option<&PairCache>,
+) -> anyhow::Result<f64> {
+    let n = set.len();
+    let m = agg.reps();
+    if m < 2 || n < 2 || agg.is_identity() {
+        return Ok(0.0);
+    }
+    anyhow::ensure!(
+        n == agg.total,
+        "aggregation covers {} segments but the corpus has {n}",
+        agg.total
+    );
+    let bound = agg.deviation_bound();
+
+    let full_refs: Vec<&Segment> = set.segments.iter().collect();
+    let full_cond = build_condensed_cached(&full_refs, backend, threads, cache)?;
+    let mut full_h = ward_linkage(&full_cond).merge_heights();
+    full_h.sort_unstable_by(f32::total_cmp);
+
+    let rep_refs: Vec<&Segment> = agg.rep_ids.iter().map(|&id| &set.segments[id]).collect(); // lint: in-bounds rep_ids are segment ids of this corpus
+    let rep_cond = build_condensed_cached(&rep_refs, backend, threads, cache)?;
+    let sizes: Vec<usize> = agg.members.iter().map(|ms| ms.len()).collect();
+    let scaled = scale_condensed_by_counts(&rep_cond, &sizes);
+    let mut agg_h = ward_linkage_weighted(&scaled, &sizes).merge_heights();
+    agg_h.sort_unstable_by(f32::total_cmp);
+
+    anyhow::ensure!(
+        full_h.len() == n - 1 && agg_h.len() == m - 1,
+        "dendrogram sizes {} / {} for corpus {n} aggregated to {m}",
+        full_h.len(),
+        agg_h.len()
+    );
+    let mut max_delta = 0.0f64;
+    for (rank, (&hf, &ha)) in full_h[(n - 1) - (m - 1)..].iter().zip(&agg_h).enumerate() { // lint: in-bounds slice start: n >= m so n-1 >= m-1
+        let delta = (hf as f64 - ha as f64).abs();
+        let slack = 1e-4 * (hf.abs() as f64).max(ha.abs() as f64).max(1.0);
+        anyhow::ensure!(
+            delta <= bound + slack,
+            "deviation bound violated at merge {rank}: full height {hf} vs \
+             aggregated {ha} (|Δ| = {delta:.6e} > bound {bound:.6e} + slack {slack:.6e})"
+        );
+        max_delta = max_delta.max(delta);
+    }
+    Ok(max_delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_absorb_tracks_count_radius_and_ordered_spread() {
+        let mut s = GroupSummary::singleton();
+        assert_eq!((s.count, s.radius, s.spread), (1, 0.0, 0.0));
+        s.absorb(0.3);
+        s.absorb(0.1);
+        s.absorb(0.2);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.radius, 0.3);
+        // Fixed-order sum: ((0.3 + 0.1) + 0.2), bitwise.
+        assert_eq!(s.spread, (0.3f32 + 0.1) + 0.2);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_upper_bounds_radius_and_spread() {
+        let mut a = GroupSummary::singleton();
+        a.absorb(0.2);
+        let mut b = GroupSummary::singleton();
+        b.absorb(0.4);
+        b.absorb(0.1);
+        let m = a.merge(&b, 1.0);
+        assert_eq!(m.count, 5);
+        assert_eq!(m.radius, 1.0 + 0.4);
+        assert_eq!(m.spread, a.spread + (3.0 * 1.0 + b.spread));
+        // Merging a distant singleton only moves the radius if the link
+        // exceeds it.
+        let far = a.merge(&GroupSummary::singleton(), 0.05);
+        assert_eq!(far.radius, 0.2);
+        assert_eq!(far.count, 3);
+    }
+
+    #[test]
+    fn scaling_is_identity_for_unit_counts_and_ward_exact_for_pairs() {
+        let mut cond = Condensed::zeros(3);
+        cond.set(1, 0, 2.0);
+        cond.set(2, 0, 5.0);
+        cond.set(2, 1, 4.0);
+        let unit = scale_condensed_by_counts(&cond, &[1, 1, 1]);
+        for i in 0..3 {
+            for j in 0..i {
+                assert_eq!(unit.get(i, j).to_bits(), cond.get(i, j).to_bits());
+            }
+        }
+        // Two duplicate-pairs at distance d merge at √2·d under full
+        // Ward; the scaled representative distance must equal that.
+        let scaled = scale_condensed_by_counts(&cond, &[2, 2, 1]);
+        let want = (2.0f64 * 2.0 * 2.0 / 4.0).sqrt() * 2.0;
+        assert!((scaled.get(1, 0) as f64 - want).abs() < 1e-6);
+        // Size-2 vs size-1 group: factor √(4/3).
+        let want21 = (2.0f64 * 2.0 * 1.0 / 3.0).sqrt() * 5.0;
+        assert!((scaled.get(2, 0) as f64 - want21).abs() < 1e-6);
+    }
+}

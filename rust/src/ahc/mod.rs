@@ -20,7 +20,7 @@ pub mod silhouette;
 pub use dendrogram::Dendrogram;
 pub use lmethod::l_method;
 pub use medoid::medoids;
-pub use nnchain::ward_linkage;
+pub use nnchain::{ward_linkage, ward_linkage_weighted};
 pub use silhouette::{mean_silhouette, silhouette_k};
 
 use crate::distance::Condensed;
@@ -86,6 +86,21 @@ pub fn cluster_subset_with(
     k_override: Option<usize>,
     selection: SelectionMethod,
 ) -> SubsetClustering {
+    cluster_subset_sized(cond, max_k, k_override, selection, None)
+}
+
+/// [`cluster_subset_with`] where object `i` stands for a pre-merged
+/// group of `sizes[i]` members (the cluster-feature path): linkage runs
+/// count-weighted over `cond`, which must already be on the Ward2 scale
+/// for those sizes.  `sizes: None` is the historical unweighted path,
+/// bitwise.
+pub fn cluster_subset_sized(
+    cond: &Condensed,
+    max_k: usize,
+    k_override: Option<usize>,
+    selection: SelectionMethod,
+    sizes: Option<&[usize]>,
+) -> SubsetClustering {
     let n = cond.n();
     if n == 0 {
         return SubsetClustering {
@@ -101,7 +116,10 @@ pub fn cluster_subset_with(
             medoids: vec![0],
         };
     }
-    let dendro = ward_linkage(cond);
+    let dendro = match sizes {
+        Some(s) => ward_linkage_weighted(cond, s),
+        None => ward_linkage(cond),
+    };
     let k = match k_override {
         Some(k) => k.clamp(1, n),
         None => {

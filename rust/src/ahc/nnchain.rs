@@ -20,6 +20,20 @@ use super::dendrogram::Dendrogram;
 
 /// Compute the Ward dendrogram of a condensed distance matrix.
 pub fn ward_linkage(cond: &Condensed) -> Dendrogram {
+    ward_linkage_with_sizes(cond, None)
+}
+
+/// Ward dendrogram where object `i` stands for a pre-merged cluster of
+/// `sizes[i]` members (the cluster-feature path: stage-0 groups enter
+/// linkage with their member counts, per Schubert & Lang).  The input
+/// distances must already be on the Ward2 scale for those sizes — see
+/// [`crate::aggregate::summary::scale_condensed_by_counts`].  All-ones
+/// sizes (or `ward_linkage`) is the historical unweighted path, bitwise.
+pub fn ward_linkage_weighted(cond: &Condensed, sizes: &[usize]) -> Dendrogram {
+    ward_linkage_with_sizes(cond, Some(sizes))
+}
+
+fn ward_linkage_with_sizes(cond: &Condensed, sizes: Option<&[usize]>) -> Dendrogram {
     let n = cond.n();
     if n < 2 {
         return Dendrogram::new(n, Vec::new());
@@ -29,7 +43,13 @@ pub fn ward_linkage(cond: &Condensed) -> Dendrogram {
     // clusters not yet merged away.  Indices 0..n are the original
     // objects throughout; a merged cluster keeps the *smaller* index.
     let mut d = cond.clone();
-    let mut size = vec![1usize; n];
+    let mut size = match sizes {
+        Some(s) => {
+            debug_assert_eq!(s.len(), n);
+            s.to_vec()
+        }
+        None => vec![1usize; n],
+    };
     let mut alive = vec![true; n];
 
     let mut raw: Vec<(usize, usize, f32)> = Vec::with_capacity(n - 1);

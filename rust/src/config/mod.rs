@@ -221,6 +221,11 @@ pub struct AggregateConfig {
     /// Nearest super-groups each segment descends into when the tree is
     /// active (the probe fan-out).
     pub tree_probe: usize,
+    /// Leader-tree depth D: number of levels including the leaders
+    /// themselves.  1 forces the flat pass (bitwise, even with
+    /// `tree_factor > 0`); 2 is the historical two-level tree; deeper
+    /// trees add node levels at radius `tree_factor`ˡ·ε.
+    pub tree_depth: usize,
     /// Derive ε as this quantile of the pair distances of a seeded
     /// corpus sample (overrides `epsilon`; None = absolute radius).
     /// Must lie strictly inside (0, 1).
@@ -241,6 +246,7 @@ impl Default for AggregateConfig {
             batch_rows: 64,
             tree_factor: 0.0,
             tree_probe: 2,
+            tree_depth: 2,
             quantile: None,
             quantile_sample: 256,
             quantile_seed: 0xE5,
@@ -272,6 +278,12 @@ impl AggregateConfig {
     pub fn with_tree(mut self, factor: f32, probe: usize) -> Self {
         self.tree_factor = factor;
         self.tree_probe = probe;
+        self
+    }
+
+    /// Set the leader-tree depth D (1 = flat pass, 2 = two-level tree).
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        self.tree_depth = depth;
         self
     }
 
@@ -315,6 +327,9 @@ impl AggregateConfig {
         }
         if self.tree_probe == 0 {
             anyhow::bail!("aggregate tree_probe must be >= 1 (descend into at least one group)");
+        }
+        if self.tree_depth == 0 {
+            anyhow::bail!("aggregate tree_depth must be >= 1 (1 = flat pass, 2 = two-level tree)");
         }
         if let Some(q) = self.quantile {
             if !q.is_finite() || q <= 0.0 || q >= 1.0 {
@@ -372,6 +387,86 @@ impl PruneMode {
     /// Whether the cascade wraps the backend at all.
     pub fn is_active(&self) -> bool {
         !matches!(self, PruneMode::Off)
+    }
+}
+
+/// How the per-run aggregation deviation bound
+/// ([`crate::aggregate::summary`]) is handled.
+///
+/// `Report` (default) computes the bound from the cluster-feature
+/// summaries and stamps it on the stage-0 [`crate::telemetry`] record —
+/// free.  `Debug` additionally rebuilds the full-corpus Ward dendrogram
+/// (O(N²) — the admissibility oracle, for tests and small corpora) and
+/// fails the run if any representative-level merge height deviates from
+/// its full-AHC counterpart by more than the reported bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeviationMode {
+    /// Compute and report the bound (default).
+    #[default]
+    Report,
+    /// Report *and* verify every merge against the full-AHC oracle.
+    Debug,
+}
+
+impl DeviationMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviationMode::Report => "report",
+            DeviationMode::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "report" | "on" | "default" => Ok(DeviationMode::Report),
+            "debug" | "verify" => Ok(DeviationMode::Debug),
+            other => anyhow::bail!("unknown deviation mode '{other}' (report|debug)"),
+        }
+    }
+
+    /// Whether the O(N²) per-merge recheck runs.
+    pub fn is_debug(&self) -> bool {
+        matches!(self, DeviationMode::Debug)
+    }
+}
+
+/// How streaming retirement resolves aggregated members to final
+/// clusters ([`crate::mahc::streaming`]).
+///
+/// `Leader` (default) follows the member → leader forwarding pointer —
+/// the historical path and the bitwise oracle.  `Medoid` reassigns
+/// every aggregated member to its nearest *final* medoid through the
+/// retirement rectangle at stream end: members a leader dragged to the
+/// wrong side of a cluster boundary are recovered, so F-measure can
+/// only benefit (pinned ≥ leader mode on the discovery fixture).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RetireMode {
+    /// Members inherit their leader's final cluster (default).
+    #[default]
+    Leader,
+    /// Members are reassigned to their nearest final medoid.
+    Medoid,
+}
+
+impl RetireMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RetireMode::Leader => "leader",
+            RetireMode::Medoid => "medoid",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "leader" | "default" => Ok(RetireMode::Leader),
+            "medoid" | "nearest" => Ok(RetireMode::Medoid),
+            other => anyhow::bail!("unknown retire mode '{other}' (leader|medoid)"),
+        }
+    }
+
+    /// Whether the nearest-final-medoid reassignment runs.
+    pub fn is_medoid(&self) -> bool {
+        matches!(self, RetireMode::Medoid)
     }
 }
 
@@ -449,6 +544,12 @@ pub struct AlgoConfig {
     /// Lower-bound pruning cascade around the backend (off = exact
     /// path, bitwise the historical behaviour).
     pub prune: PruneMode,
+    /// Aggregation deviation bound: report it (free) or verify it
+    /// against the O(N²) full-AHC oracle per merge (debug).
+    pub deviation: DeviationMode,
+    /// Streaming member retirement: inherit the leader's cluster
+    /// (bitwise oracle) or reassign to the nearest final medoid.
+    pub retire: RetireMode,
 }
 
 impl Default for AlgoConfig {
@@ -469,6 +570,8 @@ impl Default for AlgoConfig {
             cache_bytes: 0,
             aggregate: AggregateConfig::default(),
             prune: PruneMode::Off,
+            deviation: DeviationMode::Report,
+            retire: RetireMode::Leader,
         }
     }
 }
@@ -511,6 +614,18 @@ impl AlgoConfig {
     /// Select the cluster-count selection method.
     pub fn with_selection(mut self, selection: SelectionMethod) -> Self {
         self.selection = selection;
+        self
+    }
+
+    /// Select the aggregation deviation-bound mode.
+    pub fn with_deviation(mut self, deviation: DeviationMode) -> Self {
+        self.deviation = deviation;
+        self
+    }
+
+    /// Select the streaming member-retirement mode.
+    pub fn with_retire(mut self, retire: RetireMode) -> Self {
+        self.retire = retire;
         self
     }
 
@@ -722,6 +837,9 @@ pub fn apply_overrides(cfg: &mut AlgoConfig, kv: &[(String, String)]) -> anyhow:
             "aggregate_batch" => cfg.aggregate.batch_rows = v.parse()?,
             "aggregate_tree" => cfg.aggregate.tree_factor = v.parse()?,
             "aggregate_probe" => cfg.aggregate.tree_probe = v.parse()?,
+            "aggregate_depth" => cfg.aggregate.tree_depth = v.parse()?,
+            "deviation" => cfg.deviation = DeviationMode::parse(v)?,
+            "retire" => cfg.retire = RetireMode::parse(v)?,
             "aggregate_quantile" => {
                 cfg.aggregate.quantile = if v == "none" {
                     None
@@ -940,6 +1058,74 @@ mod tests {
         assert_eq!(b.tree_probe, 3);
         assert_eq!(b.quantile, Some(0.5));
         assert_eq!(b.quantile_sample, 64);
+    }
+
+    #[test]
+    fn aggregate_depth_key_parses_and_validates() {
+        let d = AggregateConfig::default();
+        assert_eq!(d.tree_depth, 2, "historical two-level tree by default");
+        let mut cfg = AlgoConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &[("aggregate_depth".to_string(), "3".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregate.tree_depth, 3);
+        assert_eq!(AggregateConfig::new(1.0).with_depth(4).tree_depth, 4);
+        assert!(AggregateConfig::new(1.0).with_depth(1).validate().is_ok());
+        assert!(AggregateConfig::new(1.0).with_depth(0).validate().is_err());
+    }
+
+    #[test]
+    fn deviation_mode_parses_and_defaults_report() {
+        assert_eq!(AlgoConfig::default().deviation, DeviationMode::Report);
+        assert!(!DeviationMode::default().is_debug());
+        for (value, want) in [
+            ("report", DeviationMode::Report),
+            ("on", DeviationMode::Report),
+            ("debug", DeviationMode::Debug),
+            ("verify", DeviationMode::Debug),
+        ] {
+            let mut cfg = AlgoConfig::default();
+            apply_overrides(
+                &mut cfg,
+                &[("deviation".to_string(), value.to_string())],
+            )
+            .unwrap();
+            assert_eq!(cfg.deviation, want, "deviation = {value}");
+            assert_eq!(DeviationMode::parse(want.name()).unwrap(), want, "round-trip");
+        }
+        assert!(DeviationMode::parse("maybe").is_err());
+        assert!(DeviationMode::Debug.is_debug());
+        assert_eq!(
+            AlgoConfig::default()
+                .with_deviation(DeviationMode::Debug)
+                .deviation,
+            DeviationMode::Debug
+        );
+    }
+
+    #[test]
+    fn retire_mode_parses_and_defaults_leader() {
+        assert_eq!(AlgoConfig::default().retire, RetireMode::Leader);
+        assert!(!RetireMode::default().is_medoid());
+        for (value, want) in [
+            ("leader", RetireMode::Leader),
+            ("default", RetireMode::Leader),
+            ("medoid", RetireMode::Medoid),
+            ("nearest", RetireMode::Medoid),
+        ] {
+            let mut cfg = AlgoConfig::default();
+            apply_overrides(&mut cfg, &[("retire".to_string(), value.to_string())]).unwrap();
+            assert_eq!(cfg.retire, want, "retire = {value}");
+            assert_eq!(RetireMode::parse(want.name()).unwrap(), want, "round-trip");
+        }
+        assert!(RetireMode::parse("drop").is_err());
+        assert!(RetireMode::Medoid.is_medoid());
+        assert_eq!(
+            AlgoConfig::default().with_retire(RetireMode::Medoid).retire,
+            RetireMode::Medoid
+        );
     }
 
     #[test]

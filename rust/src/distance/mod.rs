@@ -257,11 +257,6 @@ pub trait PairwiseBackend: Sync {
     }
 }
 
-/// Deprecated pre-metric-generic name for [`PairwiseBackend`], kept
-/// one PR as a re-export so downstream call sites keep compiling.
-/// Migrate to `PairwiseBackend`; this alias will be removed.
-pub use self::PairwiseBackend as DtwBackend;
-
 /// Native rolling-row DP backend.
 pub struct NativeBackend {
     /// Optional Sakoe-Chiba band radius.

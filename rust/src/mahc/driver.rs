@@ -114,6 +114,30 @@ impl<'a> MahcDriver<'a> {
             .unwrap_or_default()
             .delta(&agg_prune_snapshot);
 
+        // Debug-mode admissibility recheck: recluster the full corpus
+        // and verify the representative run's merge heights stay within
+        // the reported deviation bound.  Opt-in (O(N²)) — the Report
+        // default only stamps the closed-form bound.
+        if cfg.deviation.is_debug() {
+            if let Some(a) = &agg {
+                aggregate::check_deviation(self.set, a, backend, cfg.threads, cache)?;
+            }
+        }
+
+        // Count-weighted stage 1: each representative enters linkage
+        // carrying its group's mass (None when nothing collapsed, which
+        // keeps the historical unweighted path bitwise).
+        let counts: Option<Vec<usize>> = agg.as_ref().and_then(|a| {
+            if a.members.iter().all(|m| m.len() <= 1) {
+                return None;
+            }
+            let mut c = vec![1usize; self.set.len()];
+            for (pos, &rep) in a.rep_ids.iter().enumerate() {
+                c[rep] = a.members[pos].len().max(1); // lint: in-bounds rep ids and member groups come from the same pass
+            }
+            Some(c)
+        });
+
         let mut rng = Rng::seed_from(cfg.seed);
         let ids: Vec<usize> = match &agg {
             Some(a) => a.rep_ids.clone(),
@@ -125,6 +149,7 @@ impl<'a> MahcDriver<'a> {
             cfg,
             backend,
             cache,
+            counts.as_deref(),
             &mut rng,
             Some(&mut history),
         )?;
@@ -171,6 +196,7 @@ impl<'a> MahcDriver<'a> {
                 r.probe_rect_cols = a.rect_cols;
                 r.super_leaders = a.super_leaders;
                 r.aggregate_epsilon = a.epsilon as f64;
+                r.deviation_bound = a.deviation_bound();
                 // The leader pass ran before the episode's first cache
                 // snapshot; without this, its misses — single-row probes
                 // and batched rectangles alike — would be invisible and
@@ -243,12 +269,14 @@ pub(crate) struct EpisodeOutcome {
 /// did, so with `ids == 0..n` this *is* [`MahcDriver::run`]'s loop; the
 /// streaming driver calls it with (shard ∪ carried medoids).  Pushes one
 /// [`IterationRecord`] per iteration into `history` when given.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_episode(
     set: &SegmentSet,
     ids: &[usize],
     cfg: &AlgoConfig,
     backend: &dyn PairwiseBackend,
     cache: Option<&PairCache>,
+    counts: Option<&[usize]>,
     rng: &mut Rng,
     mut history: Option<&mut RunHistory>,
 ) -> anyhow::Result<EpisodeOutcome> {
@@ -304,6 +332,7 @@ pub(crate) fn run_episode(
             cfg.max_clusters_frac,
             cache,
             cfg.selection,
+            counts,
         )?;
         let total_clusters: usize = outcomes.iter().map(|o| o.k).sum();
         first_stage_total.get_or_insert(total_clusters);
@@ -417,6 +446,7 @@ pub(crate) fn run_episode(
                     probe_rect_cols: 0,
                     super_leaders: 0,
                     aggregate_epsilon: 0.0,
+                    deviation_bound: 0.0,
                     backend: backend.name().to_string(),
                     pairs_per_sec: pairs_rate(iter_pairs, wall),
                     metric: backend.metric_name().to_string(),
@@ -482,6 +512,7 @@ pub(crate) fn run_episode(
                 probe_rect_cols: 0,
                 super_leaders: 0,
                 aggregate_epsilon: 0.0,
+                deviation_bound: 0.0,
                 backend: backend.name().to_string(),
                 pairs_per_sec: pairs_rate(iter_pairs, wall),
                 metric: backend.metric_name().to_string(),
@@ -937,7 +968,7 @@ mod tests {
         };
         let ids: Vec<usize> = (0..80).filter(|i| i % 2 == 0).collect();
         let mut rng = Rng::seed_from(cfg.seed);
-        let ep = run_episode(&set, &ids, &cfg, &backend, None, &mut rng, None).unwrap();
+        let ep = run_episode(&set, &ids, &cfg, &backend, None, None, &mut rng, None).unwrap();
         assert_eq!(ep.labels.len(), ids.len());
         assert!(ep.labels.iter().all(|&l| l < ep.k));
         assert!(!ep.medoid_ids.is_empty());

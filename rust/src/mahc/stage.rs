@@ -3,6 +3,7 @@
 //! silhouette), medoid extraction — dispatched to the worker pool.
 
 use crate::ahc::{self, SelectionMethod};
+use crate::aggregate::scale_condensed_by_counts;
 use crate::corpus::{Segment, SegmentSet};
 use crate::distance::{build_condensed_cached, PairwiseBackend, PairCache};
 use crate::util::pool::parallel_map;
@@ -52,11 +53,21 @@ pub fn run_stage1(
         max_clusters_frac,
         cache,
         SelectionMethod::LMethod,
+        None,
     )
 }
 
 /// Run stage 1 over all subsets on up to `threads` workers, choosing
 /// each subset's cluster count with `selection`.
+///
+/// `counts`, indexed by global segment id, marks each object as a
+/// stage-0 group of that many members (the cluster-feature path):
+/// subset linkage then runs count-weighted over the Ward2-rescaled
+/// condensed matrix, so representative merges honour the mass behind
+/// them.  `None` — or all-ones counts — is the historical unweighted
+/// path, bitwise (the raw matrix is always built through the shared
+/// cache first; scaling is a per-subset copy).
+#[allow(clippy::too_many_arguments)]
 pub fn run_stage1_with(
     set: &SegmentSet,
     subsets: &[Vec<usize>],
@@ -65,10 +76,19 @@ pub fn run_stage1_with(
     max_clusters_frac: f64,
     cache: Option<&PairCache>,
     selection: SelectionMethod,
+    counts: Option<&[usize]>,
 ) -> anyhow::Result<Vec<SubsetOutcome>> {
     let results: Vec<anyhow::Result<SubsetOutcome>> =
         parallel_map(subsets.len(), threads, |s| {
-            cluster_one_subset(set, &subsets[s], backend, max_clusters_frac, cache, selection)
+            cluster_one_subset(
+                set,
+                &subsets[s],
+                backend,
+                max_clusters_frac,
+                cache,
+                selection,
+                counts,
+            )
         })?;
     results.into_iter().collect()
 }
@@ -80,6 +100,7 @@ fn cluster_one_subset(
     max_clusters_frac: f64,
     cache: Option<&PairCache>,
     selection: SelectionMethod,
+    counts: Option<&[usize]>,
 ) -> anyhow::Result<SubsetOutcome> {
     let refs: Vec<&Segment> = ids.iter().map(|&i| &set.segments[i]).collect();
     // Distance build is itself single-threaded here: parallelism is
@@ -88,7 +109,20 @@ fn cluster_one_subset(
     // cache and never reach the backend again.
     let cond = build_condensed_cached(&refs, backend, 1, cache)?;
     let max_k = ((ids.len() as f64 * max_clusters_frac).ceil() as usize).max(2);
-    let clustering = ahc::cluster_subset_with(&cond, max_k, None, selection);
+    // Count-weighted path only when some member of this subset actually
+    // stands for a collapsed group; otherwise the scale factor is √1
+    // everywhere and the unweighted code is the same answer, bitwise.
+    let sizes: Option<Vec<usize>> = counts.and_then(|c| {
+        let s: Vec<usize> = ids.iter().map(|&i| c[i]).collect(); // lint: in-bounds counts is indexed by global segment id
+        s.iter().any(|&n| n > 1).then_some(s)
+    });
+    let clustering = match &sizes {
+        Some(s) => {
+            let scaled = scale_condensed_by_counts(&cond, s);
+            ahc::cluster_subset_sized(&scaled, max_k, None, selection, Some(s))
+        }
+        None => ahc::cluster_subset_with(&cond, max_k, None, selection),
+    };
     let medoid_ids = clustering
         .medoids
         .iter()
@@ -190,6 +224,7 @@ mod tests {
             0.4,
             None,
             SelectionMethod::Silhouette,
+            None,
         )
         .unwrap();
         assert_eq!(out.len(), 1);

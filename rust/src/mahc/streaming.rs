@@ -142,6 +142,9 @@ struct Prepared {
     /// Cascade counter movement of the leader pass, folded into shard
     /// 0's record like `agg_cache` (all zero when pruning is off).
     agg_prune: PruneStats,
+    /// Per-segment group counts for count-weighted stage 1 (`None`
+    /// when aggregation collapsed nothing — the bitwise plain path).
+    counts: Option<Vec<usize>>,
     rng: Rng,
     plan: Shards,
     total_shards: usize,
@@ -326,6 +329,29 @@ impl<'a> StreamSession<'a> {
             "aggregation over a nonempty corpus produced no representatives"
         );
 
+        // Debug-mode admissibility recheck, mirroring the batch driver:
+        // recluster the full corpus and verify the representative run's
+        // merge heights stay within the reported deviation bound.
+        if algo.deviation.is_debug() {
+            if let Some(a) = &agg {
+                aggregate::check_deviation(set, a, backend, algo.threads, cache)?;
+            }
+        }
+
+        // Count-weighted stage 1: each representative enters every
+        // episode's linkage carrying its group's mass (None when
+        // nothing collapsed, keeping the plain path bitwise).
+        let counts: Option<Vec<usize>> = agg.as_ref().and_then(|a| {
+            if a.members.iter().all(|g| g.len() <= 1) {
+                return None;
+            }
+            let mut c = vec![1usize; set.len()];
+            for (pos, &rep) in a.rep_ids.iter().enumerate() {
+                c[rep] = a.members[pos].len().max(1); // lint: in-bounds rep ids and member groups come from the same pass
+            }
+            Some(c)
+        });
+
         // Seeded *after* aggregation so the episode RNG stream is
         // identical whether or not stage 0 ran.
         let rng = Rng::seed_from(algo.seed);
@@ -346,6 +372,7 @@ impl<'a> StreamSession<'a> {
             agg,
             agg_cache,
             agg_prune,
+            counts,
             rng,
             plan,
             total_shards,
@@ -397,7 +424,16 @@ impl<'a> StreamSession<'a> {
 
         let shard_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
         let prune_snapshot = backend.prune_stats().unwrap_or_default();
-        let ep = run_episode(set, &active, algo, backend, cache, &mut st.rng, None)?;
+        let ep = run_episode(
+            set,
+            &active,
+            algo,
+            backend,
+            cache,
+            st.counts.as_deref(),
+            &mut st.rng,
+            None,
+        )?;
 
         let mut rect_bytes = 0usize;
         let mut rect_pairs = 0usize;
@@ -558,6 +594,10 @@ impl<'a> StreamSession<'a> {
             probe_rect_cols: rect_cols,
             super_leaders: supers,
             aggregate_epsilon: eps_eff,
+            deviation_bound: match (&st.agg, t) {
+                (Some(a), 0) => a.deviation_bound(),
+                _ => 0.0,
+            },
             backend: backend.name().to_string(),
             // Shard throughput counts the episode's pairs plus the
             // retirement rectangle's.
@@ -594,6 +634,101 @@ impl<'a> StreamSession<'a> {
         for (pos, &id) in final_active.iter().enumerate() {
             labels[id] = final_ep.labels[pos];
         }
+
+        // Quality-bump retirement (`--retire medoid`): aggregated
+        // members re-home to their nearest *final* medoid instead of
+        // inheriting their stage-0 leader's label — one rectangle over
+        // segments the leader pass never compared, trading probe work
+        // for assignment accuracy.  Leader mode (the default) skips
+        // this block entirely and stays the bitwise forwarding oracle.
+        if self.cfg.algo.retire.is_medoid() {
+            if let Some(a) = &st.agg {
+                let pending: Vec<usize> = a
+                    .rep_ids
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(pos, &rep)| {
+                        a.members[pos].iter().copied().filter(move |&id| id != rep) // lint: in-bounds groups are parallel to rep_ids
+                    })
+                    .filter(|&id| labels[id] == usize::MAX) // lint: in-bounds labels is sized n
+                    .collect();
+                if !pending.is_empty() {
+                    let backend = self.backend.get();
+                    let cache = self.cache.as_ref();
+                    let threads = self.cfg.algo.threads;
+                    let xs: Vec<&Segment> = final_ep
+                        .medoid_ids
+                        .iter()
+                        .map(|&i| &set.segments[i]) // lint: in-bounds pending holds segment ids
+                        .collect();
+                    let ys: Vec<&Segment> =
+                        pending.iter().map(|&i| &set.segments[i]).collect(); // lint: in-bounds pending holds segment ids
+                    let rect_snapshot = cache.map(|c| c.stats()).unwrap_or_default();
+                    // Column argmin, strict < over rows in increasing
+                    // order — the same deterministic tie rule as the
+                    // per-shard retirement rectangle in `step()`.
+                    let ny = ys.len();
+                    let mut best = vec![0usize; ny];
+                    let mut best_d = vec![f32::INFINITY; ny];
+                    if backend.supports_pruning() {
+                        for (i, x) in xs.iter().enumerate() {
+                            let threshold = if i == 0 {
+                                None
+                            } else {
+                                let mut t = 0.0f32;
+                                for &b in &best_d {
+                                    t = t.max(b);
+                                }
+                                Some(t)
+                            };
+                            let row = build_cross_cached_pruned(
+                                &[*x],
+                                &ys,
+                                backend,
+                                threads,
+                                cache,
+                                threshold,
+                            )?;
+                            anyhow::ensure!(
+                                row.len() == ny,
+                                "backend returned {} medoid-retirement distances for {} objects",
+                                row.len(),
+                                ny
+                            );
+                            for ((bd, b), &v) in
+                                best_d.iter_mut().zip(best.iter_mut()).zip(&row)
+                            {
+                                if v < *bd {
+                                    *bd = v;
+                                    *b = i;
+                                }
+                            }
+                        }
+                    } else {
+                        let d = build_cross_cached(&xs, &ys, backend, threads, cache)?;
+                        for (i, row) in d.chunks_exact(ny).enumerate() {
+                            for (j, &v) in row.iter().enumerate() {
+                                if v < best_d[j] { // lint: in-bounds best_d is sized pending.len()
+                                    best_d[j] = v; // lint: in-bounds best_d is sized pending.len()
+                                    best[j] = i; // lint: in-bounds best is sized pending.len()
+                                }
+                            }
+                        }
+                    }
+                    if let Some(c) = cache {
+                        let delta = c.stats().delta(&rect_snapshot);
+                        self.assign_cache.hits += delta.hits;
+                        self.assign_cache.misses += delta.misses;
+                        self.assign_cache.evictions += delta.evictions;
+                    }
+                    self.pairs += xs.len() * ny;
+                    for (j, &id) in pending.iter().enumerate() {
+                        labels[id] = labels[final_ep.medoid_ids[best[j]]]; // lint: in-bounds best[j] picks a final medoid; labels is sized n
+                    }
+                }
+            }
+        }
+
         // Retired objects follow their forwarding chain: each hop lands
         // on a medoid that stayed active at least one more shard, so
         // every chain terminates at a finally-labelled object.

@@ -31,8 +31,8 @@ use std::sync::Arc;
 
 use mahc::baselines;
 use mahc::config::{
-    apply_overrides, AlgoConfig, Convergence, DatasetSpec, FinalK, NamedDataset, PruneMode,
-    ServeConfig, StreamConfig,
+    apply_overrides, AlgoConfig, Convergence, DatasetSpec, DeviationMode, FinalK, NamedDataset,
+    PruneMode, RetireMode, ServeConfig, StreamConfig,
 };
 use mahc::ahc::SelectionMethod;
 use mahc::corpus::{
@@ -50,8 +50,9 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "p0", "beta", "iters", "max-iters", "k", "seed", "threads", "backend",
     "algo", "artifacts", "out", "config", "merge-min", "cache-mb", "shard-size", "shard-seed",
     "aggregate-eps", "aggregate-cap", "aggregate-batch", "aggregate-tree", "aggregate-probe",
-    "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed", "sessions", "fleet-cap",
-    "queue-cap", "workers", "fleet-cache-mb", "fault-session", "prune", "metric", "selection",
+    "aggregate-quantile", "aggregate-sample", "aggregate-quantile-seed", "aggregate-depth",
+    "sessions", "fleet-cap", "queue-cap", "workers", "fleet-cache-mb", "fault-session", "prune",
+    "metric", "selection", "deviation", "retire",
 ];
 
 fn main() {
@@ -90,13 +91,19 @@ fn run() -> anyhow::Result<()> {
             eprintln!("          [--aggregate-sample N  segments sampled for the quantile estimate]");
             eprintln!("          [--aggregate-quantile-seed N  seed of the quantile sampler]");
             eprintln!("          [--aggregate-batch N  segments probed per rectangle round (1 = serial)]");
-            eprintln!("          [--aggregate-tree K  two-level leader tree, super-radius K*eps (0 = flat)]");
+            eprintln!("          [--aggregate-tree K  leader tree, per-level radius factor K (0 = flat)]");
+            eprintln!("          [--aggregate-depth D  leader-tree levels (1 = flat, 2 = classic tree)]");
             eprintln!("          [--aggregate-probe N  nearest super-groups each segment descends into]");
+            eprintln!("          [--deviation report|debug  report the stage-0 deviation bound, or");
+            eprintln!("                     recluster the full corpus and verify it (debug, O(N^2))]");
             eprintln!("  stream  --dataset <name> [--scale F] --shard-size N [--shard-seed N]");
             eprintln!("          [--p0 N] [--beta N] [--iters N] [--backend native|blocked|xla]");
             eprintln!("          [--cache-mb N] [--aggregate-eps F] [--aggregate-cap N] [--out FILE]");
             eprintln!("          [--aggregate-quantile Q] [--aggregate-sample N] [--aggregate-batch N]");
-            eprintln!("          [--aggregate-tree K] [--aggregate-probe N] [--prune off|on|debug]");
+            eprintln!("          [--aggregate-tree K] [--aggregate-depth D] [--aggregate-probe N]");
+            eprintln!("          [--prune off|on|debug] [--deviation report|debug]");
+            eprintln!("          [--retire leader|medoid  aggregated members inherit their leader's");
+            eprintln!("                     label (bitwise oracle) or re-home to the nearest final medoid]");
             eprintln!("  serve   --dataset <name> [--scale F] [--sessions N   concurrent streams]");
             eprintln!("          [--fleet-cap N    max concurrently-active sessions]");
             eprintln!("          [--queue-cap N    sessions allowed to wait behind the cap]");
@@ -202,6 +209,15 @@ fn algo_config_from(args: &Args) -> anyhow::Result<AlgoConfig> {
     }
     if let Some(p) = args.get_parsed::<usize>("aggregate-probe")? {
         cfg.aggregate.tree_probe = p;
+    }
+    if let Some(d) = args.get_parsed::<usize>("aggregate-depth")? {
+        cfg.aggregate.tree_depth = d;
+    }
+    if let Some(d) = args.get("deviation") {
+        cfg.deviation = DeviationMode::parse(d)?;
+    }
+    if let Some(r) = args.get("retire") {
+        cfg.retire = RetireMode::parse(r)?;
     }
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
@@ -379,6 +395,11 @@ fn cluster_with(
                         r0.sample_pairs,
                         r0.sample_segments
                     );
+                    let deviation_bound = r0.deviation_bound;
+                    println!(
+                        "  quality: stage-1 merge heights deviate from the full corpus \
+                         by at most {deviation_bound:.4} (2*r_max*sqrt(2*c_max))"
+                    );
                 }
             }
             if cache_on {
@@ -471,6 +492,7 @@ fn stream_with(
 ) -> anyhow::Result<()> {
     let cache_on = cfg.algo.cache_bytes > 0;
     let beta = cfg.algo.beta;
+    let retire = cfg.algo.retire;
     let driver = StreamingDriver::new(set, cfg, backend)?;
     let res = driver.run()?;
     println!("shard carried  P_f  maxOcc preOcc splits   K_tot   F       wall_s   pairs/s");
@@ -519,6 +541,13 @@ fn stream_with(
                 r0.super_leaders,
                 r0.sample_pairs,
                 r0.sample_segments
+            );
+            let deviation_bound = r0.deviation_bound;
+            println!(
+                "  quality: stage-1 merge heights deviate from the full corpus \
+                 by at most {deviation_bound:.4} (2*r_max*sqrt(2*c_max)); \
+                 retire mode {}",
+                retire.name()
             );
         }
     }

@@ -188,6 +188,11 @@ pub struct IterationRecord {
     /// `aggregate_quantile` is configured (first record only; 0.0 when
     /// aggregation is off).
     pub aggregate_epsilon: f64,
+    /// Linkage-height deviation bound vs full AHC, computed from the
+    /// stage-0 cluster-feature summaries
+    /// ([`crate::aggregate::summary`]); first record only, 0.0 when
+    /// aggregation is off or the pass collapsed nothing.
+    pub deviation_bound: f64,
     /// Name of the DTW backend that served this step's distances
     /// ([`crate::distance::PairwiseBackend::name`]).
     pub backend: String,
@@ -239,6 +244,7 @@ impl IterationRecord {
             ("probe_rect_cols", json::num(self.probe_rect_cols as f64)),
             ("super_leaders", json::num(self.super_leaders as f64)),
             ("aggregate_epsilon", json::num(self.aggregate_epsilon)),
+            ("deviation_bound", json::num(self.deviation_bound)),
             ("backend", json::s(&self.backend)),
             ("pairs_per_sec", json::num(self.pairs_per_sec)),
             ("metric", json::s(&self.metric)),
@@ -371,6 +377,12 @@ impl RunHistory {
     /// Effective stage-0 leader radius of the run (0.0 when off).
     pub fn aggregate_epsilon(&self) -> f64 {
         self.records.first().map_or(0.0, |r| r.aggregate_epsilon)
+    }
+
+    /// Aggregation deviation bound of the run (0.0 when aggregation is
+    /// off or the pass collapsed nothing).
+    pub fn deviation_bound(&self) -> f64 {
+        self.records.first().map_or(0.0, |r| r.deviation_bound)
     }
 
     /// Whole-run cache counters (sum of per-iteration deltas).
@@ -535,6 +547,7 @@ mod tests {
             probe_rect_cols: if i == 0 { 9 } else { 0 },
             super_leaders: if i == 0 { 3 } else { 0 },
             aggregate_epsilon: if i == 0 { 1.25 } else { 0.0 },
+            deviation_bound: if i == 0 { 0.75 } else { 0.0 },
             backend: "native".to_string(),
             pairs_per_sec: 1000.0 * (i + 1) as f64,
             metric: "dtw".to_string(),
@@ -559,6 +572,7 @@ mod tests {
         assert_eq!(h.probe_rect(), (16, 9));
         assert_eq!(h.super_leaders(), 3);
         assert_eq!(h.aggregate_epsilon(), 1.25);
+        assert_eq!(h.deviation_bound(), 0.75);
         assert_eq!(h.peak_matrix_bytes(), 100 * 100 * 2);
         let total = h.cache_total();
         assert_eq!(total.hits, 6);
@@ -652,6 +666,10 @@ mod tests {
         assert_eq!(
             iters[0].get("aggregate_epsilon").unwrap().as_f64().unwrap(),
             1.25
+        );
+        assert_eq!(
+            iters[0].get("deviation_bound").unwrap().as_f64().unwrap(),
+            0.75
         );
         assert_eq!(
             iters[0].get("sample_segments").unwrap().as_usize().unwrap(),

@@ -16,7 +16,7 @@ mod common;
 use mahc::aggregate::{aggregate, derive_epsilon, quantile_of_sorted};
 use mahc::config::{AggregateConfig, AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::{generate, Segment, SegmentSet};
-use mahc::distance::{build_condensed, BlockedBackend, DtwBackend, NativeBackend, PairCache};
+use mahc::distance::{build_condensed, BlockedBackend, PairwiseBackend, NativeBackend, PairCache};
 use mahc::mahc::{MahcDriver, StreamingDriver};
 
 /// All pair distances of a corpus, sorted ascending — the exact
@@ -136,7 +136,7 @@ fn aggregation_is_invariant_to_threads_and_backend() {
     let eps = below_min_nonzero_distance(&set);
     let native = NativeBackend::new();
     let blocked = BlockedBackend::new();
-    let backends: [(&str, &dyn DtwBackend); 2] = [("native", &native), ("blocked", &blocked)];
+    let backends: [(&str, &dyn PairwiseBackend); 2] = [("native", &native), ("blocked", &blocked)];
 
     let reference = aggregate(&set, &AggregateConfig::new(eps), &native, 1, None).unwrap();
     let mut runs = Vec::new();
@@ -395,7 +395,7 @@ fn batched_probing_is_bitwise_the_per_row_reference() {
     let eps = quantile_of_sorted(&sorted_pair_distances(&set), 0.25);
     let native = NativeBackend::new();
     let blocked = BlockedBackend::new();
-    let backends: [(&str, &dyn DtwBackend); 2] = [("scalar", &native), ("blocked", &blocked)];
+    let backends: [(&str, &dyn PairwiseBackend); 2] = [("scalar", &native), ("blocked", &blocked)];
 
     for cap in [None, Some(4)] {
         let mut per_row = AggregateConfig::new(eps).with_batch_rows(1);

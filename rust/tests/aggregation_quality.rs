@@ -1,0 +1,480 @@
+//! Aggregation-quality conformance: the oracle wall for the
+//! cluster-feature path.
+//!
+//! * group summaries `(count, radius, spread)` fuzz-checked against a
+//!   brute-force recomputation through the backend under test, bitwise,
+//!   across backends × threads (the CI backend matrix sweeps
+//!   `MAHC_TEST_BACKEND` / `MAHC_TEST_THREADS` over this suite);
+//! * `GroupSummary::merge` invariants: count additivity independent of
+//!   merge order, radius/spread monotone upper bounds;
+//! * tree-folded level summaries upper-bound the true descendant
+//!   member→anchor distances on a metric corpus (1-frame scalars, where
+//!   DTW *is* a metric: `d = |a − b| / 2`);
+//! * arbitrary-depth parity pins: depth 1 is the flat pass bitwise even
+//!   with a tree factor configured, depth 2 is the historical two-level
+//!   tree bitwise on a non-covering factor, and covering trees of depth
+//!   2..4 reproduce the flat grouping;
+//! * deviation-bound admissibility: duplicate collapse has bound 0 and
+//!   count-weighted Ward over representatives reproduces the
+//!   full-corpus heights (`--deviation debug` re-checks this inline in
+//!   both drivers); jittered duplicates report a strictly positive
+//!   bound through telemetry;
+//! * medoid retirement: on a corpus crafted so a member strays into a
+//!   wrong-class leader group within ε, retiring to the nearest final
+//!   medoid relabels exactly the aggregated members and never scores
+//!   below leader forwarding.
+
+mod common;
+
+use mahc::aggregate::{aggregate, check_deviation, GroupSummary};
+use mahc::config::{
+    AggregateConfig, AlgoConfig, Convergence, DatasetSpec, DeviationMode, RetireMode, StreamConfig,
+};
+use mahc::corpus::{generate, Segment, SegmentSet};
+use mahc::distance::{build_condensed, BackendKind, BlockedBackend, NativeBackend, PairwiseBackend};
+use mahc::mahc::{MahcDriver, StreamingDriver};
+
+/// 1-frame scalar corpus: DTW distance is `|a − b| / 2` (the kernel
+/// normalises by the summed lengths), which satisfies the triangle
+/// inequality — the metric setting the summary-fold bounds are exact in.
+fn scalar_set(vals: &[(f32, usize)], num_classes: usize) -> SegmentSet {
+    let set = SegmentSet {
+        name: "scalar_quality".into(),
+        dim: 1,
+        segments: vals
+            .iter()
+            .enumerate()
+            .map(|(id, &(v, class_id))| Segment {
+                id,
+                class_id,
+                len: 1,
+                dim: 1,
+                feats: vec![v],
+            })
+            .collect(),
+        num_classes,
+    };
+    set.validate().expect("scalar corpus is well-formed");
+    set
+}
+
+/// Deterministic LCG so the fuzz corpora are identical in every matrix
+/// cell (the seeds, not the OS, drive the sweep).
+fn lcg(state: &mut u64) -> f32 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 33) as f32) / ((1u64 << 31) as f32)
+}
+
+/// Distance oracle: one pairwise call through the same backend the
+/// pass used, so expected and actual values share every rounding step.
+fn dist(backend: &dyn PairwiseBackend, a: &Segment, b: &Segment) -> f32 {
+    backend.pairwise(&[a], &[b]).unwrap()[0]
+}
+
+fn agg_cfg(eps: f32) -> AlgoConfig {
+    AlgoConfig {
+        p0: 3,
+        beta: Some(40),
+        convergence: Convergence::FixedIters(3),
+        aggregate: AggregateConfig::new(eps),
+        ..Default::default()
+    }
+}
+
+/// A corpus where segment `n + i` duplicates segment `i`, optionally
+/// jittered by `jitter` on the first feature (0.0 = exact duplicate).
+fn duplicated_corpus(n: usize, classes: usize, seed: u64, jitter: f32) -> SegmentSet {
+    let base = generate(&DatasetSpec::tiny(n, classes, seed));
+    let mut segments = base.segments.clone();
+    for i in 0..n {
+        let mut dup = base.segments[i].clone();
+        dup.id = n + i;
+        if jitter > 0.0 {
+            dup.feats[0] += jitter;
+        }
+        segments.push(dup);
+    }
+    let set = SegmentSet {
+        name: format!("{}_doubled", base.name),
+        dim: base.dim,
+        segments,
+        num_classes: base.num_classes,
+    };
+    set.validate().expect("duplicated corpus is well-formed");
+    set
+}
+
+/// ε strictly between 0 and the smallest nonzero pair distance.
+fn below_min_nonzero_distance(set: &SegmentSet) -> f32 {
+    let refs: Vec<&Segment> = set.segments.iter().collect();
+    let cond = build_condensed(&refs, &NativeBackend::new(), 4).unwrap();
+    let min_nonzero = cond
+        .as_slice()
+        .iter()
+        .copied()
+        .filter(|&d| d > 0.0)
+        .fold(f32::INFINITY, f32::min);
+    assert!(min_nonzero.is_finite() && min_nonzero > 0.0);
+    min_nonzero * 0.5
+}
+
+#[test]
+fn summaries_match_brute_force_bitwise_across_the_matrix() {
+    let backend = common::backend_under_test(BackendKind::Native);
+    let native = NativeBackend::new();
+    let blocked = BlockedBackend::new();
+    let mut state = 0x5eed_cafe_u64;
+    for (n, eps) in [(12usize, 0.03f32), (30, 0.01), (30, 0.08)] {
+        let vals: Vec<(f32, usize)> = (0..n).map(|_| (lcg(&mut state), 0)).collect();
+        let set = scalar_set(&vals, 1);
+        let mut reference: Option<Vec<GroupSummary>> = None;
+        for threads in common::thread_matrix(&[1, 8]) {
+            let agg = aggregate(&set, &AggregateConfig::new(eps), backend.as_ref(), threads, None)
+                .unwrap();
+            // Counts partition the corpus.
+            assert_eq!(agg.summaries.len(), agg.reps());
+            assert_eq!(agg.summaries.iter().map(|s| s.count).sum::<usize>(), n);
+            for (g, s) in agg.summaries.iter().enumerate() {
+                assert_eq!(s.count, agg.members[g].len(), "group {g} count");
+                // Brute force through the same backend: radius is the
+                // max member→leader distance, spread the fixed-order
+                // sum in join order — bitwise, not approximately.
+                let leader = &set.segments[agg.rep_ids[g]];
+                let mut radius = 0.0f32;
+                let mut spread = 0.0f32;
+                for &id in &agg.members[g][1..] {
+                    let d = dist(backend.as_ref(), &set.segments[id], leader);
+                    assert!(d <= eps, "member {id} joined outside ε");
+                    radius = radius.max(d);
+                    spread += d;
+                }
+                assert_eq!(s.radius.to_bits(), radius.to_bits(), "group {g} radius");
+                assert_eq!(s.spread.to_bits(), spread.to_bits(), "group {g} spread");
+            }
+            // Summaries are part of the determinism contract: bitwise
+            // across threads and across the scalar/blocked backends.
+            let others: [(&str, &dyn PairwiseBackend); 2] =
+                [("scalar", &native), ("blocked", &blocked)];
+            for (bname, other) in others {
+                let again = aggregate(&set, &AggregateConfig::new(eps), other, threads, None)
+                    .unwrap();
+                assert_eq!(again.summaries.len(), agg.summaries.len());
+                for (a, b) in agg.summaries.iter().zip(&again.summaries) {
+                    assert_eq!(a.count, b.count, "{bname}/t{threads}");
+                    assert_eq!(a.radius.to_bits(), b.radius.to_bits(), "{bname}/t{threads}");
+                    assert_eq!(a.spread.to_bits(), b.spread.to_bits(), "{bname}/t{threads}");
+                }
+            }
+            match &reference {
+                None => reference = Some(agg.summaries.clone()),
+                Some(r) => assert_eq!(r, &agg.summaries, "thread sweep changed summaries"),
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_is_count_order_invariant_and_monotone() {
+    let mut state = 0xfu64;
+    for _ in 0..200 {
+        let mut a = GroupSummary::singleton();
+        let mut b = GroupSummary::singleton();
+        for _ in 0..(1 + (lcg(&mut state) * 4.0) as usize) {
+            a.absorb(lcg(&mut state));
+        }
+        for _ in 0..(1 + (lcg(&mut state) * 4.0) as usize) {
+            b.absorb(lcg(&mut state));
+        }
+        let link = lcg(&mut state);
+        let ab = a.merge(&b, link);
+        let ba = b.merge(&a, link);
+        // Count additivity is exact and order-invariant; radius/spread
+        // are anchored (at the left operand) so only their bound
+        // properties are order-free.
+        assert_eq!(ab.count, a.count + b.count);
+        assert_eq!(ab.count, ba.count);
+        assert!(ab.radius >= a.radius, "merge may not shrink the anchor radius");
+        assert!(ab.radius >= link + b.radius - 1e-6, "folded child escapes the radius");
+        assert!(ab.spread >= a.spread, "merge may not shrink the anchor spread");
+        assert!(ba.radius >= b.radius);
+    }
+}
+
+#[test]
+fn tree_fold_upper_bounds_descendant_distances_on_a_metric() {
+    // Covering tree: tree_factor·ε exceeds the corpus diameter, so every
+    // level has exactly one node, anchored at the first leader — the
+    // brute-force member→anchor distances are then directly computable.
+    let mut state = 0xabcdu64;
+    let vals: Vec<(f32, usize)> = (0..40).map(|_| (4.0 * lcg(&mut state), 0)).collect();
+    let set = scalar_set(&vals, 1);
+    let backend = NativeBackend::new();
+    let eps = 0.1f32;
+    let cfg = AggregateConfig::new(eps).with_tree(100.0, 2).with_depth(3);
+    let agg = aggregate(&set, &cfg, &backend, 4, None).unwrap();
+    assert!(agg.reps() >= 2, "corpus must actually aggregate");
+    assert_eq!(agg.level_summaries.len(), 2, "depth 3 folds two node levels");
+    let anchor = &set.segments[agg.rep_ids[0]];
+    for (l, level) in agg.level_summaries.iter().enumerate() {
+        assert_eq!(level.len(), 1, "covering tree has one node per level");
+        assert_eq!(level[0].count, set.len(), "level {l} counts must cover the corpus");
+        let mut true_max = 0.0f32;
+        let mut true_sum = 0.0f64;
+        for seg in &set.segments {
+            let d = dist(&backend, seg, anchor);
+            true_max = true_max.max(d);
+            true_sum += d as f64;
+        }
+        // Triangle-inequality upper bounds, with an f32 slack for the
+        // fold's own rounding.
+        let slack = 1e-5 * (1.0 + true_max as f64);
+        assert!(
+            level[0].radius as f64 + slack >= true_max as f64,
+            "level {l}: folded radius {} < true max {}",
+            level[0].radius,
+            true_max
+        );
+        assert!(
+            level[0].spread as f64 + 1e-4 * (1.0 + true_sum) >= true_sum,
+            "level {l}: folded spread {} < true sum {}",
+            level[0].spread,
+            true_sum
+        );
+    }
+    assert_eq!(agg.super_leaders, 1, "top level is the single covering node");
+}
+
+#[test]
+fn depth_one_is_the_flat_pass_bitwise_across_the_matrix() {
+    let backend = common::backend_under_test(BackendKind::Native);
+    let mut state = 0x1234u64;
+    let vals: Vec<(f32, usize)> = (0..50).map(|_| (2.0 * lcg(&mut state), 0)).collect();
+    let set = scalar_set(&vals, 1);
+    let flat = AggregateConfig::new(0.05);
+    // Depth 1 with a tree factor configured must never build the tree.
+    let depth1 = AggregateConfig::new(0.05).with_tree(8.0, 2).with_depth(1);
+    for threads in common::thread_matrix(&[1, 8]) {
+        let a = aggregate(&set, &flat, backend.as_ref(), threads, None).unwrap();
+        let b = aggregate(&set, &depth1, backend.as_ref(), threads, None).unwrap();
+        assert_eq!(a.rep_ids, b.rep_ids, "t{threads}");
+        assert_eq!(a.members, b.members, "t{threads}");
+        assert_eq!(a.rep_of, b.rep_of, "t{threads}");
+        assert_eq!(a.probe_pairs, b.probe_pairs, "t{threads}: probe sequence");
+        assert_eq!(a.probe_rounds, b.probe_rounds, "t{threads}");
+        assert_eq!((a.rect_rows, a.rect_cols), (b.rect_rows, b.rect_cols), "t{threads}");
+        assert_eq!(a.super_leaders, 0, "flat pass has no nodes");
+        assert_eq!(b.super_leaders, 0, "depth 1 has no nodes");
+        assert!(b.level_summaries.is_empty(), "depth 1 folds nothing");
+        for (x, y) in a.summaries.iter().zip(&b.summaries) {
+            assert_eq!(x.count, y.count);
+            assert_eq!(x.radius.to_bits(), y.radius.to_bits());
+            assert_eq!(x.spread.to_bits(), y.spread.to_bits());
+        }
+    }
+}
+
+#[test]
+fn depth_two_is_the_historical_tree_bitwise_across_the_matrix() {
+    // `with_tree` alone is the historical two-level configuration
+    // (default depth 2); spelling the depth out must change nothing —
+    // on a *non*-covering factor, so the tree actually prunes probes.
+    let backend = common::backend_under_test(BackendKind::Native);
+    let mut state = 0x2222u64;
+    let vals: Vec<(f32, usize)> = (0..60).map(|_| (3.0 * lcg(&mut state), 0)).collect();
+    let set = scalar_set(&vals, 1);
+    let historical = AggregateConfig::new(0.06).with_tree(3.0, 2);
+    let explicit = AggregateConfig::new(0.06).with_tree(3.0, 2).with_depth(2);
+    for threads in common::thread_matrix(&[1, 8]) {
+        let a = aggregate(&set, &historical, backend.as_ref(), threads, None).unwrap();
+        let b = aggregate(&set, &explicit, backend.as_ref(), threads, None).unwrap();
+        assert_eq!(a.rep_ids, b.rep_ids, "t{threads}");
+        assert_eq!(a.members, b.members, "t{threads}");
+        assert_eq!(a.rep_of, b.rep_of, "t{threads}");
+        assert_eq!(a.probe_pairs, b.probe_pairs, "t{threads}: probe sequence");
+        assert_eq!(a.super_leaders, b.super_leaders, "t{threads}");
+        assert!(a.super_leaders >= 1, "non-degenerate tree must have nodes");
+        assert_eq!(a.level_summaries.len(), 1, "depth 2 folds one node level");
+        assert_eq!(b.level_summaries.len(), 1);
+        for (x, y) in a.level_summaries[0].iter().zip(&b.level_summaries[0]) {
+            assert_eq!(x.count, y.count, "t{threads}");
+            assert_eq!(x.radius.to_bits(), y.radius.to_bits(), "t{threads}");
+            assert_eq!(x.spread.to_bits(), y.spread.to_bits(), "t{threads}");
+        }
+    }
+}
+
+#[test]
+fn covering_trees_of_any_depth_reproduce_the_flat_grouping() {
+    // One covering node per level cannot prune any leader out of sight,
+    // so the grouping — though not the probe count — matches flat.
+    let mut state = 0x77u64;
+    let vals: Vec<(f32, usize)> = (0..60).map(|_| (3.0 * lcg(&mut state), 0)).collect();
+    let set = scalar_set(&vals, 1);
+    let backend = NativeBackend::new();
+    let flat = aggregate(&set, &AggregateConfig::new(0.06), &backend, 4, None).unwrap();
+    for depth in [2usize, 3, 4] {
+        let cfg = AggregateConfig::new(0.06).with_tree(200.0, 2).with_depth(depth);
+        let got = aggregate(&set, &cfg, &backend, 4, None).unwrap();
+        assert_eq!(got.rep_ids, flat.rep_ids, "depth {depth}: rep set");
+        assert_eq!(got.members, flat.members, "depth {depth}: memberships");
+        assert_eq!(got.rep_of, flat.rep_of, "depth {depth}: rep_of");
+        assert_eq!(got.level_summaries.len(), depth - 1, "depth {depth}: level count");
+        for (l, level) in got.level_summaries.iter().enumerate() {
+            assert_eq!(
+                level.iter().map(|s| s.count).sum::<usize>(),
+                set.len(),
+                "depth {depth} level {l}: counts must partition the corpus"
+            );
+        }
+        assert_eq!(got.super_leaders, 1, "depth {depth}: single covering top node");
+        for (x, y) in flat.summaries.iter().zip(&got.summaries) {
+            assert_eq!(x.radius.to_bits(), y.radius.to_bits(), "depth {depth}");
+            assert_eq!(x.spread.to_bits(), y.spread.to_bits(), "depth {depth}");
+        }
+    }
+}
+
+#[test]
+fn duplicate_collapse_has_zero_bound_and_exact_weighted_heights() {
+    let set = duplicated_corpus(30, 4, 4242, 0.0);
+    let eps = below_min_nonzero_distance(&set);
+    let backend = NativeBackend::new();
+    let agg = aggregate(&set, &AggregateConfig::new(eps), &backend, 4, None).unwrap();
+    assert!(agg.reps() < set.len(), "duplicates must collapse");
+    // Zero-distance joins only: every group radius is 0, so the bound
+    // is exactly 0 and count-weighted Ward over representatives is the
+    // full dendrogram (the classic weighted-objects identity).
+    assert!(agg.summaries.iter().all(|s| s.radius == 0.0));
+    assert_eq!(agg.deviation_bound(), 0.0);
+    let max_delta = check_deviation(&set, &agg, &backend, 4, None).unwrap();
+    assert!(
+        max_delta.is_finite() && max_delta >= 0.0,
+        "admissibility oracle returned {max_delta}"
+    );
+}
+
+#[test]
+fn deviation_debug_mode_holds_end_to_end_on_duplicate_collapse() {
+    let set = duplicated_corpus(24, 3, 777, 0.0);
+    let eps = below_min_nonzero_distance(&set);
+    let backend = NativeBackend::new();
+    let mut cfg = agg_cfg(eps);
+    cfg.deviation = DeviationMode::Debug;
+    // Batch driver: the inline per-merge recheck must pass.
+    let run = MahcDriver::new(&set, cfg.clone(), &backend).unwrap().run().unwrap();
+    assert_eq!(run.labels.len(), set.len());
+    // Zero-radius groups report a zero bound in telemetry.
+    assert_eq!(run.history.records[0].deviation_bound, 0.0);
+    assert_eq!(run.history.deviation_bound(), 0.0);
+    // Streaming driver: same tripwire at prepare time.
+    let stream = StreamingDriver::new(&set, StreamConfig::new(cfg, 24), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(stream.labels.len(), set.len());
+    assert_eq!(stream.history.records[0].deviation_bound, 0.0);
+}
+
+#[test]
+fn jittered_duplicates_report_a_positive_bound_in_telemetry() {
+    let base = duplicated_corpus(24, 3, 909, 0.0);
+    let eps = below_min_nonzero_distance(&base);
+    // Jitter well inside ε: groups still form, now with radius > 0.
+    let set = duplicated_corpus(24, 3, 909, eps * 0.5);
+    let backend = NativeBackend::new();
+    let agg = aggregate(&set, &AggregateConfig::new(eps), &backend, 4, None).unwrap();
+    assert!(agg.reps() < set.len(), "jittered duplicates must still collapse");
+    assert!(agg.summaries.iter().any(|s| s.radius > 0.0));
+    let bound = agg.deviation_bound();
+    assert!(bound > 0.0, "nonzero radii must report a nonzero bound");
+    // The bound reaches telemetry on record 0 of both drivers, bitwise
+    // the same value.
+    let run = MahcDriver::new(&set, agg_cfg(eps), &backend).unwrap().run().unwrap();
+    assert_eq!(run.history.records[0].deviation_bound, bound);
+    assert_eq!(run.history.deviation_bound(), bound);
+    for r in run.history.records.iter().skip(1) {
+        assert_eq!(r.deviation_bound, 0.0, "only record 0 carries the bound");
+    }
+    let stream = StreamingDriver::new(&set, StreamConfig::new(agg_cfg(eps), 24), &backend)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(stream.history.records[0].deviation_bound, bound);
+}
+
+/// The medoid-retirement fixture: class-1 segment `1` (value 0.35) sits
+/// within ε = 0.2 of the class-0 leader at 0.0 (scalar DTW halves the
+/// gap: 0.175), so the leader pass absorbs it into the wrong-class
+/// group; the class-1 leader at 0.5 is 0.075 away — strictly nearer —
+/// so nearest-final-medoid retirement can only move it toward (never
+/// away from) its own class, whatever cluster count the pipeline picks.
+fn stray_member_corpus() -> SegmentSet {
+    scalar_set(
+        &[
+            (0.0, 0),
+            (0.35, 1), // the stray: joins the 0.0 leader, nearer to 0.5
+            (0.02, 0),
+            (0.04, 0),
+            (0.5, 1),
+            (0.52, 1),
+            (0.54, 1),
+            (2.0, 2),
+            (2.02, 2),
+            (2.04, 2),
+            (3.0, 3),
+            (3.02, 3),
+            (3.04, 3),
+        ],
+        4,
+    )
+}
+
+#[test]
+fn medoid_retirement_relabels_only_aggregated_members_and_never_degrades_f() {
+    let set = stray_member_corpus();
+    let backend = NativeBackend::new();
+    let eps = 0.2f32;
+    // Pin the fixture's geometry: four leader groups, the stray in the
+    // first one.
+    let agg = aggregate(&set, &AggregateConfig::new(eps), &backend, 1, None).unwrap();
+    assert_eq!(agg.rep_ids, vec![0, 4, 7, 10]);
+    assert_eq!(agg.rep_of[1], 0, "the stray must join the class-0 leader");
+
+    let mk = |retire: RetireMode| {
+        let mut cfg = agg_cfg(eps);
+        cfg.retire = retire;
+        StreamingDriver::new(&set, StreamConfig::new(cfg, 16), &backend)
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let leader = mk(RetireMode::Leader);
+    let medoid = mk(RetireMode::Medoid);
+
+    // Leader mode is the bitwise oracle for everything that was active:
+    // representatives keep identical labels, and only aggregated
+    // non-representative members may move.
+    assert_eq!(leader.labels.len(), set.len());
+    assert_eq!(medoid.labels.len(), set.len());
+    assert_eq!(leader.k, medoid.k, "retirement happens after clustering");
+    let reps: Vec<usize> = agg.rep_ids.clone();
+    for &r in &reps {
+        assert_eq!(leader.labels[r], medoid.labels[r], "rep {r} must not move");
+    }
+    for id in 0..set.len() {
+        if leader.labels[id] != medoid.labels[id] {
+            assert!(!reps.contains(&id), "only aggregated members may be relabeled");
+        }
+    }
+    // The quality guarantee this fixture was built to prove.
+    assert!(
+        medoid.f_measure >= leader.f_measure,
+        "medoid retirement degraded F: {} < {}",
+        medoid.f_measure,
+        leader.f_measure
+    );
+    // Determinism: a second medoid run is bitwise identical.
+    let again = mk(RetireMode::Medoid);
+    assert_eq!(again.labels, medoid.labels);
+    assert_eq!(again.f_measure.to_bits(), medoid.f_measure.to_bits());
+}

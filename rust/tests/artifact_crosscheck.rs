@@ -9,7 +9,7 @@
 
 use mahc::config::DatasetSpec;
 use mahc::corpus::{generate, waveform, Segment};
-use mahc::distance::{build_condensed, DtwBackend, NativeBackend};
+use mahc::distance::{build_condensed, PairwiseBackend, NativeBackend};
 use mahc::dsp;
 use mahc::runtime::{mfcc_exec::MfccFrontend, Runtime, XlaDtwBackend};
 use std::path::Path;

@@ -29,7 +29,7 @@ use mahc::config::{AlgoConfig, Convergence, DatasetSpec, StreamConfig};
 use mahc::corpus::{generate, Segment, SegmentSet};
 use mahc::distance::{
     build_condensed, build_condensed_cached, build_cross, BackendKind, BlockedBackend,
-    DtwBackend, NativeBackend, PairCache,
+    PairwiseBackend, NativeBackend, PairCache,
 };
 use mahc::mahc::{MahcDriver, StreamingDriver};
 

@@ -19,7 +19,7 @@ use mahc::distance::{
 use mahc::mahc::{MahcDriver, StreamSession, StreamingDriver};
 
 /// Backend under test: native by default, or the CI matrix cell.
-fn backend() -> Box<dyn mahc::distance::DtwBackend> {
+fn backend() -> Box<dyn mahc::distance::PairwiseBackend> {
     backend_under_test(BackendKind::Native)
 }
 

@@ -11,11 +11,11 @@
 // crate's compilation must not fail `clippy -D warnings`.
 #![allow(dead_code)]
 
-use mahc::distance::{BackendKind, BlockedBackend, DtwBackend, NativeBackend};
+use mahc::distance::{BackendKind, BlockedBackend, PairwiseBackend, NativeBackend};
 
 /// Backend under test for this matrix cell: `MAHC_TEST_BACKEND`
 /// (`scalar`|`native`|`blocked`), or `default` when unset.
-pub fn backend_under_test(default: BackendKind) -> Box<dyn DtwBackend> {
+pub fn backend_under_test(default: BackendKind) -> Box<dyn PairwiseBackend> {
     let kind = match std::env::var("MAHC_TEST_BACKEND").ok() {
         None => default,
         Some(s) => BackendKind::parse(&s).expect("MAHC_TEST_BACKEND"),

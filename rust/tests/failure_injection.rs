@@ -6,7 +6,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec};
 use mahc::corpus::{generate, Segment};
-use mahc::distance::{build_condensed, build_cross, DtwBackend, NativeBackend};
+use mahc::distance::{build_condensed, build_cross, PairwiseBackend, NativeBackend};
 use mahc::mahc::MahcDriver;
 
 /// Backend that fails after a configurable number of calls.
@@ -26,7 +26,7 @@ impl FlakyBackend {
     }
 }
 
-impl DtwBackend for FlakyBackend {
+impl PairwiseBackend for FlakyBackend {
     fn pairwise(&self, xs: &[&Segment], ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
         let n = self.calls.fetch_add(1, Ordering::SeqCst);
         if n >= self.fail_after {
@@ -43,7 +43,7 @@ impl DtwBackend for FlakyBackend {
 /// Backend that returns the wrong number of distances.
 struct WrongShapeBackend;
 
-impl DtwBackend for WrongShapeBackend {
+impl PairwiseBackend for WrongShapeBackend {
     fn pairwise(&self, _xs: &[&Segment], _ys: &[&Segment]) -> anyhow::Result<Vec<f32>> {
         Ok(vec![0.0; 1]) // always wrong for multi-pair requests
     }

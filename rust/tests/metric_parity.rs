@@ -18,7 +18,8 @@
 //! * a full MAHC run and a serve-mode session complete end to end on
 //!   an embedding metric, stamping `metric` / `silhouette_score`
 //!   telemetry, bitwise-reproduced under the blocked kernel;
-//! * the deprecated `DtwBackend` alias still names the shared trait.
+//! * the shared `PairwiseBackend` trait stays object-safe over every
+//!   vector metric.
 //!
 //! The CI backend-matrix job sweeps `MAHC_TEST_BACKEND` ∈ {scalar,
 //! blocked} × `MAHC_TEST_THREADS` ∈ {1, 4} over this suite too.
@@ -33,7 +34,7 @@ use mahc::config::{AlgoConfig, Convergence, ServeConfig, StreamConfig};
 use mahc::corpus::{generate_embeddings, EmbeddingSpec, Segment, SegmentSet};
 use mahc::distance::{
     build_condensed, build_condensed_cached, build_cross, CascadeBackend, CascadeMode,
-    DtwBackend, PairCache, PairwiseBackend, VectorBackend, VectorMetric,
+    PairCache, PairwiseBackend, VectorBackend, VectorMetric,
 };
 use mahc::mahc::{MahcDriver, ServeDriver, SessionSpec};
 
@@ -304,16 +305,17 @@ fn serve_sessions_run_embedding_metric_end_to_end() {
 }
 
 #[test]
-fn deprecated_dtw_backend_alias_names_the_shared_trait() {
-    // `DtwBackend` must remain usable as a trait object over *any*
-    // pairwise backend for one deprecation cycle.
+fn pairwise_backend_is_object_safe_over_vector_metrics() {
+    // The shared trait must stay usable as an owned trait object over
+    // any backend, bitwise with the concrete type's answer.
     let set = embeddings(10, 2, 8, 211);
     let refs: Vec<&Segment> = set.segments.iter().collect();
-    let aliased: Box<dyn DtwBackend> = Box::new(VectorBackend::native(VectorMetric::Euclidean));
-    let via_alias = aliased.pairwise(&refs[..5], &refs[5..]).unwrap();
+    let boxed: Box<dyn PairwiseBackend> =
+        Box::new(VectorBackend::native(VectorMetric::Euclidean));
+    let via_object = boxed.pairwise(&refs[..5], &refs[5..]).unwrap();
     let direct = VectorBackend::native(VectorMetric::Euclidean)
         .pairwise(&refs[..5], &refs[5..])
         .unwrap();
-    assert_bitwise(&via_alias, &direct, "alias");
-    assert_eq!(aliased.metric_name(), "euclidean");
+    assert_bitwise(&via_object, &direct, "trait object");
+    assert_eq!(boxed.metric_name(), "euclidean");
 }

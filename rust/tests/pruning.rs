@@ -18,15 +18,15 @@ use mahc::config::{
 use mahc::corpus::{generate, Segment, SegmentSet};
 use mahc::distance::{
     build_cross, build_cross_cached_pruned, BackendKind, BlockedBackend, CascadeBackend,
-    CascadeMode, DtwBackend, NativeBackend, PairCache,
+    CascadeMode, PairwiseBackend, NativeBackend, PairCache,
 };
 use mahc::dtw::INFEASIBLE;
 use mahc::mahc::{MahcDriver, StreamingDriver};
 
-fn matrix_backends() -> Vec<Box<dyn DtwBackend>> {
+fn matrix_backends() -> Vec<Box<dyn PairwiseBackend>> {
     // The scalar reference and the lane-parallel kernel, plus whatever
     // cell the CI matrix pins via MAHC_TEST_BACKEND (dedup'd by name).
-    let mut backends: Vec<Box<dyn DtwBackend>> =
+    let mut backends: Vec<Box<dyn PairwiseBackend>> =
         vec![Box::new(NativeBackend::new()), Box::new(BlockedBackend::new())];
     let env = common::backend_under_test(BackendKind::Native);
     if backends.iter().all(|b| b.name() != env.name()) {

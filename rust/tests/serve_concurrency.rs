@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use mahc::config::{AlgoConfig, Convergence, DatasetSpec, ServeConfig, StreamConfig};
 use mahc::corpus::{generate, SegmentSet};
-use mahc::distance::{DtwBackend, NativeBackend};
+use mahc::distance::{PairwiseBackend, NativeBackend};
 use mahc::mahc::{ServeDriver, SessionSpec, StreamingDriver};
 use mahc::StreamResult;
 
@@ -27,7 +27,7 @@ fn algo(beta: usize, cache_bytes: usize) -> AlgoConfig {
     }
 }
 
-fn backend() -> Arc<dyn DtwBackend + Send + Sync> {
+fn backend() -> Arc<dyn PairwiseBackend + Send + Sync> {
     Arc::new(NativeBackend::new())
 }
 

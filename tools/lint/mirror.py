@@ -19,7 +19,7 @@ R001_DIRS = ["ahc", "mahc", "aggregate", "distance", "corpus"]
 ITER_CALLS = [b"iter()", b"iter_mut()", b"into_iter()", b"keys()",
               b"values()", b"values_mut()", b"drain(", b"retain("]
 R004_PATTERNS = [b"Instant::now", b"SystemTime", b"thread_rng", b"rand::random"]
-RULES = ["R001", "R002", "R003", "R004", "R005"]
+RULES = ["R001", "R002", "R003", "R004", "R005", "R006"]
 ALIASES = {"R001": b"order-insensitive", "R002": b"in-bounds", "R003": b"fixed-order"}
 PANIC_MACROS = ["panic", "unreachable", "todo", "unimplemented"]
 
@@ -434,6 +434,11 @@ def scan_file(rel, text):
                 ctx += code
                 if contains(bytes(ctx), b"f32") and not contains(bytes(ctx), b"f64"):
                     emit(i, "R003", "possible f32 reduction outside the fixed-order kernels")
+
+    for i, code in enumerate(lines.codes):
+        if ident_occurrences(code, b"DtwBackend"):
+            emit(i, "R006",
+                 "removed alias `DtwBackend` — the shared trait is `PairwiseBackend`")
 
     r004_exempt = (in_dirs(rel, ["telemetry"]) or rel == "rust/src/util/bench.rs"
                    or rel == "rust/src/util/rng.rs")

@@ -33,6 +33,10 @@
 //!   JSON writer (`self.<field>` inside `to_json`) and the CLI summary
 //!   (an identifier token in `main.rs` equal to the field name or
 //!   starting with `<field>_`).
+//! * **R006** — the removed pre-metric-generic alias `DtwBackend` must
+//!   not reappear anywhere in `rust/src/**`: the shared trait is
+//!   `PairwiseBackend`.  Matched as a whole identifier, so the concrete
+//!   `XlaDtwBackend` executor is untouched.
 //!
 //! Suppression syntax: `// lint: allow(RXXX) <reason>` on the violating
 //! line or on a comment-only line immediately above it.  Aliases:
@@ -71,7 +75,7 @@ const ITER_CALLS: &[&str] = &[
 /// Source patterns R004 denies outside the sanctioned modules.
 const R004_PATTERNS: &[&str] = &["Instant::now", "SystemTime", "thread_rng", "rand::random"];
 
-/// Identifiers of the five lint rules.
+/// Identifiers of the six lint rules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Rule {
     /// Order-nondeterministic hash iteration on a result path.
@@ -84,10 +88,19 @@ pub enum Rule {
     R004,
     /// Telemetry schema drift between JSON writer and CLI summary.
     R005,
+    /// Resurrected `DtwBackend` alias (removed; use `PairwiseBackend`).
+    R006,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 5] = [Rule::R001, Rule::R002, Rule::R003, Rule::R004, Rule::R005];
+    pub const ALL: [Rule; 6] = [
+        Rule::R001,
+        Rule::R002,
+        Rule::R003,
+        Rule::R004,
+        Rule::R005,
+        Rule::R006,
+    ];
 
     pub fn id(self) -> &'static str {
         match self {
@@ -96,6 +109,7 @@ impl Rule {
             Rule::R003 => "R003",
             Rule::R004 => "R004",
             Rule::R005 => "R005",
+            Rule::R006 => "R006",
         }
     }
 
@@ -747,6 +761,20 @@ fn scan_file(rel: &str, text: &[u8]) -> Vec<Finding> {
         }
     }
 
+    // R006 — the removed `DtwBackend` alias must stay removed.  Whole-
+    // identifier match, so `XlaDtwBackend` (a concrete executor type)
+    // never trips it; comments and strings are already stripped.
+    for (i, code) in lines.codes.iter().enumerate() {
+        if !ident_occurrences(code, b"DtwBackend").is_empty() {
+            emit(
+                i,
+                Rule::R006,
+                "removed alias `DtwBackend` — the shared trait is `PairwiseBackend`".to_string(),
+                &lines,
+            );
+        }
+    }
+
     // R004 — wall-clock / entropy hygiene.
     let r004_exempt = in_dirs(rel, &["telemetry"])
         || rel == "rust/src/util/bench.rs"
@@ -1240,6 +1268,23 @@ mod tests {
         assert!(scan_str("rust/src/telemetry/x.rs", src).is_empty());
         assert!(scan_str("rust/src/util/bench.rs", src).is_empty());
         assert!(scan_str("rust/src/util/rng.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r006_bans_the_alias_but_not_the_xla_type() {
+        let src = "pub fn f(b: &dyn DtwBackend) { let _ = b; }\n";
+        let f = scan_str("rust/src/mahc/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == Rule::R006).count(), 1);
+        assert_eq!(f[0].line, 1);
+        // The concrete executor type shares the suffix but is a
+        // different identifier.
+        let ok = "pub fn g(b: &XlaDtwBackend) { let _ = b; }\n";
+        assert!(scan_str("rust/src/distance/x.rs", ok)
+            .iter()
+            .all(|f| f.rule != Rule::R006));
+        // Comment mentions do not count.
+        let doc = "//! The old `DtwBackend` alias is gone.\npub fn h() {}\n";
+        assert!(scan_str("rust/src/distance/x.rs", doc).is_empty());
     }
 
     #[test]

@@ -29,6 +29,7 @@ RULES:
     R003  f32 reduction outside the fixed-order kernels
     R004  wall-clock / entropy source outside telemetry, bench, rng
     R005  IterationRecord schema drift (JSON writer vs CLI summary)
+    R006  resurrected `DtwBackend` alias (removed; use `PairwiseBackend`)
 
 Suppress inline with `// lint: allow(RXXX) <reason>` on the violating
 line or the comment line directly above it.";

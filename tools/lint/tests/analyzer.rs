@@ -31,6 +31,7 @@ fn fail_tree_reports_every_rule_span_accurately() {
         (Rule::R003, "rust/src/distance/r003_fail.rs".into(), 2),
         (Rule::R003, "rust/src/distance/r003_vector_fail.rs".into(), 2),
         (Rule::R003, "rust/src/distance/r003_vector_fail.rs".into(), 3),
+        (Rule::R006, "rust/src/distance/r006_fail.rs".into(), 1),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 2),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 3),
         (Rule::R002, "rust/src/mahc/r002_fail.rs".into(), 5),
@@ -79,7 +80,7 @@ fn allowlist_covers_exactly_and_flags_stale_and_exceeded() {
         .unwrap();
     let out = apply_allowlist(findings.clone(), &ok);
     assert!(out.remaining.is_empty(), "{:#?}", out.remaining);
-    assert_eq!(out.allowlisted, 15);
+    assert_eq!(out.allowlisted, 16);
     assert!(out.errors.is_empty(), "{:?}", out.errors);
 
     let stale =

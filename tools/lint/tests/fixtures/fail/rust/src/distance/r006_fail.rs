@@ -1,0 +1,3 @@
+pub fn probe(backend: &dyn DtwBackend) -> &'static str {
+    backend.metric_name()
+}
